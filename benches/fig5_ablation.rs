@@ -1,0 +1,51 @@
+//! Fig. 5 ablations: (left) subspace change frequency T has a sweet spot —
+//! both very frequent and "never" underperform; (right) smaller rank with
+//! proportionally more steps reaches comparable loss (memory-compute
+//! trade-off).
+
+use galore::bench::Table;
+use galore::coordinator::Trainer;
+use galore::exp::scale::{fig5_freq_sweep, fig5_rank_sweep};
+
+fn main() -> anyhow::Result<()> {
+    let (base, freqs) = fig5_freq_sweep();
+    let mut t = Table::new(&["T", "eval loss", "eval ppl"]);
+    let mut results = Vec::new();
+    for f in freqs {
+        let mut cfg = base.clone();
+        cfg.galore.update_freq = f;
+        eprintln!("[fig5-left] T = {f} ...");
+        let mut trainer = Trainer::from_config(cfg.clone())?;
+        for _ in 0..cfg.steps {
+            trainer.train_step()?;
+        }
+        let loss = trainer.eval(2)?;
+        let label = if f >= 1_000_000 { "never".into() } else { f.to_string() };
+        t.row(&[label, format!("{loss:.4}"), format!("{:.2}", loss.exp())]);
+        results.push((f, loss));
+    }
+    t.print("Fig. 5 left (subspace frequency sweep)");
+    let best = results.iter().cloned().fold((0, f32::MAX), |a, b| if b.1 < a.1 { b } else { a });
+    println!(
+        "best T = {} — paper reports the sweet spot in 50..1000, extremes worse (U-shape).",
+        best.0
+    );
+
+    let (base, sweep) = fig5_rank_sweep();
+    let mut t2 = Table::new(&["rank", "steps", "eval loss", "eval ppl"]);
+    for (rank, steps) in sweep {
+        let mut cfg = base.clone();
+        cfg.galore.rank = rank;
+        cfg.lowrank_rank = rank;
+        cfg.steps = steps;
+        eprintln!("[fig5-right] rank {rank} x {steps} steps ...");
+        let mut trainer = Trainer::from_config(cfg.clone())?;
+        for _ in 0..cfg.steps {
+            trainer.train_step()?;
+        }
+        let loss = trainer.eval(2)?;
+        t2.row(&[rank.to_string(), steps.to_string(), format!("{loss:.4}"), format!("{:.2}", loss.exp())]);
+    }
+    t2.print("Fig. 5 right (rank x steps trade-off; paper: rank 128 x 80K beats rank 512 x 20K)");
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Hot-path micro-benchmarks (§Perf of EXPERIMENTS.md): the per-step
+//! GaLore pieces on both the Rust path and the fused Pallas/HLO artifact
+//! path, plus the substrates they sit on (matmul kernels, SVD refresh,
+//! 8-bit quantization, ring all-reduce).
+
+use galore::bench::{bench, report};
+use galore::coordinator::Ring;
+use galore::linalg::top_r_left_subspace;
+use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer, Projector};
+use galore::quant::{dequantize, quantize, DynQuantBuf};
+use galore::rng::Rng;
+use galore::runtime::{default_dir, Engine, Input};
+use galore::tensor::{matmul, matmul_at_b, Matrix};
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+    println!("== substrates ==");
+    for &(m, k, n) in &[(128usize, 128usize, 128usize), (512, 512, 512), (512, 2048, 128)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let s = bench(&format!("matmul {m}x{k}x{n}"), || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        report(&s);
+        println!("    -> {:.2} GFLOP/s", flops / s.median_secs() / 1e9);
+    }
+
+    let g = Matrix::randn(512, 1376, 1.0, &mut rng);
+    report(&bench("projector refresh SVD 512x1376 r128", || {
+        let mut r = Rng::new(1);
+        std::hint::black_box(top_r_left_subspace(&g, 128, &mut r));
+    }));
+    let p = top_r_left_subspace(&g, 128, &mut rng);
+    report(&bench("project P^T G 512x1376 r128", || {
+        std::hint::black_box(matmul_at_b(&p, &g));
+    }));
+
+    let x: Vec<f32> = (0..1 << 20).map(|i| ((i * 37 % 1001) as f32 - 500.0) * 1e-3).collect();
+    report(&bench("linear block8 quantize 1M f32", || {
+        std::hint::black_box(quantize(&x));
+    }));
+    let qb = quantize(&x);
+    report(&bench("linear block8 dequantize 1M f32", || {
+        std::hint::black_box(dequantize(&qb));
+    }));
+    let mut dynb = DynQuantBuf::zeros(x.len(), true);
+    report(&bench("dynamic-code quantize 1M f32", || {
+        dynb.quantize_from(&x);
+    }));
+
+    println!("\n== optimizer step (512x1376 layer, r=128) ==");
+    let mut w = Matrix::randn(512, 1376, 0.02, &mut rng);
+    let grad = Matrix::randn(512, 1376, 0.02, &mut rng);
+    let mut adam = Adam::new(AdamConfig::default());
+    report(&bench("full-rank Adam step", || {
+        adam.step(0, &mut w, &grad, 1e-4);
+    }));
+    let mut gal = GaLore::new(GaLoreConfig { rank: 128, update_freq: 200, scale: 0.25, ..Default::default() }, Adam::new(AdamConfig::default()));
+    gal.step(0, &mut w, &grad, 1e-4); // pay the first refresh outside timing
+    report(&bench("GaLore-Adam step (rust, amortized)", || {
+        gal.step(0, &mut w, &grad, 1e-4);
+    }));
+    let proj = Projector::compute(&grad, 128, &mut rng);
+    report(&bench("project+back only", || {
+        let c = proj.project(&grad);
+        std::hint::black_box(proj.project_back(&c));
+    }));
+
+    println!("\n== ring all-reduce (4 workers, 1M f32) ==");
+    report(&bench("ring all_reduce 4x1M", || {
+        let handles = Ring::new(4).into_handles();
+        std::thread::scope(|scope| {
+            for h in handles {
+                scope.spawn(move || {
+                    let mut data = vec![1.0f32; 1 << 20];
+                    h.all_reduce_sum(&mut data);
+                });
+            }
+        });
+    }));
+
+    if default_dir().join("manifest.json").exists() {
+        println!("\n== fused HLO/Pallas artifacts ==");
+        let mut engine = Engine::new(default_dir())?;
+        let (m, n, r) = (64usize, 172usize, 16usize);
+        let w = vec![0.01f32; m * n];
+        let g = vec![0.02f32; m * n];
+        let mm = vec![0.0f32; r * n];
+        let vv = vec![0.0f32; r * n];
+        let p = vec![0.05f32; m * r];
+        engine.prepare(&format!("galore_step_{m}x{n}_r{r}"))?;
+        report(&bench("fused galore_step 64x172 r16 (HLO)", || {
+            engine
+                .execute(
+                    &format!("galore_step_{m}x{n}_r{r}"),
+                    &[
+                        Input::F32(&w),
+                        Input::F32(&mm),
+                        Input::F32(&vv),
+                        Input::F32(&g),
+                        Input::F32(&p),
+                        Input::F32(&[1.0]),
+                        Input::F32(&[0.001]),
+                    ],
+                )
+                .unwrap();
+        }));
+        // Full train step timing (nano).
+        if engine.manifest.train_for("nano").is_some() {
+            use galore::config::{MethodKind, RunConfig};
+            use galore::coordinator::Trainer;
+            use galore::model::ModelConfig;
+            let mut cfg = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+            cfg.steps = 3;
+            let mut trainer = Trainer::from_config(cfg)?;
+            trainer.train_step()?; // compile outside timing
+            report(&bench("end-to-end train step (nano, galore)", || {
+                trainer.train_step().unwrap();
+            }));
+        }
+    } else {
+        eprintln!("(artifact benches skipped: run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Lemma 3.3 / Corollary 3.4 verification: stable rank of the gradient
+//! decays under vanilla SGD in the reversible-network gradient form, and
+//! the final rank is governed by the input rank N'.
+
+use galore::bench::Table;
+use galore::exp::lowrank_theory::{stable_rank_trajectory, LowRankDynamics};
+
+fn main() {
+    let mut t = Table::new(&["input rank N'", "sr(G_0)", "sr(G_mid)", "sr(G_late)", "bound n-N'|N'"]);
+    for input_rank in [2usize, 4, 8, 16, 32, 48] {
+        let cfg = LowRankDynamics { input_rank, ..Default::default() };
+        let traj = stable_rank_trajectory(&cfg, 100, 0);
+        let g0 = traj[0].1;
+        let valid: Vec<f64> =
+            traj.iter().filter(|(_, n)| *n > 1e-3 * g0).map(|(s, _)| *s).collect();
+        let mid = valid[valid.len() / 2];
+        let late = *valid.last().unwrap();
+        let bound = input_rank.min(cfg.n - input_rank.min(cfg.n));
+        t.row(&[
+            input_rank.to_string(),
+            format!("{:.2}", valid[0]),
+            format!("{mid:.2}"),
+            format!("{late:.2}"),
+            bound.to_string(),
+        ]);
+    }
+    t.print("Lemma 3.3 (stable-rank decay of G_t under SGD; m=32, n=48)");
+    println!("\nexpected shape: sr decays over training; final sr tracks min(N', n-N') (Cor. 3.4).");
+}

@@ -1,0 +1,52 @@
+//! Table 1: GaLore vs LoRA memory formulas + feature matrix. Exact
+//! closed-form reproduction (no training, no artifacts).
+
+use galore::bench::Table;
+use galore::memory::formulas;
+use galore::model::{schema, ModelConfig};
+
+fn main() {
+    // The paper's symbolic table, instantiated at each model size by
+    // summing over the actual target matrices with r = d/4.
+    let mut t = Table::new(&["", "GaLore", "LoRA"]);
+    t.row(&["Weights".into(), "mn".into(), "mn + mr + nr".into()]);
+    t.row(&["Optim States".into(), "mr + 2nr".into(), "2mr + 2nr".into()]);
+    t.row(&["Multi-Subspace".into(), "yes".into(), "no".into()]);
+    t.row(&["Pre-Training".into(), "yes".into(), "no".into()]);
+    t.row(&["Fine-Tuning".into(), "yes".into(), "yes".into()]);
+    t.print("Table 1 (symbolic, paper-verbatim)");
+
+    let mut t2 = Table::new(&["model", "rank", "GaLore wt", "LoRA wt", "GaLore st", "LoRA st", "st ratio"]);
+    for name in ["60m", "130m", "350m", "1b", "7b"] {
+        let cfg = ModelConfig::by_name(name).unwrap();
+        let r = cfg.default_rank() as u64;
+        let (mut gw, mut lw, mut gs, mut ls) = (0u64, 0u64, 0u64, 0u64);
+        for meta in schema(cfg) {
+            if !meta.is_projection_target() {
+                continue;
+            }
+            let (m, n) = (meta.rows as u64, meta.cols as u64);
+            let g = formulas::galore(m, n, r);
+            let l = formulas::lora(m, n, r);
+            gw += g.weights;
+            lw += l.weights;
+            gs += g.optim_states;
+            ls += l.optim_states;
+        }
+        t2.row(&[
+            name.into(),
+            r.to_string(),
+            fmt_m(gw),
+            fmt_m(lw),
+            fmt_m(gs),
+            fmt_m(ls),
+            format!("{:.2}x", ls as f64 / gs as f64),
+        ]);
+    }
+    t2.print("Table 1 instantiated over the real target matrices (elements)");
+    println!("\npaper claim: GaLore < LoRA in both weights and optimizer states — holds at every size.");
+}
+
+fn fmt_m(v: u64) -> String {
+    format!("{:.1}M", v as f64 / 1e6)
+}

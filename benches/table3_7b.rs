@@ -1,0 +1,59 @@
+//! Table 3: the 7B run — 8-bit GaLore vs 8-bit Adam, perplexity at
+//! intermediate checkpoints plus the memory estimate. Scaled: the proxy
+//! model stands in for 7B (DESIGN.md §4); the memory column uses the true
+//! 7B shapes. Paper: 17.94/15.39/14.95/14.65 (18G) vs
+//! 18.09/15.47/14.83/14.61 (26G).
+
+use galore::bench::Table;
+use galore::config::MethodKind;
+use galore::coordinator::Trainer;
+use galore::exp::scale::table3_runs;
+use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
+use galore::model::ModelConfig;
+
+fn main() -> anyhow::Result<()> {
+    let (runs, checkpoints) = table3_runs();
+    let m7b = ModelConfig::by_name("7b").unwrap();
+    let mut table = Table::new(&["method", "7B mem", "ck1", "ck2", "ck3", "final", "paper final"]);
+    for cfg in runs {
+        eprintln!("[table3] {} ({} steps)...", cfg.method.label(), cfg.steps);
+        let mut trainer = Trainer::from_config(cfg.clone())?;
+        let mut ppls = Vec::new();
+        for step in 0..cfg.steps {
+            trainer.train_step()?;
+            if checkpoints.contains(&(step + 1)) {
+                let l = trainer.eval(2)?;
+                ppls.push(l.exp());
+            }
+        }
+        while ppls.len() < 4 {
+            ppls.push(trainer.eval(2)?.exp());
+        }
+        let (mem, paper) = match cfg.method {
+            MethodKind::GaLore8bit => (
+                estimate(
+                    m7b,
+                    Method::GaLore8bit { rank: 1024 },
+                    TrainOpts { layerwise_updates: true, ..Default::default() },
+                ),
+                "14.65 (18G)",
+            ),
+            _ => (
+                estimate(m7b, Method::Adam8bit, TrainOpts { layerwise_updates: true, ..Default::default() }),
+                "14.61 (26G)",
+            ),
+        };
+        table.row(&[
+            cfg.method.label().into(),
+            fmt_gib(mem.total()),
+            format!("{:.2}", ppls[0]),
+            format!("{:.2}", ppls[1]),
+            format!("{:.2}", ppls[2]),
+            format!("{:.2}", ppls[3]),
+            paper.into(),
+        ]);
+    }
+    table.print("Table 3 (scaled 7B run: 8-bit GaLore vs 8-bit Adam)");
+    println!("expected shape: both curves overlap (|Δppl| small), GaLore memory well below Adam's.");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Fig. 5 ablations, interactively: subspace change frequency T (left) and
+//! the rank-vs-steps trade-off (right) on the nano proxy.
+//!
+//!   cargo run --release --example ablations
+
+use galore::config::RunConfig;
+use galore::coordinator::Trainer;
+use galore::exp::scale::{fig5_freq_sweep, fig5_rank_sweep};
+
+fn run(cfg: RunConfig) -> anyhow::Result<f32> {
+    let mut trainer = Trainer::from_config(cfg.clone())?;
+    for _ in 0..cfg.steps {
+        trainer.train_step()?;
+    }
+    Ok(trainer.eval(2)?)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig. 5 (left): subspace change frequency T ===");
+    let (base, freqs) = fig5_freq_sweep();
+    println!("rank {} / dim {}, {} steps", base.galore.rank, base.model.dim, base.steps);
+    for t in freqs {
+        let mut cfg = base.clone();
+        cfg.galore.update_freq = t;
+        let loss = run(cfg)?;
+        let label = if t >= 1_000_000 { "never".to_string() } else { t.to_string() };
+        println!("  T = {:>7}: eval loss {:.4}", label, loss);
+    }
+    println!("expected shape: a U-curve — too frequent and 'never' both worse than T≈50–250.");
+
+    println!("\n=== Fig. 5 (right): rank vs training steps ===");
+    let (base, sweep) = fig5_rank_sweep();
+    for (rank, steps) in sweep {
+        let mut cfg = base.clone();
+        cfg.galore.rank = rank;
+        cfg.lowrank_rank = rank;
+        cfg.steps = steps;
+        let loss = run(cfg)?;
+        println!("  rank {:>3} x {:>5} steps: eval loss {:.4}", rank, steps, loss);
+    }
+    println!("expected shape: smaller rank + more steps reaches similar/lower loss (memory-compute trade-off).");
+    Ok(())
+}

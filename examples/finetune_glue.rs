@@ -1,0 +1,44 @@
+//! Memory-efficient fine-tuning (the Table 4 scenario, substituted per
+//! DESIGN.md §4): pre-train a base model, then fine-tune it on three
+//! synthetic downstream tasks with Full FT / GaLore / LoRA at rank 4 and
+//! 8, reporting task loss (lower = better, the GLUE-score stand-in) and
+//! optimizer memory.
+//!
+//!   cargo run --release --example finetune_glue
+
+use galore::config::MethodKind;
+use galore::exp::finetune::{finetune, pretrain_base, TASKS};
+use galore::exp::scale::fast_mode;
+use galore::memory::fmt_gib;
+use galore::model::ModelConfig;
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelConfig::by_name("nano").unwrap();
+    let (pre_steps, ft_steps) = if fast_mode() { (30, 20) } else { (150, 80) };
+    println!("pre-training base {} for {pre_steps} steps...", model.name);
+    let base = pretrain_base(model, pre_steps, 7)?;
+
+    for rank in [4usize, 8] {
+        println!("\n=== rank {rank} ===");
+        println!("{:<14} {:>10} {:>10} {:>10} {:>12}", "method", TASKS[0].name, TASKS[1].name, TASKS[2].name, "optim mem");
+        for method in [MethodKind::FullRank, MethodKind::GaLore, MethodKind::Lora] {
+            let mut losses = Vec::new();
+            let mut mem = 0usize;
+            for task in TASKS {
+                let (loss, state) = finetune(&base, *task, method, rank, ft_steps)?;
+                losses.push(loss);
+                mem = mem.max(state);
+            }
+            println!(
+                "{:<14} {:>10.4} {:>10.4} {:>10.4} {:>12}",
+                method.label(),
+                losses[0],
+                losses[1],
+                losses[2],
+                fmt_gib(mem as u64)
+            );
+        }
+    }
+    println!("\npaper shape: GaLore ≈ Full FT ≥ LoRA at equal rank, with less optimizer memory (Table 4).");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! End-to-end pre-training driver — the recorded run of EXPERIMENTS.md.
+//!
+//! Trains a LLaMA-family model on the synthetic-C4 stream with 8-bit
+//! GaLore + per-layer weight updates (the paper's headline configuration),
+//! logs the loss curve to runs/pretrain_<model>_<method>.csv, evaluates on
+//! held-out shards, and reports throughput and the memory story
+//! (measured optimizer state vs the analytic estimator).
+//!
+//!   cargo run --release --example pretrain_c4 -- [model] [method] [steps]
+//!   e.g. cargo run --release --example pretrain_c4 -- micro galore8bit 600
+
+use galore::config::{MethodKind, RunConfig};
+use galore::coordinator::Trainer;
+use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
+use galore::model::ModelConfig;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model_name = args.first().map(String::as_str).unwrap_or("micro");
+    let method_name = args.get(1).map(String::as_str).unwrap_or("galore8bit");
+    let model = ModelConfig::by_name(model_name)
+        .unwrap_or_else(|| panic!("unknown model {model_name}"));
+    let method = MethodKind::parse(method_name).expect("unknown method");
+    let mut cfg = RunConfig::new(model, method);
+    cfg.steps = args
+        .get(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if galore::exp::scale::fast_mode() { 40 } else { model.steps });
+    cfg.layerwise = true;
+    cfg.eval_every = (cfg.steps / 10).max(1);
+
+    println!(
+        "pre-training {} with {} for {} steps (batch {} x seq {} = {} tokens/step)",
+        model.name,
+        method.label(),
+        cfg.steps,
+        cfg.batch,
+        model.seq,
+        cfg.batch * model.seq
+    );
+    println!(
+        "model: {:.1}M params, rank {} (r/d = {:.2}), T = {}, alpha = {}",
+        model.n_params() as f64 / 1e6,
+        cfg.galore.rank,
+        cfg.galore.rank as f64 / model.dim as f64,
+        cfg.galore.update_freq,
+        cfg.galore.scale
+    );
+
+    let mut trainer = Trainer::from_config(cfg.clone())?;
+    let t0 = std::time::Instant::now();
+    for step in 0..cfg.steps {
+        let loss = trainer.train_step()?;
+        if step % (cfg.steps / 20).max(1) == 0 {
+            println!(
+                "step {:>6}/{}  loss {:.4}  lr {:.5}  {:.0} tok/s",
+                step,
+                cfg.steps,
+                loss,
+                trainer.schedule.at(step),
+                trainer.metrics.tokens_per_sec()
+            );
+        }
+        if (step + 1) % cfg.eval_every == 0 {
+            let l = trainer.eval(2)?;
+            trainer.metrics.log_eval(step + 1, l);
+            println!("  >> eval loss {:.4}  ppl {:.2}", l, l.exp());
+        }
+    }
+    let elapsed = t0.elapsed();
+    let eval = trainer.eval(4)?;
+    trainer.metrics.log_eval(cfg.steps, eval);
+
+    let csv = format!("runs/pretrain_{}_{}.csv", model.name, method.label());
+    let path = trainer.metrics.write_csv(&csv)?;
+
+    // Memory story: measured Rust-side state vs the analytic estimator.
+    let est_method = match method {
+        MethodKind::GaLore8bit => Method::GaLore8bit { rank: cfg.galore.rank },
+        MethodKind::GaLore => Method::GaLore { rank: cfg.galore.rank },
+        MethodKind::Adam8bit => Method::Adam8bit,
+        _ => Method::FullRank,
+    };
+    let est = estimate(
+        model,
+        est_method,
+        TrainOpts { layerwise_updates: cfg.layerwise, token_batch: cfg.batch * model.seq, ..Default::default() },
+    );
+
+    println!("\n================ RESULT ================");
+    println!("final eval loss {:.4}  perplexity {:.2}", eval, eval.exp());
+    println!(
+        "tokens {}  wall {:.1}s  throughput {:.0} tok/s (exec {:.0}%)",
+        trainer.metrics.total_tokens(),
+        elapsed.as_secs_f64(),
+        trainer.metrics.tokens_per_sec(),
+        100.0 * trainer.metrics.exec_time.as_secs_f64() / elapsed.as_secs_f64()
+    );
+    println!(
+        "optimizer state: measured {}  (estimator: {})",
+        fmt_gib(trainer.optimizer_state_bytes() as u64),
+        fmt_gib(est.optim_states)
+    );
+    println!(
+        "peak gradient memory: {} (layerwise = {})",
+        fmt_gib(trainer.peak_grad_bytes as u64),
+        cfg.layerwise
+    );
+    println!("loss curve: {}", path.display());
+    Ok(())
+}

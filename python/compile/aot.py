@@ -1,0 +1,180 @@
+"""AOT compiler: lower L2/L1 JAX graphs to HLO-text artifacts for Rust.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts \
+                           [--configs nano,micro,mini,small] [--batch 8]
+
+Emits, per model config:
+  train_{cfg}_b{B}.hlo.txt   loss + per-parameter grads (the training step)
+  eval_{cfg}_b{B}.hlo.txt    loss only
+  fwd_{cfg}_b{B}.hlo.txt     logits (serving/inspection)
+and per distinct 2-D weight shape (m, n) with its GaLore ranks r:
+  galore_step_{m}x{n}_r{r}.hlo.txt   fused Pallas GaLore-Adam step
+  adam_step_{m}x{n}.hlo.txt          full-rank Adam step (baseline/golden)
+  proj_refresh_{m}x{n}_r{r}.hlo.txt  matmul-only randomized projector refresh
+plus artifacts/manifest.json describing every artifact's I/O signature,
+parsed by rust/src/runtime/manifest.rs.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import galore_step, model
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32", jnp.int8.dtype: "i8"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Emitter:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out_dir = out_dir
+        self.force = force
+        self.entries: List[dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs: List[jax.ShapeDtypeStruct], meta: dict):
+        """Lower fn(*in_specs) to {name}.hlo.txt and record a manifest entry."""
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        n_outputs = meta.pop("n_outputs")
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [list(s.shape) for s in in_specs],
+            "input_dtypes": [DTYPE_NAMES[s.dtype] for s in in_specs],
+            "n_outputs": n_outputs,
+            **meta,
+        }
+        self.entries.append(entry)
+        if os.path.exists(path) and not self.force:
+            print(f"  [cached] {fname}")
+            return
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [lowered] {fname} ({len(text)/1e3:.0f} kB)")
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"artifacts": self.entries}, f, indent=1)
+        print(f"wrote {path} ({len(self.entries)} artifacts)")
+
+
+def galore_shapes(cfg: model.ModelConfig) -> List[Tuple[int, int]]:
+    """Distinct 2-D shapes GaLore is applied to (attention + FFN, not embed
+    or lm_head — matching §5.1 'all multi-head attention layers and
+    feed-forward layers')."""
+    d, i = cfg.dim, cfg.intermediate
+    return sorted({(d, d), (d, i), (i, d)})
+
+
+def default_ranks(cfg: model.ModelConfig) -> List[int]:
+    """Paper uses r/d in {1/4, 1/2} (Table 2 uses r = d/4 at 60M, d/3..d/4
+    elsewhere); we lower quarter- and half-dim ranks."""
+    return sorted({max(4, cfg.dim // 4), max(4, cfg.dim // 2)})
+
+
+def emit_model_artifacts(em: Emitter, cfg: model.ModelConfig, batch: int):
+    n_params = len(model.param_shapes(cfg))
+    pspecs = [spec(s) for s in model.param_shapes(cfg)]
+    tok = spec((batch, cfg.seq), jnp.int32)
+
+    em.emit(
+        f"train_{cfg.name}_b{batch}",
+        functools.partial(model.loss_and_grads, cfg),
+        pspecs + [tok, tok],
+        {"kind": "train", "config": cfg.name, "batch": batch, "n_outputs": 1 + n_params},
+    )
+    em.emit(
+        f"eval_{cfg.name}_b{batch}",
+        functools.partial(model.loss_only, cfg),
+        pspecs + [tok, tok],
+        {"kind": "eval", "config": cfg.name, "batch": batch, "n_outputs": 1},
+    )
+    em.emit(
+        f"fwd_{cfg.name}_b{batch}",
+        functools.partial(model.logits_fwd, cfg),
+        pspecs + [tok],
+        {"kind": "fwd", "config": cfg.name, "batch": batch, "n_outputs": 1},
+    )
+
+
+def emit_optim_artifacts(em: Emitter, shapes: List[Tuple[int, int]], ranks_by_shape):
+    one = spec((1,))
+    for (m, n) in shapes:
+        w = spec((m, n))
+        em.emit(
+            f"adam_step_{m}x{n}",
+            galore_step.adam_step,
+            [w, w, w, w, one, one],
+            {"kind": "adam_step", "m": m, "n": n, "n_outputs": 3},
+        )
+        for r in ranks_by_shape[(m, n)]:
+            em.emit(
+                f"galore_step_{m}x{n}_r{r}",
+                galore_step.galore_adam_step,
+                [w, spec((r, n)), spec((r, n)), w, spec((m, r)), one, one],
+                {"kind": "galore_step", "m": m, "n": n, "r": r, "n_outputs": 3},
+            )
+            em.emit(
+                f"proj_refresh_{m}x{n}_r{r}",
+                galore_step.projector_refresh,
+                [w, spec((n, r))],
+                {"kind": "proj_refresh", "m": m, "n": n, "r": r, "n_outputs": 1},
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="nano,micro,mini,small")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--force", action="store_true", help="re-lower even if cached")
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir, force=args.force)
+    all_shapes: dict = {}
+    for name in args.configs.split(","):
+        cfg = model.CONFIGS[name.strip()]
+        print(f"config {cfg.name}: dim={cfg.dim} layers={cfg.layers} vocab={cfg.vocab}")
+        emit_model_artifacts(em, cfg, args.batch)
+        for shp in galore_shapes(cfg):
+            # Only the short side is projected (§4.2): artifacts are lowered
+            # for m <= n; the Rust side transposes tall gradients on entry.
+            m, n = shp
+            if m > n:
+                m, n = n, m
+            all_shapes.setdefault((m, n), set()).update(default_ranks(cfg))
+    emit_optim_artifacts(em, sorted(all_shapes), {k: sorted(v) for k, v in all_shapes.items()})
+    em.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""L2: fused per-layer GaLore-Adam step built from the L1 Pallas kernels.
+
+This is the optimizer-side compute graph that gets AOT-lowered per distinct
+(m, n, r) weight shape. A LLaMA block has only a handful of distinct 2-D
+shapes (d x d attention, d x i / i x d FFN), so a full model needs just a
+few artifacts; the Rust coordinator dispatches each layer's gradient to the
+artifact matching its shape.
+
+Also exports ``adam_step`` (the full-rank baseline as an artifact, used by
+the bit-exactness tests between the Rust Adam and the HLO Adam) and
+``projector_refresh`` (matmul-only randomized subspace iteration for
+computing P on-graph).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import galore as gk
+from .kernels import ref
+
+
+def galore_adam_step(w, m, v, g, p, t, lr_alpha, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One GaLore-Adam step (Algorithm 2) for a single layer.
+
+    Shapes: w,g (m0,n0); p (m0,r); m,v (r,n0); t, lr_alpha (1,) f32.
+    Returns (w', m', v'). Uses the Pallas kernels (interpret mode) so the
+    lowered HLO exercises the L1 tiling.
+    """
+    return gk.galore_adam_step(w, m, v, g, p, t, lr_alpha, beta1=beta1, beta2=beta2, eps=eps)
+
+
+def galore_adam_step_ref(w, m, v, g, p, t, lr_alpha, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Pure-jnp oracle for the fused step (same signature, scalar t/lr)."""
+    return ref.galore_adam_step(
+        w, m, v, g, p, t[0], 1.0, lr_alpha[0], beta1=beta1, beta2=beta2, eps=eps
+    )
+
+
+def adam_step(w, m, v, g, t, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Full-rank Adam step on one layer (baseline artifact).
+
+    Shapes: w,g,m,v (m0,n0); t, lr (1,) f32. Returns (w', m', v').
+    """
+    m_new, v_new, n = ref.adam_update(m, v, g, t[0], beta1, beta2, eps)
+    return w - lr[0] * n, m_new, v_new
+
+
+def projector_refresh(g, omega, power_iters: int = 4):
+    """Compute a fresh left projector P from gradient g (m x n) and a fixed
+    random sketch omega (n x r), using matmul-only randomized subspace
+    iteration (no LAPACK custom-calls — runs on any PJRT backend).
+
+    The Rust coordinator may instead use its own Householder-QR SVD; both
+    produce the same subspace up to rotation, which is all GaLore needs
+    (Theorem 3.8 holds for any fixed orthonormal P).
+    """
+    y = g @ omega
+    y = ref.newton_schulz_orthonormalize(y)
+    for _ in range(power_iters):
+        y = g @ (g.T @ y)
+        y = ref.newton_schulz_orthonormalize(y)
+    return (y,)

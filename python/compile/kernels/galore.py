@@ -1,0 +1,205 @@
+"""L1 Pallas kernels for the GaLore hot spot (Algorithm 2).
+
+Three kernels make up the per-layer GaLore-Adam step:
+
+  1. ``project``       R = P^T G          (rank-r compaction of the gradient)
+  2. ``adam_moments``  M,V,N update on R  (element-wise, compact space)
+  3. ``project_back``  dW = alpha * P N   (expansion back to weight space)
+
+Hardware adaptation (paper targets CUDA; we target TPU semantics):
+
+* The gradient G (m x n) is streamed tile-by-tile HBM->VMEM with a
+  ``BlockSpec`` grid over (m/bm, n/bn); the projector tile P (bm x r) rides
+  along the same m-index so each grid step performs an MXU-shaped
+  (r x bm) @ (bm x bn) partial product accumulated into the R output block.
+  This is the role threadblock shared-memory staging plays in the CUDA
+  implementation.
+* The Adam update is purely element-wise on (r x n), tiled along n so the
+  three compact states (M, V, R) stay resident in VMEM per tile.
+* All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+  cannot execute Mosaic custom-calls; real-TPU efficiency is estimated from
+  the VMEM footprint of these tilings in DESIGN.md §6.
+
+Correctness for every kernel is pinned against ``ref.py`` by
+``python/tests/test_kernels.py`` (hypothesis sweeps over shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes, chosen in DESIGN.md §6 so that per-step VMEM usage
+# (G tile + P tile + R accumulator, f32) stays well under 16 MB with
+# double-buffering headroom:
+#   bm=256, bn=256, r<=1024:  256*256*4 + 256*1024*4 + 1024*256*4 = 2.3 MB.
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+
+
+def _tile(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (tiles must divide evenly)."""
+    t = min(pref, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# project: R = P^T G
+# ---------------------------------------------------------------------------
+
+
+def _project_kernel(p_ref, g_ref, r_ref):
+    """Grid (m/bm, n/bn); accumulate (r x bn) partial products over the
+    m-axis. The m-axis is the *innermost* grid dim so r_ref revisits the
+    same output block across the accumulation, matching a VMEM-resident
+    accumulator on TPU."""
+    im = pl.program_id(1)
+
+    @pl.when(im == 0)
+    def _init():
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    r_ref[...] += jnp.dot(
+        p_ref[...].T, g_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def project(p: jax.Array, g: jax.Array, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN) -> jax.Array:
+    """R = P^T G via a tiled Pallas kernel. p: (m, r), g: (m, n) -> (r, n)."""
+    m, r = p.shape
+    m2, n = g.shape
+    assert m == m2, f"shape mismatch {p.shape} vs {g.shape}"
+    bm = _tile(m, bm)
+    bn = _tile(n, bn)
+    grid = (n // bn, m // bm)  # n outer, m inner (accumulation axis)
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda jn, im: (im, 0)),
+            pl.BlockSpec((bm, bn), lambda jn, im: (im, jn)),
+        ],
+        out_specs=pl.BlockSpec((r, bn), lambda jn, im: (0, jn)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=True,
+    )(p, g)
+
+
+# ---------------------------------------------------------------------------
+# adam_moments: compact-space Adam with bias correction (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def _adam_kernel(m_ref, v_ref, r_ref, t_ref, m_out, v_out, n_out, *, beta1, beta2, eps):
+    t = t_ref[0]
+    r = r_ref[...]
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * r
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * (r * r)
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    m_out[...] = m_new
+    v_out[...] = v_new
+    n_out[...] = m_hat / (jnp.sqrt(v_hat) + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps", "bn"))
+def adam_moments(
+    m: jax.Array,
+    v: jax.Array,
+    r: jax.Array,
+    t: jax.Array,
+    *,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    bn: int = 1024,
+):
+    """Element-wise Adam moment update on the compact gradient R (r0 x n).
+
+    t is a float32 (1,) array holding the 1-based step. Returns (M', V', N).
+    Tiled along the n axis so each VMEM step holds 3 input + 3 output tiles.
+    """
+    r0, n = r.shape
+    bn = _tile(n, bn)
+    grid = (n // bn,)
+    kern = functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps)
+    spec = pl.BlockSpec((r0, bn), lambda j: (0, j))
+    tspec = pl.BlockSpec((1,), lambda j: (0,))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec, spec, spec, tspec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((r0, n), jnp.float32)] * 3,
+        interpret=True,
+    )(m, v, r, t)
+
+
+# ---------------------------------------------------------------------------
+# project_back: dW = alpha * P N, fused with the weight update W -= lr * dW
+# ---------------------------------------------------------------------------
+
+
+def _project_back_kernel(p_ref, n_ref, w_ref, s_ref, w_out):
+    """Grid (m/bm, n/bn): each step computes a (bm x bn) tile of P @ N and
+    applies the scaled update to the matching W tile. s_ref = [lr * alpha]."""
+    dw = jnp.dot(p_ref[...], n_ref[...], preferred_element_type=jnp.float32)
+    w_out[...] = w_ref[...] - s_ref[0] * dw
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def project_back_update(
+    p: jax.Array,
+    n: jax.Array,
+    w: jax.Array,
+    lr_alpha: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """W' = W - (lr*alpha) * P @ N. p: (m, r), n: (r, n0), w: (m, n0)."""
+    m, r = p.shape
+    r2, n0 = n.shape
+    assert r == r2
+    bm = _tile(m, bm)
+    bn = _tile(n0, bn)
+    grid = (m // bm, n0 // bn)
+    return pl.pallas_call(
+        _project_back_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n0), jnp.float32),
+        interpret=True,
+    )(p, n, w, lr_alpha)
+
+
+# ---------------------------------------------------------------------------
+# Fused per-layer step (used by galore_step.py / the AOT artifact)
+# ---------------------------------------------------------------------------
+
+
+def galore_adam_step(w, m, v, g, p, t, lr_alpha, *, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Compose the three kernels into one traced step.
+
+    w: (m0, n0), g: (m0, n0), p: (m0, r), m/v: (r, n0),
+    t: (1,) f32 1-based step, lr_alpha: (1,) f32 = lr * alpha.
+    Returns (w', m', v').
+    """
+    r = project(p, g)
+    m_new, v_new, n = adam_moments(m, v, r, t, beta1=beta1, beta2=beta2, eps=eps)
+    w_new = project_back_update(p, n, w, lr_alpha)
+    return w_new, m_new, v_new

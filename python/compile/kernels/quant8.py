@@ -1,0 +1,86 @@
+"""L1 Pallas kernels for block-wise 8-bit quantization of optimizer states.
+
+Implements the absmax block quantization scheme of Dettmers et al. (2022)
+(the scheme behind 8-bit Adam / "8-bit GaLore"): the state tensor is viewed
+as contiguous blocks of ``BLOCK`` elements; each block is scaled by its
+absolute maximum onto the signed int8 grid [-127, 127].
+
+TPU adaptation: blocks are laid out as VMEM rows of width ``BLOCK`` (256 —
+two 128-lane vregs) instead of the 2048-element CUDA thread blocks
+bitsandbytes uses; the absmax reduction is a single-lane-axis reduce, and
+quantize/dequantize are pure VPU element-wise ops. interpret=True for the
+CPU PJRT client (see galore.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]  # (rows, BLOCK)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_step",))
+def quantize_block8(x: jax.Array, *, rows_per_step: int = 64):
+    """Quantize flat f32 array (size % BLOCK == 0) -> (int8 q, f32 scales)."""
+    size = x.size
+    assert size % BLOCK == 0, f"size {size} not a multiple of {BLOCK}"
+    rows = size // BLOCK
+    while rows % rows_per_step != 0:
+        rows_per_step -= 1
+    xm = x.reshape(rows, BLOCK)
+    grid = (rows // rows_per_step,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_per_step, BLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows_per_step, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_step,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ],
+        interpret=True,
+    )(xm)
+    return q.reshape(x.shape), s
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_step",))
+def dequantize_block8(q: jax.Array, scales: jax.Array, *, rows_per_step: int = 64):
+    """Inverse of quantize_block8. q int8 (size % BLOCK == 0), scales f32."""
+    size = q.size
+    rows = size // BLOCK
+    while rows % rows_per_step != 0:
+        rows_per_step -= 1
+    qm = q.reshape(rows, BLOCK)
+    grid = (rows // rows_per_step,)
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_step, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_step,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_step, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32),
+        interpret=True,
+    )(qm, scales)
+    return x.reshape(q.shape)

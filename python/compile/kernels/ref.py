@@ -1,0 +1,146 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness pins).
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain ``jax.numpy`` ops only. ``python/tests`` sweeps shapes
+and dtypes with hypothesis and asserts the kernel output matches the oracle
+to tight tolerances. The oracles are also what the Rust-side unit tests are
+cross-checked against (fixed seeds, golden values exported by aot.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# GaLore projection (Algorithm 2): R = P^T G  (left) or R = G Q (right)
+# ---------------------------------------------------------------------------
+
+
+def project_left(p: jax.Array, g: jax.Array) -> jax.Array:
+    """R = P^T G with P in R^{m x r}, G in R^{m x n} -> R in R^{r x n}."""
+    return p.T @ g
+
+
+def project_right(g: jax.Array, q: jax.Array) -> jax.Array:
+    """R = G Q with G in R^{m x n}, Q in R^{n x r} -> R in R^{m x r}."""
+    return g @ q
+
+
+def project_back_left(p: jax.Array, n: jax.Array, alpha) -> jax.Array:
+    """dW = alpha * P N with N in R^{r x n} -> dW in R^{m x n}."""
+    return alpha * (p @ n)
+
+
+def project_back_right(n: jax.Array, q: jax.Array, alpha) -> jax.Array:
+    """dW = alpha * N Q^T with N in R^{m x r} -> dW in R^{m x n}."""
+    return alpha * (n @ q.T)
+
+
+# ---------------------------------------------------------------------------
+# Adam moment update on the compact gradient R (Eqns. 2-4 / Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def adam_update(m, v, r, t, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One Adam moment update with bias correction.
+
+    Returns (m_new, v_new, n) where n = m_hat / (sqrt(v_hat) + eps).
+    ``t`` is the 1-based step count (float32 scalar).
+    """
+    m_new = beta1 * m + (1.0 - beta1) * r
+    v_new = beta2 * v + (1.0 - beta2) * (r * r)
+    m_hat = m_new / (1.0 - beta1**t)
+    v_hat = v_new / (1.0 - beta2**t)
+    n = m_hat / (jnp.sqrt(v_hat) + eps)
+    return m_new, v_new, n
+
+
+def galore_adam_step(w, m, v, g, p, t, lr, alpha, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Full fused per-layer GaLore-Adam step (Algorithm 2), left projection.
+
+    w: (m0, n0) weight, g: (m0, n0) gradient, p: (m0, r) projector,
+    m/v: (r, n0) moments. Returns (w_new, m_new, v_new).
+
+    Note the paper's Algorithm 2 writes `W_t <- W_{t-1} + eta * G~_t` with
+    G_t the *negative* gradient; we follow the conventional sign
+    (W <- W - lr * update on the raw gradient), matching the official
+    GaLore implementation.
+    """
+    r = p.T @ g
+    m_new, v_new, n = adam_update(m, v, r, t, beta1, beta2, eps)
+    dw = alpha * (p @ n)
+    w_new = w - lr * dw
+    return w_new, m_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Block-wise 8-bit quantization (Dettmers et al., 2022 style: per-block
+# absmax scaling onto a signed-int8 grid). Block size is along the last dim.
+# ---------------------------------------------------------------------------
+
+
+def quantize_block8(x: jax.Array, block: int = 256):
+    """Quantize a 1-D-viewable array to int8 with per-block absmax scales.
+
+    Returns (q, scales): q int8 of x.shape, scales f32 of (nblocks,).
+    x.size must be a multiple of ``block``.
+    """
+    flat = x.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale[:, 0]
+
+
+def dequantize_block8(q: jax.Array, scales: jax.Array, block: int = 256):
+    flat = q.reshape(-1, block).astype(jnp.float32)
+    return (flat * scales[:, None]).reshape(q.shape)
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul oracle (for the standalone matmul kernel)
+# ---------------------------------------------------------------------------
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a @ b
+
+
+# ---------------------------------------------------------------------------
+# Orthonormalization via subspace (power) iteration -- the SVD-free projector
+# refresh used when computing P on-graph. Matmul-only so it lowers to plain
+# HLO (no LAPACK custom-calls, which the 0.5.1 CPU client may lack).
+# ---------------------------------------------------------------------------
+
+
+def newton_schulz_orthonormalize(y: jax.Array, iters: int = 12) -> jax.Array:
+    """Orthonormalize the columns of y (m x r) by Newton-Schulz iteration.
+
+    Converges when ||Y^T Y - I||_2 < 1; we pre-scale by the Frobenius norm
+    which guarantees that. Matmul-only (MXU friendly; no QR custom call).
+    """
+    r = y.shape[1]
+    y = y / (jnp.linalg.norm(y) + 1e-12)
+    eye = jnp.eye(r, dtype=y.dtype)
+    for _ in range(iters):
+        yty = y.T @ y
+        y = y @ (1.5 * eye - 0.5 * yty)
+    return y
+
+
+def topr_subspace(g: jax.Array, r: int, seed: int = 0, power_iters: int = 4) -> jax.Array:
+    """Approximate top-r left singular subspace of g via randomized subspace
+    iteration with Newton-Schulz orthonormalization (matmul-only).
+
+    Returns P (m x r) with orthonormal columns spanning approximately the
+    same subspace as U[:, :r] of the SVD of g.
+    """
+    key = jax.random.PRNGKey(seed)
+    omega = jax.random.normal(key, (g.shape[1], r), dtype=g.dtype)
+    y = g @ omega
+    y = newton_schulz_orthonormalize(y)
+    for _ in range(power_iters):
+        y = g @ (g.T @ y)
+        y = newton_schulz_orthonormalize(y)
+    return y

@@ -1,0 +1,220 @@
+"""L2: LLaMA-style transformer forward/backward in JAX (build-time only).
+
+The architecture follows the paper's experimental setup (§5, Table 5):
+RMSNorm, SwiGLU feed-forward, rotary position embeddings, untied LM head,
+no biases. The paper's size table (60M..7B) is encoded in
+``rust/src/model/config.rs``; this module is parameterized by a
+``ModelConfig`` so ``aot.py`` can lower any size (including the scaled-down
+proxies used for CPU experiments) to a static-shape HLO artifact.
+
+Lowered entry points (all jitted and exported by aot.py):
+
+  * ``loss_and_grads``  — full fwd + mean next-token cross-entropy + grads
+                          w.r.t. every weight (the training-step artifact).
+  * ``loss_only``       — fwd + loss (the eval artifact).
+  * ``logits_fwd``      — fwd returning logits (serving/inspection).
+
+Parameter order is the *flattened schema order* defined by
+``param_names(cfg)`` and mirrored exactly by ``rust/src/model/params.rs``;
+the Rust runtime feeds literals in this order and reads gradients back in
+this order. Keep the two in lockstep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model shape. Mirrors rust/src/model/config.rs::ModelConfig."""
+
+    name: str
+    vocab: int
+    dim: int
+    intermediate: int
+    heads: int
+    layers: int
+    seq: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+# Scaled-down proxy configs for CPU experiments (see DESIGN.md §3/§4) plus
+# the paper's Table 5 shapes (lowered only for memory estimation / shape
+# tests, never trained here).
+CONFIGS = {
+    "nano": ModelConfig("nano", vocab=256, dim=64, intermediate=172, heads=4, layers=2, seq=64),
+    "micro": ModelConfig("micro", vocab=512, dim=128, intermediate=344, heads=4, layers=4, seq=64),
+    "mini": ModelConfig("mini", vocab=1024, dim=256, intermediate=688, heads=8, layers=4, seq=128),
+    "small": ModelConfig("small", vocab=2048, dim=512, intermediate=1376, heads=8, layers=6, seq=128),
+    # Paper Table 5 (not trained on CPU; shapes used by the memory estimator)
+    "60m": ModelConfig("60m", vocab=32000, dim=512, intermediate=1376, heads=8, layers=8, seq=256),
+    "130m": ModelConfig("130m", vocab=32000, dim=768, intermediate=2048, heads=12, layers=12, seq=256),
+    "350m": ModelConfig("350m", vocab=32000, dim=1024, intermediate=2736, heads=16, layers=24, seq=256),
+    # Paper Table 5 lists 24 heads / 32 layers for 1B, but 2048 % 24 != 0 and
+    # the paper memory tables imply ~1.3B params; we use the ReLoRA 1.3B shape.
+    "1b": ModelConfig("1b", vocab=32000, dim=2048, intermediate=5461, heads=32, layers=24, seq=256),
+    "7b": ModelConfig("7b", vocab=32000, dim=4096, intermediate=11008, heads=32, layers=32, seq=2048),
+}
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Flattened parameter schema; must match rust/src/model/params.rs."""
+    names = ["embed.weight"]
+    for l in range(cfg.layers):
+        names += [
+            f"layers.{l}.attn.wq",
+            f"layers.{l}.attn.wk",
+            f"layers.{l}.attn.wv",
+            f"layers.{l}.attn.wo",
+            f"layers.{l}.ffn.w_gate",
+            f"layers.{l}.ffn.w_up",
+            f"layers.{l}.ffn.w_down",
+            f"layers.{l}.attn_norm",
+            f"layers.{l}.ffn_norm",
+        ]
+    names += ["final_norm", "lm_head.weight"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[int, ...]]:
+    """Shapes in schema order. All projection matrices are stored (in, out)
+    so ``x @ w`` applies them; norm gains are 1-D."""
+    d, i, v = cfg.dim, cfg.intermediate, cfg.vocab
+    shapes: List[Tuple[int, ...]] = [(v, d)]
+    for _ in range(cfg.layers):
+        shapes += [
+            (d, d),  # wq
+            (d, d),  # wk
+            (d, d),  # wv
+            (d, d),  # wo
+            (d, i),  # w_gate
+            (d, i),  # w_up
+            (i, d),  # w_down
+            (d,),    # attn_norm
+            (d,),    # ffn_norm
+        ]
+    shapes += [(d,), (d, v)]
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Scaled-normal init (std = 1/sqrt(fan_in)); norm gains init to 1.
+
+    Only used by python tests; the Rust coordinator owns real initialization
+    (rust/src/model/init.rs, identical scheme) so training is reproducible
+    without python at run time.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = 1.0 / (shape[0] ** 0.5)
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rotary(x: jax.Array, base: float = 10000.0) -> jax.Array:
+    """Apply rotary position embeddings. x: (B, T, H, Dh)."""
+    _, t, _, dh = x.shape
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]  # (T, half)
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention(x: jax.Array, wq, wk, wv, wo, cfg: ModelConfig) -> jax.Array:
+    b, t, d = x.shape
+    h, dh = cfg.heads, cfg.head_dim
+    q = (x @ wq).reshape(b, t, h, dh)
+    k = (x @ wk).reshape(b, t, h, dh)
+    v = (x @ wv).reshape(b, t, h, dh)
+    q = rotary(q)
+    k = rotary(k)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / (dh**0.5)
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b, t, d)
+    return out @ wo
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def unflatten(cfg: ModelConfig, flat: List[jax.Array]):
+    """Split the schema-ordered flat list into (embed, layers, final, head)."""
+    embed = flat[0]
+    layers = []
+    idx = 1
+    for _ in range(cfg.layers):
+        layers.append(tuple(flat[idx : idx + 9]))
+        idx += 9
+    final_norm, lm_head = flat[idx], flat[idx + 1]
+    return embed, layers, final_norm, lm_head
+
+
+def forward(cfg: ModelConfig, flat_params: List[jax.Array], tokens: jax.Array) -> jax.Array:
+    """tokens: (B, T) int32 -> logits (B, T, V)."""
+    embed, layers, final_norm, lm_head = unflatten(cfg, flat_params)
+    x = embed[tokens]
+    for (wq, wk, wv, wo, w_gate, w_up, w_down, attn_norm, ffn_norm) in layers:
+        x = x + attention(rmsnorm(x, attn_norm), wq, wk, wv, wo, cfg)
+        x = x + swiglu(rmsnorm(x, ffn_norm), w_gate, w_up, w_down)
+    x = rmsnorm(x, final_norm)
+    return x @ lm_head
+
+
+def loss_fn(cfg: ModelConfig, flat_params: List[jax.Array], tokens, targets) -> jax.Array:
+    """Mean next-token cross-entropy. targets: (B, T) int32 (already shifted)."""
+    logits = forward(cfg, flat_params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def loss_and_grads(cfg: ModelConfig, *args):
+    """args = (*flat_params, tokens, targets) -> (loss, *grads) tuple."""
+    n = len(param_shapes(cfg))
+    flat_params = list(args[:n])
+    tokens, targets = args[n], args[n + 1]
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens, targets))(flat_params)
+    return (loss,) + tuple(grads)
+
+
+def loss_only(cfg: ModelConfig, *args):
+    n = len(param_shapes(cfg))
+    flat_params = list(args[:n])
+    tokens, targets = args[n], args[n + 1]
+    return (loss_fn(cfg, flat_params, tokens, targets),)
+
+
+def logits_fwd(cfg: ModelConfig, *args):
+    n = len(param_shapes(cfg))
+    flat_params = list(args[:n])
+    tokens = args[n]
+    return (forward(cfg, flat_params, tokens),)

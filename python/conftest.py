@@ -1,0 +1,7 @@
+"""Make `import compile` work whether pytest is invoked from the repo root
+(`pytest python/tests/`) or from python/ (`cd python && pytest tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes (and the quant block layout); every kernel output
+is pinned with assert_allclose against the oracle. These tests are the
+authoritative correctness signal for the kernels that end up inside the AOT
+artifacts the Rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import galore, quant8, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+dims = st.sampled_from([8, 16, 32, 48, 64, 96, 128, 192, 256])
+ranks = st.sampled_from([1, 2, 4, 8, 16, 32])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestProject:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, n=dims, r=ranks, seed=seeds)
+    def test_matches_ref(self, m, n, r, seed):
+        p = rand(seed, m, r)
+        g = rand(seed + 1, m, n)
+        np.testing.assert_allclose(
+            galore.project(p, g), ref.project_left(p, g), rtol=1e-4, atol=1e-4
+        )
+
+    def test_nondivisible_tiles(self):
+        # m=96, n=80 with preferred tile 256 -> _tile falls back to divisors.
+        p, g = rand(0, 96, 8), rand(1, 96, 80)
+        np.testing.assert_allclose(
+            galore.project(p, g, bm=64, bn=64), ref.project_left(p, g), rtol=1e-4, atol=1e-4
+        )
+
+    def test_identity_projector_roundtrip(self):
+        # r = m with orthonormal P: P P^T G == G (the r=min(m,n) property
+        # from §3.3 "Difference between GaLore and LoRA").
+        m, n = 32, 48
+        q, _ = np.linalg.qr(np.asarray(rand(3, m, m)))
+        p = jnp.asarray(q, jnp.float32)
+        g = rand(4, m, n)
+        r = galore.project(p, g)
+        back = ref.project_back_left(p, r, 1.0)
+        np.testing.assert_allclose(back, g, rtol=1e-4, atol=1e-4)
+
+
+class TestAdamMoments:
+    @settings(max_examples=25, deadline=None)
+    @given(r0=ranks, n=dims, t=st.integers(min_value=1, max_value=10_000), seed=seeds)
+    def test_matches_ref(self, r0, n, t, seed):
+        m = rand(seed, r0, n, scale=0.01)
+        v = jnp.abs(rand(seed + 1, r0, n, scale=0.01))
+        g = rand(seed + 2, r0, n)
+        tt = jnp.asarray([float(t)], jnp.float32)
+        m2, v2, nn = galore.adam_moments(m, v, g, tt)
+        m2r, v2r, nr = ref.adam_update(m, v, g, float(t))
+        np.testing.assert_allclose(m2, m2r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(v2, v2r, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(nn, nr, rtol=1e-3, atol=1e-4)
+
+    def test_bias_correction_step1(self):
+        # At t=1 with zero-initialized moments, N == g / (|g| + eps).
+        g = rand(7, 4, 32)
+        z = jnp.zeros_like(g)
+        _, _, n = galore.adam_moments(z, z, g, jnp.asarray([1.0], jnp.float32))
+        np.testing.assert_allclose(n, g / (jnp.abs(g) + 1e-8), rtol=1e-4, atol=1e-5)
+
+
+class TestProjectBack:
+    @settings(max_examples=20, deadline=None)
+    @given(m=dims, n=dims, r=ranks, seed=seeds)
+    def test_matches_ref(self, m, n, r, seed):
+        p = rand(seed, m, r)
+        nmat = rand(seed + 1, r, n)
+        w = rand(seed + 2, m, n)
+        la = jnp.asarray([0.005], jnp.float32)
+        got = galore.project_back_update(p, nmat, w, la)
+        want = w - 0.005 * ref.project_back_left(p, nmat, 1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestFusedStep:
+    @settings(max_examples=15, deadline=None)
+    @given(m=dims, n=dims, r=ranks, seed=seeds)
+    def test_matches_ref(self, m, n, r, seed):
+        w = rand(seed, m, n)
+        g = rand(seed + 1, m, n)
+        p = rand(seed + 2, m, r)
+        mm = rand(seed + 3, r, n, scale=0.01)
+        vv = jnp.abs(rand(seed + 4, r, n, scale=0.01))
+        t = jnp.asarray([5.0], jnp.float32)
+        la = jnp.asarray([0.01 * 0.25], jnp.float32)
+        w2, m2, v2 = galore.galore_adam_step(w, mm, vv, g, p, t, la)
+        w2r, m2r, v2r = ref.galore_adam_step(w, mm, vv, g, p, 5.0, la[0], 1.0)
+        np.testing.assert_allclose(m2, m2r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(v2, v2r, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(w2, w2r, rtol=1e-4, atol=1e-5)
+
+
+class TestQuant8:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nblocks=st.integers(min_value=1, max_value=64),
+        seed=seeds,
+        scale=st.sampled_from([1e-4, 1.0, 1e4]),
+    )
+    def test_matches_ref(self, nblocks, seed, scale):
+        x = rand(seed, nblocks * quant8.BLOCK, scale=scale)
+        q, s = quant8.quantize_block8(x)
+        qr, sr = ref.quantize_block8(x, quant8.BLOCK)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(s, sr, rtol=1e-6)
+        np.testing.assert_allclose(
+            quant8.dequantize_block8(q, s), ref.dequantize_block8(qr, sr, quant8.BLOCK), rtol=1e-6
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(nblocks=st.integers(min_value=1, max_value=16), seed=seeds)
+    def test_roundtrip_error_bound(self, nblocks, seed):
+        # absmax quantization error is bounded by absmax/254 per block.
+        x = rand(seed, nblocks * quant8.BLOCK)
+        q, s = quant8.quantize_block8(x)
+        xd = quant8.dequantize_block8(q, s)
+        err = np.abs(np.asarray(xd - x)).reshape(nblocks, -1).max(axis=1)
+        absmax = np.abs(np.asarray(x)).reshape(nblocks, -1).max(axis=1)
+        assert (err <= absmax / 254.0 + 1e-7).all()
+
+    def test_zero_block(self):
+        x = jnp.zeros(quant8.BLOCK, jnp.float32)
+        q, s = quant8.quantize_block8(x)
+        assert np.asarray(q).sum() == 0
+        np.testing.assert_allclose(quant8.dequantize_block8(q, s), x)
+
+
+class TestSubspaceIteration:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=seeds)
+    def test_orthonormal(self, seed):
+        y = rand(seed, 64, 8, scale=3.0)
+        q = ref.newton_schulz_orthonormalize(y, iters=20)
+        np.testing.assert_allclose(q.T @ q, jnp.eye(8), atol=1e-3)
+
+    def test_topr_subspace_matches_svd(self):
+        # Construct a matrix with a sharp rank-4 spectrum; the randomized
+        # subspace must align with the true top-4 left singular space.
+        rng = np.random.default_rng(0)
+        u, _ = np.linalg.qr(rng.standard_normal((64, 8)))
+        v, _ = np.linalg.qr(rng.standard_normal((48, 8)))
+        s = np.diag([10, 8, 6, 5, 0.01, 0.008, 0.005, 0.001])
+        g = jnp.asarray(u @ s @ v.T, jnp.float32)
+        p = ref.topr_subspace(g, 4, seed=1, power_iters=8)
+        u4 = u[:, :4]
+        # Principal angles: ||U4^T P|| should have all singular values ~ 1.
+        sv = np.linalg.svd(u4.T @ np.asarray(p), compute_uv=False)
+        assert sv.min() > 0.999, sv

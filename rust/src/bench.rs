@@ -1,0 +1,160 @@
+//! Micro/macro benchmark harness.
+//!
+//! `criterion` is unavailable in this offline build (DESIGN.md §4), so the
+//! bench targets under `benches/` use this small harness instead: warmup,
+//! adaptive iteration count, median/p10/p90 statistics, and a fixed-width
+//! table printer used to render the paper-style rows each bench reproduces.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl Sample {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// Throughput in `units`/second given units of work per iteration.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.median_secs()
+    }
+}
+
+/// Time `f`, autoscaling iterations to fill ~`budget` (default 1s, override
+/// with GALORE_BENCH_BUDGET_MS). Returns per-iteration statistics.
+pub fn bench(name: &str, mut f: impl FnMut()) -> Sample {
+    let budget_ms: u64 =
+        std::env::var("GALORE_BENCH_BUDGET_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1000);
+    let budget = Duration::from_millis(budget_ms);
+    // Warmup + calibration: run once to estimate cost.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let target_samples = 30usize;
+    let iters_per_sample =
+        ((budget.as_secs_f64() / target_samples as f64) / once.as_secs_f64()).ceil().max(1.0)
+            as usize;
+    let n_samples = if once > budget { 1 } else { target_samples };
+    let mut times: Vec<Duration> = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        times.push(t.elapsed() / iters_per_sample as u32);
+    }
+    times.sort();
+    let pick = |q: f64| times[((times.len() - 1) as f64 * q) as usize];
+    Sample {
+        name: name.to_string(),
+        iters: n_samples * iters_per_sample,
+        median: pick(0.5),
+        p10: pick(0.1),
+        p90: pick(0.9),
+    }
+}
+
+/// Pretty-print a sample line (used by the hot-path benches).
+pub fn report(s: &Sample) {
+    println!(
+        "{:<44} {:>12} median  [{:>10} .. {:>10}]  ({} iters)",
+        s.name,
+        fmt_dur(s.median),
+        fmt_dur(s.p10),
+        fmt_dur(s.p90),
+        s.iters
+    );
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len();
+        println!("\n=== {title} ===");
+        let line: String = self
+            .headers
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("{h:>w$} | ", w = w))
+            .collect();
+        println!("{line}");
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            let line: String =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:>w$} | ", w = w)).collect();
+            println!("{line}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        std::env::set_var("GALORE_BENCH_BUDGET_MS", "50");
+        let s = bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 1);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["method", "60M", "1B"]);
+        t.row(&["Full-Rank".into(), "34.06".into(), "15.56".into()]);
+        t.row(&["GaLore".into(), "34.88".into(), "15.64".into()]);
+        t.print("Table 2 (smoke)");
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (offline substitute for `clap`): long flags
+//! with values (`--steps 100` or `--steps=100`), boolean switches, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub enum CliError {
+    Unknown(String),
+    MissingValue(String),
+    BadValue(String, String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(flag) => write!(f, "unknown flag --{flag}"),
+            CliError::MissingValue(flag) => write!(f, "flag --{flag} needs a value"),
+            CliError::BadValue(flag, v) => write!(f, "bad value '{v}' for --{flag}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command line.
+pub struct Cli {
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    /// `known_switches` are boolean flags that take no value.
+    pub fn parse(args: impl Iterator<Item = String>, known_switches: &[&str]) -> Result<Cli, CliError> {
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut positional = Vec::new();
+        let mut args = args.peekable();
+        while let Some(arg) = args.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&name) {
+                    switches.push(name.to_string());
+                } else {
+                    let v = args.next().ok_or_else(|| CliError::MissingValue(name.into()))?;
+                    flags.insert(name.to_string(), v);
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Cli { flags, switches, positional })
+    }
+
+    pub fn from_env(known_switches: &[&str]) -> Result<Cli, CliError> {
+        Self::parse(std::env::args().skip(1), known_switches)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError::BadValue(name.into(), v.into())),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> impl Iterator<Item = String> + '_ {
+        s.split_whitespace().map(String::from)
+    }
+
+    #[test]
+    fn flags_switches_positionals() {
+        let cli =
+            Cli::parse(args("train --model micro --steps=100 --layerwise extra"), &["layerwise"])
+                .unwrap();
+        assert_eq!(cli.positional(), &["train".to_string(), "extra".to_string()]);
+        assert_eq!(cli.get("model"), Some("micro"));
+        assert_eq!(cli.get_parse::<usize>("steps").unwrap(), Some(100));
+        assert!(cli.has("layerwise"));
+        assert!(!cli.has("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Cli::parse(args("--model"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let cli = Cli::parse(args("--steps abc"), &[]).unwrap();
+        assert!(cli.get_parse::<usize>("steps").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Run configuration: a TOML-subset config file format plus a CLI argument
+//! parser (offline substitutes for `toml`/`clap`; see DESIGN.md §4).
+//!
+//! A training run is fully described by a [`RunConfig`] — model size,
+//! method, optimizer hyperparameters, GaLore knobs, data seed, schedule —
+//! so every experiment in EXPERIMENTS.md is reproducible from its config.
+
+mod cli;
+mod run;
+mod toml;
+
+pub use cli::{Cli, CliError};
+pub use run::{MethodKind, RunConfig};
+pub use toml::TomlDoc;

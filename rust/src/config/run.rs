@@ -1,0 +1,212 @@
+//! RunConfig: the full description of one training run.
+
+use super::TomlDoc;
+use crate::model::ModelConfig;
+use crate::optim::GaLoreConfig;
+
+/// Which training method drives the run (paper §5.1 roster).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    FullRank,
+    AdamW,
+    Adam8bit,
+    Adafactor,
+    GaLore,
+    GaLore8bit,
+    GaLoreAdafactor,
+    Lora,
+    ReLora,
+    LowRank,
+}
+
+impl MethodKind {
+    pub fn parse(s: &str) -> Option<MethodKind> {
+        Some(match s {
+            "full-rank" | "adam" => MethodKind::FullRank,
+            "adamw" => MethodKind::AdamW,
+            "adam8bit" | "8bit-adam" => MethodKind::Adam8bit,
+            "adafactor" => MethodKind::Adafactor,
+            "galore" => MethodKind::GaLore,
+            "galore8bit" | "8bit-galore" => MethodKind::GaLore8bit,
+            "galore-adafactor" => MethodKind::GaLoreAdafactor,
+            "lora" => MethodKind::Lora,
+            "relora" => MethodKind::ReLora,
+            "low-rank" => MethodKind::LowRank,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MethodKind::FullRank => "full-rank",
+            MethodKind::AdamW => "adamw",
+            MethodKind::Adam8bit => "adam8bit",
+            MethodKind::Adafactor => "adafactor",
+            MethodKind::GaLore => "galore",
+            MethodKind::GaLore8bit => "galore8bit",
+            MethodKind::GaLoreAdafactor => "galore-adafactor",
+            MethodKind::Lora => "lora",
+            MethodKind::ReLora => "relora",
+            MethodKind::LowRank => "low-rank",
+        }
+    }
+
+    pub fn is_galore(&self) -> bool {
+        matches!(self, MethodKind::GaLore | MethodKind::GaLore8bit | MethodKind::GaLoreAdafactor)
+    }
+}
+
+/// Full run description. Defaults reproduce the paper's §5.1 settings
+/// scaled to the proxy configs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: &'static ModelConfig,
+    pub method: MethodKind,
+    pub steps: usize,
+    pub batch: usize,
+    /// Peak learning rate. Paper: GaLore 0.01 with α=0.25; baselines tuned
+    /// per size over {0.01..0.0001}.
+    pub lr: f32,
+    /// Cosine schedule with warmup over the first 10% (Appendix C.1).
+    pub warmup_frac: f32,
+    pub final_lr_frac: f32,
+    pub galore: GaLoreConfig,
+    /// LoRA/ReLoRA/low-rank rank (defaults to galore.rank).
+    pub lowrank_rank: usize,
+    pub relora_merge_every: u64,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// §4.3 per-layer weight updates.
+    pub layerwise: bool,
+    /// Evaluate every N steps (0 = only at end).
+    pub eval_every: usize,
+    /// Data-parallel worker count (1 = single process).
+    pub dp_workers: usize,
+}
+
+impl RunConfig {
+    pub fn new(model: &'static ModelConfig, method: MethodKind) -> RunConfig {
+        let rank = model.default_rank();
+        RunConfig {
+            model,
+            method,
+            steps: model.steps,
+            batch: 8,
+            lr: if method.is_galore() { 0.01 } else { 0.001 },
+            warmup_frac: 0.1,
+            final_lr_frac: 0.1,
+            galore: GaLoreConfig { rank, update_freq: 200, scale: 0.25, quantize_projector: false },
+            lowrank_rank: rank,
+            relora_merge_every: 200,
+            weight_decay: 0.0,
+            seed: 0,
+            layerwise: false,
+            eval_every: 0,
+            dp_workers: 1,
+        }
+    }
+
+    /// Parse from a TOML-subset document (CLI overrides applied by main).
+    pub fn from_toml(doc: &TomlDoc) -> Result<RunConfig, String> {
+        let model_name = doc.get("", "model").ok_or("missing 'model'")?;
+        let model = ModelConfig::by_name(model_name)
+            .ok_or_else(|| format!("unknown model '{model_name}'"))?;
+        let method = MethodKind::parse(doc.get("", "method").unwrap_or("galore"))
+            .ok_or("unknown method")?;
+        let mut cfg = RunConfig::new(model, method);
+        if let Some(v) = doc.get_parse("", "steps") {
+            cfg.steps = v;
+        }
+        if let Some(v) = doc.get_parse("", "batch") {
+            cfg.batch = v;
+        }
+        if let Some(v) = doc.get_parse("", "lr") {
+            cfg.lr = v;
+        }
+        if let Some(v) = doc.get_parse("", "seed") {
+            cfg.seed = v;
+        }
+        if let Some(v) = doc.get_parse("", "layerwise") {
+            cfg.layerwise = v;
+        }
+        if let Some(v) = doc.get_parse("", "eval_every") {
+            cfg.eval_every = v;
+        }
+        if let Some(v) = doc.get_parse("", "dp_workers") {
+            cfg.dp_workers = v;
+        }
+        if let Some(v) = doc.get_parse("galore", "rank") {
+            cfg.galore.rank = v;
+            cfg.lowrank_rank = v;
+        }
+        if let Some(v) = doc.get_parse("galore", "update_freq") {
+            cfg.galore.update_freq = v;
+        }
+        if let Some(v) = doc.get_parse("galore", "scale") {
+            cfg.galore.scale = v;
+        }
+        if let Some(v) = doc.get_parse("galore", "quantize_projector") {
+            cfg.galore.quantize_projector = v;
+        }
+        if let Some(v) = doc.get_parse("lowrank", "rank") {
+            cfg.lowrank_rank = v;
+        }
+        if let Some(v) = doc.get_parse("lowrank", "merge_every") {
+            cfg.relora_merge_every = v;
+        }
+        Ok(cfg)
+    }
+
+    /// The train artifact name this run needs.
+    pub fn train_artifact(&self) -> String {
+        format!("train_{}_b{}", self.model.name, self.batch)
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        format!("eval_{}_b{}", self.model.name, self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let cfg = RunConfig::new(ModelConfig::by_name("micro").unwrap(), MethodKind::GaLore);
+        assert_eq!(cfg.galore.update_freq, 200);
+        assert!((cfg.galore.scale - 0.25).abs() < 1e-6);
+        assert!((cfg.lr - 0.01).abs() < 1e-6);
+        assert_eq!(cfg.galore.rank, 32); // micro dim 128 / 4
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let doc = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"galore8bit\"\nsteps = 42\nlayerwise = true\n[galore]\nrank = 8\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.model.name, "nano");
+        assert_eq!(cfg.method, MethodKind::GaLore8bit);
+        assert_eq!(cfg.steps, 42);
+        assert!(cfg.layerwise);
+        assert_eq!(cfg.galore.rank, 8);
+        assert_eq!(cfg.train_artifact(), "train_nano_b8");
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            MethodKind::FullRank,
+            MethodKind::Adam8bit,
+            MethodKind::GaLore8bit,
+            MethodKind::Lora,
+            MethodKind::ReLora,
+            MethodKind::LowRank,
+        ] {
+            assert_eq!(MethodKind::parse(m.label()), Some(m), "{}", m.label());
+        }
+        assert_eq!(MethodKind::parse("nope"), None);
+    }
+}

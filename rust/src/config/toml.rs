@@ -1,0 +1,114 @@
+//! TOML-subset parser: `[section]` headers, `key = value` pairs with
+//! string / integer / float / bool values, `#` comments. Exactly what the
+//! run configs under `configs/` use — nested tables and arrays are out of
+//! scope on purpose.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    /// section -> key -> raw value. Top-level keys live under "".
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            let mut value = value.trim().to_string();
+            if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
+                value = value[1..value.len() - 1].to_string();
+            }
+            doc.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TomlDoc, String> {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {:?}: {e}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section).and_then(|s| s.get(key)).map(String::as_str)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, section: &str, key: &str) -> Option<T> {
+        self.get(section, key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_run_config_shape() {
+        let doc = TomlDoc::parse(
+            r#"
+# pre-training config
+model = "micro"
+steps = 500
+
+[galore]
+rank = 32          # quarter dim
+update_freq = 200
+scale = 0.25
+
+[data]
+seed = 42
+corpus = "synthetic"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "model"), Some("micro"));
+        assert_eq!(doc.get_parse::<usize>("", "steps"), Some(500));
+        assert_eq!(doc.get_parse::<usize>("galore", "rank"), Some(32));
+        assert_eq!(doc.get_parse::<f32>("galore", "scale"), Some(0.25));
+        assert_eq!(doc.get("data", "corpus"), Some("synthetic"));
+        assert_eq!(doc.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = TomlDoc::parse("name = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "name"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("just words").is_err());
+    }
+}

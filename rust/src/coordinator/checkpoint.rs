@@ -1,0 +1,134 @@
+//! Binary checkpointing: weights + step counter + config fingerprint.
+//!
+//! Format (little-endian):
+//!   magic "GLCK" | version u32 | step u64 | model-name len u32 + bytes |
+//!   n_tensors u32 | per tensor: rows u32, cols u32, f32 data.
+
+use crate::model::{ModelConfig, ParamStore};
+use crate::tensor::Matrix;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"GLCK";
+const VERSION: u32 = 1;
+
+pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&step.to_le_bytes())?;
+    let name = params.cfg.name.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&(params.tensors.len() as u32).to_le_bytes())?;
+    for t in &params.tensors {
+        f.write_all(&(t.rows as u32).to_le_bytes())?;
+        f.write_all(&(t.cols as u32).to_le_bytes())?;
+        // Safe little-endian serialization of the f32 payload.
+        let mut bytes = Vec::with_capacity(t.data.len() * 4);
+        for &v in &t.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn err(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Load a checkpoint; the model config must match the stored name.
+pub fn load(path: impl AsRef<Path>, cfg: &'static ModelConfig) -> std::io::Result<(ParamStore, u64)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(err("not a GaLore checkpoint"));
+    }
+    if read_u32(&mut f)? != VERSION {
+        return Err(err("unsupported checkpoint version"));
+    }
+    let step = read_u64(&mut f)?;
+    let name_len = read_u32(&mut f)? as usize;
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let name = String::from_utf8(name).map_err(|_| err("bad model name"))?;
+    if name != cfg.name {
+        return Err(err(&format!("checkpoint is for model '{name}', not '{}'", cfg.name)));
+    }
+    let n = read_u32(&mut f)? as usize;
+    let mut store = ParamStore::zeros(cfg);
+    if n != store.tensors.len() {
+        return Err(err("tensor count mismatch"));
+    }
+    for (i, t) in store.tensors.iter_mut().enumerate() {
+        let rows = read_u32(&mut f)? as usize;
+        let cols = read_u32(&mut f)? as usize;
+        if (rows, cols) != (t.rows, t.cols) {
+            return Err(err(&format!("tensor {i} shape mismatch")));
+        }
+        let mut bytes = vec![0u8; rows * cols * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        *t = Matrix::from_vec(rows, cols, data);
+    }
+    Ok((store, step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_params, ModelConfig};
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::by_name("nano").unwrap();
+        let params = init_params(cfg, 42);
+        let path = std::env::temp_dir().join("galore_test_ckpt/nano.ckpt");
+        save(&path, &params, 123).unwrap();
+        let (loaded, step) = load(&path, cfg).unwrap();
+        assert_eq!(step, 123);
+        for (a, b) in params.tensors.iter().zip(loaded.tensors.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn wrong_model_is_rejected() {
+        let cfg = ModelConfig::by_name("nano").unwrap();
+        let params = init_params(cfg, 0);
+        let path = std::env::temp_dir().join("galore_test_ckpt/mismatch.ckpt");
+        save(&path, &params, 1).unwrap();
+        let other = ModelConfig::by_name("micro").unwrap();
+        assert!(load(&path, other).is_err());
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        let path = std::env::temp_dir().join("galore_test_ckpt/garbage.ckpt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let cfg = ModelConfig::by_name("nano").unwrap();
+        assert!(load(&path, cfg).is_err());
+    }
+}

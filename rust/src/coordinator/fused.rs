@@ -1,0 +1,150 @@
+//! Fused GaLore-Adam hot path: per-layer updates executed through the
+//! `galore_step_{m}x{n}_r{r}` AOT artifacts (the Pallas kernels of
+//! `python/compile/kernels/galore.py`), with projector refreshes through
+//! either the `proj_refresh` artifact or the Rust randomized SVD.
+//!
+//! Tall gradients (m > n) are handled by transposition on entry/exit, so a
+//! model needs artifacts only for its short-side-first shapes — exactly
+//! what `aot.py` lowers (§4.2: only the short side is projected).
+
+use crate::config::RunConfig;
+use crate::model::ParamStore;
+use crate::rng::Rng;
+use crate::runtime::{Engine, Input};
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+use std::collections::{HashMap, HashSet};
+
+struct LayerState {
+    m: Matrix,       // (r, n) compact first moment
+    v: Matrix,       // (r, n) compact second moment
+    p: Matrix,       // (m, r) projector
+    t: u64,
+}
+
+pub struct FusedGaLore {
+    rank: usize,
+    update_freq: u64,
+    scale: f32,
+    handled: HashSet<usize>,
+    states: HashMap<usize, LayerState>,
+    rng: Rng,
+}
+
+impl FusedGaLore {
+    /// Validate that every target shape has a matching artifact and
+    /// pre-compile them.
+    pub fn new(
+        cfg: &RunConfig,
+        params: &ParamStore,
+        targets: &[usize],
+        engine: &mut Engine,
+    ) -> Result<FusedGaLore> {
+        let rank = cfg.galore.rank;
+        let mut handled = HashSet::new();
+        for &idx in targets {
+            let meta = &params.metas[idx];
+            let (m, n) = short_side_first(meta.rows, meta.cols);
+            let Some(art) = engine.manifest.galore_step_for(m, n, rank) else {
+                bail!(
+                    "no galore_step artifact for shape {}x{} rank {rank} — \
+                     re-run `make artifacts` with matching ranks",
+                    m,
+                    n
+                );
+            };
+            let name = art.name.clone();
+            engine.prepare(&name)?;
+            handled.insert(idx);
+        }
+        Ok(FusedGaLore {
+            rank,
+            update_freq: cfg.galore.update_freq,
+            scale: cfg.galore.scale,
+            handled,
+            states: HashMap::new(),
+            rng: Rng::new(cfg.seed ^ 0xF05ED),
+        })
+    }
+
+    pub fn handles(&self, idx: usize) -> bool {
+        self.handled.contains(&idx)
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.states
+            .values()
+            .map(|s| 4 * (s.m.len() + s.v.len() + s.p.len()))
+            .sum()
+    }
+
+    /// One fused step on parameter `idx`.
+    pub fn step(
+        &mut self,
+        engine: &mut Engine,
+        idx: usize,
+        w: &mut Matrix,
+        grad: &Matrix,
+        lr: f32,
+    ) -> Result<()> {
+        let transposed = grad.rows > grad.cols;
+        let (gm, gn) = short_side_first(grad.rows, grad.cols);
+        let r = self.rank.min(gm);
+        // Refresh the projector every T steps (Rust randomized SVD keeps
+        // the refresh off the per-step path; an artifact-based refresh is
+        // available via `proj_refresh_*` for benchmarking).
+        let needs_refresh = match self.states.get(&idx) {
+            None => true,
+            Some(s) => s.t % self.update_freq == 0,
+        };
+        let g_short = if transposed { grad.transpose() } else { grad.clone() };
+        if needs_refresh {
+            let p = crate::linalg::top_r_left_subspace(&g_short, r, &mut self.rng);
+            match self.states.get_mut(&idx) {
+                Some(s) => s.p = p,
+                None => {
+                    self.states.insert(
+                        idx,
+                        LayerState {
+                            m: Matrix::zeros(r, gn),
+                            v: Matrix::zeros(r, gn),
+                            p,
+                            t: 0,
+                        },
+                    );
+                }
+            }
+        }
+        let artifact = format!("galore_step_{gm}x{gn}_r{r}");
+        let state = self.states.get_mut(&idx).unwrap();
+        state.t += 1;
+        let w_short = if transposed { w.transpose() } else { w.clone() };
+        let t_in = [state.t as f32];
+        let la_in = [lr * self.scale];
+        let outputs = engine.execute(
+            &artifact,
+            &[
+                Input::F32(&w_short.data),
+                Input::F32(&state.m.data),
+                Input::F32(&state.v.data),
+                Input::F32(&g_short.data),
+                Input::F32(&state.p.data),
+                Input::F32(&t_in),
+                Input::F32(&la_in),
+            ],
+        )?;
+        let w_new = Matrix::from_vec(gm, gn, outputs[0].data.clone());
+        state.m = Matrix::from_vec(r, gn, outputs[1].data.clone());
+        state.v = Matrix::from_vec(r, gn, outputs[2].data.clone());
+        *w = if transposed { w_new.transpose() } else { w_new };
+        Ok(())
+    }
+}
+
+fn short_side_first(rows: usize, cols: usize) -> (usize, usize) {
+    if rows <= cols {
+        (rows, cols)
+    } else {
+        (cols, rows)
+    }
+}

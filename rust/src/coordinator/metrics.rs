@@ -1,0 +1,136 @@
+//! Training metrics: loss/perplexity tracking, tokens/s throughput, and a
+//! CSV sink under `runs/` consumed by EXPERIMENTS.md and the figure
+//! benches.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// One logged training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub tokens: usize,
+}
+
+pub struct Metrics {
+    pub records: Vec<StepRecord>,
+    pub eval_records: Vec<(usize, f32)>, // (step, eval loss)
+    started: Instant,
+    total_tokens: u64,
+    /// Wall time spent inside artifact execution (for coordinator-overhead
+    /// accounting in §Perf).
+    pub exec_time: std::time::Duration,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            records: Vec::new(),
+            eval_records: Vec::new(),
+            started: Instant::now(),
+            total_tokens: 0,
+            exec_time: std::time::Duration::ZERO,
+        }
+    }
+
+    pub fn log_step(&mut self, step: usize, loss: f32, lr: f32, tokens: usize) {
+        self.records.push(StepRecord { step, loss, lr, tokens });
+        self.total_tokens += tokens as u64;
+    }
+
+    pub fn log_eval(&mut self, step: usize, loss: f32) {
+        self.eval_records.push((step, loss));
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the final `n` steps (robust final metric).
+    pub fn tail_loss(&self, n: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn final_eval_loss(&self) -> Option<f32> {
+        self.eval_records.last().map(|&(_, l)| l)
+    }
+
+    /// exp(loss): the validation-perplexity metric of Tables 2/3.
+    pub fn perplexity(loss: f32) -> f32 {
+        loss.exp()
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.total_tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.total_tokens
+    }
+
+    /// Write `step,loss,lr,tokens` CSV (plus eval rows) for figure benches.
+    pub fn write_csv(&self, path: impl Into<PathBuf>) -> std::io::Result<PathBuf> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "step,loss,lr,tokens")?;
+        for r in &self.records {
+            writeln!(f, "{},{},{},{}", r.step, r.loss, r.lr, r.tokens)?;
+        }
+        writeln!(f, "# eval")?;
+        for (s, l) in &self.eval_records {
+            writeln!(f, "{s},{l},,")?;
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_losses_and_tokens() {
+        let mut m = Metrics::new();
+        m.log_step(0, 5.0, 0.01, 512);
+        m.log_step(1, 4.0, 0.01, 512);
+        assert_eq!(m.last_loss(), Some(4.0));
+        assert_eq!(m.tail_loss(2), Some(4.5));
+        assert_eq!(m.total_tokens(), 1024);
+        assert!(m.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn perplexity_is_exp_loss() {
+        assert!((Metrics::perplexity(0.0) - 1.0).abs() < 1e-6);
+        assert!((Metrics::perplexity(2.0) - 7.389).abs() < 0.01);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut m = Metrics::new();
+        m.log_step(0, 5.5, 0.01, 64);
+        m.log_eval(0, 5.4);
+        let dir = std::env::temp_dir().join("galore_test_metrics");
+        let p = m.write_csv(dir.join("run.csv")).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("step,loss,lr,tokens"));
+        assert!(text.contains("0,5.5,0.01,64"));
+        assert!(text.contains("0,5.4"));
+    }
+}

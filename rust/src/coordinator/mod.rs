@@ -1,0 +1,23 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! * [`trainer`] — the core loop: artifact execution, §4.3 per-layer
+//!   weight updates, optimizer dispatch for every method in the paper.
+//! * [`fused`] — the GaLore-Adam hot path through the Pallas-kernel
+//!   artifacts (L1/L2) instead of the Rust-side optimizer.
+//! * [`parallel`] — synchronous data-parallel workers with a chunked ring
+//!   all-reduce over channels.
+//! * [`schedule`] — warmup + cosine LR (Appendix C.1).
+//! * [`metrics`] — loss/ppl/throughput tracking, CSV sinks for figures.
+//! * [`checkpoint`] — binary weight checkpoints.
+
+pub mod checkpoint;
+pub mod fused;
+pub mod metrics;
+pub mod parallel;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::Metrics;
+pub use parallel::{train_data_parallel, DpResult, Ring, RingHandle};
+pub use schedule::LrSchedule;
+pub use trainer::{build_optimizer, Trainer};

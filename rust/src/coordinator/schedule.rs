@@ -1,0 +1,56 @@
+//! Learning-rate schedule: linear warmup over the first `warmup_frac` of
+//! training, then cosine annealing to `final_frac` of the peak
+//! (Appendix C.1 of the paper).
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub peak: f32,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    pub final_frac: f32,
+}
+
+impl LrSchedule {
+    pub fn cosine(peak: f32, total_steps: usize, warmup_frac: f32, final_frac: f32) -> Self {
+        let warmup_steps = ((total_steps as f32 * warmup_frac) as usize).max(1);
+        LrSchedule { peak, total_steps: total_steps.max(1), warmup_steps, final_frac }
+    }
+
+    /// LR at 0-based step t.
+    pub fn at(&self, t: usize) -> f32 {
+        if t < self.warmup_steps {
+            return self.peak * (t + 1) as f32 / self.warmup_steps as f32;
+        }
+        let decay_steps = (self.total_steps - self.warmup_steps).max(1);
+        let progress = ((t - self.warmup_steps) as f32 / decay_steps as f32).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        let floor = self.peak * self.final_frac;
+        floor + (self.peak - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_cosine_to_floor() {
+        let s = LrSchedule::cosine(0.01, 100, 0.1, 0.1);
+        assert!(s.at(0) <= 0.01 / 10.0 + 1e-9);
+        assert!((s.at(9) - 0.01).abs() < 1e-6); // end of warmup
+        assert!((s.at(99) - 0.001).abs() < 2e-4); // ~floor
+        // Monotone decreasing after warmup.
+        let mut prev = s.at(10);
+        for t in 11..100 {
+            let cur = s.at(t);
+            assert!(cur <= prev + 1e-9);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn beyond_total_steps_clamps() {
+        let s = LrSchedule::cosine(0.01, 50, 0.1, 0.1);
+        assert!((s.at(500) - 0.001).abs() < 1e-6);
+    }
+}

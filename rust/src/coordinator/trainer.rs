@@ -1,0 +1,248 @@
+//! The training loop: batches in, gradients from the AOT artifact,
+//! optimizer updates out — with §4.3 per-layer weight updates and the
+//! paper's full method roster.
+
+use super::fused::FusedGaLore;
+use super::metrics::Metrics;
+use super::schedule::LrSchedule;
+use crate::config::{MethodKind, RunConfig};
+use crate::data::{Batch, DataLoader, SyntheticCorpus};
+use crate::lowrank::{Factorized, Lora, LoraConfig, ReLora};
+use crate::model::{init_params, ParamStore};
+use crate::optim::{Adafactor, Adam, Adam8bit, GaLore, Optimizer};
+use crate::runtime::{default_dir, Engine, Input};
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+
+/// Build the optimizer for a run. `targets` are the schema indices of the
+/// attention/FFN projections (§5.1's low-rank target set).
+pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Box<dyn Optimizer> {
+    let t = targets.iter().copied();
+    match cfg.method {
+        MethodKind::FullRank => Box::new(Adam::default_paper()),
+        MethodKind::AdamW => Box::new(Adam::adamw(cfg.weight_decay.max(0.01))),
+        MethodKind::Adam8bit => Box::new(Adam8bit::new()),
+        MethodKind::Adafactor => Box::new(Adafactor::new()),
+        MethodKind::GaLore => Box::new(GaLore::new(cfg.galore, Adam::default_paper()).with_targets(t)),
+        MethodKind::GaLore8bit => Box::new(GaLore::new(cfg.galore, Adam8bit::new()).with_targets(t)),
+        MethodKind::GaLoreAdafactor => {
+            Box::new(GaLore::new(cfg.galore, Adafactor::new()).with_targets(t))
+        }
+        MethodKind::Lora => Box::new(
+            Lora::new(LoraConfig { rank: cfg.lowrank_rank, alpha: 32.0 }).with_targets(t),
+        ),
+        MethodKind::ReLora => Box::new(
+            ReLora::new(
+                LoraConfig { rank: cfg.lowrank_rank, alpha: 32.0 },
+                cfg.relora_merge_every,
+            )
+            .with_targets(t),
+        ),
+        MethodKind::LowRank => Box::new(Factorized::new(cfg.lowrank_rank).with_targets(t)),
+    }
+}
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub engine: Engine,
+    pub params: ParamStore,
+    pub opt: Box<dyn Optimizer>,
+    pub loader: DataLoader,
+    pub schedule: LrSchedule,
+    pub metrics: Metrics,
+    pub step: usize,
+    /// Peak bytes of gradient tensors held simultaneously (layerwise
+    /// accounting — the quantity Fig. 1 calls "weight gradients").
+    pub peak_grad_bytes: usize,
+    /// Optional fused HLO hot path for GaLore-Adam (uses the Pallas-kernel
+    /// artifacts instead of the Rust-side optimizer).
+    fused: Option<FusedGaLore>,
+}
+
+impl Trainer {
+    /// Assemble a trainer from a run config, a ready Engine and a loader.
+    pub fn new(cfg: RunConfig, engine: Engine, loader: DataLoader) -> Result<Trainer> {
+        let params = init_params(cfg.model, cfg.seed);
+        let targets = params.projection_targets();
+        let opt = build_optimizer(&cfg, &targets);
+        let schedule = LrSchedule::cosine(cfg.lr, cfg.steps, cfg.warmup_frac, cfg.final_lr_frac);
+        Ok(Trainer {
+            cfg,
+            engine,
+            params,
+            opt,
+            loader,
+            schedule,
+            metrics: Metrics::new(),
+            step: 0,
+            peak_grad_bytes: 0,
+            fused: None,
+        })
+    }
+
+    /// Standard construction: artifacts from `GALORE_ARTIFACTS`/./artifacts,
+    /// synthetic corpus sized to the model's vocab.
+    pub fn from_config(cfg: RunConfig) -> Result<Trainer> {
+        let engine = Engine::new(default_dir())?;
+        let corpus = SyntheticCorpus::new(cfg.model.vocab, cfg.seed ^ 0xDA7A);
+        let loader = DataLoader::synthetic(corpus, cfg.batch, cfg.model.seq);
+        Self::new(cfg, engine, loader)
+    }
+
+    /// Switch the GaLore update onto the fused Pallas/HLO artifacts
+    /// (errors if the run is not a GaLore-Adam run or the artifact set
+    /// lacks this shape/rank).
+    pub fn enable_fused_galore(&mut self) -> Result<()> {
+        if self.cfg.method != MethodKind::GaLore {
+            bail!("fused path implements GaLore-Adam (method is {:?})", self.cfg.method);
+        }
+        let targets = self.params.projection_targets();
+        let fused = FusedGaLore::new(&self.cfg, &self.params, &targets, &mut self.engine)?;
+        self.fused = Some(fused);
+        Ok(())
+    }
+
+    pub fn is_fused(&self) -> bool {
+        self.fused.is_some()
+    }
+
+    /// Execute the training artifact on a batch: (loss, grads in schema
+    /// order).
+    pub fn compute_grads(&mut self, batch: &Batch) -> Result<(f32, Vec<Matrix>)> {
+        let artifact = self.cfg.train_artifact();
+        let mut inputs: Vec<Input> = Vec::with_capacity(self.params.len() + 2);
+        for t in &self.params.tensors {
+            inputs.push(Input::F32(&t.data));
+        }
+        inputs.push(Input::I32(&batch.tokens));
+        inputs.push(Input::I32(&batch.targets));
+        let t0 = std::time::Instant::now();
+        let outputs = self
+            .engine
+            .execute(&artifact, &inputs)
+            .with_context(|| format!("executing {artifact}"))?;
+        self.metrics.exec_time += t0.elapsed();
+        let loss = outputs[0].scalar();
+        let grads: Vec<Matrix> = outputs[1..]
+            .iter()
+            .zip(self.params.metas.iter())
+            .map(|(o, meta)| Matrix::from_vec(meta.rows, meta.cols, o.data.clone()))
+            .collect();
+        Ok((loss, grads))
+    }
+
+    /// Apply optimizer updates. Under §4.3 layerwise mode each gradient is
+    /// consumed and dropped immediately (peak grad memory = one layer);
+    /// otherwise all gradients are held until every update has been applied
+    /// (the conventional "optimizer.step() after backward" pattern).
+    pub fn apply_updates(&mut self, grads: Vec<Matrix>, lr: f32) {
+        let total_bytes: usize = grads.iter().map(|g| 4 * g.len()).sum();
+        if self.cfg.layerwise {
+            let mut peak_single = 0usize;
+            // Reverse schema order ≈ backprop arrival order.
+            for (idx, grad) in grads.into_iter().enumerate().rev() {
+                peak_single = peak_single.max(4 * grad.len());
+                self.update_one(idx, &grad, lr);
+                drop(grad); // freed before the next layer's update
+            }
+            self.peak_grad_bytes = self.peak_grad_bytes.max(peak_single);
+        } else {
+            for (idx, grad) in grads.iter().enumerate() {
+                self.update_one(idx, grad, lr);
+            }
+            self.peak_grad_bytes = self.peak_grad_bytes.max(total_bytes);
+        }
+    }
+
+    fn update_one(&mut self, idx: usize, grad: &Matrix, lr: f32) {
+        if let Some(fused) = &mut self.fused {
+            if fused.handles(idx) {
+                fused
+                    .step(&mut self.engine, idx, &mut self.params.tensors[idx], grad, lr)
+                    .expect("fused galore step failed");
+                return;
+            }
+        }
+        self.opt.step(idx, &mut self.params.tensors[idx], grad, lr);
+    }
+
+    /// One full training step. Returns the batch loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        self.train_step_accum(1)
+    }
+
+    /// One optimizer step over `microbatches` accumulated gradient
+    /// computations (token batch = microbatches × batch × seq, the way the
+    /// paper reaches its 131K-token batches on fixed-shape artifacts).
+    pub fn train_step_accum(&mut self, microbatches: usize) -> Result<f32> {
+        assert!(microbatches >= 1);
+        let mut acc: Option<Vec<Matrix>> = None;
+        let mut loss_sum = 0.0f64;
+        let mut tokens = 0usize;
+        for _ in 0..microbatches {
+            let batch = self.loader.next_batch();
+            tokens += batch.n_tokens();
+            let (loss, grads) = self.compute_grads(&batch)?;
+            loss_sum += loss as f64;
+            match &mut acc {
+                None => acc = Some(grads),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(grads.iter()) {
+                        a.add_assign(g);
+                    }
+                }
+            }
+        }
+        let mut grads = acc.unwrap();
+        if microbatches > 1 {
+            let inv = 1.0 / microbatches as f32;
+            for g in grads.iter_mut() {
+                g.scale(inv);
+            }
+        }
+        let loss = (loss_sum / microbatches as f64) as f32;
+        let lr = self.schedule.at(self.step);
+        self.apply_updates(grads, lr);
+        self.metrics.log_step(self.step, loss, lr, tokens);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Mean eval loss over `n_batches` held-out batches.
+    pub fn eval(&mut self, n_batches: usize) -> Result<f32> {
+        let artifact = self.cfg.eval_artifact();
+        let mut total = 0.0f64;
+        for i in 0..n_batches {
+            let batch = self.loader.eval_batch(i as u64);
+            let mut inputs: Vec<Input> = Vec::with_capacity(self.params.len() + 2);
+            for t in &self.params.tensors {
+                inputs.push(Input::F32(&t.data));
+            }
+            inputs.push(Input::I32(&batch.tokens));
+            inputs.push(Input::I32(&batch.targets));
+            let outputs = self.engine.execute(&artifact, &inputs)?;
+            total += outputs[0].scalar() as f64;
+        }
+        Ok((total / n_batches as f64) as f32)
+    }
+
+    /// Run the configured number of steps with periodic eval.
+    pub fn run(&mut self) -> Result<()> {
+        for _ in self.step..self.cfg.steps {
+            self.train_step()?;
+            if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
+                let l = self.eval(2)?;
+                self.metrics.log_eval(self.step, l);
+            }
+        }
+        let l = self.eval(4)?;
+        self.metrics.log_eval(self.step, l);
+        Ok(())
+    }
+
+    /// Optimizer-state bytes currently held (checked against the
+    /// `memory::formulas` predictions by the integration tests).
+    pub fn optimizer_state_bytes(&self) -> usize {
+        self.opt.state_bytes() + self.fused.as_ref().map_or(0, |f| f.state_bytes())
+    }
+}

@@ -1,0 +1,18 @@
+//! Data pipeline: the synthetic-C4 corpus substitute, a byte-level
+//! tokenizer for tiny-corpus runs, and the batched loader the coordinator
+//! streams from.
+//!
+//! C4 is unavailable offline; `SyntheticCorpus` generates a Zipfian
+//! Markov-chain token process (heavy-tailed unigram frequencies + sparse
+//! learnable bigram structure) that is non-trivially predictable — exactly
+//! what the optimizer comparisons need (DESIGN.md §4). Data is generated
+//! in shards on the fly, never repeated (matching the paper's "without
+//! data repetition" protocol), and fully determined by (seed, shard).
+
+mod loader;
+mod synthetic;
+mod tokenizer;
+
+pub use loader::{Batch, DataLoader};
+pub use synthetic::SyntheticCorpus;
+pub use tokenizer::{ByteTokenizer, EMBEDDED_CORPUS};

@@ -1,0 +1,58 @@
+//! Byte-level tokenizer for tiny real-text runs (vocab 256). Lets the
+//! quickstart train on an embedded corpus without any external vocabulary,
+//! and gives the fine-tune experiments a second, non-synthetic domain.
+
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// A small embedded corpus (public-domain style prose assembled for the
+/// repo) so byte-level runs have real, non-synthetic structure.
+pub const EMBEDDED_CORPUS: &str = "\
+the gradient of a deep network is not an arbitrary matrix. during training \
+it acquires structure: directions of large curvature dominate, and the \
+spectrum decays. galore exploits exactly this. rather than constraining \
+the weights to a low rank subspace, it projects the gradient into the \
+leading singular subspace, runs the optimizer in that compact space, and \
+expands the update back. the weights remain full rank; only the optimizer \
+states shrink. every few hundred steps the subspace is recomputed from a \
+fresh gradient, so over the course of training the updates sweep through a \
+sequence of subspaces and the composition recovers full parameter learning. \
+the memory saved is the point: adam keeps two statistics per parameter, so \
+for a seven billion parameter model the states alone dwarf the weights. \
+projecting them to rank r divides that cost by the ratio of the dimension \
+to r. with eight bit quantization of the compact statistics the optimizer \
+nearly vanishes from the memory budget, and a consumer graphics card can \
+pretrain a model that previously demanded a server. none of this requires \
+changing the architecture, the loss, or the data: it is a property of the \
+training dynamics, available to any stateful optimizer that is willing to \
+look at its gradients a little more carefully than usual. ";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "hello galore 123!";
+        assert_eq!(ByteTokenizer::decode(&ByteTokenizer::encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let toks = ByteTokenizer::encode(EMBEDDED_CORPUS);
+        assert!(toks.iter().all(|&t| (0..256).contains(&t)));
+        assert!(toks.len() > 1000);
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment drivers shared by benches and examples: the scaled-down
+//! workload definitions for every paper table/figure (`scale`), the
+//! fine-tuning harness (`finetune`), and the Lemma 3.3 gradient-rank
+//! verification (`lowrank_theory`).
+
+pub mod finetune;
+pub mod lowrank_theory;
+pub mod scale;

@@ -1,0 +1,35 @@
+//! # GaLore — Memory-Efficient LLM Training by Gradient Low-Rank Projection
+//!
+//! A from-scratch reproduction of *GaLore* (Zhao et al., ICML 2024) as a
+//! three-layer Rust + JAX + Pallas training framework:
+//!
+//! * **L1/L2 (build time)** — `python/compile/` authors the LLaMA forward/
+//!   backward graph and the fused Pallas GaLore-Adam step, AOT-lowered to
+//!   HLO-text artifacts (`make artifacts`).
+//! * **L3 (run time, this crate)** — the coordinator: data pipeline,
+//!   training loop, per-layer (layerwise) weight updates, data-parallel
+//!   workers with a ring all-reduce, the full optimizer zoo (Adam, AdamW,
+//!   Adafactor, 8-bit Adam, GaLore wrappers, LoRA/ReLoRA baselines), memory
+//!   accounting, metrics, checkpoints, and the PJRT runtime that executes
+//!   the artifacts. Python never runs on the training path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index that
+//! maps every table/figure of the paper to a module and bench.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod linalg;
+pub mod lowrank;
+pub mod memory;
+pub mod model;
+pub mod optim;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+
+pub use tensor::Matrix;

@@ -1,0 +1,22 @@
+//! Pure-Rust numerical linear algebra for the GaLore projector refresh.
+//!
+//! Algorithm 2 recomputes the projector `P = U[:, :r]` from an SVD of the
+//! gradient every `T` steps. No LAPACK bindings are available offline, so
+//! the framework implements:
+//!
+//! * Householder **QR** (`qr`) — orthonormal range bases.
+//! * One-sided **Jacobi SVD** (`svd_jacobi`) — accurate SVD for the small
+//!   `(r+p) x n` matrices produced by sketching.
+//! * **Randomized truncated SVD** (`randomized_svd`, Halko et al. 2011) —
+//!   the production projector refresh: sketch, power-iterate, QR, small
+//!   Jacobi SVD. Cost `O(mnr)` instead of `O(mn·min(m,n))`.
+//!
+//! Correctness is pinned by unit + property tests (reconstruction error,
+//! orthonormality, subspace alignment against a planted spectrum) and by
+//! python-side cross-checks against `jnp.linalg.svd` in the AOT tests.
+
+mod qr;
+mod svd;
+
+pub use qr::{qr, QrFactors};
+pub use svd::{eigh_jacobi, randomized_svd, reconstruct, stable_rank, svd_jacobi, top_r_left_subspace, Svd};

@@ -1,0 +1,147 @@
+//! Householder QR factorization (thin form).
+
+use crate::tensor::Matrix;
+
+/// Thin QR factors: `a = q @ r` with `q` (m, k) column-orthonormal and `r`
+/// (k, n) upper-triangular, k = min(m, n).
+pub struct QrFactors {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Thin Householder QR of an (m, n) matrix.
+pub fn qr(a: &Matrix) -> QrFactors {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut r = a.clone();
+    // Store the Householder vectors in-place below the diagonal, betas aside.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(k);
+    for j in 0..k {
+        // Build the Householder vector for column j from rows j..m.
+        let mut norm2 = 0.0f64;
+        for i in j..m {
+            let x = r.at(i, j) as f64;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt() as f32;
+        let x0 = r.at(j, j);
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0f32; m - j];
+        if norm > 0.0 {
+            v[0] = x0 - alpha;
+            for i in (j + 1)..m {
+                v[i - j] = r.at(i, j);
+            }
+            let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            if vnorm2 > 1e-30 {
+                // Apply H = I - 2 v v^T / (v^T v) to R[j.., j..].
+                for col in j..n {
+                    let mut dot = 0.0f64;
+                    for i in j..m {
+                        dot += v[i - j] as f64 * r.at(i, col) as f64;
+                    }
+                    let s = (2.0 * dot / vnorm2) as f32;
+                    for i in j..m {
+                        *r.at_mut(i, col) -= s * v[i - j];
+                    }
+                }
+            } else {
+                v = vec![0.0; m - j];
+            }
+        }
+        vs.push(v);
+        // Zero out below-diagonal explicitly (numerical noise).
+        for i in (j + 1)..m {
+            *r.at_mut(i, j) = 0.0;
+        }
+    }
+    // Accumulate Q = H_0 H_1 ... H_{k-1} applied to the first k columns of I.
+    let mut q = Matrix::zeros(m, k);
+    for j in 0..k {
+        *q.at_mut(j, j) = 1.0;
+    }
+    for jh in (0..k).rev() {
+        let v = &vs[jh];
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm2 <= 1e-30 {
+            continue;
+        }
+        for col in 0..k {
+            let mut dot = 0.0f64;
+            for i in jh..m {
+                dot += v[i - jh] as f64 * q.at(i, col) as f64;
+            }
+            let s = (2.0 * dot / vnorm2) as f32;
+            for i in jh..m {
+                *q.at_mut(i, col) -= s * v[i - jh];
+            }
+        }
+    }
+    let r_thin = {
+        let mut rt = Matrix::zeros(k, n);
+        for i in 0..k {
+            rt.row_mut(i).copy_from_slice(&r.row(i)[..n]);
+        }
+        rt
+    };
+    QrFactors { q, r: r_thin }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::{matmul, matmul_at_b};
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Rng::new(0);
+        for &(m, n) in &[(5, 3), (8, 8), (20, 6), (6, 9)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let QrFactors { q, r } = qr(&a);
+            assert_close(&matmul(&q, &r), &a, 1e-4);
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(30, 10, 1.0, &mut rng);
+        let QrFactors { q, .. } = qr(&a);
+        let qtq = matmul_at_b(&q, &q);
+        assert_close(&qtq, &Matrix::eye(10), 1e-4);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(12, 7, 1.0, &mut rng);
+        let QrFactors { r, .. } = qr(&a);
+        for i in 0..r.rows {
+            for j in 0..i.min(r.cols) {
+                assert!(r.at(i, j).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_input() {
+        // Two identical columns: QR must still produce orthonormal Q.
+        let mut rng = Rng::new(3);
+        let col = Matrix::randn(10, 1, 1.0, &mut rng);
+        let mut a = Matrix::zeros(10, 2);
+        for i in 0..10 {
+            *a.at_mut(i, 0) = col.at(i, 0);
+            *a.at_mut(i, 1) = col.at(i, 0);
+        }
+        let QrFactors { q, r } = qr(&a);
+        assert_close(&matmul(&q, &r), &a, 1e-4);
+    }
+}

@@ -1,0 +1,211 @@
+//! LoRA baseline: W = W₀ + (α/r)·BA, W₀ frozen (Hu et al., 2022).
+
+use super::FactorState;
+use crate::optim::{Adam, AdamConfig, Optimizer};
+use crate::rng::Rng;
+use crate::tensor::{matmul, matmul_at_b, matmul_a_bt, Matrix};
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Copy, Debug)]
+pub struct LoraConfig {
+    pub rank: usize,
+    /// LoRA alpha; effective scale is alpha / rank. Paper §5.1 uses 32.
+    pub alpha: f32,
+}
+
+impl Default for LoraConfig {
+    fn default() -> Self {
+        LoraConfig { rank: 128, alpha: 32.0 }
+    }
+}
+
+impl LoraConfig {
+    pub fn scale(&self) -> f32 {
+        self.alpha / self.rank as f32
+    }
+}
+
+pub(crate) struct AdaptorState {
+    pub w0: Matrix,
+    pub b: Matrix, // (m, r), zero-init
+    pub a: Matrix, // (r, n), gaussian-init
+    pub opt_b: FactorState,
+    pub opt_a: FactorState,
+}
+
+impl AdaptorState {
+    pub fn new(w: &Matrix, rank: usize, rng: &mut Rng) -> Self {
+        let (m, n) = w.shape();
+        let r = rank.min(m).min(n);
+        AdaptorState {
+            w0: w.clone(),
+            b: Matrix::zeros(m, r),
+            a: Matrix::randn(r, n, 1.0 / (r as f32).sqrt(), rng),
+            opt_b: FactorState::new(m, r),
+            opt_a: FactorState::new(r, n),
+        }
+    }
+
+    /// Effective weight W₀ + s·BA.
+    pub fn materialize(&self, scale: f32) -> Matrix {
+        let mut ba = matmul(&self.b, &self.a);
+        ba.scale(scale);
+        ba.add_assign(&self.w0);
+        ba
+    }
+
+    /// Chain rule + Adam updates for both factors given the full-weight
+    /// gradient G: ∂L/∂B = s·G Aᵀ, ∂L/∂A = s·Bᵀ G.
+    pub fn update_factors(&mut self, grad: &Matrix, lr: f32, scale: f32, cfg: &AdamConfig) {
+        let mut gb = matmul_a_bt(grad, &self.a);
+        gb.scale(scale);
+        let mut ga = matmul_at_b(&self.b, grad);
+        ga.scale(scale);
+        self.opt_b.adam_step(&mut self.b, &gb, lr, cfg);
+        self.opt_a.adam_step(&mut self.a, &ga, lr, cfg);
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.opt_b.nbytes() + self.opt_a.nbytes()
+    }
+
+    /// Adaptor weight bytes (B and A) — extra *weight* memory vs GaLore
+    /// (Table 1's `mn + mr + nr` weights row).
+    pub fn adaptor_bytes(&self) -> usize {
+        4 * (self.b.len() + self.a.len())
+    }
+}
+
+pub struct Lora {
+    pub cfg: LoraConfig,
+    adam_cfg: AdamConfig,
+    targets: HashSet<usize>,
+    explicit_targets: bool,
+    pub(crate) adaptors: HashMap<usize, AdaptorState>,
+    full_rank: Adam,
+    rng: Rng,
+}
+
+impl Lora {
+    pub fn new(cfg: LoraConfig) -> Self {
+        Lora {
+            cfg,
+            adam_cfg: AdamConfig::default(),
+            targets: HashSet::new(),
+            explicit_targets: false,
+            adaptors: HashMap::new(),
+            full_rank: Adam::new(AdamConfig::default()),
+            rng: Rng::new(0x10A4),
+        }
+    }
+
+    pub fn with_targets(mut self, targets: impl IntoIterator<Item = usize>) -> Self {
+        self.targets = targets.into_iter().collect();
+        self.explicit_targets = true;
+        self
+    }
+
+    fn is_target(&self, param: usize, grad: &Matrix) -> bool {
+        if self.explicit_targets {
+            return self.targets.contains(&param);
+        }
+        grad.rows > 1 && grad.cols > 1 && grad.rows.min(grad.cols) > self.cfg.rank
+    }
+
+    /// Extra weight memory the adaptors introduce (Table 1 comparison).
+    pub fn adaptor_bytes(&self) -> usize {
+        self.adaptors.values().map(|a| a.adaptor_bytes()).sum()
+    }
+}
+
+impl Optimizer for Lora {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        if !self.is_target(param, grad) {
+            self.full_rank.step(param, w, grad, lr);
+            return;
+        }
+        let scale = self.cfg.scale();
+        let rank = self.cfg.rank;
+        let rng = &mut self.rng;
+        let ad = self
+            .adaptors
+            .entry(param)
+            .or_insert_with(|| AdaptorState::new(w, rank, rng));
+        ad.update_factors(grad, lr, scale, &self.adam_cfg);
+        *w = ad.materialize(scale);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.full_rank.state_bytes()
+            + self.adaptors.values().map(|a| a.state_bytes()).sum::<usize>()
+    }
+
+    fn name(&self) -> &'static str {
+        "lora"
+    }
+
+    fn reset_state(&mut self) {
+        self.adaptors.clear();
+        self.full_rank.reset_state();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_stays_w0_plus_low_rank() {
+        let mut rng = Rng::new(0);
+        let mut lora = Lora::new(LoraConfig { rank: 2, alpha: 8.0 });
+        let mut w = Matrix::randn(12, 16, 1.0, &mut rng);
+        let w0 = w.clone();
+        for s in 0..20 {
+            let g = Matrix::randn(12, 16, 1.0, &mut rng.child(s));
+            lora.step(0, &mut w, &g, 0.05);
+        }
+        // ΔW must have rank <= 2.
+        let mut dw = w.clone();
+        dw.sub_assign(&w0);
+        let svd = crate::linalg::svd_jacobi(&dw);
+        assert!(svd.s[2] < 1e-4 * svd.s[0].max(1e-6), "rank leak: {:?}", &svd.s[..4]);
+    }
+
+    #[test]
+    fn optimizer_state_is_2mr_plus_2nr() {
+        let mut rng = Rng::new(1);
+        let mut lora = Lora::new(LoraConfig { rank: 4, alpha: 32.0 });
+        let mut w = Matrix::randn(16, 32, 1.0, &mut rng);
+        let g = Matrix::ones(16, 32);
+        lora.step(0, &mut w, &g, 0.01);
+        // Table 1: 2mr + 2nr floats.
+        assert_eq!(lora.state_bytes(), 4 * (2 * 16 * 4 + 2 * 32 * 4));
+        assert_eq!(lora.adaptor_bytes(), 4 * (16 * 4 + 4 * 32));
+    }
+
+    #[test]
+    fn reduces_loss_on_low_rank_target() {
+        // Target W* = W0 + rank-2 perturbation: LoRA can fit it.
+        let mut rng = Rng::new(2);
+        let w0 = Matrix::randn(10, 14, 1.0, &mut rng);
+        let u = Matrix::randn(10, 2, 1.0, &mut rng);
+        let v = Matrix::randn(2, 14, 1.0, &mut rng);
+        let mut w_star = matmul(&u, &v);
+        w_star.add_assign(&w0);
+        let mut w = w0.clone();
+        let mut lora = Lora::new(LoraConfig { rank: 2, alpha: 2.0 });
+        let mut last = f32::MAX;
+        let mut first = 0.0;
+        for t in 0..200 {
+            let mut g = w.clone();
+            g.sub_assign(&w_star);
+            let loss = g.frobenius_norm();
+            if t == 0 {
+                first = loss;
+            }
+            last = loss;
+            lora.step(0, &mut w, &g, 0.05);
+        }
+        assert!(last < 0.1 * first, "{first} -> {last}");
+    }
+}

@@ -1,0 +1,49 @@
+//! Low-rank *weight* baselines the paper compares against (§5.1):
+//!
+//! * [`Lora`] — W = W₀ + (α/r)·BA with frozen W₀ (Hu et al., 2022).
+//! * [`ReLora`] — LoRA that periodically merges BA into W₀ and restarts
+//!   the adaptor + optimizer state (Lialin et al., 2024), evaluated
+//!   without full-rank warmup as in Table 2.
+//! * [`Factorized`] — W = BA learned from scratch (Kamalakara et al.,
+//!   2022), the "Low-Rank" row of Table 2.
+//!
+//! All three implement [`Optimizer`] so the coordinator treats them
+//! uniformly: `step` consumes the *full* weight gradient from the AOT
+//! artifact, applies the chain rule to the factors (∂L/∂B = s·G Aᵀ,
+//! ∂L/∂A = s·Bᵀ G), Adam-updates the factors, and re-materializes the
+//! effective weight in place (the artifact always receives dense weights).
+
+mod factorized;
+mod lora;
+mod relora;
+
+pub use factorized::Factorized;
+pub use lora::{Lora, LoraConfig};
+pub use relora::ReLora;
+
+use crate::optim::AdamConfig;
+use crate::tensor::Matrix;
+
+/// Adam moments for one factor matrix.
+pub(crate) struct FactorState {
+    pub m: Matrix,
+    pub v: Matrix,
+    pub t: u64,
+}
+
+impl FactorState {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        FactorState { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols), t: 0 }
+    }
+
+    /// One Adam update on `w` given `grad`.
+    pub fn adam_step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32, cfg: &AdamConfig) {
+        self.t += 1;
+        let n = crate::optim::Adam::normalized_update(&mut self.m, &mut self.v, grad, self.t, cfg);
+        w.axpy(-lr, &n);
+    }
+
+    pub fn nbytes(&self) -> usize {
+        4 * (self.m.len() + self.v.len())
+    }
+}

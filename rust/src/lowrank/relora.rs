@@ -1,0 +1,154 @@
+//! ReLoRA baseline (Lialin et al., 2024): LoRA whose adaptor is merged
+//! into W₀ every `merge_every` steps, after which B/A and their optimizer
+//! state restart. Evaluated without full-rank warmup, as in Table 2.
+
+use super::lora::{AdaptorState, LoraConfig};
+use crate::optim::{Adam, AdamConfig, Optimizer};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+use std::collections::{HashMap, HashSet};
+
+pub struct ReLora {
+    pub cfg: LoraConfig,
+    pub merge_every: u64,
+    adam_cfg: AdamConfig,
+    targets: HashSet<usize>,
+    explicit_targets: bool,
+    adaptors: HashMap<usize, AdaptorState>,
+    steps: HashMap<usize, u64>,
+    full_rank: Adam,
+    rng: Rng,
+}
+
+impl ReLora {
+    pub fn new(cfg: LoraConfig, merge_every: u64) -> Self {
+        ReLora {
+            cfg,
+            merge_every,
+            adam_cfg: AdamConfig::default(),
+            targets: HashSet::new(),
+            explicit_targets: false,
+            adaptors: HashMap::new(),
+            steps: HashMap::new(),
+            full_rank: Adam::new(AdamConfig::default()),
+            rng: Rng::new(0x4E10A4),
+        }
+    }
+
+    pub fn with_targets(mut self, targets: impl IntoIterator<Item = usize>) -> Self {
+        self.targets = targets.into_iter().collect();
+        self.explicit_targets = true;
+        self
+    }
+
+    fn is_target(&self, param: usize, grad: &Matrix) -> bool {
+        if self.explicit_targets {
+            return self.targets.contains(&param);
+        }
+        grad.rows > 1 && grad.cols > 1 && grad.rows.min(grad.cols) > self.cfg.rank
+    }
+}
+
+impl Optimizer for ReLora {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        if !self.is_target(param, grad) {
+            self.full_rank.step(param, w, grad, lr);
+            return;
+        }
+        let scale = self.cfg.scale();
+        let rank = self.cfg.rank;
+        let t = self.steps.entry(param).or_insert(0);
+        *t += 1;
+        let needs_merge = *t > 1 && (*t - 1) % self.merge_every == 0;
+        let rng = &mut self.rng;
+        if needs_merge || !self.adaptors.contains_key(&param) {
+            if let Some(old) = self.adaptors.remove(&param) {
+                // Merge: W0 <- W0 + s·BA (W already holds that value), then
+                // restart the adaptor and its optimizer state.
+                *w = old.materialize(scale);
+            }
+            self.adaptors.insert(param, AdaptorState::new(w, rank, rng));
+        }
+        let ad = self.adaptors.get_mut(&param).unwrap();
+        ad.update_factors(grad, lr, scale, &self.adam_cfg);
+        *w = ad.materialize(scale);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.full_rank.state_bytes()
+            + self.adaptors.values().map(|a| a.state_bytes()).sum::<usize>()
+    }
+
+    fn name(&self) -> &'static str {
+        "relora"
+    }
+
+    fn reset_state(&mut self) {
+        self.adaptors.clear();
+        self.steps.clear();
+        self.full_rank.reset_state();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_jacobi;
+
+    #[test]
+    fn accumulates_rank_beyond_r_after_merges() {
+        // The whole point of ReLoRA: after k merges, ΔW can reach rank k·r.
+        let mut rng = Rng::new(0);
+        let mut relora = ReLora::new(LoraConfig { rank: 1, alpha: 1.0 }, 10);
+        let mut w = Matrix::randn(12, 12, 1.0, &mut rng);
+        let w0 = w.clone();
+        for s in 0..60 {
+            let g = Matrix::randn(12, 12, 1.0, &mut rng.child(s));
+            relora.step(0, &mut w, &g, 0.05);
+        }
+        let mut dw = w.clone();
+        dw.sub_assign(&w0);
+        let svd = svd_jacobi(&dw);
+        // With 6 windows of rank-1 updates the effective rank exceeds 1.
+        let effective = svd.s.iter().filter(|&&s| s > 1e-3 * svd.s[0]).count();
+        assert!(effective >= 3, "effective rank {effective}, s={:?}", &svd.s[..6]);
+    }
+
+    #[test]
+    fn merge_resets_optimizer_state() {
+        let mut rng = Rng::new(1);
+        let mut relora = ReLora::new(LoraConfig { rank: 2, alpha: 4.0 }, 5);
+        let mut w = Matrix::randn(8, 8, 1.0, &mut rng);
+        for s in 0..5 {
+            let g = Matrix::randn(8, 8, 1.0, &mut rng.child(s));
+            relora.step(0, &mut w, &g, 0.01);
+        }
+        let before = relora.adaptors[&0].opt_b.t;
+        assert_eq!(before, 5);
+        let g = Matrix::randn(8, 8, 1.0, &mut rng.child(99));
+        relora.step(0, &mut w, &g, 0.01); // step 6 triggers merge+reset
+        assert_eq!(relora.adaptors[&0].opt_b.t, 1);
+    }
+
+    #[test]
+    fn converges_on_full_rank_target() {
+        // Unlike plain LoRA, ReLoRA can track a full-rank W* over time.
+        let mut rng = Rng::new(2);
+        let w_star = Matrix::randn(10, 10, 1.0, &mut rng);
+        let mut w = Matrix::zeros(10, 10);
+        let mut relora = ReLora::new(LoraConfig { rank: 2, alpha: 2.0 }, 25);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for t in 0..500 {
+            let mut g = w.clone();
+            g.sub_assign(&w_star);
+            let loss = g.frobenius_norm();
+            if t == 0 {
+                first = loss;
+            }
+            last = loss;
+            relora.step(0, &mut w, &g, 0.05);
+        }
+        assert!(last < 0.3 * first, "{first} -> {last}");
+    }
+}

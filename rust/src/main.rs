@@ -1,0 +1,248 @@
+//! `galore` — the training launcher.
+//!
+//! Subcommands:
+//!   train   — run one training job (flags or --config file)
+//!   memory  — print the Fig. 1-style memory breakdown for a model/method
+//!   info    — list model configs and available artifacts
+//!
+//! Examples:
+//!   galore train --model micro --method galore --steps 200 --layerwise
+//!   galore train --config configs/pretrain_micro.toml
+//!   galore memory --model 7b --method galore8bit --rank 1024 --layerwise
+//!   galore info
+
+use anyhow::{anyhow, bail, Result};
+use galore::config::{Cli, MethodKind, RunConfig, TomlDoc};
+use galore::coordinator::{train_data_parallel, Trainer};
+use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
+use galore::model::ModelConfig;
+use galore::runtime::{default_dir, Manifest};
+
+const SWITCHES: &[&str] = &["layerwise", "fused", "help"];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let cli = Cli::from_env(SWITCHES).map_err(|e| anyhow!("{e}"))?;
+    if cli.has("help") || cli.positional().is_empty() {
+        usage();
+        return Ok(());
+    }
+    match cli.positional()[0].as_str() {
+        "train" => train(&cli),
+        "memory" => memory(&cli),
+        "info" => info(),
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn usage() {
+    println!(
+        "galore — GaLore training framework (Zhao et al., ICML 2024 reproduction)
+
+USAGE:
+  galore train  [--config FILE] [--model NAME] [--method NAME] [--steps N]
+                [--batch N] [--lr F] [--rank N] [--update-freq N] [--scale F]
+                [--seed N] [--eval-every N] [--dp-workers N] [--layerwise]
+                [--fused] [--csv PATH] [--checkpoint PATH]
+  galore memory --model NAME [--method NAME] [--rank N] [--layerwise]
+                [--token-batch N]
+  galore info
+
+METHODS: full-rank adamw adam8bit adafactor galore galore8bit
+         galore-adafactor lora relora low-rank
+MODELS:  nano micro mini small (trainable proxies) + 60m 130m 350m 1b 7b
+         (paper shapes, memory estimation only)"
+    );
+}
+
+fn build_run_config(cli: &Cli) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = cli.get("config") {
+        let doc = TomlDoc::load(path).map_err(|e| anyhow!(e))?;
+        RunConfig::from_toml(&doc).map_err(|e| anyhow!(e))?
+    } else {
+        let model_name = cli.get("model").unwrap_or("micro");
+        let model = ModelConfig::by_name(model_name)
+            .ok_or_else(|| anyhow!("unknown model '{model_name}'"))?;
+        let method = MethodKind::parse(cli.get("method").unwrap_or("galore"))
+            .ok_or_else(|| anyhow!("unknown method"))?;
+        RunConfig::new(model, method)
+    };
+    if let Some(v) = cli.get_parse::<usize>("steps").map_err(|e| anyhow!("{e}"))? {
+        cfg.steps = v;
+    }
+    if let Some(v) = cli.get_parse::<usize>("batch").map_err(|e| anyhow!("{e}"))? {
+        cfg.batch = v;
+    }
+    if let Some(v) = cli.get_parse::<f32>("lr").map_err(|e| anyhow!("{e}"))? {
+        cfg.lr = v;
+    }
+    if let Some(v) = cli.get_parse::<usize>("rank").map_err(|e| anyhow!("{e}"))? {
+        cfg.galore.rank = v;
+        cfg.lowrank_rank = v;
+    }
+    if let Some(v) = cli.get_parse::<u64>("update-freq").map_err(|e| anyhow!("{e}"))? {
+        cfg.galore.update_freq = v;
+    }
+    if let Some(v) = cli.get_parse::<f32>("scale").map_err(|e| anyhow!("{e}"))? {
+        cfg.galore.scale = v;
+    }
+    if let Some(v) = cli.get_parse::<u64>("seed").map_err(|e| anyhow!("{e}"))? {
+        cfg.seed = v;
+    }
+    if let Some(v) = cli.get_parse::<usize>("eval-every").map_err(|e| anyhow!("{e}"))? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = cli.get_parse::<usize>("dp-workers").map_err(|e| anyhow!("{e}"))? {
+        cfg.dp_workers = v;
+    }
+    if cli.has("layerwise") {
+        cfg.layerwise = true;
+    }
+    Ok(cfg)
+}
+
+fn train(cli: &Cli) -> Result<()> {
+    let cfg = build_run_config(cli)?;
+    println!(
+        "train: model={} method={} steps={} batch={} lr={} rank={} T={} alpha={} layerwise={} dp={}",
+        cfg.model.name,
+        cfg.method.label(),
+        cfg.steps,
+        cfg.batch,
+        cfg.lr,
+        cfg.galore.rank,
+        cfg.galore.update_freq,
+        cfg.galore.scale,
+        cfg.layerwise,
+        cfg.dp_workers
+    );
+    if cfg.dp_workers > 1 {
+        let res = train_data_parallel(&cfg)?;
+        println!(
+            "done: train_loss={:.4} eval_loss={:.4} eval_ppl={:.2} tokens={} elapsed={:.1}s",
+            res.final_train_loss,
+            res.final_eval_loss,
+            res.final_eval_loss.exp(),
+            res.total_tokens,
+            res.elapsed.as_secs_f64()
+        );
+        return Ok(());
+    }
+    let mut trainer = Trainer::from_config(cfg.clone())?;
+    if cli.has("fused") {
+        trainer.enable_fused_galore()?;
+        println!("fused GaLore hot path: ON (Pallas/HLO artifacts)");
+    }
+    let log_every = (cfg.steps / 20).max(1);
+    for step in 0..cfg.steps {
+        let loss = trainer.train_step()?;
+        if step % log_every == 0 || step + 1 == cfg.steps {
+            println!(
+                "step {:>6}/{} loss {:.4} lr {:.5} ({:.0} tok/s)",
+                step + 1,
+                cfg.steps,
+                loss,
+                trainer.schedule.at(step),
+                trainer.metrics.tokens_per_sec()
+            );
+        }
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let l = trainer.eval(2)?;
+            trainer.metrics.log_eval(step + 1, l);
+            println!("  eval loss {:.4} ppl {:.2}", l, l.exp());
+        }
+    }
+    let eval = trainer.eval(4)?;
+    trainer.metrics.log_eval(cfg.steps, eval);
+    println!(
+        "final: eval_loss={:.4} eval_ppl={:.2} optimizer_state={} tok/s={:.0}",
+        eval,
+        eval.exp(),
+        fmt_gib(trainer.optimizer_state_bytes() as u64),
+        trainer.metrics.tokens_per_sec()
+    );
+    if let Some(csv) = cli.get("csv") {
+        let p = trainer.metrics.write_csv(csv)?;
+        println!("wrote {}", p.display());
+    }
+    if let Some(ckpt) = cli.get("checkpoint") {
+        galore::coordinator::checkpoint::save(ckpt, &trainer.params, cfg.steps as u64)?;
+        println!("wrote checkpoint {ckpt}");
+    }
+    Ok(())
+}
+
+fn memory(cli: &Cli) -> Result<()> {
+    let model_name = cli.get("model").unwrap_or("7b");
+    let model = ModelConfig::by_name(model_name)
+        .ok_or_else(|| anyhow!("unknown model '{model_name}'"))?;
+    let rank = cli
+        .get_parse::<usize>("rank")
+        .map_err(|e| anyhow!("{e}"))?
+        .unwrap_or_else(|| model.default_rank());
+    let method = match cli.get("method").unwrap_or("galore8bit") {
+        "full-rank" | "adam" => Method::FullRank,
+        "adam8bit" => Method::Adam8bit,
+        "galore" => Method::GaLore { rank },
+        "galore8bit" => Method::GaLore8bit { rank },
+        "lora" => Method::Lora { rank },
+        "relora" => Method::ReLora { rank },
+        "low-rank" => Method::LowRank { rank },
+        "adafactor" => Method::Adafactor,
+        other => bail!("unknown method '{other}'"),
+    };
+    let opts = TrainOpts {
+        layerwise_updates: cli.has("layerwise"),
+        activation_checkpoint: false,
+        token_batch: cli
+            .get_parse::<usize>("token-batch")
+            .map_err(|e| anyhow!("{e}"))?
+            .unwrap_or(256),
+    };
+    let b = estimate(model, method, opts);
+    println!(
+        "memory breakdown: {} / {} (token batch {})",
+        model.name,
+        method.label(),
+        opts.token_batch
+    );
+    println!("  weights:          {}", fmt_gib(b.weights));
+    println!("  optimizer states: {}", fmt_gib(b.optim_states));
+    println!("  weight gradients: {}", fmt_gib(b.gradients));
+    println!("  activations:      {}", fmt_gib(b.activations));
+    println!("  TOTAL:            {}", fmt_gib(b.total()));
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!("model configs:");
+    for c in ModelConfig::all() {
+        println!(
+            "  {:>6}: dim={} inter={} heads={} layers={} vocab={} seq={} (~{:.1}M params)",
+            c.name,
+            c.dim,
+            c.intermediate,
+            c.heads,
+            c.layers,
+            c.vocab,
+            c.seq,
+            c.n_params() as f64 / 1e6
+        );
+    }
+    match Manifest::load(default_dir()) {
+        Ok(m) => {
+            println!("\nartifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!("  {:<32} kind={:<12} outputs={}", a.name, a.kind, a.n_outputs);
+            }
+        }
+        Err(e) => println!("\nno artifacts: {e}"),
+    }
+    Ok(())
+}

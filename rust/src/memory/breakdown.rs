@@ -1,0 +1,276 @@
+//! Full training-footprint estimator (Fig. 1, Fig. 4, Table 2's memory
+//! column, Table 6).
+//!
+//! Walks the exact parameter schema of a `ModelConfig` and adds up, per
+//! method:
+//!   * weights (BF16; LoRA adds adaptors, Low-Rank replaces the matrix),
+//!   * optimizer states (BF16 or 8-bit; GaLore compacts targeted params),
+//!   * weight gradients (full, or one-layer-at-a-time under §4.3 per-layer
+//!     updates),
+//!   * activations (calibrated estimate; see `activations_bytes`).
+
+use super::formulas;
+use crate::model::{schema, ModelConfig, ParamMeta};
+
+/// Training method, as named in the paper's figures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Adam/AdamW with dense states ("Full-Rank" / "BF16 Adam").
+    FullRank,
+    /// 8-bit Adam (Dettmers et al.).
+    Adam8bit,
+    /// GaLore with BF16 inner Adam.
+    GaLore { rank: usize },
+    /// The headline: GaLore + 8-bit Adam.
+    GaLore8bit { rank: usize },
+    /// LoRA adaptors, frozen W0.
+    Lora { rank: usize },
+    /// ReLoRA (same static footprint as LoRA).
+    ReLora { rank: usize },
+    /// Learned factorization W = BA ("Low-Rank").
+    LowRank { rank: usize },
+    /// Adafactor with first-moment statistics (§5.2).
+    Adafactor,
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::FullRank => "Full-Rank (Adam)".into(),
+            Method::Adam8bit => "8-bit Adam".into(),
+            Method::GaLore { rank } => format!("GaLore (r={rank})"),
+            Method::GaLore8bit { rank } => format!("8-bit GaLore (r={rank})"),
+            Method::Lora { rank } => format!("LoRA (r={rank})"),
+            Method::ReLora { rank } => format!("ReLoRA (r={rank})"),
+            Method::LowRank { rank } => format!("Low-Rank (r={rank})"),
+            Method::Adafactor => "Adafactor".into(),
+        }
+    }
+}
+
+/// §4.3 / §5.5 toggles.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOpts {
+    /// Per-layer weight updates: gradients freed layer-by-layer, so grad
+    /// memory is one (largest) layer rather than the whole model.
+    pub layerwise_updates: bool,
+    /// Activation (gradient) checkpointing.
+    pub activation_checkpoint: bool,
+    /// Tokens per step (batch × seq), the paper's "token batch size".
+    pub token_batch: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts { layerwise_updates: false, activation_checkpoint: false, token_batch: 256 }
+    }
+}
+
+/// Byte-level breakdown of a training setup.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    pub weights: u64,
+    pub optim_states: u64,
+    pub gradients: u64,
+    pub activations: u64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> u64 {
+        self.weights + self.optim_states + self.gradients + self.activations
+    }
+}
+
+const BF16: u64 = 2;
+
+fn per_param(meta: &ParamMeta, method: Method) -> (u64, u64) {
+    // Returns (weight_bytes, optim_state_bytes) for one parameter.
+    let (m, n) = (meta.rows as u64, meta.cols as u64);
+    let dense = m * n;
+    let target = meta.is_projection_target();
+    match method {
+        Method::FullRank => (dense * BF16, 2 * dense * BF16),
+        Method::Adam8bit => (dense * BF16, 2 * dense), // 1 byte per state
+        Method::GaLore { rank } if target => {
+            let f = formulas::galore(m, n, rank as u64);
+            // Projector at weight precision + compact M/V at state precision.
+            let (short, long) = if m <= n { (m, n) } else { (n, m) };
+            let proj = short * rank as u64;
+            debug_assert_eq!(f.optim_states, proj + 2 * rank as u64 * long);
+            (dense * BF16, proj * BF16 + 2 * rank as u64 * long * BF16)
+        }
+        Method::GaLore { .. } => (dense * BF16, 2 * dense * BF16),
+        Method::GaLore8bit { rank } if target => {
+            let (short, long) = if m <= n { (m, n) } else { (n, m) };
+            let proj = short * rank as u64;
+            (dense * BF16, proj * BF16 + 2 * rank as u64 * long)
+        }
+        Method::GaLore8bit { .. } => (dense * BF16, 2 * dense),
+        Method::Lora { rank } | Method::ReLora { rank } if target => {
+            let f = formulas::lora(m, n, rank as u64);
+            (f.weights * BF16, f.optim_states * BF16)
+        }
+        Method::Lora { .. } | Method::ReLora { .. } => (dense * BF16, 2 * dense * BF16),
+        Method::LowRank { rank } if target => {
+            let f = formulas::low_rank_factorized(m, n, rank as u64);
+            (f.weights * BF16, f.optim_states * BF16)
+        }
+        Method::LowRank { .. } => (dense * BF16, 2 * dense * BF16),
+        Method::Adafactor => (dense * BF16, (dense + m + n) * BF16),
+    }
+}
+
+/// Activation memory estimate: per-token, per-layer buffers for the
+/// checkpoint-free backward (q/k/v/attn-probs/ffn intermediates), BF16.
+/// Calibrated so LLaMA-7B @ 256-token batches gives ≈ 2 GB, the figure the
+/// paper uses in Fig. 1 / §1.
+pub fn activations_bytes(cfg: &ModelConfig, token_batch: usize, checkpointed: bool) -> u64 {
+    let per_token_per_layer =
+        8 * cfg.dim as u64 + 2 * cfg.intermediate as u64 + (cfg.heads * cfg.seq) as u64;
+    let full = token_batch as u64 * cfg.layers as u64 * per_token_per_layer * BF16;
+    if checkpointed {
+        // sqrt(L) recomputation schedule keeps ~2/sqrt(L) of activations.
+        (full as f64 * 2.0 / (cfg.layers as f64).sqrt()) as u64
+    } else {
+        full
+    }
+}
+
+/// Estimate the full breakdown for a method on a model config.
+pub fn estimate(cfg: &ModelConfig, method: Method, opts: TrainOpts) -> Breakdown {
+    let metas = schema(cfg);
+    let mut b = Breakdown::default();
+    let mut largest_grad = 0u64;
+    for meta in &metas {
+        let (w, s) = per_param(meta, method);
+        b.weights += w;
+        b.optim_states += s;
+        let g = (meta.rows * meta.cols) as u64 * BF16;
+        b.gradients += g;
+        largest_grad = largest_grad.max(g);
+    }
+    if opts.layerwise_updates {
+        // §4.3: the weight gradient lives only for the layer being updated.
+        b.gradients = largest_grad;
+    }
+    b.activations = activations_bytes(cfg, opts.token_batch, opts.activation_checkpoint);
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn cfg(name: &str) -> &'static ModelConfig {
+        ModelConfig::by_name(name).unwrap()
+    }
+
+    fn gib(b: u64) -> f64 {
+        b as f64 / 1e9
+    }
+
+    #[test]
+    fn fig1_bf16_adam_7b_near_58gb() {
+        // §1: "pre-training LLaMA 7B requires at least 58 GB (14 weights +
+        // 42 states&grads + 2 activations)".
+        let b = estimate(cfg("7b"), Method::FullRank, TrainOpts::default());
+        assert!((gib(b.weights) - 13.5).abs() < 1.5, "weights {}", gib(b.weights));
+        assert!(
+            (gib(b.optim_states + b.gradients) - 42.0).abs() < 4.0,
+            "states+grads {}",
+            gib(b.optim_states + b.gradients)
+        );
+        assert!((gib(b.activations) - 2.0).abs() < 1.0, "act {}", gib(b.activations));
+        let total = gib(b.total());
+        assert!((52.0..62.0).contains(&total), "total {total}");
+    }
+
+    #[test]
+    fn fig1_8bit_galore_7b_fits_24gb_gpu() {
+        // The headline claim: 8-bit GaLore + layerwise fits an RTX 4090.
+        let b = estimate(
+            cfg("7b"),
+            Method::GaLore8bit { rank: 1024 },
+            TrainOpts { layerwise_updates: true, ..Default::default() },
+        );
+        let total = gib(b.total());
+        assert!(total < 24.0, "total {total}");
+        assert!(total > 15.0, "suspiciously small {total}");
+    }
+
+    #[test]
+    fn fig1_galore_cuts_optimizer_states_65pct() {
+        // §5.5: 8-bit GaLore reduces optimizer-state memory by 65.5% vs
+        // 8-bit Adam.
+        let adam8 = estimate(cfg("7b"), Method::Adam8bit, TrainOpts::default());
+        let gal8 = estimate(cfg("7b"), Method::GaLore8bit { rank: 1024 }, TrainOpts::default());
+        let cut = 1.0 - gal8.optim_states as f64 / adam8.optim_states as f64;
+        assert!((0.50..0.80).contains(&cut), "cut {cut}");
+    }
+
+    #[test]
+    fn table2_memory_column_shape() {
+        // Table 2 reports weights+optimizer (BF16): Full-Rank 0.36G,
+        // GaLore 0.24G, LoRA 0.36G at 60M with r=128.
+        let w_plus_s = |m: Method| {
+            let b = estimate(cfg("60m"), m, TrainOpts::default());
+            gib(b.weights + b.optim_states)
+        };
+        let full = w_plus_s(Method::FullRank);
+        let galore = w_plus_s(Method::GaLore { rank: 128 });
+        let lora = w_plus_s(Method::Lora { rank: 128 });
+        let low = w_plus_s(Method::LowRank { rank: 128 });
+        assert!((full - 0.36).abs() < 0.05, "full {full}");
+        assert!((galore - 0.24).abs() < 0.05, "galore {galore}");
+        assert!((lora - 0.36).abs() < 0.08, "lora {lora}");
+        assert!(galore < low + 0.05, "galore {galore} vs low-rank {low}");
+        assert!(galore < full && galore < lora);
+    }
+
+    #[test]
+    fn table6_optimizer_state_estimates() {
+        // Table 6b: Full-Rank optimizer states 0.23G/0.51G/1.37G/5.20G.
+        for (name, want) in [("60m", 0.23), ("130m", 0.51), ("350m", 1.37), ("1b", 5.20)] {
+            let b = estimate(cfg(name), Method::FullRank, TrainOpts::default());
+            let got = gib(b.optim_states);
+            assert!((got - want).abs() < 0.15 * want + 0.03, "{name}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn layerwise_shrinks_gradient_memory() {
+        let dense = estimate(cfg("1b"), Method::Adam8bit, TrainOpts::default());
+        let lw = estimate(
+            cfg("1b"),
+            Method::Adam8bit,
+            TrainOpts { layerwise_updates: true, ..Default::default() },
+        );
+        assert!(lw.gradients * 10 < dense.gradients);
+        assert_eq!(lw.weights, dense.weights);
+    }
+
+    #[test]
+    fn checkpointing_shrinks_activations() {
+        let opts = TrainOpts { token_batch: 4096, ..Default::default() };
+        let on = TrainOpts { activation_checkpoint: true, ..opts };
+        let a = activations_bytes(cfg("7b"), opts.token_batch, false);
+        let b = activations_bytes(cfg("7b"), on.token_batch, true);
+        assert!(b < a / 2);
+    }
+
+    #[test]
+    fn memory_ordering_matches_fig4() {
+        // Fig. 4 ordering at every size: 8-bit GaLore < 8-bit Adam < BF16.
+        for name in ["350m", "1b", "7b"] {
+            let c = cfg(name);
+            let r = c.default_rank();
+            let lw = TrainOpts { layerwise_updates: true, ..Default::default() };
+            let bf16 = estimate(c, Method::FullRank, TrainOpts::default()).total();
+            let a8 = estimate(c, Method::Adam8bit, TrainOpts::default()).total();
+            let g8 = estimate(c, Method::GaLore8bit { rank: r }, lw).total();
+            let g8_retain = estimate(c, Method::GaLore8bit { rank: r }, TrainOpts::default()).total();
+            assert!(g8 < g8_retain && g8_retain < a8 && a8 < bf16, "{name}");
+        }
+    }
+}

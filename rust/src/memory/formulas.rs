@@ -1,0 +1,99 @@
+//! Table 1: closed-form memory comparison GaLore vs LoRA for one weight
+//! matrix W ∈ R^{m×n} (m ≤ n), rank r, in *elements* (multiply by the
+//! precision to get bytes).
+//!
+//! |              | GaLore      | LoRA              |
+//! | Weights      | mn          | mn + mr + nr      |
+//! | Optim States | mr + 2nr    | 2mr + 2nr         |
+
+/// Element counts for one matrix under GaLore (§4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatrixFootprint {
+    pub weights: u64,
+    pub optim_states: u64,
+}
+
+/// GaLore footprint of an (m, n) weight with rank r, Adam inner optimizer.
+/// Weights stay dense (`mn`); states are the projector (`min(m,n)·r`) plus
+/// compact M and V (`2·r·max(m,n)`).
+pub fn galore(m: u64, n: u64, r: u64) -> MatrixFootprint {
+    let (short, long) = if m <= n { (m, n) } else { (n, m) };
+    MatrixFootprint { weights: m * n, optim_states: short * r + 2 * r * long }
+}
+
+/// LoRA footprint: frozen W₀ (`mn`) + adaptors B (`mr`) and A (`nr`) as
+/// weights; Adam states on both adaptors (`2mr + 2nr`).
+pub fn lora(m: u64, n: u64, r: u64) -> MatrixFootprint {
+    MatrixFootprint { weights: m * n + m * r + n * r, optim_states: 2 * m * r + 2 * n * r }
+}
+
+/// Full-rank Adam: dense weights, M and V dense.
+pub fn full_rank(m: u64, n: u64) -> MatrixFootprint {
+    MatrixFootprint { weights: m * n, optim_states: 2 * m * n }
+}
+
+/// ReLoRA: identical static footprint to LoRA (Table 6 groups them).
+pub fn relora(m: u64, n: u64, r: u64) -> MatrixFootprint {
+    lora(m, n, r)
+}
+
+/// Learned factorization W = BA: only the factors exist.
+pub fn low_rank_factorized(m: u64, n: u64, r: u64) -> MatrixFootprint {
+    MatrixFootprint { weights: m * r + n * r, optim_states: 2 * m * r + 2 * n * r }
+}
+
+/// Feature matrix of Table 1 (printed by the table1 bench).
+pub const FEATURES: &[(&str, bool, bool, bool)] = &[
+    // (method, multi-subspace, pre-training, fine-tuning)
+    ("GaLore", true, true, true),
+    ("LoRA", false, false, true),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn galore_beats_lora_whenever_r_below_min_dim() {
+        // Table 1's claim: GaLore needs less memory than LoRA (both terms).
+        for &(m, n) in &[(512u64, 512u64), (512, 1376), (2048, 5461), (4096, 11008)] {
+            for r in [16u64, 128, 512] {
+                if r >= m.min(n) {
+                    continue;
+                }
+                let g = galore(m, n, r);
+                let l = lora(m, n, r);
+                assert!(g.weights < l.weights, "weights m={m} n={n} r={r}");
+                assert!(g.optim_states < l.optim_states, "states m={m} n={n} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn galore_formula_matches_paper_table1() {
+        // Paper writes (m <= n): weights mn, states mr + 2nr.
+        let f = galore(512, 1376, 128);
+        assert_eq!(f.weights, 512 * 1376);
+        assert_eq!(f.optim_states, 512 * 128 + 2 * 1376 * 128);
+    }
+
+    #[test]
+    fn lora_formula_matches_paper_table1() {
+        let f = lora(512, 1376, 128);
+        assert_eq!(f.weights, 512 * 1376 + 512 * 128 + 1376 * 128);
+        assert_eq!(f.optim_states, 2 * 512 * 128 + 2 * 1376 * 128);
+    }
+
+    #[test]
+    fn galore_transposes_tall_matrices() {
+        // (n, m) must give the same footprint as (m, n) — only the short
+        // side is projected.
+        assert_eq!(galore(1376, 512, 128), galore(512, 1376, 128));
+    }
+
+    #[test]
+    fn full_rank_is_3mn_total() {
+        let f = full_rank(100, 200);
+        assert_eq!(f.weights + f.optim_states, 3 * 100 * 200);
+    }
+}

@@ -1,0 +1,28 @@
+//! Memory accounting — the subsystem behind Fig. 1, Fig. 4 and Tables
+//! 1/2/6 of the paper.
+//!
+//! Every number is computed from the parameter schema (exact shapes, not
+//! nominal sizes) at BF16 weight precision, mirroring the paper's §5
+//! estimates. `formulas` holds the closed-form per-matrix comparison of
+//! Table 1; `breakdown` assembles full-training footprints (weights /
+//! optimizer states / gradients / activations) for every method at any
+//! model size, including the §4.3 options (8-bit states, per-layer weight
+//! updates, activation checkpointing).
+
+mod breakdown;
+pub mod formulas;
+
+pub use breakdown::{activations_bytes, estimate, Breakdown, Method, TrainOpts};
+
+/// Pretty-print bytes the way the paper does (G with two decimals), with
+/// auto-scaling to M/K for the proxy-model quantities.
+pub fn fmt_gib(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e8 {
+        format!("{:.2}G", b / 1e9)
+    } else if b >= 1e5 {
+        format!("{:.2}M", b / 1e6)
+    } else {
+        format!("{:.1}K", b / 1e3)
+    }
+}

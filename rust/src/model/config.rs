@@ -1,0 +1,214 @@
+//! LLaMA model configurations.
+//!
+//! `PAPER_CONFIGS` encodes Table 5 verbatim (60M..7B, with the paper's
+//! steps and token budgets); `PROXY_CONFIGS` are the scaled-down shapes the
+//! CPU experiments actually train (same architecture family, same r/d
+//! ratios — see DESIGN.md §4 Substitutions). Must mirror
+//! `python/compile/model.py::CONFIGS`.
+
+/// Static model shape plus the paper's training budget for that size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub dim: usize,
+    pub intermediate: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub seq: usize,
+    /// Paper Table 5 training steps (proxies: scaled-down defaults).
+    pub steps: usize,
+    /// Paper Table 5 data amount in tokens.
+    pub tokens: u64,
+}
+
+impl ModelConfig {
+    pub const fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// Total trainable parameters.
+    pub fn n_params(&self) -> u64 {
+        let (d, i, v) = (self.dim as u64, self.intermediate as u64, self.vocab as u64);
+        let per_layer = 4 * d * d + 3 * d * i + 2 * d;
+        v * d // embed
+            + self.layers as u64 * per_layer
+            + d // final norm
+            + d * v // lm head
+    }
+
+    /// Number of entries in the flattened parameter schema.
+    pub fn n_schema_params(&self) -> usize {
+        3 + 9 * self.layers
+    }
+
+    /// Default GaLore rank for this size (paper Table 2: r/d in 1/4..1/2;
+    /// we use d/4 as the canonical setting).
+    pub fn default_rank(&self) -> usize {
+        (self.dim / 4).max(4)
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static ModelConfig> {
+        Self::all().find(|c| c.name == name)
+    }
+}
+
+/// Scaled-down proxies trained on the CPU PJRT backend.
+pub const PROXY_CONFIGS: &[ModelConfig] = &[
+    ModelConfig {
+        name: "nano",
+        vocab: 256,
+        dim: 64,
+        intermediate: 172,
+        heads: 4,
+        layers: 2,
+        seq: 64,
+        steps: 300,
+        tokens: 300 * 8 * 64,
+    },
+    ModelConfig {
+        name: "micro",
+        vocab: 512,
+        dim: 128,
+        intermediate: 344,
+        heads: 4,
+        layers: 4,
+        seq: 64,
+        steps: 600,
+        tokens: 600 * 8 * 64,
+    },
+    ModelConfig {
+        name: "mini",
+        vocab: 1024,
+        dim: 256,
+        intermediate: 688,
+        heads: 8,
+        layers: 4,
+        seq: 128,
+        steps: 1000,
+        tokens: 1000 * 8 * 128,
+    },
+    ModelConfig {
+        name: "small",
+        vocab: 2048,
+        dim: 512,
+        intermediate: 1376,
+        heads: 8,
+        layers: 6,
+        seq: 128,
+        steps: 1500,
+        tokens: 1500 * 8 * 128,
+    },
+];
+
+/// The paper's Table 5 (steps/tokens included). Used by the memory
+/// estimator and shape tests; never trained on CPU.
+pub const PAPER_CONFIGS: &[ModelConfig] = &[
+    ModelConfig {
+        name: "60m",
+        vocab: 32000,
+        dim: 512,
+        intermediate: 1376,
+        heads: 8,
+        layers: 8,
+        seq: 256,
+        steps: 10_000,
+        tokens: 1_300_000_000,
+    },
+    ModelConfig {
+        name: "130m",
+        vocab: 32000,
+        dim: 768,
+        intermediate: 2048,
+        heads: 12,
+        layers: 12,
+        seq: 256,
+        steps: 20_000,
+        tokens: 2_600_000_000,
+    },
+    ModelConfig {
+        name: "350m",
+        vocab: 32000,
+        dim: 1024,
+        intermediate: 2736,
+        heads: 16,
+        layers: 24,
+        seq: 256,
+        steps: 60_000,
+        tokens: 7_800_000_000,
+    },
+    // NOTE: the paper's Table 5 lists 24 heads / 32 layers for "1B", but
+    // 2048 is not divisible by 24 and the paper's own memory tables imply
+    // ~1.3B parameters; we use the ReLoRA-paper 1.3B shape (32 heads,
+    // 24 layers) that those numbers are consistent with.
+    ModelConfig {
+        name: "1b",
+        vocab: 32000,
+        dim: 2048,
+        intermediate: 5461,
+        heads: 32,
+        layers: 24,
+        seq: 256,
+        steps: 100_000,
+        tokens: 13_100_000_000,
+    },
+    ModelConfig {
+        name: "7b",
+        vocab: 32000,
+        dim: 4096,
+        intermediate: 11008,
+        heads: 32,
+        layers: 32,
+        seq: 2048,
+        steps: 150_000,
+        tokens: 19_700_000_000,
+    },
+];
+
+pub const ALL_CONFIGS: &[&[ModelConfig]; 2] = &[PROXY_CONFIGS, PAPER_CONFIGS];
+
+impl ModelConfig {
+    pub fn all() -> impl Iterator<Item = &'static ModelConfig> {
+        PROXY_CONFIGS.iter().chain(PAPER_CONFIGS.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ModelConfig::by_name("7b").unwrap().dim, 4096);
+        assert!(ModelConfig::by_name("42b").is_none());
+    }
+
+    #[test]
+    fn param_counts_near_nominal() {
+        let near = |name: &str, lo: f64, hi: f64| {
+            let c = ModelConfig::by_name(name).unwrap();
+            let p = c.n_params() as f64;
+            assert!(p > lo && p < hi, "{name}: {p}");
+        };
+        near("60m", 45e6, 80e6);
+        near("130m", 100e6, 170e6);
+        near("350m", 280e6, 430e6);
+        near("1b", 0.9e9, 1.9e9);
+        near("7b", 6e9, 8e9);
+    }
+
+    #[test]
+    fn head_dims_divide() {
+        for c in ModelConfig::all() {
+            assert_eq!(c.dim % c.heads, 0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn paper_token_budgets_match_table2() {
+        // Table 2 footer: 1.1B/2.2B/6.4B/13.1B tokens; Table 5 uses
+        // 1.3/2.6/7.8/13.1/19.7 — we encode Table 5.
+        assert_eq!(ModelConfig::by_name("1b").unwrap().tokens, 13_100_000_000);
+        assert_eq!(ModelConfig::by_name("7b").unwrap().tokens, 19_700_000_000);
+    }
+}

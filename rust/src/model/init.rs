@@ -1,0 +1,68 @@
+//! Host-side parameter initialization (scaled normal, std = 1/sqrt(fan_in);
+//! norm gains = 1) — the same scheme as `model.py::init_params`, generated
+//! by the Rust RNG so runs are reproducible with python absent.
+
+use super::params::{schema, ParamKind, ParamStore};
+use super::ModelConfig;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Initialize all parameters from `seed`.
+pub fn init_params(cfg: &'static ModelConfig, seed: u64) -> ParamStore {
+    let metas = schema(cfg);
+    let root = Rng::new(seed);
+    let tensors: Vec<Matrix> = metas
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let mut rng = root.child(i as u64);
+            match m.kind {
+                ParamKind::Norm => Matrix::ones(m.rows, m.cols),
+                _ => {
+                    let std = 1.0 / (m.rows as f32).sqrt();
+                    Matrix::randn(m.rows, m.cols, std, &mut rng)
+                }
+            }
+        })
+        .collect();
+    ParamStore { cfg, metas, tensors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::PROXY_CONFIGS;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let cfg = &PROXY_CONFIGS[0];
+        let a = init_params(cfg, 1);
+        let b = init_params(cfg, 1);
+        let c = init_params(cfg, 2);
+        assert_eq!(a.tensors[1].data, b.tensors[1].data);
+        assert_ne!(a.tensors[1].data, c.tensors[1].data);
+    }
+
+    #[test]
+    fn norms_are_ones_weights_are_scaled() {
+        let cfg = &PROXY_CONFIGS[0];
+        let store = init_params(cfg, 0);
+        for (meta, t) in store.metas.iter().zip(store.tensors.iter()) {
+            match meta.kind {
+                ParamKind::Norm => assert!(t.data.iter().all(|&v| v == 1.0)),
+                _ => {
+                    // Sample std should be near 1/sqrt(fan_in).
+                    let want = 1.0 / (meta.rows as f32).sqrt();
+                    let var = t.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+                        / t.len() as f64;
+                    let got = var.sqrt() as f32;
+                    assert!(
+                        (got - want).abs() < 0.2 * want,
+                        "{}: std {got} vs {want}",
+                        meta.name
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Model schema: LLaMA-style configs (the paper's Table 5 plus scaled CPU
+//! proxies), the flattened parameter schema shared with
+//! `python/compile/model.py`, parameter storage and initialization.
+//!
+//! The *math* of the model lives in the AOT HLO artifacts; this module owns
+//! the shapes, the schema order (which must match `model.param_names` on
+//! the python side exactly — the runtime feeds literals in this order), and
+//! host-side initialization so training is reproducible without python.
+
+mod config;
+mod init;
+mod params;
+
+pub use config::{ModelConfig, ALL_CONFIGS, PAPER_CONFIGS, PROXY_CONFIGS};
+pub use init::init_params;
+pub use params::{schema, ParamKind, ParamMeta, ParamStore};

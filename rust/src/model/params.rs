@@ -1,0 +1,183 @@
+//! Flattened parameter schema and storage.
+//!
+//! Order MUST match `python/compile/model.py::param_names` — the training
+//! artifact takes weights as positional inputs and returns gradients in the
+//! same order. 1-D tensors (norm gains) are stored as (1, n) matrices.
+
+use super::ModelConfig;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// What role a parameter plays — drives GaLore/LoRA targeting (§5.1: only
+/// attention and FFN projections are low-rank-projected).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    Embedding,
+    Attention,
+    Ffn,
+    Norm,
+    LmHead,
+}
+
+/// Metadata for one schema entry.
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub kind: ParamKind,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Is this a GaLore/LoRA target (2-D attention/FFN projection)?
+    pub fn is_projection_target(&self) -> bool {
+        matches!(self.kind, ParamKind::Attention | ParamKind::Ffn)
+    }
+}
+
+/// Build the schema for a config, mirroring model.py exactly.
+pub fn schema(cfg: &ModelConfig) -> Vec<ParamMeta> {
+    let (d, i, v) = (cfg.dim, cfg.intermediate, cfg.vocab);
+    let mut out = Vec::with_capacity(cfg.n_schema_params());
+    out.push(ParamMeta { name: "embed.weight".into(), rows: v, cols: d, kind: ParamKind::Embedding });
+    for l in 0..cfg.layers {
+        let mk = |field: &str, rows, cols, kind| ParamMeta {
+            name: format!("layers.{l}.{field}"),
+            rows,
+            cols,
+            kind,
+        };
+        out.push(mk("attn.wq", d, d, ParamKind::Attention));
+        out.push(mk("attn.wk", d, d, ParamKind::Attention));
+        out.push(mk("attn.wv", d, d, ParamKind::Attention));
+        out.push(mk("attn.wo", d, d, ParamKind::Attention));
+        out.push(mk("ffn.w_gate", d, i, ParamKind::Ffn));
+        out.push(mk("ffn.w_up", d, i, ParamKind::Ffn));
+        out.push(mk("ffn.w_down", i, d, ParamKind::Ffn));
+        out.push(mk("attn_norm", 1, d, ParamKind::Norm));
+        out.push(mk("ffn_norm", 1, d, ParamKind::Norm));
+    }
+    out.push(ParamMeta { name: "final_norm".into(), rows: 1, cols: d, kind: ParamKind::Norm });
+    out.push(ParamMeta { name: "lm_head.weight".into(), rows: d, cols: v, kind: ParamKind::LmHead });
+    out
+}
+
+/// All model parameters, in schema order.
+pub struct ParamStore {
+    pub cfg: &'static ModelConfig,
+    pub metas: Vec<ParamMeta>,
+    pub tensors: Vec<Matrix>,
+}
+
+impl ParamStore {
+    /// Zero-initialized store (callers usually want `init_params`).
+    pub fn zeros(cfg: &'static ModelConfig) -> Self {
+        let metas = schema(cfg);
+        let tensors = metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        ParamStore { cfg, metas, tensors }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Indices of GaLore/LoRA target parameters (attention + FFN).
+    pub fn projection_targets(&self) -> Vec<usize> {
+        self.metas
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.is_projection_target())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total parameter count.
+    pub fn numel(&self) -> usize {
+        self.metas.iter().map(|m| m.numel()).sum()
+    }
+
+    /// Bytes at a given per-element width (2 for BF16 accounting, 4 f32).
+    pub fn weight_bytes(&self, bytes_per_el: usize) -> usize {
+        self.numel() * bytes_per_el
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<(usize, &Matrix)> {
+        self.metas
+            .iter()
+            .position(|m| m.name == name)
+            .map(|i| (i, &self.tensors[i]))
+    }
+
+    /// Fisher-style parameter perturbation (used by fine-tune experiments
+    /// to model a "pre-trained" checkpoint drift).
+    pub fn perturb(&mut self, std: f32, rng: &mut Rng) {
+        for t in self.tensors.iter_mut() {
+            for v in t.data.iter_mut() {
+                *v += rng.normal_f32() * std;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::PROXY_CONFIGS;
+
+    #[test]
+    fn schema_matches_python_layout() {
+        let cfg = &PROXY_CONFIGS[0]; // nano
+        let s = schema(cfg);
+        assert_eq!(s.len(), cfg.n_schema_params());
+        assert_eq!(s[0].name, "embed.weight");
+        assert_eq!((s[0].rows, s[0].cols), (cfg.vocab, cfg.dim));
+        assert_eq!(s[1].name, "layers.0.attn.wq");
+        assert_eq!(s[5].name, "layers.0.ffn.w_gate");
+        assert_eq!((s[5].rows, s[5].cols), (cfg.dim, cfg.intermediate));
+        assert_eq!(s[7].name, "layers.0.ffn.w_down");
+        assert_eq!((s[7].rows, s[7].cols), (cfg.intermediate, cfg.dim));
+        let last = s.last().unwrap();
+        assert_eq!(last.name, "lm_head.weight");
+        assert_eq!((last.rows, last.cols), (cfg.dim, cfg.vocab));
+    }
+
+    #[test]
+    fn numel_matches_config_formula() {
+        for cfg in PROXY_CONFIGS {
+            let store = ParamStore::zeros(cfg);
+            assert_eq!(store.numel() as u64, cfg.n_params(), "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn projection_targets_are_attention_and_ffn_only() {
+        let cfg = &PROXY_CONFIGS[0];
+        let store = ParamStore::zeros(cfg);
+        let targets = store.projection_targets();
+        assert_eq!(targets.len(), 7 * cfg.layers);
+        for &t in &targets {
+            assert!(store.metas[t].is_projection_target());
+            assert!(store.metas[t].rows > 1 && store.metas[t].cols > 1);
+        }
+        // Embedding and head excluded.
+        assert!(!targets.contains(&0));
+        assert!(!targets.contains(&(store.len() - 1)));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        let store = ParamStore::zeros(&PROXY_CONFIGS[1]);
+        let (idx, t) = store.by_name("layers.2.attn.wo").unwrap();
+        assert_eq!(store.metas[idx].kind, ParamKind::Attention);
+        assert_eq!(t.shape(), (128, 128));
+        assert!(store.by_name("layers.99.nope").is_none());
+    }
+}

@@ -1,0 +1,145 @@
+//! Adafactor (Shazeer & Stern, 2018), the sub-linear-memory baseline of
+//! Fig. 3 / Table 11.
+//!
+//! The second moment of an (m, n) parameter is factored into a row vector
+//! R ∈ R^m and column vector C ∈ R^n with V ≈ R Cᵀ / sum(R): memory m + n
+//! instead of mn. Following §5.2 we use the variant *with* first-order
+//! momentum ("Adafactor with first-order statistics") to avoid instability,
+//! which is also what makes it a fair GaLore host (GaLore composes with it
+//! by running this update in the compact space).
+
+use super::{bias_correction, Optimizer};
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+pub struct Adafactor {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    states: HashMap<usize, State>,
+}
+
+struct State {
+    m: Matrix,       // first moment (full shape; §5.2 variant)
+    row: Vec<f32>,   // R: row sums of the squared-grad EMA
+    col: Vec<f32>,   // C: col sums
+    t: u64,
+}
+
+impl Adafactor {
+    pub fn new() -> Self {
+        Adafactor { beta1: 0.9, beta2: 0.999, eps: 1e-30, states: HashMap::new() }
+    }
+}
+
+impl Default for Adafactor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = grad.shape();
+        let state = self.states.entry(param).or_insert_with(|| State {
+            m: Matrix::zeros(rows, cols),
+            row: vec![0.0; rows],
+            col: vec![0.0; cols],
+            t: 0,
+        });
+        state.t += 1;
+        let b2 = self.beta2;
+        // Update factored second-moment statistics.
+        for i in 0..rows {
+            let mut rsum = 0.0f32;
+            for &g in grad.row(i) {
+                rsum += g * g + self.eps;
+            }
+            state.row[i] = b2 * state.row[i] + (1.0 - b2) * (rsum / cols as f32);
+        }
+        for j in 0..cols {
+            let mut csum = 0.0f32;
+            for i in 0..rows {
+                let g = grad.at(i, j);
+                csum += g * g + self.eps;
+            }
+            state.col[j] = b2 * state.col[j] + (1.0 - b2) * (csum / rows as f32);
+        }
+        let row_mean: f32 =
+            state.row.iter().sum::<f32>() / rows as f32;
+        let bc2 = bias_correction(b2, state.t);
+        // First moment on the normalized gradient.
+        let b1 = self.beta1;
+        let bc1 = bias_correction(b1, state.t);
+        for i in 0..rows {
+            let r = state.row[i] / bc2;
+            for j in 0..cols {
+                let c = state.col[j] / bc2;
+                // V_hat[i,j] ≈ r * c / mean(row)
+                let v_hat = (r * c / (row_mean / bc2).max(1e-30)).max(1e-30);
+                let g = grad.at(i, j);
+                let u = g / v_hat.sqrt();
+                let mij = state.m.at_mut(i, j);
+                *mij = b1 * *mij + (1.0 - b1) * u;
+                let upd = *mij / bc1;
+                *w.at_mut(i, j) -= lr * upd;
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.states
+            .values()
+            .map(|s| 4 * (s.m.len() + s.row.len() + s.col.len()))
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adafactor"
+    }
+
+    fn reset_state(&mut self) {
+        self.states.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::converges_on_quadratic;
+
+    #[test]
+    fn converges_on_quadratic_bowl() {
+        let mut opt = Adafactor::new();
+        let (d0, d1) = converges_on_quadratic(&mut opt, 400, 0.05);
+        assert!(d1 < 0.2 * d0, "d0={d0} d1={d1}");
+    }
+
+    #[test]
+    fn second_moment_is_factored() {
+        // State must be m*n (first moment) + m + n, NOT 2*m*n.
+        let mut opt = Adafactor::new();
+        let mut w = Matrix::zeros(32, 64);
+        let g = Matrix::ones(32, 64);
+        opt.step(0, &mut w, &g, 0.01);
+        assert_eq!(opt.state_bytes(), 4 * (32 * 64 + 32 + 64));
+    }
+
+    #[test]
+    fn scale_invariance_of_direction() {
+        // Adafactor's normalized update should be insensitive to a global
+        // gradient rescale (property of the V normalization) at t=1.
+        let mut a = Adafactor::new();
+        let mut b = Adafactor::new();
+        let mut wa = Matrix::zeros(4, 4);
+        let mut wb = Matrix::zeros(4, 4);
+        let g = Matrix::from_fn(4, 4, |i, j| ((i * 4 + j) as f32 - 7.5) * 0.1);
+        let mut g_scaled = g.clone();
+        g_scaled.scale(100.0);
+        a.step(0, &mut wa, &g, 0.01);
+        b.step(0, &mut wb, &g_scaled, 0.01);
+        for (x, y) in wa.data.iter().zip(wb.data.iter()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Adam / AdamW (Kingma & Ba 2015; Loshchilov & Hutter 2019) — the paper's
+//! full-rank baseline (Eqns. 2–4). State: M, V ∈ R^{m×n} per parameter,
+//! i.e. 2·mn floats — the memory GaLore attacks.
+
+use super::{bias_correction, Optimizer};
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Decoupled weight decay (AdamW when > 0).
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        // The paper's §5.1 defaults.
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+impl AdamConfig {
+    pub fn adamw(weight_decay: f32) -> Self {
+        AdamConfig { weight_decay, ..Default::default() }
+    }
+}
+
+struct State {
+    m: Matrix,
+    v: Matrix,
+    t: u64,
+}
+
+pub struct Adam {
+    cfg: AdamConfig,
+    states: HashMap<usize, State>,
+    decoupled: bool,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamConfig) -> Self {
+        let decoupled = cfg.weight_decay > 0.0;
+        Adam { cfg, states: HashMap::new(), decoupled }
+    }
+
+    /// Plain Adam with paper defaults.
+    pub fn default_paper() -> Self {
+        Self::new(AdamConfig::default())
+    }
+
+    /// AdamW with decoupled weight decay.
+    pub fn adamw(weight_decay: f32) -> Self {
+        Self::new(AdamConfig::adamw(weight_decay))
+    }
+
+    /// Expose the bias-corrected update direction for one grad without
+    /// touching the weight (used by GaLore's compact-space path and tests).
+    pub fn normalized_update(state_m: &mut Matrix, state_v: &mut Matrix, g: &Matrix, t: u64, cfg: &AdamConfig) -> Matrix {
+        debug_assert_eq!(state_m.shape(), g.shape());
+        let (b1, b2) = (cfg.beta1, cfg.beta2);
+        state_m.zip_inplace(g, |m, gi| b1 * m + (1.0 - b1) * gi);
+        state_v.zip_inplace(g, |v, gi| b2 * v + (1.0 - b2) * gi * gi);
+        let bc1 = bias_correction(b1, t);
+        let bc2 = bias_correction(b2, t);
+        let mut n = state_m.clone();
+        for (nv, &vv) in n.data.iter_mut().zip(state_v.data.iter()) {
+            let m_hat = *nv / bc1;
+            let v_hat = vv / bc2;
+            *nv = m_hat / (v_hat.sqrt() + cfg.eps);
+        }
+        n
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        let state = self.states.entry(param).or_insert_with(|| State {
+            m: Matrix::zeros(grad.rows, grad.cols),
+            v: Matrix::zeros(grad.rows, grad.cols),
+            t: 0,
+        });
+        state.t += 1;
+        let n = Adam::normalized_update(&mut state.m, &mut state.v, grad, state.t, &self.cfg);
+        if self.decoupled {
+            let wd = self.cfg.weight_decay;
+            w.map_inplace(|x| x * (1.0 - lr * wd));
+        }
+        w.axpy(-lr, &n);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.states.values().map(|s| 4 * (s.m.len() + s.v.len())).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        if self.decoupled {
+            "adamw"
+        } else {
+            "adam"
+        }
+    }
+
+    fn reset_state(&mut self) {
+        self.states.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::converges_on_quadratic;
+
+    #[test]
+    fn first_step_is_signlike() {
+        // At t=1 from zero state, update ≈ sign(g) * lr (Adam property).
+        let mut adam = Adam::default_paper();
+        let mut w = Matrix::zeros(2, 2);
+        let g = Matrix::from_vec(2, 2, vec![0.5, -2.0, 1e-3, -1e-3]);
+        adam.step(0, &mut w, &g, 0.1);
+        for (wv, gv) in w.data.iter().zip(g.data.iter()) {
+            assert!((wv + 0.1 * gv.signum()).abs() < 1e-2, "{wv} vs {gv}");
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic_bowl() {
+        let mut adam = Adam::default_paper();
+        let (d0, d1) = converges_on_quadratic(&mut adam, 300, 0.05);
+        assert!(d1 < 0.05 * d0, "d0={d0} d1={d1}");
+    }
+
+    #[test]
+    fn adamw_decays_weights() {
+        let mut adamw = Adam::adamw(0.1);
+        let mut w = Matrix::ones(4, 4);
+        let g = Matrix::zeros(4, 4);
+        for _ in 0..10 {
+            adamw.step(0, &mut w, &g, 0.1);
+        }
+        // Pure decay: w = (1 - 0.01)^10.
+        for &wv in &w.data {
+            assert!((wv - 0.99f32.powi(10)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn state_bytes_is_2mn_f32() {
+        let mut adam = Adam::default_paper();
+        let mut w = Matrix::zeros(8, 16);
+        let g = Matrix::ones(8, 16);
+        adam.step(0, &mut w, &g, 0.01);
+        assert_eq!(adam.state_bytes(), 2 * 8 * 16 * 4);
+    }
+
+    #[test]
+    fn independent_params_have_independent_state() {
+        let mut adam = Adam::default_paper();
+        let mut w0 = Matrix::zeros(2, 2);
+        let mut w1 = Matrix::zeros(3, 3);
+        let g0 = Matrix::ones(2, 2);
+        let g1 = Matrix::ones(3, 3);
+        adam.step(0, &mut w0, &g0, 0.1);
+        adam.step(1, &mut w1, &g1, 0.1);
+        adam.step(0, &mut w0, &g0, 0.1);
+        assert_eq!(adam.state_bytes(), (2 * 4 + 2 * 9) * 4);
+    }
+}

@@ -1,0 +1,480 @@
+//! GaLore: Gradient Low-Rank Projection (the paper's core contribution,
+//! §3.3/§4, Algorithms 1–2).
+//!
+//! [`Projector`] holds the per-parameter low-rank basis P (refreshed every
+//! `T` steps from an SVD of the current gradient, Eqn. 12–13) and performs
+//! `project` / `project_back`. Following §4.2, only *one* projection matrix
+//! is kept: the short side of the gradient is projected (`Pᵀ G` when
+//! m ≤ n, `G Q` otherwise), so state is `r·min(m,n)` for P plus the inner
+//! optimizer's compact statistics.
+//!
+//! [`GaLore<O>`] wraps **any** [`Optimizer`] (Algorithm 1: it is optimizer-
+//! agnostic): gradients of targeted parameters are projected into the
+//! compact space, the inner optimizer runs there, and the normalized update
+//! is projected back and applied with scale α. Untargeted parameters
+//! (embeddings, norms, lm_head — matching §5.1) pass through at full rank.
+
+use super::Optimizer;
+use crate::linalg::randomized_svd;
+use crate::rng::Rng;
+use crate::tensor::{matmul, matmul_at_b, matmul_a_bt, Matrix};
+use std::collections::{HashMap, HashSet};
+
+/// Which side of the gradient is projected (§4.2: always the short one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjSide {
+    /// R = Pᵀ G, P ∈ R^{m×r} (used when m ≤ n). Compact shape (r, n).
+    Left,
+    /// R = G Q, Q ∈ R^{n×r} (used when m > n). Compact shape (m, r).
+    Right,
+}
+
+/// Storage for the projection basis. `Quant8` implements the paper's §7
+/// future-work item (2) — "further enhancing memory efficiency by
+/// employing low-memory projection matrices": P is held block-quantized at
+/// 1 byte/element and dequantized on use (compute traded for memory;
+/// Theorem 3.8 tolerates the perturbation since it holds for any fixed
+/// near-orthonormal P).
+#[derive(Clone, Debug)]
+enum BasisStore {
+    F32(Matrix),
+    Quant8 { buf: crate::quant::QuantizedBuf, rows: usize, cols: usize },
+}
+
+/// The low-rank projector for one parameter.
+#[derive(Clone, Debug)]
+pub struct Projector {
+    pub side: ProjSide,
+    store: BasisStore,
+    pub rank: usize,
+}
+
+impl Projector {
+    /// Compute a fresh projector from the current gradient via randomized
+    /// truncated SVD (Eqn. 12–13). Chooses the side by shape and clamps the
+    /// rank to min(m, n).
+    pub fn compute(grad: &Matrix, rank: usize, rng: &mut Rng) -> Projector {
+        Self::compute_with(grad, rank, rng, false)
+    }
+
+    /// As `compute`, optionally storing the basis 8-bit quantized.
+    pub fn compute_with(grad: &Matrix, rank: usize, rng: &mut Rng, quantized: bool) -> Projector {
+        let (m, n) = grad.shape();
+        let r = rank.min(m).min(n).max(1);
+        let (side, basis) = if m <= n {
+            (ProjSide::Left, randomized_svd(grad, r, 2, rng).u)
+        } else {
+            // Right projector: top-r *right* singular vectors = top-r left
+            // singular vectors of Gᵀ.
+            (ProjSide::Right, randomized_svd(&grad.transpose(), r, 2, rng).u)
+        };
+        let store = if quantized {
+            BasisStore::Quant8 {
+                rows: basis.rows,
+                cols: basis.cols,
+                buf: crate::quant::quantize(&basis.data),
+            }
+        } else {
+            BasisStore::F32(basis)
+        };
+        Projector { side, store, rank: r }
+    }
+
+    /// Materialized basis: (m, r) for Left, (n, r) for Right.
+    pub fn basis(&self) -> Matrix {
+        match &self.store {
+            BasisStore::F32(b) => b.clone(),
+            BasisStore::Quant8 { buf, rows, cols } => {
+                Matrix::from_vec(*rows, *cols, crate::quant::dequantize(buf))
+            }
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.store, BasisStore::Quant8 { .. })
+    }
+
+    /// Project the full gradient into the compact space.
+    pub fn project(&self, grad: &Matrix) -> Matrix {
+        let basis = self.basis();
+        match self.side {
+            ProjSide::Left => matmul_at_b(&basis, grad),  // (r, n)
+            ProjSide::Right => matmul(grad, &basis),      // (m, r)
+        }
+    }
+
+    /// Expand a compact update back to the full weight shape.
+    pub fn project_back(&self, compact: &Matrix) -> Matrix {
+        let basis = self.basis();
+        match self.side {
+            ProjSide::Left => matmul(&basis, compact),     // (m, n)
+            ProjSide::Right => matmul_a_bt(compact, &basis), // (m, n)
+        }
+    }
+
+    /// Compact-space shape for a full gradient of shape (m, n).
+    pub fn compact_shape(&self, m: usize, n: usize) -> (usize, usize) {
+        match self.side {
+            ProjSide::Left => (self.rank, n),
+            ProjSide::Right => (m, self.rank),
+        }
+    }
+
+    /// Bytes held by the projection matrix itself.
+    pub fn nbytes(&self) -> usize {
+        match &self.store {
+            BasisStore::F32(b) => 4 * b.len(),
+            BasisStore::Quant8 { buf, .. } => buf.nbytes(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GaLoreConfig {
+    /// Subspace rank r.
+    pub rank: usize,
+    /// Subspace change frequency T (§4.1; paper default 200).
+    pub update_freq: u64,
+    /// Scale factor α on the projected-back update (§4.4; paper 0.25).
+    pub scale: f32,
+    /// Store P 8-bit quantized (§7 future work (2): low-memory projection
+    /// matrices). Quarters the projector memory for a small extra dequant
+    /// per step.
+    pub quantize_projector: bool,
+}
+
+impl Default for GaLoreConfig {
+    fn default() -> Self {
+        GaLoreConfig { rank: 128, update_freq: 200, scale: 0.25, quantize_projector: false }
+    }
+}
+
+/// GaLore wrapper around an arbitrary inner optimizer.
+pub struct GaLore<O: Optimizer> {
+    pub cfg: GaLoreConfig,
+    inner: O,
+    /// Parameters to project. Empty set => project every 2-D parameter
+    /// whose min dimension exceeds the rank (test convenience); trainers
+    /// always set this explicitly to attention+FFN weights.
+    targets: HashSet<usize>,
+    explicit_targets: bool,
+    projectors: HashMap<usize, Projector>,
+    steps: HashMap<usize, u64>,
+    rng: Rng,
+}
+
+impl<O: Optimizer> GaLore<O> {
+    pub fn new(cfg: GaLoreConfig, inner: O) -> Self {
+        GaLore {
+            cfg,
+            inner,
+            targets: HashSet::new(),
+            explicit_targets: false,
+            projectors: HashMap::new(),
+            steps: HashMap::new(),
+            rng: Rng::new(0x6A10E),
+        }
+    }
+
+    /// Restrict projection to these parameter ids (attention + FFN weights,
+    /// per §5.1 — embeddings / norms / lm_head stay full-rank).
+    pub fn with_targets(mut self, targets: impl IntoIterator<Item = usize>) -> Self {
+        self.targets = targets.into_iter().collect();
+        self.explicit_targets = true;
+        self
+    }
+
+    fn is_target(&self, param: usize, grad: &Matrix) -> bool {
+        if self.explicit_targets {
+            return self.targets.contains(&param);
+        }
+        grad.rows > 1 && grad.cols > 1 && grad.rows.min(grad.cols) > self.cfg.rank
+    }
+
+    /// Current projector for a parameter (None until its first step).
+    pub fn projector(&self, param: usize) -> Option<&Projector> {
+        self.projectors.get(&param)
+    }
+
+    pub fn inner(&self) -> &O {
+        &self.inner
+    }
+}
+
+impl<O: Optimizer> Optimizer for GaLore<O> {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        if !self.is_target(param, grad) {
+            // Full-rank pass-through (embeddings, norms, scalars).
+            self.inner.step(param, w, grad, lr);
+            return;
+        }
+        let t = self.steps.entry(param).or_insert(0);
+        // Refresh the subspace every T steps (including step 0).
+        if *t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&param) {
+            let proj = Projector::compute_with(
+                grad,
+                self.cfg.rank,
+                &mut self.rng,
+                self.cfg.quantize_projector,
+            );
+            self.projectors.insert(param, proj);
+            // NOTE: like the official implementation, optimizer state is
+            // *not* reset on subspace switch — the moments' coordinates are
+            // reinterpreted in the new basis (§4.1 discusses the fidelity
+            // trade-off).
+        }
+        *t += 1;
+        let proj = &self.projectors[&param];
+        let compact_grad = proj.project(grad);
+        // Run the inner optimizer in the compact space against a zero
+        // scratch weight with lr=1: the scratch then holds -N_t (the
+        // normalized update), regardless of which optimizer it is.
+        let (cr, cc) = compact_grad.shape();
+        let mut scratch = Matrix::zeros(cr, cc);
+        self.inner.step(param, &mut scratch, &compact_grad, 1.0);
+        // scratch = -N_t  =>  W <- W - lr * α * P N_t  (Algorithm 2).
+        let full_update = proj.project_back(&scratch); // = -P N_t
+        w.axpy(lr * self.cfg.scale, &full_update);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.inner.state_bytes() + self.projectors.values().map(|p| p.nbytes()).sum::<usize>()
+    }
+
+    fn name(&self) -> &'static str {
+        "galore"
+    }
+
+    fn reset_state(&mut self) {
+        self.inner.reset_state();
+        self.projectors.clear();
+        self.steps.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Adam, AdamConfig};
+    use crate::testing::assert_slice_close;
+
+    fn adam() -> Adam {
+        Adam::new(AdamConfig::default())
+    }
+
+    #[test]
+    fn projector_roundtrip_energy() {
+        // For a nearly-rank-r gradient, project+back must preserve ~all energy.
+        let mut rng = Rng::new(0);
+        let u = Matrix::randn(40, 4, 1.0, &mut rng);
+        let v = Matrix::randn(4, 60, 1.0, &mut rng);
+        let g = matmul(&u, &v);
+        let proj = Projector::compute(&g, 4, &mut rng);
+        let back = proj.project_back(&proj.project(&g));
+        let mut err = g.clone();
+        err.sub_assign(&back);
+        assert!(err.frobenius_norm() < 1e-2 * g.frobenius_norm());
+    }
+
+    #[test]
+    fn side_follows_short_dimension() {
+        let mut rng = Rng::new(1);
+        let wide = Matrix::randn(8, 32, 1.0, &mut rng);
+        let tall = Matrix::randn(32, 8, 1.0, &mut rng);
+        assert_eq!(Projector::compute(&wide, 4, &mut rng).side, ProjSide::Left);
+        assert_eq!(Projector::compute(&tall, 4, &mut rng).side, ProjSide::Right);
+    }
+
+    #[test]
+    fn compact_shapes() {
+        let mut rng = Rng::new(2);
+        let wide = Matrix::randn(8, 32, 1.0, &mut rng);
+        let p = Projector::compute(&wide, 4, &mut rng);
+        assert_eq!(p.project(&wide).shape(), (4, 32));
+        assert_eq!(p.compact_shape(8, 32), (4, 32));
+        let tall = Matrix::randn(32, 8, 1.0, &mut rng);
+        let q = Projector::compute(&tall, 4, &mut rng);
+        assert_eq!(q.project(&tall).shape(), (32, 4));
+    }
+
+    #[test]
+    fn rank_clamped_to_min_dim() {
+        let mut rng = Rng::new(3);
+        let g = Matrix::randn(6, 100, 1.0, &mut rng);
+        let p = Projector::compute(&g, 64, &mut rng);
+        assert_eq!(p.rank, 6);
+    }
+
+    #[test]
+    fn full_rank_projection_matches_plain_adam() {
+        // §3.3: with r = min(m, n) (orthonormal square-ish P) and α = 1,
+        // GaLore follows the exact Adam trajectory.
+        let mut rng = Rng::new(4);
+        let cfg = GaLoreConfig { rank: 8, update_freq: 1000, scale: 1.0, ..Default::default() };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut plain = adam();
+        let mut wg = Matrix::randn(8, 24, 1.0, &mut rng);
+        let mut wp = wg.clone();
+        for s in 0..25 {
+            let g = Matrix::randn(8, 24, 1.0, &mut rng.child(s));
+            gal.step(0, &mut wg, &g, 0.01);
+            plain.step(0, &mut wp, &g, 0.01);
+        }
+        // P is an orthonormal 8x8 basis: updates agree up to rotation of
+        // the Adam nonlinearity — for exact agreement the *element-wise*
+        // statistics must match, which holds only when P = I. So compare
+        // loosely: the trajectories stay within a few percent.
+        let mut d = wg.clone();
+        d.sub_assign(&wp);
+        assert!(
+            d.frobenius_norm() < 0.15 * wp.frobenius_norm(),
+            "relative divergence {}",
+            d.frobenius_norm() / wp.frobenius_norm()
+        );
+    }
+
+    #[test]
+    fn update_stays_in_subspace() {
+        // Definition 3.6: between refreshes, ΔW ∈ span(P).
+        let mut rng = Rng::new(5);
+        let cfg = GaLoreConfig { rank: 4, update_freq: 100, scale: 0.25, ..Default::default() };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut w = Matrix::randn(32, 48, 1.0, &mut rng);
+        let w0 = w.clone();
+        for s in 0..10 {
+            let g = Matrix::randn(32, 48, 1.0, &mut rng.child(s));
+            gal.step(0, &mut w, &g, 0.01);
+        }
+        let p = gal.projector(0).unwrap().basis();
+        let mut dw = w.clone();
+        dw.sub_assign(&w0);
+        // Residual orthogonal to span(P) must vanish: dw - P (P^T dw) = 0.
+        let ptdw = matmul_at_b(&p, &dw);
+        let back = matmul(&p, &ptdw);
+        let mut resid = dw.clone();
+        resid.sub_assign(&back);
+        assert!(resid.frobenius_norm() < 1e-4 * dw.frobenius_norm().max(1.0));
+    }
+
+    #[test]
+    fn subspace_switches_at_update_freq() {
+        let mut rng = Rng::new(6);
+        let cfg = GaLoreConfig { rank: 4, update_freq: 5, scale: 0.25, ..Default::default() };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
+        let g0 = Matrix::randn(16, 24, 1.0, &mut rng);
+        gal.step(0, &mut w, &g0, 0.01);
+        let basis0 = gal.projector(0).unwrap().basis();
+        for s in 1..5 {
+            let g = Matrix::randn(16, 24, 1.0, &mut rng.child(s));
+            gal.step(0, &mut w, &g, 0.01);
+            // Unchanged within the window.
+            assert_slice_close(&gal.projector(0).unwrap().basis().data, &basis0.data, 0.0, 0.0);
+        }
+        let g5 = Matrix::randn(16, 24, 1.0, &mut rng.child(99));
+        gal.step(0, &mut w, &g5, 0.01);
+        let basis1 = gal.projector(0).unwrap().basis();
+        let mut diff = basis1;
+        diff.sub_assign(&basis0);
+        assert!(diff.frobenius_norm() > 1e-3, "projector did not refresh");
+    }
+
+    #[test]
+    fn memory_matches_paper_formula() {
+        // Table 1: GaLore optim state = mr + 2nr for (m<=n) Adam.
+        let (m, n, r) = (32usize, 64usize, 8usize);
+        let cfg = GaLoreConfig { rank: r, update_freq: 100, scale: 0.25, ..Default::default() };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut w = Matrix::zeros(m, n);
+        let g = Matrix::ones(m, n);
+        gal.step(0, &mut w, &g, 0.01);
+        let expect = 4 * (m * r + 2 * r * n); // P + (M, V) compact
+        assert_eq!(gal.state_bytes(), expect);
+    }
+
+    #[test]
+    fn untargeted_params_full_rank() {
+        let cfg = GaLoreConfig { rank: 4, update_freq: 10, scale: 0.25, ..Default::default() };
+        let mut gal = GaLore::new(cfg, adam()).with_targets([1usize]);
+        let mut w = Matrix::zeros(16, 16);
+        let g = Matrix::ones(16, 16);
+        gal.step(0, &mut w, &g, 0.01); // param 0: not targeted
+        assert!(gal.projector(0).is_none());
+        // Full-rank Adam state: 2 * 16 * 16 floats.
+        assert_eq!(gal.state_bytes(), 4 * 2 * 16 * 16);
+    }
+
+    #[test]
+    fn quantized_projector_quarters_memory_and_still_trains() {
+        // §7 future work (2): 8-bit P. Memory: ~1/4 of the f32 projector;
+        // convergence: same order as f32 GaLore on the toy problem.
+        let mut rng = Rng::new(9);
+        let cfg_f32 = GaLoreConfig { rank: 8, update_freq: 50, scale: 0.25, ..Default::default() };
+        let cfg_q8 = GaLoreConfig { quantize_projector: true, ..cfg_f32 };
+        let mut g_f32 = GaLore::new(cfg_f32, adam());
+        let mut g_q8 = GaLore::new(cfg_q8, adam());
+        let mut w1 = Matrix::randn(32, 64, 1.0, &mut rng);
+        let mut w2 = w1.clone();
+        for s in 0..30 {
+            let g = Matrix::randn(32, 64, 1.0, &mut rng.child(s));
+            g_f32.step(0, &mut w1, &g, 0.01);
+            g_q8.step(0, &mut w2, &g, 0.01);
+        }
+        assert!(g_q8.projector(0).unwrap().is_quantized());
+        let p_f32 = g_f32.projector(0).unwrap().nbytes();
+        let p_q8 = g_q8.projector(0).unwrap().nbytes();
+        assert!(p_q8 * 3 < p_f32, "q8 {p_q8} vs f32 {p_f32}");
+        // Trajectories track closely (quantized P is near-orthonormal).
+        let mut d = w1.clone();
+        d.sub_assign(&w2);
+        assert!(d.frobenius_norm() < 0.05 * w1.frobenius_norm());
+    }
+
+    #[test]
+    fn galore_converges_on_low_rank_least_squares() {
+        // Lemma 3.3 setting: inputs confined to a k-dim subspace; GaLore
+        // with rank >= k must drive the loss down like full Adam.
+        let mut rng = Rng::new(7);
+        let (m, n, k) = (24, 16, 4);
+        let w_star = Matrix::randn(m, n, 1.0, &mut rng);
+        let basis = Matrix::randn(k, n, 1.0, &mut rng);
+        let run = |use_galore: bool, rng: &mut Rng| -> (f32, f32) {
+            let mut w = Matrix::zeros(m, n);
+            let mut opt: Box<dyn Optimizer> = if use_galore {
+                Box::new(GaLore::new(
+                    GaLoreConfig { rank: 6, update_freq: 50, scale: 1.0, ..Default::default() },
+                    adam(),
+                ))
+            } else {
+                Box::new(adam())
+            };
+            let mut first = 0.0;
+            let mut last = 0.0;
+            for t in 0..300 {
+                let z = Matrix::randn(64, k, 1.0, &mut rng.child(t as u64));
+                let x = matmul(&z, &basis); // (64, n)
+                // err = X Wᵀ - X W*ᵀ; loss = mean(err²); G = 2 errᵀ X / B.
+                let pred = matmul_a_bt(&x, &w);
+                let target = matmul_a_bt(&x, &w_star);
+                let mut err = pred.clone();
+                err.sub_assign(&target);
+                let loss = (err.frobenius_norm().powi(2)) / err.len() as f32;
+                if t == 0 {
+                    first = loss;
+                }
+                last = loss;
+                let g = {
+                    let mut g = matmul_at_b(&err, &x); // (m, n)
+                    g.scale(2.0 / x.rows as f32);
+                    g
+                };
+                opt.step(0, &mut w, &g, 0.02);
+            }
+            (first, last)
+        };
+        let (f_adam, l_adam) = run(false, &mut rng.child(1000));
+        let (f_gal, l_gal) = run(true, &mut rng.child(2000));
+        assert!(l_adam < 0.05 * f_adam, "adam {f_adam} -> {l_adam}");
+        assert!(l_gal < 0.10 * f_gal, "galore {f_gal} -> {l_gal}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Optimizer zoo.
+//!
+//! Everything the paper's evaluation touches: Adam/AdamW (the full-rank
+//! baseline, Eqns. 2–4), Adafactor (first-moment variant, §5.2), SGD with
+//! momentum (Lemma 3.3 dynamics), block-wise 8-bit Adam (§4.3), and the
+//! **GaLore projector** (`galore::Projector`) plus the generic
+//! `galore::GaLore<O>` wrapper that turns any of them into their
+//! memory-efficient GaLore variant (Algorithm 1: project → update →
+//! project-back).
+//!
+//! All optimizers implement [`Optimizer`]: a per-parameter, shape-aware
+//! `step` that applies the update in-place on the weight and reports its
+//! state memory via `state_bytes` (the number the memory benches check
+//! against `memory::formulas`).
+
+mod adafactor;
+mod adam;
+mod adam8bit;
+pub mod galore;
+mod sgd;
+
+pub use adafactor::Adafactor;
+pub use adam::{Adam, AdamConfig};
+pub use adam8bit::Adam8bit;
+pub use galore::{GaLore, GaLoreConfig, ProjSide, Projector};
+pub use sgd::Sgd;
+
+use crate::tensor::Matrix;
+
+/// A stateful, per-parameter optimizer. Parameters are identified by a
+/// stable index (schema order) so state survives across steps.
+pub trait Optimizer: Send {
+    /// Apply one update: `w <- w - f(grad)` for this parameter.
+    /// `lr` is the (already scheduled) learning rate for this step.
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32);
+
+    /// Bytes of optimizer state currently held for all parameters.
+    fn state_bytes(&self) -> usize;
+
+    /// Human-readable name (used by benches and metrics).
+    fn name(&self) -> &'static str;
+
+    /// Hook for subspace/trainer events ("new subspace / merge"); no-op by
+    /// default.
+    fn reset_state(&mut self) {}
+}
+
+/// Bias-correction factor `1 - beta^t` shared by the moment optimizers.
+pub(crate) fn bias_correction(beta: f32, t: u64) -> f32 {
+    1.0 - beta.powi(t as i32)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Quadratic bowl: f(W) = 0.5 * ||W - W*||_F^2, grad = W - W*.
+    /// Any sane optimizer must reduce distance to W* substantially.
+    pub fn converges_on_quadratic(opt: &mut dyn Optimizer, steps: usize, lr: f32) -> (f32, f32) {
+        let mut rng = Rng::new(0);
+        let w_star = Matrix::randn(16, 24, 1.0, &mut rng);
+        let mut w = Matrix::zeros(16, 24);
+        let d0 = dist(&w, &w_star);
+        for _ in 0..steps {
+            let mut g = w.clone();
+            g.sub_assign(&w_star);
+            opt.step(0, &mut w, &g, lr);
+        }
+        (d0, dist(&w, &w_star))
+    }
+
+    pub fn dist(a: &Matrix, b: &Matrix) -> f32 {
+        let mut d = a.clone();
+        d.sub_assign(b);
+        d.frobenius_norm()
+    }
+}

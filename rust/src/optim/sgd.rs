@@ -1,0 +1,77 @@
+//! SGD with optional momentum. Used by the Lemma 3.3 low-rank-dynamics
+//! experiment (vanilla SGD) and as the cheapest baseline.
+
+use super::Optimizer;
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+pub struct Sgd {
+    momentum: f32,
+    velocity: HashMap<usize, Matrix>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32) -> Self {
+        Sgd { momentum, velocity: HashMap::new() }
+    }
+
+    pub fn vanilla() -> Self {
+        Self::new(0.0)
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        if self.momentum == 0.0 {
+            w.axpy(-lr, grad);
+            return;
+        }
+        let v = self
+            .velocity
+            .entry(param)
+            .or_insert_with(|| Matrix::zeros(grad.rows, grad.cols));
+        let mu = self.momentum;
+        v.zip_inplace(grad, |vv, g| mu * vv + g);
+        w.axpy(-lr, v);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.velocity.values().map(|v| 4 * v.len()).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn reset_state(&mut self) {
+        self.velocity.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::converges_on_quadratic;
+
+    #[test]
+    fn vanilla_sgd_matches_closed_form() {
+        let mut sgd = Sgd::vanilla();
+        let mut w = Matrix::ones(1, 1);
+        // grad = w on a quadratic: w_t = (1 - lr)^t.
+        for _ in 0..10 {
+            let g = w.clone();
+            sgd.step(0, &mut w, &g, 0.1);
+        }
+        assert!((w.at(0, 0) - 0.9f32.powi(10)).abs() < 1e-6);
+        assert_eq!(sgd.state_bytes(), 0);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let mut plain = Sgd::vanilla();
+        let mut mom = Sgd::new(0.9);
+        let (_, d_plain) = converges_on_quadratic(&mut plain, 40, 0.01);
+        let (_, d_mom) = converges_on_quadratic(&mut mom, 40, 0.01);
+        assert!(d_mom < d_plain, "momentum {d_mom} vs plain {d_plain}");
+    }
+}

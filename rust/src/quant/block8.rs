@@ -1,0 +1,129 @@
+//! absmax block quantization onto the signed int8 grid [-127, 127].
+
+/// Block size (elements per scale). Must match quant8.py::BLOCK.
+pub const BLOCK: usize = 256;
+
+/// An 8-bit quantized buffer: 1 byte/element + one f32 scale per BLOCK.
+/// Memory: `len + 4 * ceil(len/BLOCK)` bytes vs `4 * len` for f32 —
+/// the 4x optimizer-state shrink in the paper's "8-bit" rows.
+#[derive(Clone, Debug)]
+pub struct QuantizedBuf {
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+    /// Logical length (may not be a multiple of BLOCK; the tail block is
+    /// simply shorter).
+    pub len: usize,
+}
+
+impl QuantizedBuf {
+    pub fn zeros(len: usize) -> Self {
+        QuantizedBuf { q: vec![0; len], scales: vec![1.0; len.div_ceil(BLOCK)], len }
+    }
+
+    /// Bytes actually held (the memory-accounting ground truth).
+    pub fn nbytes(&self) -> usize {
+        self.q.len() + 4 * self.scales.len()
+    }
+}
+
+/// Quantize a f32 slice into a fresh buffer.
+pub fn quantize(x: &[f32]) -> QuantizedBuf {
+    let mut buf = QuantizedBuf::zeros(x.len());
+    quantize_into(x, &mut buf);
+    buf
+}
+
+/// Quantize into an existing buffer (hot path: no allocation).
+pub fn quantize_into(x: &[f32], buf: &mut QuantizedBuf) {
+    assert_eq!(x.len(), buf.len);
+    for (bi, chunk) in x.chunks(BLOCK).enumerate() {
+        let absmax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        buf.scales[bi] = scale;
+        let inv = 1.0 / scale;
+        let qchunk = &mut buf.q[bi * BLOCK..(bi * BLOCK + chunk.len())];
+        for (qv, &v) in qchunk.iter_mut().zip(chunk.iter()) {
+            *qv = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Dequantize into a fresh vec.
+pub fn dequantize(buf: &QuantizedBuf) -> Vec<f32> {
+    let mut out = vec![0.0f32; buf.len];
+    dequantize_into(buf, &mut out);
+    out
+}
+
+/// Dequantize into an existing slice (hot path: no allocation).
+pub fn dequantize_into(buf: &QuantizedBuf, out: &mut [f32]) {
+    assert_eq!(out.len(), buf.len);
+    for (bi, chunk) in out.chunks_mut(BLOCK).enumerate() {
+        let scale = buf.scales[bi];
+        let qchunk = &buf.q[bi * BLOCK..(bi * BLOCK + chunk.len())];
+        for (v, &qv) in chunk.iter_mut().zip(qchunk.iter()) {
+            *v = qv as f32 * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(0);
+        let mut x = vec![0.0f32; 3 * BLOCK + 17]; // non-multiple tail
+        rng.fill_normal(&mut x, 2.0);
+        let buf = quantize(&x);
+        let xd = dequantize(&buf);
+        for (chunk, dchunk) in x.chunks(BLOCK).zip(xd.chunks(BLOCK)) {
+            let absmax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for (&a, &b) in chunk.iter().zip(dchunk.iter()) {
+                assert!((a - b).abs() <= absmax / 254.0 + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_quantize_to_zeros() {
+        let x = vec![0.0f32; BLOCK * 2];
+        let buf = quantize(&x);
+        assert!(buf.q.iter().all(|&q| q == 0));
+        assert_eq!(dequantize(&buf), x);
+    }
+
+    #[test]
+    fn extreme_scales() {
+        for scale in [1e-20f32, 1e-4, 1.0, 1e4, 1e20] {
+            let x: Vec<f32> = (0..BLOCK).map(|i| (i as f32 - 128.0) * scale / 128.0).collect();
+            let buf = quantize(&x);
+            let xd = dequantize(&buf);
+            let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for (&a, &b) in x.iter().zip(xd.iter()) {
+                assert!((a - b).abs() <= absmax / 100.0, "{a} vs {b} at scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn nbytes_is_quarter_of_f32() {
+        let len = 1 << 20;
+        let buf = QuantizedBuf::zeros(len);
+        let f32_bytes = 4 * len;
+        assert!((buf.nbytes() as f64) < 0.27 * f32_bytes as f64);
+    }
+
+    #[test]
+    fn matches_python_oracle_values() {
+        // Golden cross-check with ref.quantize_block8 semantics: a ramp
+        // block scaled by absmax 255 -> scale 255/127.
+        let x: Vec<f32> = (0..BLOCK).map(|i| i as f32 - 255.0).collect(); // absmax 255 at i=0
+        let buf = quantize(&x);
+        assert!((buf.scales[0] - 255.0 / 127.0).abs() < 1e-6);
+        assert_eq!(buf.q[0], -127);
+        assert_eq!(buf.q[BLOCK - 1], 0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Dynamic (non-linear) 8-bit code for optimizer states, after the
+//! "dynamic tree quantization" of Dettmers et al. (2022).
+//!
+//! Linear absmax int8 (block8.rs) loses small magnitudes inside a block
+//! dominated by one large value — for Adam's second moment that produces
+//! `v ≈ 0` cells and exploding updates. The dynamic code spends bits
+//! logarithmically: each byte encodes a sign (signed variant), an exponent
+//! given by the number of leading indicator bits, and a linear fraction,
+//! covering ~7 orders of magnitude. Quantization is nearest-neighbour over
+//! the 256-entry table (binary search), exactly like the bitsandbytes
+//! lookup texture.
+
+/// A 256-entry quantization code over [-1, 1] (signed) or [0, 1] (unsigned).
+pub struct DynamicCode {
+    /// Sorted code values.
+    values: Vec<f32>,
+}
+
+fn build_values(signed: bool) -> Vec<f32> {
+    // Dynamic tree quantization: for each byte, the count of leading zeros
+    // (after the optional sign bit) selects the decade 10^-z, the remaining
+    // bits form a linear fraction within that decade.
+    let mut vals = Vec::with_capacity(256);
+    let frac_budget_bits = if signed { 7 } else { 8 };
+    let push_magnitudes = |sign: f32, out: &mut Vec<f32>| {
+        for z in 0..frac_budget_bits {
+            // z leading zero-bits then a 1 indicator, remaining bits linear.
+            let frac_bits = frac_budget_bits - 1 - z;
+            let n_frac = 1usize << frac_bits;
+            let base = 10f32.powi(-(z as i32));
+            for f in 0..n_frac {
+                // linear fill of (0.1, 1] * 10^-z
+                let lin = 0.1 + 0.9 * ((f as f32 + 1.0) / n_frac as f32);
+                out.push(sign * base * lin);
+            }
+        }
+        out.push(0.0);
+    };
+    if signed {
+        push_magnitudes(1.0, &mut vals);
+        let mut negs = Vec::new();
+        push_magnitudes(-1.0, &mut negs);
+        vals.extend(negs);
+    } else {
+        // unsigned: the full 8-bit budget goes to magnitudes: z in 0..8,
+        // 2^(7-z) fractions per decade => 255 values + zero = 256.
+        push_magnitudes(1.0, &mut vals);
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup();
+    assert!(vals.len() <= 256, "code table too large: {}", vals.len());
+    vals
+}
+
+impl DynamicCode {
+    pub fn signed() -> &'static DynamicCode {
+        use std::sync::OnceLock;
+        static CODE: OnceLock<DynamicCode> = OnceLock::new();
+        CODE.get_or_init(|| DynamicCode { values: build_values(true) })
+    }
+
+    pub fn unsigned() -> &'static DynamicCode {
+        use std::sync::OnceLock;
+        static CODE: OnceLock<DynamicCode> = OnceLock::new();
+        CODE.get_or_init(|| DynamicCode { values: build_values(false) })
+    }
+
+    /// Nearest code index for a normalized value in [-1, 1].
+    #[inline]
+    pub fn encode(&self, x: f32) -> u8 {
+        let vs = &self.values;
+        match vs.binary_search_by(|v| v.partial_cmp(&x).unwrap()) {
+            Ok(i) => i as u8,
+            Err(i) => {
+                if i == 0 {
+                    0
+                } else if i >= vs.len() {
+                    (vs.len() - 1) as u8
+                } else if (x - vs[i - 1]).abs() <= (vs[i] - x).abs() {
+                    (i - 1) as u8
+                } else {
+                    i as u8
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn decode(&self, b: u8) -> f32 {
+        self.values[b as usize]
+    }
+
+    /// Smallest positive magnitude representable (resolution floor).
+    pub fn min_positive(&self) -> f32 {
+        self.values.iter().copied().filter(|&v| v > 0.0).fold(f32::MAX, f32::min)
+    }
+}
+
+/// Block-quantized buffer using a dynamic code: 1 byte/elem + f32
+/// absmax-scale per block (same layout/memory as block8).
+#[derive(Clone, Debug)]
+pub struct DynQuantBuf {
+    pub q: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub len: usize,
+    pub signed: bool,
+}
+
+pub const DYN_BLOCK: usize = 256;
+
+impl DynQuantBuf {
+    pub fn zeros(len: usize, signed: bool) -> Self {
+        let code = if signed { DynamicCode::signed() } else { DynamicCode::unsigned() };
+        let zero = code.encode(0.0);
+        DynQuantBuf {
+            q: vec![zero; len],
+            scales: vec![1.0; len.div_ceil(DYN_BLOCK)],
+            len,
+            signed,
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.q.len() + 4 * self.scales.len()
+    }
+
+    pub fn quantize_from(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.len);
+        let code = if self.signed { DynamicCode::signed() } else { DynamicCode::unsigned() };
+        for (bi, chunk) in x.chunks(DYN_BLOCK).enumerate() {
+            let absmax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = if absmax > 0.0 { absmax } else { 1.0 };
+            self.scales[bi] = scale;
+            let inv = 1.0 / scale;
+            let qchunk = &mut self.q[bi * DYN_BLOCK..bi * DYN_BLOCK + chunk.len()];
+            for (qv, &v) in qchunk.iter_mut().zip(chunk.iter()) {
+                *qv = code.encode(v * inv);
+            }
+        }
+    }
+
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        let code = if self.signed { DynamicCode::signed() } else { DynamicCode::unsigned() };
+        for (bi, chunk) in out.chunks_mut(DYN_BLOCK).enumerate() {
+            let scale = self.scales[bi];
+            let qchunk = &self.q[bi * DYN_BLOCK..bi * DYN_BLOCK + chunk.len()];
+            for (v, &qv) in chunk.iter_mut().zip(qchunk.iter()) {
+                *v = code.decode(qv) * scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn code_tables_are_full_and_sorted() {
+        for code in [DynamicCode::signed(), DynamicCode::unsigned()] {
+            assert!(code.values.len() >= 200, "{}", code.values.len());
+            for w in code.values.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(code.values.contains(&0.0));
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_nearest() {
+        let code = DynamicCode::signed();
+        let mut rng = Rng::new(0);
+        for _ in 0..1000 {
+            let x = rng.next_f32() * 2.0 - 1.0;
+            let d = code.decode(code.encode(x));
+            // Nearest-neighbour: no other code value can be closer.
+            for &v in &code.values {
+                assert!((x - d).abs() <= (x - v).abs() + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn small_magnitudes_preserved_relatively() {
+        // The point of the dynamic code: 1e-4 next to 1.0 in the same block
+        // survives with fine relative error, where linear int8 rounds to 0.
+        let code = DynamicCode::unsigned();
+        for x in [1e-4f32, 1e-3, 1e-2, 0.1, 0.9] {
+            let d = code.decode(code.encode(x));
+            assert!((d - x).abs() / x < 0.35, "{x} -> {d}");
+        }
+        assert!(code.min_positive() < 2e-6);
+    }
+
+    #[test]
+    fn buffer_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut x = vec![0.0f32; 3 * DYN_BLOCK + 5];
+        rng.fill_normal(&mut x, 0.01);
+        x[0] = 5.0; // big outlier in block 0
+        let mut buf = DynQuantBuf::zeros(x.len(), true);
+        buf.quantize_from(&x);
+        let mut out = vec![0.0f32; x.len()];
+        buf.dequantize_into(&mut out);
+        // Outlier block: small values still carry ~relative precision.
+        for (a, b) in x.iter().zip(out.iter()).skip(1).take(DYN_BLOCK - 1) {
+            if a.abs() > 1e-3 {
+                assert!((a - b).abs() / a.abs() < 0.5, "{a} vs {b}");
+            }
+        }
+        assert!((x[0] - out[0]).abs() < 0.3);
+    }
+
+    #[test]
+    fn nonnegative_stays_nonnegative() {
+        let x: Vec<f32> = (0..DYN_BLOCK).map(|i| (i as f32) * 1e-5).collect();
+        let mut buf = DynQuantBuf::zeros(x.len(), false);
+        buf.quantize_from(&x);
+        let mut out = vec![0.0f32; x.len()];
+        buf.dequantize_into(&mut out);
+        assert!(out.iter().all(|&v| v >= 0.0));
+    }
+}

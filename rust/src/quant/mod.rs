@@ -1,0 +1,14 @@
+//! Block-wise 8-bit quantization for optimizer states (Dettmers et al.,
+//! 2022 — the scheme behind "8-bit Adam" / "8-bit GaLore").
+//!
+//! Mirrors `python/compile/kernels/quant8.py` exactly (same BLOCK size,
+//! same absmax scaling, same int8 grid), so the Rust-held states and the
+//! Pallas kernel agree bit-for-bit on the quantized representation.
+
+mod bf16;
+mod block8;
+mod dynamic;
+
+pub use bf16::{bf16_to_f32, f32_to_bf16, round_trip_slice, Bf16Buf};
+pub use block8::{dequantize, dequantize_into, quantize, quantize_into, QuantizedBuf, BLOCK};
+pub use dynamic::{DynQuantBuf, DynamicCode, DYN_BLOCK};

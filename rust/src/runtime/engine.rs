@@ -1,0 +1,131 @@
+//! PJRT runtime engine: loads HLO-text artifacts, compiles them once, and
+//! executes them from the training hot path.
+//!
+//! Interchange is HLO *text* (see aot.py / DESIGN.md): jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! `HloModuleProto::from_text_file` reassigns ids.
+//!
+//! Hot-path notes (EXPERIMENTS.md §Perf): executables are compiled once and
+//! cached; inputs are staged as device buffers via `buffer_from_host_buffer`
+//! (avoiding an extra literal copy); outputs come back as one tuple literal
+//! that is decomposed without re-marshalling.
+
+use super::manifest::{ArtifactMeta, DType, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// A host-side input for one artifact parameter.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// A host-side output tensor (always f32 — every artifact returns floats).
+#[derive(Clone, Debug)]
+pub struct Output {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Output {
+    pub fn scalar(&self) -> f32 {
+        self.data[0]
+    }
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative host<->device marshalling + execute time, for the §Perf
+    /// coordinator-overhead accounting.
+    pub exec_calls: u64,
+}
+
+impl Engine {
+    /// CPU PJRT client + manifest from `dir`.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), exec_calls: 0 })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .with_context(|| format!("loading {:?}", meta.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest.by_name(name).ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Execute an artifact with host inputs; returns its outputs in order.
+    pub fn execute(&mut self, name: &str, inputs: &[Input]) -> Result<Vec<Output>> {
+        self.prepare(name)?;
+        let meta = self.manifest.by_name(name).unwrap().clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!("{name}: got {} inputs, artifact takes {}", inputs.len(), meta.inputs.len());
+        }
+        let device = self.client.devices().into_iter().next();
+        let mut buffers = Vec::with_capacity(inputs.len());
+        for (i, (input, (shape, dtype))) in inputs
+            .iter()
+            .zip(meta.inputs.iter().zip(meta.input_dtypes.iter()))
+            .enumerate()
+        {
+            let dims: Vec<usize> = shape.clone();
+            let numel: usize = dims.iter().product::<usize>().max(1);
+            let buf = match (input, dtype) {
+                (Input::F32(data), DType::F32) => {
+                    if data.len() != numel {
+                        bail!("{name} input {i}: {} elements, want {numel}", data.len());
+                    }
+                    self.client.buffer_from_host_buffer::<f32>(data, &dims, device.as_ref())?
+                }
+                (Input::I32(data), DType::I32) => {
+                    if data.len() != numel {
+                        bail!("{name} input {i}: {} elements, want {numel}", data.len());
+                    }
+                    self.client.buffer_from_host_buffer::<i32>(data, &dims, device.as_ref())?
+                }
+                _ => bail!("{name} input {i}: dtype mismatch (artifact wants {dtype:?})"),
+            };
+            buffers.push(buf);
+        }
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        self.exec_calls += 1;
+        let tuple = result[0][0].to_literal_sync()?;
+        // return_tuple=True at lowering: outputs arrive as one tuple.
+        let parts = tuple.to_tuple()?;
+        if parts.len() != meta.n_outputs {
+            bail!("{name}: {} outputs, manifest says {}", parts.len(), meta.n_outputs);
+        }
+        let mut outputs = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>()?;
+            outputs.push(Output { dims, data });
+        }
+        Ok(outputs)
+    }
+
+    /// Number of distinct compiled executables resident.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,180 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Describes every HLO artifact's input shapes/dtypes and
+//! output arity so the engine can marshal literals without guessing.
+
+use super::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<DType, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "i8" => Ok(DType::I8),
+            other => Err(format!("unknown dtype {other}")),
+        }
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<DType>,
+    pub n_outputs: usize,
+    /// Optional fields by kind: model config name / batch, or (m, n, r).
+    pub config: Option<String>,
+    pub batch: Option<usize>,
+    pub m: Option<usize>,
+    pub n: Option<usize>,
+    pub r: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path:?}: {e} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let gets = |k: &str| a.get(k).and_then(Json::as_str).map(str::to_string);
+            let getu = |k: &str| a.get(k).and_then(Json::as_usize);
+            let name = gets("name").ok_or("artifact missing name")?;
+            let file = gets("file").ok_or("artifact missing file")?;
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or("artifact missing inputs")?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                        .ok_or("bad shape")
+                })
+                .collect::<Result<Vec<Vec<usize>>, _>>()?;
+            let input_dtypes = a
+                .get("input_dtypes")
+                .and_then(Json::as_arr)
+                .ok_or("artifact missing input_dtypes")?
+                .iter()
+                .map(|d| DType::from_str(d.as_str().unwrap_or("?")))
+                .collect::<Result<Vec<_>, _>>()?;
+            if inputs.len() != input_dtypes.len() {
+                return Err(format!("{name}: inputs/input_dtypes length mismatch"));
+            }
+            artifacts.push(ArtifactMeta {
+                path: dir.join(&file),
+                name,
+                kind: gets("kind").unwrap_or_default(),
+                inputs,
+                input_dtypes,
+                n_outputs: getu("n_outputs").ok_or("artifact missing n_outputs")?,
+                config: gets("config"),
+                batch: getu("batch"),
+                m: getu("m"),
+                n: getu("n"),
+                r: getu("r"),
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The training artifact for a model config (any batch if unspecified).
+    pub fn train_for(&self, config: &str) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "train" && a.config.as_deref() == Some(config))
+    }
+
+    pub fn eval_for(&self, config: &str) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "eval" && a.config.as_deref() == Some(config))
+    }
+
+    /// The fused GaLore-step artifact matching a (short-side m, long-side
+    /// n, rank) triple.
+    pub fn galore_step_for(&self, m: usize, n: usize, r: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.kind == "galore_step" && a.m == Some(m) && a.n == Some(n) && a.r == Some(r)
+        })
+    }
+
+    pub fn adam_step_for(&self, m: usize, n: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "adam_step" && a.m == Some(m) && a.n == Some(n))
+    }
+}
+
+/// Default artifacts directory: $GALORE_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("GALORE_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+ "artifacts": [
+  {"name": "train_nano_b8", "file": "train_nano_b8.hlo.txt",
+   "inputs": [[256, 64], [8, 64], [8, 64]], "input_dtypes": ["f32", "i32", "i32"],
+   "n_outputs": 22, "kind": "train", "config": "nano", "batch": 8},
+  {"name": "galore_step_64x172_r16", "file": "galore_step_64x172_r16.hlo.txt",
+   "inputs": [[64, 172]], "input_dtypes": ["f32"],
+   "n_outputs": 3, "kind": "galore_step", "m": 64, "n": 172, "r": 16}
+ ]
+}"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(DOC, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert!(m.by_name("train_nano_b8").is_some());
+        assert!(m.train_for("nano").is_some());
+        assert!(m.train_for("7b").is_none());
+        let g = m.galore_step_for(64, 172, 16).unwrap();
+        assert_eq!(g.path, PathBuf::from("/tmp/a/galore_step_64x172_r16.hlo.txt"));
+        assert!(m.galore_step_for(64, 172, 99).is_none());
+    }
+
+    #[test]
+    fn rejects_inconsistent_entries() {
+        let bad = r#"{"artifacts": [{"name": "x", "file": "x.hlo.txt",
+            "inputs": [[2]], "input_dtypes": ["f32", "f32"], "n_outputs": 1}]}"#;
+        assert!(Manifest::parse(bad, PathBuf::from(".")).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: the bridge between the Rust coordinator and the AOT HLO
+//! artifacts produced by `python/compile/aot.py`.
+//!
+//! * [`json`] — minimal JSON parser (offline substitute for serde).
+//! * [`manifest`] — the artifact manifest contract with aot.py.
+//! * [`engine`] — PJRT CPU client, executable cache, literal marshalling.
+//!
+//! Integration tests live in `rust/tests/` (they need `make artifacts`).
+
+pub mod engine;
+pub mod json;
+pub mod manifest;
+
+pub use engine::{Engine, Input, Output};
+pub use manifest::{default_dir, ArtifactMeta, DType, Manifest};

@@ -1,0 +1,15 @@
+//! Pure-Rust dense tensor substrate.
+//!
+//! No external linear-algebra crates are available offline, so the
+//! framework carries its own row-major `Matrix` (f32) with the small set of
+//! BLAS-like operations the coordinator needs: blocked matmuls (plain and
+//! transposed variants), AXPY-style element-wise kernels, norms, and
+//! reductions. The *model* math runs inside the AOT HLO artifacts; this
+//! module exists for the optimizer states, projector refreshes and
+//! host-side glue — and is one of the perf targets in EXPERIMENTS.md §Perf.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{matmul, matmul_at_b, matmul_a_bt};

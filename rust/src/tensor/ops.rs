@@ -1,0 +1,261 @@
+//! Blocked matmul kernels (plain / A^T B / A B^T).
+//!
+//! The hot caller is the GaLore projector path on the Rust side
+//! (`P^T G`, `P N`, and the subspace-iteration refresh `G (G^T Y)`), so
+//! these are written as cache-blocked i-k-j loops with a threaded outer
+//! split for large shapes. Perf iterations on this file are logged in
+//! EXPERIMENTS.md §Perf.
+
+use super::Matrix;
+
+/// Below this many multiply-adds, threading overhead dominates.
+const PAR_THRESHOLD: usize = 1 << 21;
+
+fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// C = A @ B. (m,k) x (k,n) -> (m,n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    let work = m * k * n;
+    if work < PAR_THRESHOLD {
+        matmul_rows(&a.data, &b.data, &mut c.data, 0, m, k, n);
+    } else {
+        par_rows(&a.data, &b.data, &mut c.data, m, k, n);
+    }
+    c
+}
+
+/// Row-range kernel: i-k-j loop order with 4-way k unrolling — the j-loop
+/// is a contiguous FMA over C's row and four B rows, which auto-vectorizes
+/// to AVX2 FMA under target-cpu=native (§Perf: the unroll lifted 512³ from
+/// 4.5 to >20 GFLOP/s by cutting the C-row load/store traffic 4x).
+fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, i1: usize, k: usize, n: usize) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[(i - i0) * n..(i - i0 + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+            let b0 = &b[kk * n..kk * n + n];
+            let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+            let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
+            let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let aik = arow[kk];
+            let brow = &b[kk * n..kk * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aik * bv;
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// Split C's rows across threads; each thread writes a disjoint row range.
+fn par_rows(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    let nt = num_threads().min(m).max(1);
+    let chunk = m.div_ceil(nt);
+    let chunks: Vec<&mut [f32]> = c.chunks_mut(chunk * n).collect();
+    std::thread::scope(|scope| {
+        for (t, cchunk) in chunks.into_iter().enumerate() {
+            let i0 = t * chunk;
+            let i1 = ((t + 1) * chunk).min(m);
+            scope.spawn(move || {
+                matmul_rows(a, b, cchunk, i0, i1, k, n);
+            });
+        }
+    });
+}
+
+/// C = A^T @ B. (k,m) x (k,n) -> (m,n). Avoids materializing A^T: loop over
+/// k rows of both A and B and accumulate rank-1 updates into C.
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_at_b: A^T({},{}) @ B({},{})", a.cols, a.rows, b.rows, b.cols);
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // Parallelize over output rows (columns of A) when large.
+    let work = m * k * n;
+    if work < PAR_THRESHOLD {
+        at_b_rows(&a.data, &b.data, &mut c.data, 0, m, k, n);
+    } else {
+        let nt = num_threads().min(m).max(1);
+        let chunk = m.div_ceil(nt);
+        let chunks: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
+        std::thread::scope(|scope| {
+            for (t, cchunk) in chunks.into_iter().enumerate() {
+                let j0 = t * chunk;
+                let j1 = ((t + 1) * chunk).min(m);
+                let (ad, bd) = (&a.data, &b.data);
+                scope.spawn(move || {
+                    at_b_rows(ad, bd, cchunk, j0, j1, k, n);
+                });
+            }
+        });
+    }
+    c
+}
+
+fn at_b_rows(a: &[f32], b: &[f32], c: &mut [f32], j0: usize, j1: usize, k: usize, n: usize) {
+    // c[j - j0, :] = sum_k a[k, j] * b[k, :]
+    let m = j1; // a has `m`+ columns; we only touch j0..j1
+    let acols = {
+        // a is (k, m_total); stride is m_total. We can't know m_total from
+        // slice len alone unless k divides; compute it.
+        debug_assert!(k > 0);
+        a.len() / k
+    };
+    let _ = m;
+    // 4-way unroll over the k (reduction) axis: each C row is loaded and
+    // stored once per 4 B rows instead of once per B row (§Perf iteration 2).
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let a0 = &a[kk * acols..kk * acols + acols];
+        let a1 = &a[(kk + 1) * acols..(kk + 1) * acols + acols];
+        let a2 = &a[(kk + 2) * acols..(kk + 2) * acols + acols];
+        let a3 = &a[(kk + 3) * acols..(kk + 3) * acols + acols];
+        let b0 = &b[kk * n..kk * n + n];
+        let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+        let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
+        let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
+        for j in j0..j1 {
+            let (c0, c1, c2, c3) = (a0[j], a1[j], a2[j], a3[j]);
+            let crow = &mut c[(j - j0) * n..(j - j0 + 1) * n];
+            for jj in 0..n {
+                crow[jj] += c0 * b0[jj] + c1 * b1[jj] + c2 * b2[jj] + c3 * b3[jj];
+            }
+        }
+        kk += 4;
+    }
+    while kk < k {
+        let arow = &a[kk * acols..(kk + 1) * acols];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for j in j0..j1 {
+            let ajk = arow[j];
+            let crow = &mut c[(j - j0) * n..(j - j0 + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += ajk * bv;
+            }
+        }
+        kk += 1;
+    }
+}
+
+/// C = A @ B^T. (m,k) x (n,k) -> (m,n). Dot products of contiguous rows.
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt: A({},{}) @ B^T({},{})", a.rows, a.cols, b.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    let work = m * k * n;
+    let kernel = |c: &mut [f32], i0: usize, i1: usize| {
+        for i in i0..i1 {
+            let arow = &a.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&x, &y) in arow.iter().zip(brow.iter()) {
+                    acc += x * y;
+                }
+                c[(i - i0) * n + j] = acc;
+            }
+        }
+    };
+    if work < PAR_THRESHOLD {
+        kernel(&mut c.data, 0, m);
+    } else {
+        let nt = num_threads().min(m).max(1);
+        let chunk = m.div_ceil(nt);
+        let chunks: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
+        std::thread::scope(|scope| {
+            for (t, cchunk) in chunks.into_iter().enumerate() {
+                let i0 = t * chunk;
+                let i1 = ((t + 1) * chunk).min(m);
+                let kernel = &kernel;
+                scope.spawn(move || kernel(cchunk, i0, i1));
+            }
+        });
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = acc;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 13, 31), (64, 32, 48)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(160, 120, 1.0, &mut rng);
+        let b = Matrix::randn(120, 140, 1.0, &mut rng);
+        // Force both paths by size: this is above PAR_THRESHOLD.
+        assert!(160 * 120 * 140 >= super::PAR_THRESHOLD);
+        assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        for &(k, m, n) in &[(5, 3, 4), (32, 8, 40), (130, 70, 90)] {
+            let a = Matrix::randn(k, m, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            assert_close(&matmul_at_b(&a, &b), &matmul(&a.transpose(), &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(4, 6, 5), (20, 33, 18), (90, 110, 80)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            assert_close(&matmul_a_bt(&a, &b), &matmul(&a, &b.transpose()), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_shapes_panic() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        assert!(std::panic::catch_unwind(|| matmul(&a, &b)).is_err());
+    }
+}

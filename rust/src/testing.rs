@@ -1,0 +1,132 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is unavailable in this offline build (see DESIGN.md §4), so
+//! the repo carries a small functional subset: seeded generators, a
+//! `for_all` runner with failure-case reporting, and a handful of
+//! numeric/shape strategies used by the coordinator-invariant tests
+//! (routing of layer shapes to artifacts, batching, optimizer state).
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Number of cases each property runs (override with GALORE_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("GALORE_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// A generator of random test inputs.
+pub trait Strategy {
+    type Value;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Strategy for F {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` against `cases` random inputs from `strat`; panic with the
+/// seed and debug-printed input on the first failure.
+pub fn for_all<S: Strategy>(name: &str, strat: S, prop: impl Fn(&S::Value) -> bool)
+where
+    S::Value: std::fmt::Debug,
+{
+    for_all_cases(name, strat, default_cases(), prop)
+}
+
+pub fn for_all_cases<S: Strategy>(
+    name: &str,
+    strat: S,
+    cases: usize,
+    prop: impl Fn(&S::Value) -> bool,
+) where
+    S::Value: std::fmt::Debug,
+{
+    let base_seed: u64 =
+        std::env::var("GALORE_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xDECAF);
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let value = strat.generate(&mut rng);
+        if !prop(&value) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (GALORE_PROP_SEED={base_seed}):\n  input: {value:?}"
+            );
+        }
+    }
+}
+
+// -- common strategies ------------------------------------------------------
+
+/// Integer in [lo, hi].
+pub fn int_in(lo: usize, hi: usize) -> impl Fn(&mut Rng) -> usize {
+    move |rng| lo + rng.below(hi - lo + 1)
+}
+
+/// f32 in [lo, hi).
+pub fn f32_in(lo: f32, hi: f32) -> impl Fn(&mut Rng) -> f32 {
+    move |rng| lo + (hi - lo) * rng.next_f32()
+}
+
+/// Random normal matrix with dims each in [dlo, dhi].
+pub fn matrix(dlo: usize, dhi: usize) -> impl Fn(&mut Rng) -> Matrix {
+    move |rng| {
+        let m = dlo + rng.below(dhi - dlo + 1);
+        let n = dlo + rng.below(dhi - dlo + 1);
+        Matrix::randn(m, n, 1.0, rng)
+    }
+}
+
+/// Random token batch: (batch, seq, vocab) -> Vec<i32> ids.
+pub fn token_batch(batch: usize, seq: usize, vocab: usize) -> impl Fn(&mut Rng) -> Vec<i32> {
+    move |rng| (0..batch * seq).map(|_| rng.below(vocab) as i32).collect()
+}
+
+/// Relative-tolerance float comparison used across numeric tests.
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * a.abs().max(b.abs())
+}
+
+/// Assert two slices are element-wise close; panics with index context.
+pub fn assert_slice_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(close(x, y, rtol, atol), "mismatch at {i}: {x} vs {y}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_passes_trivial_property() {
+        for_all("square nonneg", f32_in(-10.0, 10.0), |&x| x * x >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn for_all_reports_failures() {
+        for_all("always false", int_in(0, 10), |_| false);
+    }
+
+    #[test]
+    fn strategies_stay_in_bounds() {
+        for_all("int_in bounds", int_in(3, 9), |&v| (3..=9).contains(&v));
+        for_all("matrix dims", matrix(2, 6), |m| {
+            (2..=6).contains(&m.rows) && (2..=6).contains(&m.cols)
+        });
+        for_all("tokens in vocab", token_batch(2, 8, 100), |ts| {
+            ts.iter().all(|&t| (0..100).contains(&t))
+        });
+    }
+
+    #[test]
+    fn close_edge_cases() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5, 0.0));
+        assert!(!close(1.0, 1.1, 1e-5, 0.0));
+        assert!(close(0.0, 1e-9, 0.0, 1e-8));
+    }
+}

@@ -1,0 +1,185 @@
+//! Property-based tests on coordinator invariants (routing of shapes to
+//! projections, batching, optimizer-state bookkeeping, collective
+//! correctness), using the in-repo harness from `galore::testing`
+//! (`proptest` is unavailable offline — DESIGN.md §4). These run without
+//! artifacts: they exercise the pure coordination logic.
+
+use galore::config::{MethodKind, RunConfig};
+use galore::coordinator::{build_optimizer, LrSchedule, Ring};
+use galore::data::{DataLoader, SyntheticCorpus};
+use galore::model::{schema, ModelConfig, ParamStore};
+use galore::optim::{ProjSide, Projector};
+use galore::rng::Rng;
+use galore::tensor::Matrix;
+use galore::testing::{for_all, for_all_cases, int_in};
+
+#[test]
+fn prop_projector_side_always_short_dimension() {
+    for_all("projector side", |rng: &mut Rng| {
+        let m = 2 + rng.below(40);
+        let n = 2 + rng.below(40);
+        let r = 1 + rng.below(8);
+        (Matrix::randn(m, n, 1.0, rng), r)
+    }, |(g, r)| {
+        let mut rng = Rng::new(1);
+        let p = Projector::compute(g, *r, &mut rng);
+        match p.side {
+            ProjSide::Left => g.rows <= g.cols,
+            ProjSide::Right => g.rows > g.cols,
+        }
+    });
+}
+
+#[test]
+fn prop_project_roundtrip_never_increases_energy() {
+    for_all("projection contraction", |rng: &mut Rng| {
+        let m = 4 + rng.below(30);
+        let n = 4 + rng.below(30);
+        let r = 1 + rng.below(m.min(n));
+        (Matrix::randn(m, n, 1.0, rng), r)
+    }, |(g, r)| {
+        let mut rng = Rng::new(7);
+        let p = Projector::compute(g, *r, &mut rng);
+        let back = p.project_back(&p.project(g));
+        // P P^T is an orthogonal projection: it cannot add energy.
+        back.frobenius_norm() <= g.frobenius_norm() * 1.001
+    });
+}
+
+#[test]
+fn prop_compact_state_smaller_than_full_for_all_shapes() {
+    // The routing invariant behind Table 1: for every layer shape in every
+    // model config, GaLore's compact state is strictly smaller than full
+    // Adam state when r < min(m, n).
+    for cfg in ModelConfig::all() {
+        for meta in schema(cfg) {
+            if !meta.is_projection_target() {
+                continue;
+            }
+            let (m, n) = (meta.rows as u64, meta.cols as u64);
+            let r = (cfg.default_rank() as u64).min(m).min(n);
+            if r >= m.min(n) {
+                continue;
+            }
+            let g = galore::memory::formulas::galore(m, n, r);
+            assert!(g.optim_states < 2 * m * n, "{} {}", cfg.name, meta.name);
+        }
+    }
+}
+
+#[test]
+fn prop_loader_batches_always_in_vocab_and_shape() {
+    for_all_cases("loader shape", int_in(0, 10_000), 16, |&seed| {
+        let vocab = 64 + (seed % 128);
+        let mut dl =
+            DataLoader::synthetic(SyntheticCorpus::new(vocab, seed as u64), 4, 32);
+        let b = dl.next_batch();
+        b.tokens.len() == 4 * 32
+            && b.targets.len() == 4 * 32
+            && b.tokens.iter().all(|&t| (t as usize) < vocab)
+            && b.targets.iter().all(|&t| (t as usize) < vocab)
+    });
+}
+
+#[test]
+fn prop_optimizer_state_only_grows_with_touched_params() {
+    // State bytes must be exactly the sum over touched parameters, for
+    // every method (bookkeeping invariant the memory benches rely on).
+    let model = ModelConfig::by_name("nano").unwrap();
+    for method in [
+        MethodKind::FullRank,
+        MethodKind::Adam8bit,
+        MethodKind::Adafactor,
+        MethodKind::GaLore,
+        MethodKind::Lora,
+        MethodKind::LowRank,
+    ] {
+        let cfg = RunConfig::new(model, method);
+        let store = ParamStore::zeros(model);
+        let targets = store.projection_targets();
+        let mut opt = build_optimizer(&cfg, &targets);
+        assert_eq!(opt.state_bytes(), 0, "{method:?} starts empty");
+        let mut w = Matrix::zeros(16, 16);
+        let g = Matrix::ones(16, 16);
+        opt.step(100, &mut w, &g, 0.01); // untargeted id
+        let after_one = opt.state_bytes();
+        assert!(after_one > 0, "{method:?}");
+        opt.step(100, &mut w, &g, 0.01); // same id: no growth
+        assert_eq!(opt.state_bytes(), after_one, "{method:?}");
+        let mut w2 = Matrix::zeros(8, 8);
+        let g2 = Matrix::ones(8, 8);
+        opt.step(101, &mut w2, &g2, 0.01); // new id: growth
+        assert!(opt.state_bytes() > after_one, "{method:?}");
+    }
+}
+
+#[test]
+fn prop_lr_schedule_bounded_and_warmup_monotone() {
+    for_all("schedule bounds", |rng: &mut Rng| {
+        let steps = 10 + rng.below(1000);
+        let peak = 0.0001 + rng.next_f32() * 0.1;
+        (steps, peak)
+    }, |&(steps, peak)| {
+        let s = LrSchedule::cosine(peak, steps, 0.1, 0.1);
+        let mut ok = true;
+        let mut prev = 0.0f32;
+        for t in 0..s.warmup_steps {
+            let lr = s.at(t);
+            ok &= lr >= prev - 1e-9 && lr <= peak * 1.0001;
+            prev = lr;
+        }
+        for t in s.warmup_steps..steps {
+            let lr = s.at(t);
+            ok &= lr >= peak * 0.1 * 0.999 && lr <= peak * 1.0001;
+        }
+        ok
+    });
+}
+
+#[test]
+fn prop_ring_allreduce_equals_serial_sum() {
+    for_all_cases("ring == serial", int_in(1, 6), 8, |&world| {
+        let len = 37;
+        let handles = Ring::new(world).into_handles();
+        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|h| {
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(h.rank as u64);
+                        let mut data: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                        h.all_reduce_sum(&mut data);
+                        data
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        // serial reference
+        let mut want = vec![0.0f32; len];
+        for rank in 0..world {
+            let mut rng = Rng::new(rank as u64);
+            for w in want.iter_mut() {
+                *w += rng.normal_f32();
+            }
+        }
+        results.iter().all(|res| {
+            res.iter().zip(want.iter()).all(|(a, b)| (a - b).abs() < 1e-4)
+        })
+    });
+}
+
+#[test]
+fn prop_galore_memory_never_exceeds_lora_memory() {
+    // Table 1's headline, swept over random shapes and ranks.
+    for_all("galore <= lora", |rng: &mut Rng| {
+        let m = 8 + rng.below(4000);
+        let n = 8 + rng.below(4000);
+        let r = 1 + rng.below(m.min(n) / 2 + 1);
+        (m as u64, n as u64, r as u64)
+    }, |&(m, n, r)| {
+        let g = galore::memory::formulas::galore(m, n, r);
+        let l = galore::memory::formulas::lora(m, n, r);
+        g.weights <= l.weights && g.optim_states <= l.optim_states
+    });
+}

@@ -1,0 +1,320 @@
+//! Integration tests over the AOT artifacts (require `make artifacts`).
+//!
+//! Every test self-skips (with a loud message) when artifacts/ is missing,
+//! so `cargo test` stays green in a fresh checkout; `make test` builds the
+//! artifacts first and runs everything.
+
+use galore::config::{MethodKind, RunConfig};
+use galore::coordinator::Trainer;
+use galore::data::{DataLoader, SyntheticCorpus};
+use galore::model::ModelConfig;
+use galore::runtime::{default_dir, Engine, Input};
+use galore::tensor::Matrix;
+
+fn artifacts_ready() -> bool {
+    let ok = default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn nano_cfg(method: MethodKind, steps: usize) -> RunConfig {
+    let model = ModelConfig::by_name("nano").unwrap();
+    let mut cfg = RunConfig::new(model, method);
+    cfg.steps = steps;
+    cfg.galore.rank = 16;
+    cfg.lowrank_rank = 16;
+    cfg.galore.update_freq = 20;
+    cfg
+}
+
+#[test]
+fn engine_loads_and_executes_adam_step_artifact() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut engine = Engine::new(default_dir()).unwrap();
+    // adam_step_64x64: inputs w, m, v, g, t, lr.
+    let n = 64 * 64;
+    let w = vec![1.0f32; n];
+    let zeros = vec![0.0f32; n];
+    let g = vec![0.5f32; n];
+    let outs = engine
+        .execute(
+            "adam_step_64x64",
+            &[
+                Input::F32(&w),
+                Input::F32(&zeros),
+                Input::F32(&zeros),
+                Input::F32(&g),
+                Input::F32(&[1.0]),
+                Input::F32(&[0.1]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+    // t=1 from zero state: update = sign(g) => w' = 1 - 0.1.
+    for &v in &outs[0].data {
+        assert!((v - 0.9).abs() < 1e-3, "{v}");
+    }
+}
+
+#[test]
+fn galore_step_artifact_matches_rust_oracle() {
+    if !artifacts_ready() {
+        return;
+    }
+    use galore::rng::Rng;
+    let mut engine = Engine::new(default_dir()).unwrap();
+    let (m, n, r) = (64usize, 64usize, 16usize);
+    let mut rng = Rng::new(0);
+    let w = Matrix::randn(m, n, 1.0, &mut rng);
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    // Orthonormal projector from the Rust SVD.
+    let p = galore::linalg::top_r_left_subspace(&g, r, &mut rng);
+    let mm = Matrix::zeros(r, n);
+    let vv = Matrix::zeros(r, n);
+    let outs = engine
+        .execute(
+            "galore_step_64x64_r16",
+            &[
+                Input::F32(&w.data),
+                Input::F32(&mm.data),
+                Input::F32(&vv.data),
+                Input::F32(&g.data),
+                Input::F32(&p.data),
+                Input::F32(&[1.0]),
+                Input::F32(&[0.0025]),
+            ],
+        )
+        .unwrap();
+    // Rust-side oracle: R = P^T G; adam t=1 => N = sign(R); dW = la * P N.
+    let r_mat = galore::tensor::matmul_at_b(&p, &g);
+    let n_mat = r_mat.map(|x| x / (x.abs() + 1e-8));
+    let dw = galore::tensor::matmul(&p, &n_mat);
+    for ((got, want_w), d) in outs[0].data.iter().zip(w.data.iter()).zip(dw.data.iter()) {
+        let want = want_w - 0.0025 * d;
+        assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn train_artifact_loss_near_uniform_at_init() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = nano_cfg(MethodKind::FullRank, 3);
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    let batch = trainer.loader.next_batch();
+    let (loss, grads) = trainer.compute_grads(&batch).unwrap();
+    let uniform = (trainer.cfg.model.vocab as f32).ln();
+    assert!((loss - uniform).abs() < 1.0, "loss {loss} vs ln(V) {uniform}");
+    assert_eq!(grads.len(), trainer.params.len());
+    for (g, meta) in grads.iter().zip(trainer.params.metas.iter()) {
+        assert_eq!(g.shape(), (meta.rows, meta.cols), "{}", meta.name);
+        assert!(g.all_finite(), "{}", meta.name);
+    }
+}
+
+#[test]
+fn short_training_reduces_loss_for_every_method() {
+    if !artifacts_ready() {
+        return;
+    }
+    for method in [
+        MethodKind::FullRank,
+        MethodKind::GaLore,
+        MethodKind::GaLore8bit,
+        MethodKind::Adam8bit,
+        MethodKind::Lora,
+        MethodKind::LowRank,
+    ] {
+        let cfg = nano_cfg(method, 25);
+        let mut trainer = Trainer::from_config(cfg).unwrap();
+        let first = trainer.train_step().unwrap();
+        for _ in 1..25 {
+            trainer.train_step().unwrap();
+        }
+        let last = trainer.metrics.tail_loss(5).unwrap();
+        assert!(
+            last < first - 0.1,
+            "{method:?}: loss did not fall ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn fused_galore_path_matches_rust_path_loosely() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Same seed, same data: the fused (HLO/Pallas) and Rust GaLore-Adam
+    // paths should produce closely tracking loss curves. They are not
+    // bit-identical (different SVD sketches), so compare final losses.
+    let run = |fused: bool| -> f32 {
+        let cfg = nano_cfg(MethodKind::GaLore, 20);
+        let mut trainer = Trainer::from_config(cfg).unwrap();
+        if fused {
+            trainer.enable_fused_galore().unwrap();
+            assert!(trainer.is_fused());
+        }
+        for _ in 0..20 {
+            trainer.train_step().unwrap();
+        }
+        trainer.metrics.tail_loss(5).unwrap()
+    };
+    let rust_loss = run(false);
+    let fused_loss = run(true);
+    assert!(
+        (rust_loss - fused_loss).abs() < 0.35,
+        "rust {rust_loss} vs fused {fused_loss}"
+    );
+}
+
+#[test]
+fn layerwise_mode_trains_and_shrinks_peak_grad_memory() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut dense_cfg = nano_cfg(MethodKind::Adam8bit, 6);
+    dense_cfg.layerwise = false;
+    let mut lw_cfg = nano_cfg(MethodKind::Adam8bit, 6);
+    lw_cfg.layerwise = true;
+    let mut dense = Trainer::from_config(dense_cfg).unwrap();
+    let mut lw = Trainer::from_config(lw_cfg).unwrap();
+    for _ in 0..6 {
+        dense.train_step().unwrap();
+        lw.train_step().unwrap();
+    }
+    assert!(lw.peak_grad_bytes * 2 < dense.peak_grad_bytes);
+    // Identical data/seed => identical losses regardless of update order
+    // bookkeeping (the updates themselves are the same).
+    let dl = dense.metrics.tail_loss(3).unwrap();
+    let ll = lw.metrics.tail_loss(3).unwrap();
+    assert!((dl - ll).abs() < 1e-4, "{dl} vs {ll}");
+}
+
+#[test]
+fn optimizer_state_memory_matches_formulas() {
+    if !artifacts_ready() {
+        return;
+    }
+    use galore::memory::formulas;
+    let cfg = nano_cfg(MethodKind::GaLore, 3);
+    let rank = cfg.galore.rank as u64;
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    for _ in 0..3 {
+        trainer.train_step().unwrap();
+    }
+    // Expected: targeted params use the GaLore formula; the rest are
+    // full-rank Adam (2mn).
+    let mut want = 0u64;
+    for meta in &trainer.params.metas {
+        let (m, n) = (meta.rows as u64, meta.cols as u64);
+        if meta.is_projection_target() {
+            want += formulas::galore(m, n, rank.min(m).min(n)).optim_states;
+        } else {
+            want += 2 * m * n;
+        }
+    }
+    assert_eq!(trainer.optimizer_state_bytes() as u64, 4 * want);
+}
+
+#[test]
+fn eval_artifact_agrees_with_train_loss() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = nano_cfg(MethodKind::FullRank, 2);
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    let eval = trainer.eval(2).unwrap();
+    let uniform = (trainer.cfg.model.vocab as f32).ln();
+    assert!((eval - uniform).abs() < 1.0, "eval {eval}");
+}
+
+#[test]
+fn checkpoint_roundtrip_through_training() {
+    if !artifacts_ready() {
+        return;
+    }
+    use galore::coordinator::checkpoint;
+    let cfg = nano_cfg(MethodKind::FullRank, 4);
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    for _ in 0..4 {
+        trainer.train_step().unwrap();
+    }
+    let path = std::env::temp_dir().join("galore_it_ckpt/nano.ckpt");
+    checkpoint::save(&path, &trainer.params, 4).unwrap();
+    let (restored, step) = checkpoint::load(&path, trainer.cfg.model).unwrap();
+    assert_eq!(step, 4);
+    for (a, b) in trainer.params.tensors.iter().zip(restored.tensors.iter()) {
+        assert_eq!(a.data, b.data);
+    }
+}
+
+#[test]
+fn gradient_accumulation_matches_larger_effective_batch() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Accumulated microbatches must (a) consume more tokens per step and
+    // (b) still train. (Exact equality with a bigger batch is impossible
+    // here — the artifact's batch dim is static — so we check semantics.)
+    let cfg = nano_cfg(MethodKind::GaLore, 6);
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    let first = trainer.train_step_accum(4).unwrap();
+    assert_eq!(trainer.metrics.records[0].tokens, 4 * 8 * 64);
+    for _ in 1..6 {
+        trainer.train_step_accum(4).unwrap();
+    }
+    let last = trainer.metrics.tail_loss(2).unwrap();
+    assert!(last < first, "accum training did not descend: {first} -> {last}");
+}
+
+#[test]
+fn quantized_projector_trains_with_smaller_state() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg_q = nano_cfg(MethodKind::GaLore, 12);
+    cfg_q.galore.quantize_projector = true;
+    let cfg_f = nano_cfg(MethodKind::GaLore, 12);
+    let mut tq = Trainer::from_config(cfg_q).unwrap();
+    let mut tf = Trainer::from_config(cfg_f).unwrap();
+    for _ in 0..12 {
+        tq.train_step().unwrap();
+        tf.train_step().unwrap();
+    }
+    assert!(tq.optimizer_state_bytes() < tf.optimizer_state_bytes());
+    let lq = tq.metrics.tail_loss(3).unwrap();
+    let lf = tf.metrics.tail_loss(3).unwrap();
+    assert!((lq - lf).abs() < 0.3, "q8 projector diverged: {lq} vs {lf}");
+}
+
+#[test]
+fn data_parallel_two_workers_trains() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = nano_cfg(MethodKind::GaLore, 8);
+    cfg.dp_workers = 2;
+    let res = galore::coordinator::train_data_parallel(&cfg).unwrap();
+    let uniform = (cfg.model.vocab as f32).ln();
+    assert!(res.final_train_loss < uniform, "{}", res.final_train_loss);
+    assert!(res.final_eval_loss.is_finite());
+}
+
+#[test]
+fn dataloader_feeds_artifact_shapes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let model = ModelConfig::by_name("nano").unwrap();
+    let mut dl = DataLoader::synthetic(SyntheticCorpus::new(model.vocab, 0), 8, model.seq);
+    let b = dl.next_batch();
+    let engine = Engine::new(default_dir()).unwrap();
+    let meta = engine.manifest.train_for("nano").unwrap();
+    let tok_shape = &meta.inputs[meta.inputs.len() - 2];
+    assert_eq!(b.tokens.len(), tok_shape.iter().product::<usize>());
+}
