@@ -4,13 +4,30 @@
 //! 8-bit quantization, ring all-reduce).
 
 use galore::bench::{bench, report};
-use galore::coordinator::Ring;
-use galore::linalg::top_r_left_subspace;
+use galore::coordinator::{thread_alloc_stats, Ring};
+use galore::linalg::{top_r_left_subspace, top_r_left_subspace_into, SvdWorkspace};
 use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer, Projector};
 use galore::quant::{dequantize, quantize, DynQuantBuf};
 use galore::rng::Rng;
 use galore::runtime::{default_dir, Engine, Input};
 use galore::tensor::{matmul, matmul_at_b, Matrix};
+
+/// Measure allocator traffic of `steps` repetitions of `f` on this thread
+/// (the workspace refactor's acceptance metric: steady-state optimizer
+/// steps must report 0 — EXPERIMENTS.md §Perf).
+fn report_allocs(name: &str, steps: u64, mut f: impl FnMut()) {
+    let s0 = thread_alloc_stats();
+    for _ in 0..steps {
+        f();
+    }
+    let s1 = thread_alloc_stats();
+    println!(
+        "{:<44} {:>12} allocs/step  {:>10} bytes/step",
+        name,
+        (s1.allocs - s0.allocs) / steps,
+        (s1.bytes - s0.bytes) / steps,
+    );
+}
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
@@ -30,6 +47,14 @@ fn main() -> anyhow::Result<()> {
     report(&bench("projector refresh SVD 512x1376 r128", || {
         let mut r = Rng::new(1);
         std::hint::black_box(top_r_left_subspace(&g, 128, &mut r));
+    }));
+    let mut svd_ws = SvdWorkspace::new();
+    let mut basis_buf = Matrix::zeros(0, 0);
+    top_r_left_subspace_into(&g, 128, &mut Rng::new(1), &mut svd_ws, &mut basis_buf); // warm
+    report(&bench("projector refresh SVD (workspace reuse)", || {
+        let mut r = Rng::new(1);
+        top_r_left_subspace_into(&g, 128, &mut r, &mut svd_ws, &mut basis_buf);
+        std::hint::black_box(&basis_buf);
     }));
     let p = top_r_left_subspace(&g, 128, &mut rng);
     report(&bench("project P^T G 512x1376 r128", || {
@@ -66,6 +91,33 @@ fn main() -> anyhow::Result<()> {
         let c = proj.project(&grad);
         std::hint::black_box(proj.project_back(&c));
     }));
+
+    // Steady-state allocator traffic (workspace refactor acceptance): at
+    // this 512x1376 size the matmuls cross the threading threshold, so the
+    // counted allocations are the scoped-thread spawns, not optimizer
+    // buffers. The sub-threshold shape isolates the optimizer itself and
+    // must report 0 allocs/step.
+    println!("\n== steady-state allocator traffic ==");
+    report_allocs("full-rank Adam step allocs (512x1376)", 50, || {
+        adam.step(0, &mut w, &grad, 1e-4);
+    });
+    report_allocs("GaLore-Adam step allocs (512x1376, threaded)", 50, || {
+        gal.step(0, &mut w, &grad, 1e-4);
+    });
+    {
+        let mut w_s = Matrix::randn(128, 344, 0.02, &mut rng);
+        let grad_s = Matrix::randn(128, 344, 0.02, &mut rng);
+        let mut gal_s = GaLore::new(
+            GaLoreConfig { rank: 32, update_freq: 10_000, scale: 0.25, ..Default::default() },
+            Adam::new(AdamConfig::default()),
+        );
+        for _ in 0..3 {
+            gal_s.step(0, &mut w_s, &grad_s, 1e-4); // warm workspaces
+        }
+        report_allocs("GaLore-Adam step allocs (128x344, 1 thread)", 200, || {
+            gal_s.step(0, &mut w_s, &grad_s, 1e-4);
+        });
+    }
 
     println!("\n== ring all-reduce (4 workers, 1M f32) ==");
     report(&bench("ring all_reduce 4x1M", || {

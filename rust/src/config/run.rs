@@ -106,6 +106,26 @@ impl RunConfig {
         }
     }
 
+    /// Reject configs that would fault at step time instead of panicking
+    /// deep inside the optimizer (e.g. `update_freq == 0` divides by zero
+    /// in `GaLore::step`). Called by `from_toml`, the CLI launcher, and
+    /// `Trainer::new`.
+    pub fn validate(&self) -> Result<(), String> {
+        self.galore.validate()?;
+        if self.lowrank_rank == 0 {
+            return Err("lowrank rank must be >= 1".into());
+        }
+        if self.relora_merge_every == 0 {
+            return Err(
+                "relora merge_every must be >= 1 (0 would divide by zero in ReLora::step)".into(),
+            );
+        }
+        if self.dp_workers == 0 {
+            return Err("dp_workers must be >= 1".into());
+        }
+        Ok(())
+    }
+
     /// Parse from a TOML-subset document (CLI overrides applied by main).
     pub fn from_toml(doc: &TomlDoc) -> Result<RunConfig, String> {
         let model_name = doc.get("", "model").ok_or("missing 'model'")?;
@@ -154,6 +174,7 @@ impl RunConfig {
         if let Some(v) = doc.get_parse("lowrank", "merge_every") {
             cfg.relora_merge_every = v;
         }
+        cfg.validate()?;
         Ok(cfg)
     }
 
@@ -193,6 +214,36 @@ mod tests {
         assert!(cfg.layerwise);
         assert_eq!(cfg.galore.rank, 8);
         assert_eq!(cfg.train_artifact(), "train_nano_b8");
+    }
+
+    #[test]
+    fn validate_rejects_zero_update_freq() {
+        let mut cfg = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        assert!(cfg.validate().is_ok());
+        cfg.galore.update_freq = 0;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("update_freq"), "{err}");
+    }
+
+    #[test]
+    fn from_toml_rejects_zero_update_freq() {
+        let doc = TomlDoc::parse("model = \"nano\"\n[galore]\nupdate_freq = 0\n").unwrap();
+        let err = RunConfig::from_toml(&doc).unwrap_err();
+        assert!(err.contains("update_freq"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_knobs() {
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        let mut c = base.clone();
+        c.galore.rank = 0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.relora_merge_every = 0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.dp_workers = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -6,8 +6,15 @@
 //! Tall gradients (m > n) are handled by transposition on entry/exit, so a
 //! model needs artifacts only for its short-side-first shapes — exactly
 //! what `aot.py` lowers (§4.2: only the short side is projected).
+//!
+//! Host-side staging (transposes, weight copies) runs through per-layer
+//! reusable buffers and the shared SVD workspace, so the Rust side of a
+//! fused step performs no steady-state allocations; the remaining
+//! allocator traffic is the PJRT literal marshalling inside `execute`
+//! (EXPERIMENTS.md §Perf).
 
 use crate::config::RunConfig;
+use crate::linalg::{top_r_left_subspace_into, SvdWorkspace};
 use crate::model::ParamStore;
 use crate::rng::Rng;
 use crate::runtime::{Engine, Input};
@@ -16,10 +23,15 @@ use anyhow::{bail, Result};
 use std::collections::{HashMap, HashSet};
 
 struct LayerState {
-    m: Matrix,       // (r, n) compact first moment
-    v: Matrix,       // (r, n) compact second moment
-    p: Matrix,       // (m, r) projector
+    m: Matrix, // (r, n) compact first moment
+    v: Matrix, // (r, n) compact second moment
+    p: Matrix, // (m, r) projector
     t: u64,
+    /// Reusable staging for Gᵀ / Wᵀ / W' on transposed (tall) layers and
+    /// for the short-side gradient copy. Working memory, excluded from
+    /// `state_bytes`.
+    g_short: Matrix,
+    w_short: Matrix,
 }
 
 pub struct FusedGaLore {
@@ -28,6 +40,7 @@ pub struct FusedGaLore {
     scale: f32,
     handled: HashSet<usize>,
     states: HashMap<usize, LayerState>,
+    svd_ws: SvdWorkspace,
     rng: Rng,
 }
 
@@ -63,6 +76,7 @@ impl FusedGaLore {
             scale: cfg.galore.scale,
             handled,
             states: HashMap::new(),
+            svd_ws: SvdWorkspace::new(),
             rng: Rng::new(cfg.seed ^ 0xF05ED),
         })
     }
@@ -90,53 +104,60 @@ impl FusedGaLore {
         let transposed = grad.rows > grad.cols;
         let (gm, gn) = short_side_first(grad.rows, grad.cols);
         let r = self.rank.min(gm);
+        let state = self.states.entry(idx).or_insert_with(|| LayerState {
+            m: Matrix::zeros(r, gn),
+            v: Matrix::zeros(r, gn),
+            p: Matrix::zeros(0, 0),
+            t: 0,
+            g_short: Matrix::zeros(0, 0),
+            w_short: Matrix::zeros(0, 0),
+        });
         // Refresh the projector every T steps (Rust randomized SVD keeps
         // the refresh off the per-step path; an artifact-based refresh is
-        // available via `proj_refresh_*` for benchmarking).
-        let needs_refresh = match self.states.get(&idx) {
-            None => true,
-            Some(s) => s.t % self.update_freq == 0,
-        };
-        let g_short = if transposed { grad.transpose() } else { grad.clone() };
-        if needs_refresh {
-            let p = crate::linalg::top_r_left_subspace(&g_short, r, &mut self.rng);
-            match self.states.get_mut(&idx) {
-                Some(s) => s.p = p,
-                None => {
-                    self.states.insert(
-                        idx,
-                        LayerState {
-                            m: Matrix::zeros(r, gn),
-                            v: Matrix::zeros(r, gn),
-                            p,
-                            t: 0,
-                        },
-                    );
-                }
-            }
-        }
-        let artifact = format!("galore_step_{gm}x{gn}_r{r}");
-        let state = self.states.get_mut(&idx).unwrap();
+        // available via `proj_refresh_*` for benchmarking). t == 0 right
+        // after creation, so the first step always refreshes.
+        let needs_refresh = state.t % self.update_freq == 0;
         state.t += 1;
-        let w_short = if transposed { w.transpose() } else { w.clone() };
+        if transposed {
+            grad.transpose_into(&mut state.g_short);
+        }
+        if needs_refresh {
+            let g_src = if transposed { &state.g_short } else { grad };
+            top_r_left_subspace_into(g_src, r, &mut self.rng, &mut self.svd_ws, &mut state.p);
+        }
+        let g_data: &[f32] = if transposed { &state.g_short.data } else { &grad.data };
+        let w_data: &[f32] = if transposed {
+            w.transpose_into(&mut state.w_short);
+            &state.w_short.data
+        } else {
+            &w.data
+        };
+        let artifact = format!("galore_step_{gm}x{gn}_r{r}");
         let t_in = [state.t as f32];
         let la_in = [lr * self.scale];
         let outputs = engine.execute(
             &artifact,
             &[
-                Input::F32(&w_short.data),
+                Input::F32(w_data),
                 Input::F32(&state.m.data),
                 Input::F32(&state.v.data),
-                Input::F32(&g_short.data),
+                Input::F32(g_data),
                 Input::F32(&state.p.data),
                 Input::F32(&t_in),
                 Input::F32(&la_in),
             ],
         )?;
-        let w_new = Matrix::from_vec(gm, gn, outputs[0].data.clone());
-        state.m = Matrix::from_vec(r, gn, outputs[1].data.clone());
-        state.v = Matrix::from_vec(r, gn, outputs[2].data.clone());
-        *w = if transposed { w_new.transpose() } else { w_new };
+        if transposed {
+            // Stage W' short-side-first, then transpose back into the
+            // original (tall) weight layout.
+            state.w_short.resize(gm, gn);
+            state.w_short.data.copy_from_slice(&outputs[0].data);
+            state.w_short.transpose_into(w);
+        } else {
+            w.data.copy_from_slice(&outputs[0].data);
+        }
+        state.m.data.copy_from_slice(&outputs[1].data);
+        state.v.data.copy_from_slice(&outputs[2].data);
         Ok(())
     }
 }

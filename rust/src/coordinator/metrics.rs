@@ -1,10 +1,79 @@
-//! Training metrics: loss/perplexity tracking, tokens/s throughput, and a
+//! Training metrics: loss/perplexity tracking, tokens/s throughput, a
 //! CSV sink under `runs/` consumed by EXPERIMENTS.md and the figure
-//! benches.
+//! benches — and the **allocation counter** behind the hot-path
+//! zero-allocation contract (EXPERIMENTS.md §Perf).
+//!
+//! The crate installs a counting global allocator (thread-local tallies
+//! over the system allocator — a pair of TLS adds per allocation, cheap
+//! enough to leave on everywhere). [`thread_alloc_stats`] snapshots the
+//! current thread's counters; the trainer differences snapshots around the
+//! optimizer-update phase to surface a steady-state `allocs_per_step` /
+//! `alloc_bytes_per_step`, and the counting-allocator tests pin the
+//! "zero allocations after warmup" acceptance criterion.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::io::Write;
 use std::path::PathBuf;
 use std::time::Instant;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static THREAD_ALLOC_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator wrapper that tallies allocations per thread.
+/// Deallocations are not counted — the hot-path contract is about
+/// allocator *traffic*, and a steady-state loop that frees must also have
+/// allocated.
+pub struct CountingAllocator;
+
+fn record(bytes: usize) {
+    // `try_with` so late allocations during thread teardown never panic.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    let _ = THREAD_ALLOC_BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL_ALLOCATOR: CountingAllocator = CountingAllocator;
+
+/// Snapshot of the current thread's allocation counters since thread
+/// start. Difference two snapshots to measure a region.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    pub allocs: u64,
+    pub bytes: u64,
+}
+
+/// Current thread's allocation tallies (monotone counters; does not
+/// allocate).
+pub fn thread_alloc_stats() -> AllocStats {
+    AllocStats {
+        allocs: THREAD_ALLOCS.with(|c| c.get()),
+        bytes: THREAD_ALLOC_BYTES.with(|c| c.get()),
+    }
+}
 
 /// One logged training step.
 #[derive(Clone, Copy, Debug)]
@@ -23,6 +92,11 @@ pub struct Metrics {
     /// Wall time spent inside artifact execution (for coordinator-overhead
     /// accounting in §Perf).
     pub exec_time: std::time::Duration,
+    /// Heap allocations performed by the most recent optimizer-update
+    /// phase (steady-state target: 0 — EXPERIMENTS.md §Perf).
+    pub last_step_allocs: u64,
+    /// Bytes requested by those allocations.
+    pub last_step_alloc_bytes: u64,
 }
 
 impl Default for Metrics {
@@ -39,12 +113,27 @@ impl Metrics {
             started: Instant::now(),
             total_tokens: 0,
             exec_time: std::time::Duration::ZERO,
+            last_step_allocs: 0,
+            last_step_alloc_bytes: 0,
         }
     }
 
     pub fn log_step(&mut self, step: usize, loss: f32, lr: f32, tokens: usize) {
         self.records.push(StepRecord { step, loss, lr, tokens });
         self.total_tokens += tokens as u64;
+    }
+
+    /// Record the allocator traffic of one optimizer-update phase
+    /// (difference of two [`thread_alloc_stats`] snapshots).
+    pub fn log_step_allocs(&mut self, allocs: u64, bytes: u64) {
+        self.last_step_allocs = allocs;
+        self.last_step_alloc_bytes = bytes;
+    }
+
+    /// Allocations in the most recent optimizer-update phase (0 once the
+    /// workspaces are warm).
+    pub fn allocs_per_step(&self) -> u64 {
+        self.last_step_allocs
     }
 
     pub fn log_eval(&mut self, step: usize, loss: f32) {
@@ -119,6 +208,34 @@ mod tests {
     fn perplexity_is_exp_loss() {
         assert!((Metrics::perplexity(0.0) - 1.0).abs() < 1e-6);
         assert!((Metrics::perplexity(2.0) - 7.389).abs() < 0.01);
+    }
+
+    #[test]
+    fn alloc_counter_sees_allocations_and_silence() {
+        let s0 = thread_alloc_stats();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        let s1 = thread_alloc_stats();
+        assert!(s1.allocs > s0.allocs, "allocation not counted");
+        assert!(s1.bytes >= s0.bytes + 1024 * 8, "bytes under-counted");
+        drop(v);
+        // Pure arithmetic must not move the counters.
+        let s2 = thread_alloc_stats();
+        let mut acc = 0u64;
+        for i in 0..1000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        let s3 = thread_alloc_stats();
+        assert_eq!(s2.allocs, s3.allocs, "arithmetic-only region allocated");
+    }
+
+    #[test]
+    fn step_alloc_metric_roundtrip() {
+        let mut m = Metrics::new();
+        assert_eq!(m.allocs_per_step(), 0);
+        m.log_step_allocs(5, 1234);
+        assert_eq!(m.allocs_per_step(), 5);
+        assert_eq!(m.last_step_alloc_bytes, 1234);
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod parallel;
 pub mod schedule;
 pub mod trainer;
 
-pub use metrics::Metrics;
+pub use metrics::{thread_alloc_stats, AllocStats, Metrics};
 pub use parallel::{train_data_parallel, DpResult, Ring, RingHandle};
 pub use schedule::LrSchedule;
 pub use trainer::{build_optimizer, Trainer};

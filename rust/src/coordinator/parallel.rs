@@ -138,15 +138,23 @@ pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
                 let mut trainer = Trainer::new(cfg.clone(), engine, loader)?;
                 for step in 0..cfg.steps {
                     let batch = trainer.loader.next_batch();
-                    let (loss, mut grads) = trainer.compute_grads(&batch)?;
-                    // Flatten-reduce each gradient through the ring.
-                    for g in grads.iter_mut() {
+                    // Gradients land in the trainer's persistent buffers
+                    // and are ring-reduced in place — no per-step clones.
+                    let loss = trainer.compute_grads_into(&batch)?;
+                    for g in trainer.grad_bufs.iter_mut() {
                         handle.all_reduce_mean(&mut g.data);
                     }
                     let mut loss_buf = [loss];
                     handle.all_reduce_mean(&mut loss_buf);
                     let lr = trainer.schedule.at(step);
-                    trainer.apply_updates(grads, lr);
+                    let a0 = crate::coordinator::metrics::thread_alloc_stats();
+                    let bufs = std::mem::take(&mut trainer.grad_bufs);
+                    trainer.apply_updates(&bufs, lr);
+                    trainer.grad_bufs = bufs;
+                    let a1 = crate::coordinator::metrics::thread_alloc_stats();
+                    trainer
+                        .metrics
+                        .log_step_allocs(a1.allocs - a0.allocs, a1.bytes - a0.bytes);
                     trainer.metrics.log_step(step, loss_buf[0], lr, batch.n_tokens());
                     trainer.step += 1;
                 }

@@ -3,19 +3,21 @@
 //! paper's full method roster.
 
 use super::fused::FusedGaLore;
-use super::metrics::Metrics;
+use super::metrics::{thread_alloc_stats, Metrics};
 use super::schedule::LrSchedule;
 use crate::config::{MethodKind, RunConfig};
 use crate::data::{Batch, DataLoader, SyntheticCorpus};
 use crate::lowrank::{Factorized, Lora, LoraConfig, ReLora};
-use crate::model::{init_params, ParamStore};
+use crate::model::{init_params, ParamMeta, ParamStore};
 use crate::optim::{Adafactor, Adam, Adam8bit, GaLore, Optimizer};
-use crate::runtime::{default_dir, Engine, Input};
+use crate::runtime::{default_dir, Engine, Input, Output};
 use crate::tensor::Matrix;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 /// Build the optimizer for a run. `targets` are the schema indices of the
-/// attention/FFN projections (§5.1's low-rank target set).
+/// attention/FFN projections (§5.1's low-rank target set). Stochastic
+/// optimizer internals (projector sketches, adaptor inits) are seeded from
+/// `cfg.seed` so runs are reproducible end to end.
 pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Box<dyn Optimizer> {
     let t = targets.iter().copied();
     match cfg.method {
@@ -23,22 +25,50 @@ pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Box<dyn Optimizer>
         MethodKind::AdamW => Box::new(Adam::adamw(cfg.weight_decay.max(0.01))),
         MethodKind::Adam8bit => Box::new(Adam8bit::new()),
         MethodKind::Adafactor => Box::new(Adafactor::new()),
-        MethodKind::GaLore => Box::new(GaLore::new(cfg.galore, Adam::default_paper()).with_targets(t)),
-        MethodKind::GaLore8bit => Box::new(GaLore::new(cfg.galore, Adam8bit::new()).with_targets(t)),
-        MethodKind::GaLoreAdafactor => {
-            Box::new(GaLore::new(cfg.galore, Adafactor::new()).with_targets(t))
-        }
+        MethodKind::GaLore => Box::new(
+            GaLore::new(cfg.galore, Adam::default_paper())
+                .with_targets(t)
+                .with_seed(cfg.seed),
+        ),
+        MethodKind::GaLore8bit => Box::new(
+            GaLore::new(cfg.galore, Adam8bit::new()).with_targets(t).with_seed(cfg.seed),
+        ),
+        MethodKind::GaLoreAdafactor => Box::new(
+            GaLore::new(cfg.galore, Adafactor::new()).with_targets(t).with_seed(cfg.seed),
+        ),
         MethodKind::Lora => Box::new(
-            Lora::new(LoraConfig { rank: cfg.lowrank_rank, alpha: 32.0 }).with_targets(t),
+            Lora::new(LoraConfig { rank: cfg.lowrank_rank, alpha: 32.0 })
+                .with_targets(t)
+                .with_seed(cfg.seed),
         ),
         MethodKind::ReLora => Box::new(
             ReLora::new(
                 LoraConfig { rank: cfg.lowrank_rank, alpha: 32.0 },
                 cfg.relora_merge_every,
             )
-            .with_targets(t),
+            .with_targets(t)
+            .with_seed(cfg.seed),
         ),
-        MethodKind::LowRank => Box::new(Factorized::new(cfg.lowrank_rank).with_targets(t)),
+        MethodKind::LowRank => {
+            Box::new(Factorized::new(cfg.lowrank_rank).with_targets(t).with_seed(cfg.seed))
+        }
+    }
+}
+
+/// Copy artifact outputs into persistent gradient buffers, allocating the
+/// buffers only on first use (thereafter a plain memcpy per tensor —
+/// EXPERIMENTS.md §Perf).
+fn stage_grads(outputs: &[Output], metas: &[ParamMeta], bufs: &mut Vec<Matrix>) {
+    debug_assert_eq!(outputs.len(), metas.len());
+    if bufs.is_empty() {
+        for (o, meta) in outputs.iter().zip(metas.iter()) {
+            bufs.push(Matrix::from_vec(meta.rows, meta.cols, o.data.clone()));
+        }
+        return;
+    }
+    for (b, o) in bufs.iter_mut().zip(outputs.iter()) {
+        debug_assert_eq!(b.len(), o.data.len());
+        b.data.copy_from_slice(&o.data);
     }
 }
 
@@ -57,11 +87,18 @@ pub struct Trainer {
     /// Optional fused HLO hot path for GaLore-Adam (uses the Pallas-kernel
     /// artifacts instead of the Rust-side optimizer).
     fused: Option<FusedGaLore>,
+    /// Persistent gradient buffers, reused across `compute_grads` calls
+    /// (schema order). Working memory; the §4.3 peak-gradient *accounting*
+    /// still models layerwise consumption via `peak_grad_bytes`.
+    pub(crate) grad_bufs: Vec<Matrix>,
+    /// Staging buffers for gradient accumulation (microbatch > 1 only).
+    mb_bufs: Vec<Matrix>,
 }
 
 impl Trainer {
     /// Assemble a trainer from a run config, a ready Engine and a loader.
     pub fn new(cfg: RunConfig, engine: Engine, loader: DataLoader) -> Result<Trainer> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
         let params = init_params(cfg.model, cfg.seed);
         let targets = params.projection_targets();
         let opt = build_optimizer(&cfg, &targets);
@@ -77,6 +114,8 @@ impl Trainer {
             step: 0,
             peak_grad_bytes: 0,
             fused: None,
+            grad_bufs: Vec::new(),
+            mb_bufs: Vec::new(),
         })
     }
 
@@ -106,9 +145,15 @@ impl Trainer {
         self.fused.is_some()
     }
 
-    /// Execute the training artifact on a batch: (loss, grads in schema
-    /// order).
-    pub fn compute_grads(&mut self, batch: &Batch) -> Result<(f32, Vec<Matrix>)> {
+    /// Execute the training artifact on a batch, staging gradients into the
+    /// trainer's persistent buffers (schema order, no per-step `Matrix`
+    /// allocation). Returns the batch loss; read gradients from
+    /// `grad_bufs` / [`Trainer::apply_updates`].
+    pub fn compute_grads_into(&mut self, batch: &Batch) -> Result<f32> {
+        self.compute_grads_to(batch, false)
+    }
+
+    fn compute_grads_to(&mut self, batch: &Batch, staging: bool) -> Result<f32> {
         let artifact = self.cfg.train_artifact();
         let mut inputs: Vec<Input> = Vec::with_capacity(self.params.len() + 2);
         for t in &self.params.tensors {
@@ -123,27 +168,38 @@ impl Trainer {
             .with_context(|| format!("executing {artifact}"))?;
         self.metrics.exec_time += t0.elapsed();
         let loss = outputs[0].scalar();
-        let grads: Vec<Matrix> = outputs[1..]
-            .iter()
-            .zip(self.params.metas.iter())
-            .map(|(o, meta)| Matrix::from_vec(meta.rows, meta.cols, o.data.clone()))
-            .collect();
-        Ok((loss, grads))
+        let bufs = if staging { &mut self.mb_bufs } else { &mut self.grad_bufs };
+        stage_grads(&outputs[1..], &self.params.metas, bufs);
+        Ok(loss)
+    }
+
+    /// Execute the training artifact on a batch: (loss, grads in schema
+    /// order). Allocating convenience wrapper over
+    /// [`Trainer::compute_grads_into`] — the training loop itself uses the
+    /// buffer path.
+    pub fn compute_grads(&mut self, batch: &Batch) -> Result<(f32, Vec<Matrix>)> {
+        let loss = self.compute_grads_to(batch, false)?;
+        Ok((loss, self.grad_bufs.clone()))
     }
 
     /// Apply optimizer updates. Under §4.3 layerwise mode each gradient is
-    /// consumed and dropped immediately (peak grad memory = one layer);
+    /// modeled as consumed immediately (peak grad accounting = one layer);
     /// otherwise all gradients are held until every update has been applied
-    /// (the conventional "optimizer.step() after backward" pattern).
-    pub fn apply_updates(&mut self, grads: Vec<Matrix>, lr: f32) {
+    /// (the conventional "optimizer.step() after backward" pattern). The
+    /// gradient buffers themselves are persistent workspace either way —
+    /// note the *actual* resident peak has always been all-layers on this
+    /// substrate (the training artifact returns every gradient at once;
+    /// the seed also materialized the full set before dropping layer by
+    /// layer), so `peak_grad_bytes` is the accelerator-memory *model* of
+    /// layerwise backprop, not a measurement of host RSS.
+    pub fn apply_updates(&mut self, grads: &[Matrix], lr: f32) {
         let total_bytes: usize = grads.iter().map(|g| 4 * g.len()).sum();
         if self.cfg.layerwise {
             let mut peak_single = 0usize;
             // Reverse schema order ≈ backprop arrival order.
-            for (idx, grad) in grads.into_iter().enumerate().rev() {
+            for (idx, grad) in grads.iter().enumerate().rev() {
                 peak_single = peak_single.max(4 * grad.len());
-                self.update_one(idx, &grad, lr);
-                drop(grad); // freed before the next layer's update
+                self.update_one(idx, grad, lr);
             }
             self.peak_grad_bytes = self.peak_grad_bytes.max(peak_single);
         } else {
@@ -174,35 +230,43 @@ impl Trainer {
     /// One optimizer step over `microbatches` accumulated gradient
     /// computations (token batch = microbatches × batch × seq, the way the
     /// paper reaches its 131K-token batches on fixed-shape artifacts).
+    /// Gradients accumulate into the persistent buffers — no per-step
+    /// `Matrix` allocation — and the optimizer-update phase is wrapped in
+    /// allocation-counter snapshots that feed `metrics.allocs_per_step()`.
     pub fn train_step_accum(&mut self, microbatches: usize) -> Result<f32> {
         assert!(microbatches >= 1);
-        let mut acc: Option<Vec<Matrix>> = None;
         let mut loss_sum = 0.0f64;
         let mut tokens = 0usize;
-        for _ in 0..microbatches {
+        for mb in 0..microbatches {
             let batch = self.loader.next_batch();
             tokens += batch.n_tokens();
-            let (loss, grads) = self.compute_grads(&batch)?;
+            // First microbatch lands in grad_bufs; the rest stage into
+            // mb_bufs and are added on.
+            let staging = mb > 0;
+            let loss = self.compute_grads_to(&batch, staging)?;
             loss_sum += loss as f64;
-            match &mut acc {
-                None => acc = Some(grads),
-                Some(acc) => {
-                    for (a, g) in acc.iter_mut().zip(grads.iter()) {
-                        a.add_assign(g);
-                    }
+            if staging {
+                for (a, g) in self.grad_bufs.iter_mut().zip(self.mb_bufs.iter()) {
+                    a.add_assign(g);
                 }
             }
         }
-        let mut grads = acc.unwrap();
         if microbatches > 1 {
             let inv = 1.0 / microbatches as f32;
-            for g in grads.iter_mut() {
+            for g in self.grad_bufs.iter_mut() {
                 g.scale(inv);
             }
         }
         let loss = (loss_sum / microbatches as f64) as f32;
         let lr = self.schedule.at(self.step);
-        self.apply_updates(grads, lr);
+        let a0 = thread_alloc_stats();
+        // `mem::take` detaches the buffers (no allocation) so the borrow
+        // checker allows `&mut self` dispatch while reading them.
+        let bufs = std::mem::take(&mut self.grad_bufs);
+        self.apply_updates(&bufs, lr);
+        self.grad_bufs = bufs;
+        let a1 = thread_alloc_stats();
+        self.metrics.log_step_allocs(a1.allocs - a0.allocs, a1.bytes - a0.bytes);
         self.metrics.log_step(self.step, loss, lr, tokens);
         self.step += 1;
         Ok(loss)

@@ -18,5 +18,8 @@
 mod qr;
 mod svd;
 
-pub use qr::{qr, QrFactors};
-pub use svd::{eigh_jacobi, randomized_svd, reconstruct, stable_rank, svd_jacobi, top_r_left_subspace, Svd};
+pub use qr::{qr, qr_with, QrFactors, QrScratch};
+pub use svd::{
+    eigh_jacobi, randomized_svd, randomized_svd_with, reconstruct, stable_rank, svd_jacobi,
+    top_r_left_subspace, top_r_left_subspace_into, Svd, SvdWorkspace,
+};

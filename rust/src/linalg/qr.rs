@@ -1,4 +1,6 @@
-//! Householder QR factorization (thin form).
+//! Householder QR factorization (thin form), with a reusable scratch
+//! workspace so the GaLore projector refresh (randomized SVD → repeated
+//! QR re-orthonormalization) does not allocate in steady state.
 
 use crate::tensor::Matrix;
 
@@ -9,13 +11,54 @@ pub struct QrFactors {
     pub r: Matrix,
 }
 
+/// Reusable buffers for [`qr_with`]. After the first factorization of a
+/// given shape, subsequent calls perform zero heap allocations (buffers
+/// are `resize`d, which keeps capacity).
+pub struct QrScratch {
+    /// Q output, (m, k) column-orthonormal after `qr_with`.
+    pub q: Matrix,
+    /// Working copy of A; upper-triangularized in place (full m×n — the
+    /// thin R is its first k rows).
+    r_work: Matrix,
+    /// Householder vectors, reflector j stored at offset j*m, length m-j.
+    v: Vec<f32>,
+}
+
+impl QrScratch {
+    pub fn new() -> Self {
+        QrScratch { q: Matrix::zeros(0, 0), r_work: Matrix::zeros(0, 0), v: Vec::new() }
+    }
+}
+
+impl Default for QrScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Thin Householder QR of an (m, n) matrix.
 pub fn qr(a: &Matrix) -> QrFactors {
+    let mut ws = QrScratch::new();
+    qr_with(a, &mut ws);
     let (m, n) = a.shape();
     let k = m.min(n);
-    let mut r = a.clone();
-    // Store the Householder vectors in-place below the diagonal, betas aside.
-    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut r_thin = Matrix::zeros(k, n);
+    for i in 0..k {
+        r_thin.row_mut(i).copy_from_slice(&ws.r_work.row(i)[..n]);
+    }
+    QrFactors { q: ws.q, r: r_thin }
+}
+
+/// Thin Householder QR into a workspace: leaves Q in `ws.q` and the
+/// (non-thin) triangularized working matrix in `ws.r_work`. Identical
+/// arithmetic to [`qr`] — same reflectors, same accumulation order — so
+/// results are bit-for-bit equal.
+pub fn qr_with(a: &Matrix, ws: &mut QrScratch) {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    ws.r_work.copy_from(a);
+    let r = &mut ws.r_work;
+    ws.v.resize(k * m, 0.0);
     for j in 0..k {
         // Build the Householder vector for column j from rows j..m.
         let mut norm2 = 0.0f64;
@@ -26,7 +69,8 @@ pub fn qr(a: &Matrix) -> QrFactors {
         let norm = norm2.sqrt() as f32;
         let x0 = r.at(j, j);
         let alpha = if x0 >= 0.0 { -norm } else { norm };
-        let mut v = vec![0.0f32; m - j];
+        let v = &mut ws.v[j * m..j * m + (m - j)];
+        v.fill(0.0);
         if norm > 0.0 {
             v[0] = x0 - alpha;
             for i in (j + 1)..m {
@@ -46,22 +90,23 @@ pub fn qr(a: &Matrix) -> QrFactors {
                     }
                 }
             } else {
-                v = vec![0.0; m - j];
+                v.fill(0.0);
             }
         }
-        vs.push(v);
         // Zero out below-diagonal explicitly (numerical noise).
         for i in (j + 1)..m {
             *r.at_mut(i, j) = 0.0;
         }
     }
     // Accumulate Q = H_0 H_1 ... H_{k-1} applied to the first k columns of I.
-    let mut q = Matrix::zeros(m, k);
+    let q = &mut ws.q;
+    q.resize(m, k);
+    q.data.fill(0.0);
     for j in 0..k {
         *q.at_mut(j, j) = 1.0;
     }
     for jh in (0..k).rev() {
-        let v = &vs[jh];
+        let v = &ws.v[jh * m..jh * m + (m - jh)];
         let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
         if vnorm2 <= 1e-30 {
             continue;
@@ -77,14 +122,6 @@ pub fn qr(a: &Matrix) -> QrFactors {
             }
         }
     }
-    let r_thin = {
-        let mut rt = Matrix::zeros(k, n);
-        for i in 0..k {
-            rt.row_mut(i).copy_from_slice(&r.row(i)[..n]);
-        }
-        rt
-    };
-    QrFactors { q, r: r_thin }
 }
 
 #[cfg(test)]
@@ -143,5 +180,19 @@ mod tests {
         }
         let QrFactors { q, r } = qr(&a);
         assert_close(&matmul(&q, &r), &a, 1e-4);
+    }
+
+    #[test]
+    fn reused_scratch_matches_fresh_factorization() {
+        // The same QrScratch cycled through different shapes must produce
+        // bit-identical Q to a fresh qr() call each time.
+        let mut rng = Rng::new(4);
+        let mut ws = QrScratch::new();
+        for &(m, n) in &[(12, 5), (7, 7), (5, 9), (30, 4), (12, 5)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            qr_with(&a, &mut ws);
+            let fresh = qr(&a);
+            assert_eq!(ws.q.data, fresh.q.data, "shape {m}x{n}");
+        }
     }
 }

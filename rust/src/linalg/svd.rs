@@ -1,9 +1,9 @@
 //! Singular value decomposition: one-sided Jacobi (small/accurate) and
 //! randomized truncated SVD (the production projector refresh).
 
-use super::qr::qr;
+use super::qr::{qr_with, QrScratch};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_at_b, Matrix};
+use crate::tensor::{matmul, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into, Matrix};
 
 /// Thin SVD result: `a ≈ u @ diag(s) @ vt` with `u` (m, k), `s` (k),
 /// `vt` (k, n), singular values descending.
@@ -97,12 +97,54 @@ pub fn svd_jacobi(a: &Matrix) -> Svd {
 }
 
 /// Symmetric Jacobi eigendecomposition of a small k×k PSD matrix.
-/// Returns (eigenvalues desc, eigenvectors as columns).
+/// Returns (eigenvalues desc, eigenvectors as columns). Allocating wrapper
+/// over [`eigh_jacobi_with`].
 pub fn eigh_jacobi(m_in: &Matrix) -> (Vec<f32>, Matrix) {
+    let mut scratch = EighScratch::new();
+    let mut evals = Vec::new();
+    let mut evecs = Matrix::zeros(0, 0);
+    eigh_jacobi_with(m_in, &mut scratch, &mut evals, &mut evecs);
+    (evals, evecs)
+}
+
+/// Reusable working set for the small projected eigensolve.
+struct EighScratch {
+    a: Matrix,
+    v: Matrix,
+    diag: Vec<f32>,
+    order: Vec<usize>,
+}
+
+impl EighScratch {
+    fn new() -> Self {
+        EighScratch {
+            a: Matrix::zeros(0, 0),
+            v: Matrix::zeros(0, 0),
+            diag: Vec::new(),
+            order: Vec::new(),
+        }
+    }
+}
+
+/// As [`eigh_jacobi`], with every buffer caller-provided: zero heap
+/// allocations once `scratch`/`evals`/`evecs` have warmed up on the shape
+/// (`sort_unstable` keeps the ordering pass allocation-free too).
+fn eigh_jacobi_with(
+    m_in: &Matrix,
+    scratch: &mut EighScratch,
+    evals: &mut Vec<f32>,
+    evecs: &mut Matrix,
+) {
     let k = m_in.rows;
     assert_eq!(m_in.rows, m_in.cols, "eigh needs a square matrix");
-    let mut a = m_in.clone();
-    let mut v = Matrix::eye(k);
+    scratch.a.copy_from(m_in);
+    let a = &mut scratch.a;
+    let v = &mut scratch.v;
+    v.resize(k, k);
+    v.data.fill(0.0);
+    for i in 0..k {
+        *v.at_mut(i, i) = 1.0;
+    }
     for _sweep in 0..40 {
         let mut off = 0.0f64;
         for p in 0..k.saturating_sub(1) {
@@ -144,54 +186,132 @@ pub fn eigh_jacobi(m_in: &Matrix) -> (Vec<f32>, Matrix) {
             break;
         }
     }
-    let mut order: Vec<usize> = (0..k).collect();
-    let diag: Vec<f32> = (0..k).map(|i| a.at(i, i)).collect();
-    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
-    let evals: Vec<f32> = order.iter().map(|&i| diag[i].max(0.0)).collect();
-    let mut evecs = Matrix::zeros(k, k);
+    let order = &mut scratch.order;
+    order.clear();
+    order.extend(0..k);
+    let diag = &mut scratch.diag;
+    diag.clear();
+    diag.extend((0..k).map(|i| a.at(i, i)));
+    order.sort_unstable_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    evals.clear();
+    evals.extend(order.iter().map(|&i| diag[i].max(0.0)));
+    evecs.resize(k, k);
     for (new_j, &old_j) in order.iter().enumerate() {
         for i in 0..k {
             *evecs.at_mut(i, new_j) = v.at(i, old_j);
         }
     }
-    (evals, evecs)
+}
+
+/// Reusable buffers for the randomized SVD: the Gaussian sketch, the
+/// power-iteration range, the projected problem, and the QR scratch. A
+/// workspace cycled through the same gradient shapes stops allocating
+/// after the first refresh of each shape (EXPERIMENTS.md §Perf), so the
+/// periodic GaLore subspace refresh no longer churns the allocator.
+pub struct SvdWorkspace {
+    omega: Matrix,     // (n, k) Gaussian sketch
+    y: Matrix,         // (m, k) range sample A·Ω / A·Z
+    z: Matrix,         // (n, k) power-iteration staging AᵀQ
+    b: Matrix,         // (k, n) projected problem QᵀA
+    bbt: Matrix,       // (k, k) Gram matrix B·Bᵀ
+    evals: Vec<f32>,   // eigenvalues of B·Bᵀ, descending
+    evecs: Matrix,     // (k, k) eigenvectors of B·Bᵀ
+    e_r: Matrix,       // (k, r_eff) leading eigenvectors
+    eigh: EighScratch, // k×k eigensolve working set
+    qr: QrScratch,
+}
+
+impl SvdWorkspace {
+    pub fn new() -> Self {
+        SvdWorkspace {
+            omega: Matrix::zeros(0, 0),
+            y: Matrix::zeros(0, 0),
+            z: Matrix::zeros(0, 0),
+            b: Matrix::zeros(0, 0),
+            bbt: Matrix::zeros(0, 0),
+            evals: Vec::new(),
+            evecs: Matrix::zeros(0, 0),
+            e_r: Matrix::zeros(0, 0),
+            eigh: EighScratch::new(),
+            qr: QrScratch::new(),
+        }
+    }
+}
+
+impl Default for SvdWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Range finder + projected problem against the workspace: leaves Q in
+/// `ws.qr.q`, B = QᵀA in `ws.b`, and the eigendecomposition of B·Bᵀ in
+/// `ws.evals` / `ws.evecs`. Zero heap allocations once `ws` is warm on the
+/// shape.
+fn projected_eigh(a: &Matrix, k: usize, power_iters: usize, rng: &mut Rng, ws: &mut SvdWorkspace) {
+    let n = a.cols;
+    // Sketch the range: Y = A Omega, Omega (n, k) Gaussian.
+    ws.omega.resize(n, k);
+    rng.fill_normal(&mut ws.omega.data, 1.0);
+    matmul_into(a, &ws.omega, &mut ws.y);
+    qr_with(&ws.y, &mut ws.qr);
+    for _ in 0..power_iters {
+        // Power iteration with re-orthonormalization: Q <- qr(A (A^T Q)).
+        matmul_at_b_into(a, &ws.qr.q, &mut ws.z); // (n, k)
+        matmul_into(a, &ws.z, &mut ws.y); // (m, k)
+        qr_with(&ws.y, &mut ws.qr);
+    }
+    // Small projected problem: B = Q^T A (k, n); eigendecompose B B^T (k, k).
+    matmul_at_b_into(&ws.qr.q, a, &mut ws.b);
+    matmul_a_bt_into(&ws.b, &ws.b, &mut ws.bbt);
+    let SvdWorkspace { bbt, eigh, evals, evecs, .. } = ws;
+    eigh_jacobi_with(bbt, eigh, evals, evecs);
+}
+
+/// Copy the leading `r_eff` eigenvector columns from `ws.evecs` into
+/// `ws.e_r`.
+fn stage_e_r(r_eff: usize, ws: &mut SvdWorkspace) {
+    let SvdWorkspace { evecs, e_r, .. } = ws;
+    let k = evecs.rows;
+    e_r.resize(k, r_eff);
+    for i in 0..k {
+        e_r.row_mut(i).copy_from_slice(&evecs.row(i)[..r_eff]);
+    }
 }
 
 /// Randomized truncated SVD (Halko–Martinsson–Tropp): returns the top-`r`
 /// factors of `a` using `power_iters` subspace iterations and oversampling
-/// (clamped to the matrix size).
+/// (clamped to the matrix size). Thin wrapper over [`randomized_svd_with`]
+/// with a throwaway workspace.
 ///
 /// §Perf note: the projected problem is solved via a k×k symmetric Jacobi
 /// eigendecomposition of B·Bᵀ (B = QᵀA) rather than a one-sided Jacobi SVD
 /// of the k×n matrix B — that single change took the 512×1376 r=128
 /// projector refresh from 12 s to the low tens of milliseconds.
 pub fn randomized_svd(a: &Matrix, r: usize, power_iters: usize, rng: &mut Rng) -> Svd {
+    randomized_svd_with(a, r, power_iters, rng, &mut SvdWorkspace::new())
+}
+
+/// As [`randomized_svd`], but sketch/power-iteration buffers come from the
+/// caller's workspace; only the returned factors are freshly allocated.
+/// Bit-for-bit identical to [`randomized_svd`] for the same RNG state.
+pub fn randomized_svd_with(
+    a: &Matrix,
+    r: usize,
+    power_iters: usize,
+    rng: &mut Rng,
+    ws: &mut SvdWorkspace,
+) -> Svd {
     let (m, n) = a.shape();
     let k = (r + 8).min(m).min(n); // oversample by up to 8
-    // Sketch the range: Y = A Omega, Omega (n, k) Gaussian.
-    let omega = Matrix::randn(n, k, 1.0, rng);
-    let mut y = matmul(a, &omega);
-    let mut q = qr(&y).q;
-    for _ in 0..power_iters {
-        // Power iteration with re-orthonormalization: Q <- qr(A (A^T Q)).
-        let z = matmul_at_b(a, &q); // (n, k)
-        y = matmul(a, &z); // (m, k)
-        q = qr(&y).q;
-    }
-    // Small projected problem: B = Q^T A (k, n); eigendecompose B B^T (k, k).
-    let b = matmul_at_b(&q, a);
-    let bbt = {
-        // (k, k) = B @ B^T — rows of B dotted together.
-        crate::tensor::matmul_a_bt(&b, &b)
-    };
-    let (evals, evecs) = eigh_jacobi(&bbt);
+    projected_eigh(a, k, power_iters, rng, ws);
     let r_eff = r.min(k);
-    let s: Vec<f32> = evals[..r_eff].iter().map(|&e| e.sqrt()).collect();
+    let s: Vec<f32> = ws.evals[..r_eff].iter().map(|&e| e.sqrt()).collect();
+    stage_e_r(r_eff, ws);
     // U = Q @ E_r.
-    let e_r = evecs.slice_cols(0, r_eff);
-    let u = matmul(&q, &e_r);
+    let u = matmul(&ws.qr.q, &ws.e_r);
     // Vt = diag(1/s) E_r^T B.
-    let mut vt = matmul_at_b(&e_r, &b);
+    let mut vt = matmul_at_b(&ws.e_r, &ws.b);
     for (i, &sv) in s.iter().enumerate() {
         let inv = if sv > 1e-20 { 1.0 / sv } else { 0.0 };
         for x in vt.row_mut(i) {
@@ -207,6 +327,24 @@ pub fn randomized_svd(a: &Matrix, r: usize, power_iters: usize, rng: &mut Rng) -
 /// short side is projected).
 pub fn top_r_left_subspace(g: &Matrix, r: usize, rng: &mut Rng) -> Matrix {
     randomized_svd(g, r, 2, rng).u
+}
+
+/// As [`top_r_left_subspace`], but writes the basis into `out` and draws
+/// every intermediate buffer from `ws` — the steady-state refresh path of
+/// the GaLore optimizer (zero allocations once `ws` and `out` are warm).
+pub fn top_r_left_subspace_into(
+    g: &Matrix,
+    r: usize,
+    rng: &mut Rng,
+    ws: &mut SvdWorkspace,
+    out: &mut Matrix,
+) {
+    let (m, n) = g.shape();
+    let k = (r + 8).min(m).min(n);
+    projected_eigh(g, k, 2, rng, ws);
+    let r_eff = r.min(k);
+    stage_e_r(r_eff, ws);
+    matmul_into(&ws.qr.q, &ws.e_r, out);
 }
 
 /// Stable rank ||A||_F^2 / ||A||_2^2 (used by the Lemma 3.3 experiment).
@@ -246,6 +384,7 @@ pub fn reconstruct(svd: &Svd) -> Matrix {
 
 #[cfg(test)]
 mod tests {
+    use super::super::qr::qr;
     use super::*;
     use crate::tensor::matmul_a_bt;
 
@@ -331,6 +470,33 @@ mod tests {
                 let expect = if i == j { 1.0 } else { 0.0 };
                 assert!((ptp.at(i, j) - expect).abs() < 1e-3);
             }
+        }
+    }
+
+    #[test]
+    fn workspace_svd_matches_fresh_svd_bitwise() {
+        // Same RNG stream, same input: the workspace path must be
+        // bit-identical to the allocating path, across shape changes that
+        // exercise buffer reuse.
+        let mut ws = SvdWorkspace::new();
+        for (i, &(m, n, r)) in [(40usize, 30usize, 4usize), (24, 64, 6), (40, 30, 4)]
+            .iter()
+            .enumerate()
+        {
+            let mut rng = Rng::new(100 + i as u64);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut rng_a = Rng::new(7);
+            let mut rng_b = Rng::new(7);
+            let fresh = randomized_svd(&a, r, 2, &mut rng_a);
+            let reused = randomized_svd_with(&a, r, 2, &mut rng_b, &mut ws);
+            assert_eq!(fresh.u.data, reused.u.data, "{m}x{n} r{r}");
+            assert_eq!(fresh.s, reused.s);
+            assert_eq!(fresh.vt.data, reused.vt.data);
+
+            let mut out = Matrix::zeros(0, 0);
+            let mut rng_c = Rng::new(7);
+            top_r_left_subspace_into(&a, r, &mut rng_c, &mut ws, &mut out);
+            assert_eq!(out.data, fresh.u.data);
         }
     }
 

@@ -6,7 +6,7 @@
 use super::FactorState;
 use crate::optim::{Adam, AdamConfig, Optimizer};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_at_b, matmul_a_bt, Matrix};
+use crate::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix};
 use std::collections::{HashMap, HashSet};
 
 struct Factors {
@@ -14,6 +14,9 @@ struct Factors {
     a: Matrix, // (r, n)
     opt_b: FactorState,
     opt_a: FactorState,
+    /// Reusable factor-gradient buffers (working memory).
+    gb: Matrix,
+    ga: Matrix,
 }
 
 pub struct Factorized {
@@ -45,6 +48,12 @@ impl Factorized {
         self
     }
 
+    /// Seed the factor-init RNG from the run seed (reproducible runs).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.rng = Rng::new(seed ^ 0xFAC7);
+        self
+    }
+
     fn is_target(&self, param: usize, grad: &Matrix) -> bool {
         if self.explicit_targets {
             return self.targets.contains(&param);
@@ -70,13 +79,15 @@ impl Optimizer for Factorized {
                 a: Matrix::randn(r, n, 1.0 / (r as f32).sqrt(), rng),
                 opt_b: FactorState::new(m, r),
                 opt_a: FactorState::new(r, n),
+                gb: Matrix::zeros(0, 0),
+                ga: Matrix::zeros(0, 0),
             }
         });
-        let gb = matmul_a_bt(grad, &f.a);
-        let ga = matmul_at_b(&f.b, grad);
-        f.opt_b.adam_step(&mut f.b, &gb, lr, &self.adam_cfg);
-        f.opt_a.adam_step(&mut f.a, &ga, lr, &self.adam_cfg);
-        *w = matmul(&f.b, &f.a);
+        matmul_a_bt_into(grad, &f.a, &mut f.gb);
+        matmul_at_b_into(&f.b, grad, &mut f.ga);
+        f.opt_b.adam_step(&mut f.b, &f.gb, lr, &self.adam_cfg);
+        f.opt_a.adam_step(&mut f.a, &f.ga, lr, &self.adam_cfg);
+        matmul_into(&f.b, &f.a, w);
     }
 
     fn state_bytes(&self) -> usize {
@@ -102,6 +113,7 @@ impl Optimizer for Factorized {
 mod tests {
     use super::*;
     use crate::linalg::svd_jacobi;
+    use crate::tensor::matmul;
 
     #[test]
     fn weight_is_always_rank_r() {

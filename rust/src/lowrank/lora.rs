@@ -3,7 +3,7 @@
 use super::FactorState;
 use crate::optim::{Adam, AdamConfig, Optimizer};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_at_b, matmul_a_bt, Matrix};
+use crate::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix};
 use std::collections::{HashMap, HashSet};
 
 #[derive(Clone, Copy, Debug)]
@@ -31,6 +31,10 @@ pub(crate) struct AdaptorState {
     pub a: Matrix, // (r, n), gaussian-init
     pub opt_b: FactorState,
     pub opt_a: FactorState,
+    /// Reusable factor-gradient buffers (working memory, excluded from the
+    /// Table 1 state accounting).
+    gb: Matrix,
+    ga: Matrix,
 }
 
 impl AdaptorState {
@@ -43,26 +47,37 @@ impl AdaptorState {
             a: Matrix::randn(r, n, 1.0 / (r as f32).sqrt(), rng),
             opt_b: FactorState::new(m, r),
             opt_a: FactorState::new(r, n),
+            gb: Matrix::zeros(0, 0),
+            ga: Matrix::zeros(0, 0),
         }
     }
 
-    /// Effective weight W₀ + s·BA.
+    /// Effective weight W₀ + s·BA (allocating wrapper over
+    /// [`AdaptorState::materialize_into`]; merges and tests only).
     pub fn materialize(&self, scale: f32) -> Matrix {
-        let mut ba = matmul(&self.b, &self.a);
-        ba.scale(scale);
-        ba.add_assign(&self.w0);
-        ba
+        let mut out = Matrix::zeros(0, 0);
+        self.materialize_into(scale, &mut out);
+        out
+    }
+
+    /// Write W₀ + s·BA into `out` — the per-step path, allocation-free
+    /// once `out` is warm (trainers pass the live weight buffer).
+    pub fn materialize_into(&self, scale: f32, out: &mut Matrix) {
+        matmul_into(&self.b, &self.a, out);
+        out.scale(scale);
+        out.add_assign(&self.w0);
     }
 
     /// Chain rule + Adam updates for both factors given the full-weight
-    /// gradient G: ∂L/∂B = s·G Aᵀ, ∂L/∂A = s·Bᵀ G.
+    /// gradient G: ∂L/∂B = s·G Aᵀ, ∂L/∂A = s·Bᵀ G. Allocation-free once
+    /// the factor-gradient buffers are warm.
     pub fn update_factors(&mut self, grad: &Matrix, lr: f32, scale: f32, cfg: &AdamConfig) {
-        let mut gb = matmul_a_bt(grad, &self.a);
-        gb.scale(scale);
-        let mut ga = matmul_at_b(&self.b, grad);
-        ga.scale(scale);
-        self.opt_b.adam_step(&mut self.b, &gb, lr, cfg);
-        self.opt_a.adam_step(&mut self.a, &ga, lr, cfg);
+        matmul_a_bt_into(grad, &self.a, &mut self.gb);
+        self.gb.scale(scale);
+        matmul_at_b_into(&self.b, grad, &mut self.ga);
+        self.ga.scale(scale);
+        self.opt_b.adam_step(&mut self.b, &self.gb, lr, cfg);
+        self.opt_a.adam_step(&mut self.a, &self.ga, lr, cfg);
     }
 
     pub fn state_bytes(&self) -> usize {
@@ -105,6 +120,12 @@ impl Lora {
         self
     }
 
+    /// Seed the adaptor-init RNG from the run seed (reproducible runs).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.rng = Rng::new(seed ^ 0x10A4);
+        self
+    }
+
     fn is_target(&self, param: usize, grad: &Matrix) -> bool {
         if self.explicit_targets {
             return self.targets.contains(&param);
@@ -132,7 +153,7 @@ impl Optimizer for Lora {
             .entry(param)
             .or_insert_with(|| AdaptorState::new(w, rank, rng));
         ad.update_factors(grad, lr, scale, &self.adam_cfg);
-        *w = ad.materialize(scale);
+        ad.materialize_into(scale, w);
     }
 
     fn state_bytes(&self) -> usize {
@@ -153,6 +174,7 @@ impl Optimizer for Lora {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::matmul;
 
     #[test]
     fn weight_stays_w0_plus_low_rank() {

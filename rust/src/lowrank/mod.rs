@@ -28,19 +28,34 @@ use crate::tensor::Matrix;
 pub(crate) struct FactorState {
     pub m: Matrix,
     pub v: Matrix,
+    /// Reusable normalized-update buffer (working memory, excluded from
+    /// `nbytes` — Table 1 counts moments only).
+    upd: Matrix,
     pub t: u64,
 }
 
 impl FactorState {
     pub fn new(rows: usize, cols: usize) -> Self {
-        FactorState { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols), t: 0 }
+        FactorState {
+            m: Matrix::zeros(rows, cols),
+            v: Matrix::zeros(rows, cols),
+            upd: Matrix::zeros(0, 0),
+            t: 0,
+        }
     }
 
-    /// One Adam update on `w` given `grad`.
+    /// One Adam update on `w` given `grad` — allocation-free once warm.
     pub fn adam_step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32, cfg: &AdamConfig) {
         self.t += 1;
-        let n = crate::optim::Adam::normalized_update(&mut self.m, &mut self.v, grad, self.t, cfg);
-        w.axpy(-lr, &n);
+        crate::optim::Adam::normalized_update_into(
+            &mut self.m,
+            &mut self.v,
+            grad,
+            self.t,
+            cfg,
+            &mut self.upd,
+        );
+        w.axpy(-lr, &self.upd);
     }
 
     pub fn nbytes(&self) -> usize {

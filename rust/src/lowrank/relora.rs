@@ -41,6 +41,12 @@ impl ReLora {
         self
     }
 
+    /// Seed the adaptor-init RNG from the run seed (reproducible runs).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.rng = Rng::new(seed ^ 0x4E10A4);
+        self
+    }
+
     fn is_target(&self, param: usize, grad: &Matrix) -> bool {
         if self.explicit_targets {
             return self.targets.contains(&param);
@@ -71,7 +77,7 @@ impl Optimizer for ReLora {
         }
         let ad = self.adaptors.get_mut(&param).unwrap();
         ad.update_factors(grad, lr, scale, &self.adam_cfg);
-        *w = ad.materialize(scale);
+        ad.materialize_into(scale, w);
     }
 
     fn state_bytes(&self) -> usize {

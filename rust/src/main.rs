@@ -104,6 +104,9 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     if cli.has("layerwise") {
         cfg.layerwise = true;
     }
+    // CLI overrides can reintroduce degenerate values (e.g. --update-freq
+    // 0) after from_toml validated; re-check the final config.
+    cfg.validate().map_err(|e| anyhow!(e))?;
     Ok(cfg)
 }
 

@@ -31,6 +31,10 @@ impl AdamConfig {
 struct State {
     m: Matrix,
     v: Matrix,
+    /// Reusable buffer for the normalized update — working memory, not
+    /// optimizer state (excluded from `state_bytes`, like the transient
+    /// the allocating path used to create each step).
+    upd: Matrix,
     t: u64,
 }
 
@@ -58,20 +62,44 @@ impl Adam {
 
     /// Expose the bias-corrected update direction for one grad without
     /// touching the weight (used by GaLore's compact-space path and tests).
-    pub fn normalized_update(state_m: &mut Matrix, state_v: &mut Matrix, g: &Matrix, t: u64, cfg: &AdamConfig) -> Matrix {
+    /// Allocating wrapper over [`Adam::normalized_update_into`].
+    pub fn normalized_update(
+        state_m: &mut Matrix,
+        state_v: &mut Matrix,
+        g: &Matrix,
+        t: u64,
+        cfg: &AdamConfig,
+    ) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        Self::normalized_update_into(state_m, state_v, g, t, cfg, &mut out);
+        out
+    }
+
+    /// As [`Adam::normalized_update`], writing the direction into a
+    /// caller-provided buffer — the allocation-free hot path
+    /// (EXPERIMENTS.md §Perf). Same arithmetic, bit-for-bit.
+    pub fn normalized_update_into(
+        state_m: &mut Matrix,
+        state_v: &mut Matrix,
+        g: &Matrix,
+        t: u64,
+        cfg: &AdamConfig,
+        out: &mut Matrix,
+    ) {
         debug_assert_eq!(state_m.shape(), g.shape());
         let (b1, b2) = (cfg.beta1, cfg.beta2);
         state_m.zip_inplace(g, |m, gi| b1 * m + (1.0 - b1) * gi);
         state_v.zip_inplace(g, |v, gi| b2 * v + (1.0 - b2) * gi * gi);
         let bc1 = bias_correction(b1, t);
         let bc2 = bias_correction(b2, t);
-        let mut n = state_m.clone();
-        for (nv, &vv) in n.data.iter_mut().zip(state_v.data.iter()) {
-            let m_hat = *nv / bc1;
+        out.resize(g.rows, g.cols);
+        for ((nv, &mv), &vv) in
+            out.data.iter_mut().zip(state_m.data.iter()).zip(state_v.data.iter())
+        {
+            let m_hat = mv / bc1;
             let v_hat = vv / bc2;
             *nv = m_hat / (v_hat.sqrt() + cfg.eps);
         }
-        n
     }
 }
 
@@ -80,15 +108,23 @@ impl Optimizer for Adam {
         let state = self.states.entry(param).or_insert_with(|| State {
             m: Matrix::zeros(grad.rows, grad.cols),
             v: Matrix::zeros(grad.rows, grad.cols),
+            upd: Matrix::zeros(grad.rows, grad.cols),
             t: 0,
         });
         state.t += 1;
-        let n = Adam::normalized_update(&mut state.m, &mut state.v, grad, state.t, &self.cfg);
+        Adam::normalized_update_into(
+            &mut state.m,
+            &mut state.v,
+            grad,
+            state.t,
+            &self.cfg,
+            &mut state.upd,
+        );
         if self.decoupled {
             let wd = self.cfg.weight_decay;
             w.map_inplace(|x| x * (1.0 - lr * wd));
         }
-        w.axpy(-lr, &n);
+        w.axpy(-lr, &state.upd);
     }
 
     fn state_bytes(&self) -> usize {

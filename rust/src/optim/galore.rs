@@ -13,11 +13,20 @@
 //! compact space, the inner optimizer runs there, and the normalized update
 //! is projected back and applied with scale α. Untargeted parameters
 //! (embeddings, norms, lm_head — matching §5.1) pass through at full rank.
+//!
+//! Hot-path contract (EXPERIMENTS.md §Perf): the steady-state `step` on a
+//! targeted parameter performs **zero heap allocations**. Every per-step
+//! matrix (`Pᵀ G`, the inner-optimizer scratch, `P N`) lives in a
+//! per-parameter [`Workspace`]; the basis is exposed by borrow (the Quant8
+//! store keeps a dequantized cache that is invalidated only on subspace
+//! refresh); and the periodic refresh itself runs through a shared
+//! [`SvdWorkspace`] so even the every-`T`-steps path stops allocating once
+//! warm.
 
 use super::Optimizer;
-use crate::linalg::randomized_svd;
+use crate::linalg::{randomized_svd, top_r_left_subspace_into, SvdWorkspace};
 use crate::rng::Rng;
-use crate::tensor::{matmul, matmul_at_b, matmul_a_bt, Matrix};
+use crate::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix};
 use std::collections::{HashMap, HashSet};
 
 /// Which side of the gradient is projected (§4.2: always the short one).
@@ -32,13 +41,16 @@ pub enum ProjSide {
 /// Storage for the projection basis. `Quant8` implements the paper's §7
 /// future-work item (2) — "further enhancing memory efficiency by
 /// employing low-memory projection matrices": P is held block-quantized at
-/// 1 byte/element and dequantized on use (compute traded for memory;
-/// Theorem 3.8 tolerates the perturbation since it holds for any fixed
-/// near-orthonormal P).
+/// 1 byte/element (Theorem 3.8 tolerates the perturbation since it holds
+/// for any fixed near-orthonormal P). The dequantized values are cached in
+/// `cache` so the per-step projections never re-dequantize; the cache is
+/// rebuilt only when the subspace is refreshed. `cache` is working memory
+/// (excluded from `nbytes`, like the per-call dequantized temporary the
+/// allocating path used to create).
 #[derive(Clone, Debug)]
 enum BasisStore {
     F32(Matrix),
-    Quant8 { buf: crate::quant::QuantizedBuf, rows: usize, cols: usize },
+    Quant8 { buf: crate::quant::QuantizedBuf, cache: Matrix },
 }
 
 /// The low-rank projector for one parameter.
@@ -69,24 +81,64 @@ impl Projector {
             (ProjSide::Right, randomized_svd(&grad.transpose(), r, 2, rng).u)
         };
         let store = if quantized {
-            BasisStore::Quant8 {
-                rows: basis.rows,
-                cols: basis.cols,
-                buf: crate::quant::quantize(&basis.data),
-            }
+            let buf = crate::quant::quantize(&basis.data);
+            // The cache must hold the *dequantized* values — projections
+            // see exactly what the quantized store represents.
+            let cache =
+                Matrix::from_vec(basis.rows, basis.cols, crate::quant::dequantize(&buf));
+            BasisStore::Quant8 { buf, cache }
         } else {
             BasisStore::F32(basis)
         };
         Projector { side, store, rank: r }
     }
 
-    /// Materialized basis: (m, r) for Left, (n, r) for Right.
-    pub fn basis(&self) -> Matrix {
-        match &self.store {
-            BasisStore::F32(b) => b.clone(),
-            BasisStore::Quant8 { buf, rows, cols } => {
-                Matrix::from_vec(*rows, *cols, crate::quant::dequantize(buf))
+    /// Recompute the subspace from the current gradient **in place**,
+    /// reusing the stored basis buffers and the caller's SVD workspace
+    /// (`scratch_t` stages Gᵀ for Right-side parameters). This is the
+    /// steady-state refresh path: zero allocations once everything is warm.
+    /// For the Quant8 store this is the only point where the dequantized
+    /// cache is rebuilt (cache invalidation on subspace refresh).
+    pub fn refresh_with(
+        &mut self,
+        grad: &Matrix,
+        rank: usize,
+        rng: &mut Rng,
+        ws: &mut SvdWorkspace,
+        scratch_t: &mut Matrix,
+    ) {
+        let (m, n) = grad.shape();
+        let r = rank.min(m).min(n).max(1);
+        self.rank = r;
+        self.side = if m <= n { ProjSide::Left } else { ProjSide::Right };
+        let target = match &mut self.store {
+            BasisStore::F32(b) => b,
+            BasisStore::Quant8 { cache, .. } => cache,
+        };
+        match self.side {
+            ProjSide::Left => top_r_left_subspace_into(grad, r, rng, ws, target),
+            ProjSide::Right => {
+                grad.transpose_into(scratch_t);
+                top_r_left_subspace_into(scratch_t, r, rng, ws, target);
             }
+        }
+        if let BasisStore::Quant8 { buf, cache } = &mut self.store {
+            if buf.len != cache.len() {
+                *buf = crate::quant::QuantizedBuf::zeros(cache.len());
+            }
+            crate::quant::quantize_into(&cache.data, buf);
+            // Round-trip so the cache holds what the store represents.
+            crate::quant::dequantize_into(buf, &mut cache.data);
+        }
+    }
+
+    /// The materialized basis, by borrow: (m, r) for Left, (n, r) for
+    /// Right. For the Quant8 store this is the dequantized cache — valid
+    /// until the next subspace refresh; no per-call dequantization.
+    pub fn basis(&self) -> &Matrix {
+        match &self.store {
+            BasisStore::F32(b) => b,
+            BasisStore::Quant8 { cache, .. } => cache,
         }
     }
 
@@ -94,21 +146,37 @@ impl Projector {
         matches!(self.store, BasisStore::Quant8 { .. })
     }
 
-    /// Project the full gradient into the compact space.
+    /// Project the full gradient into the compact space (allocating
+    /// wrapper over [`Projector::project_into`]).
     pub fn project(&self, grad: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        self.project_into(grad, &mut out);
+        out
+    }
+
+    /// Project into a caller-provided buffer — allocation-free once warm.
+    pub fn project_into(&self, grad: &Matrix, out: &mut Matrix) {
         let basis = self.basis();
         match self.side {
-            ProjSide::Left => matmul_at_b(&basis, grad),  // (r, n)
-            ProjSide::Right => matmul(grad, &basis),      // (m, r)
+            ProjSide::Left => matmul_at_b_into(basis, grad, out), // (r, n)
+            ProjSide::Right => matmul_into(grad, basis, out),     // (m, r)
         }
     }
 
-    /// Expand a compact update back to the full weight shape.
+    /// Expand a compact update back to the full weight shape (allocating
+    /// wrapper over [`Projector::project_back_into`]).
     pub fn project_back(&self, compact: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        self.project_back_into(compact, &mut out);
+        out
+    }
+
+    /// Expand into a caller-provided buffer — allocation-free once warm.
+    pub fn project_back_into(&self, compact: &Matrix, out: &mut Matrix) {
         let basis = self.basis();
         match self.side {
-            ProjSide::Left => matmul(&basis, compact),     // (m, n)
-            ProjSide::Right => matmul_a_bt(compact, &basis), // (m, n)
+            ProjSide::Left => matmul_into(basis, compact, out), // (m, n)
+            ProjSide::Right => matmul_a_bt_into(compact, basis, out), // (m, n)
         }
     }
 
@@ -133,19 +201,60 @@ impl Projector {
 pub struct GaLoreConfig {
     /// Subspace rank r.
     pub rank: usize,
-    /// Subspace change frequency T (§4.1; paper default 200).
+    /// Subspace change frequency T (§4.1; paper default 200). Must be >= 1
+    /// — validated by `RunConfig::validate` and asserted in `GaLore::new`.
     pub update_freq: u64,
     /// Scale factor α on the projected-back update (§4.4; paper 0.25).
     pub scale: f32,
     /// Store P 8-bit quantized (§7 future work (2): low-memory projection
-    /// matrices). Quarters the projector memory for a small extra dequant
-    /// per step.
+    /// matrices). Quarters the projector memory; dequantization happens
+    /// once per subspace refresh, not per step.
     pub quantize_projector: bool,
 }
 
 impl Default for GaLoreConfig {
     fn default() -> Self {
         GaLoreConfig { rank: 128, update_freq: 200, scale: 0.25, quantize_projector: false }
+    }
+}
+
+impl GaLoreConfig {
+    /// Reject configs that would fault at step time (`t % update_freq`
+    /// divides by zero when `update_freq == 0`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.update_freq == 0 {
+            return Err(
+                "galore.update_freq must be >= 1 (the subspace refresh period T; \
+                 0 would divide by zero in GaLore::step)"
+                    .into(),
+            );
+        }
+        if self.rank == 0 {
+            return Err("galore.rank must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Per-parameter reusable buffers for the projected step: `Pᵀ G`, the
+/// inner-optimizer scratch weight, the projected-back update, and (for
+/// tall parameters) the Gᵀ staging used by the refresh. Working memory,
+/// not optimizer state.
+struct Workspace {
+    compact_grad: Matrix,
+    scratch: Matrix,
+    full_update: Matrix,
+    grad_t: Matrix,
+}
+
+impl Workspace {
+    fn new() -> Self {
+        Workspace {
+            compact_grad: Matrix::zeros(0, 0),
+            scratch: Matrix::zeros(0, 0),
+            full_update: Matrix::zeros(0, 0),
+            grad_t: Matrix::zeros(0, 0),
+        }
     }
 }
 
@@ -160,11 +269,21 @@ pub struct GaLore<O: Optimizer> {
     explicit_targets: bool,
     projectors: HashMap<usize, Projector>,
     steps: HashMap<usize, u64>,
+    workspaces: HashMap<usize, Workspace>,
+    svd_ws: SvdWorkspace,
     rng: Rng,
 }
 
+/// Default projector-RNG seed tag; mixed with the run seed in
+/// [`GaLore::with_seed`] so refresh sketches are reproducible per run.
+const PROJECTOR_SEED_TAG: u64 = 0x6A10E;
+
 impl<O: Optimizer> GaLore<O> {
     pub fn new(cfg: GaLoreConfig, inner: O) -> Self {
+        assert!(
+            cfg.update_freq >= 1,
+            "GaLoreConfig.update_freq must be >= 1 (subspace refresh period T)"
+        );
         GaLore {
             cfg,
             inner,
@@ -172,7 +291,9 @@ impl<O: Optimizer> GaLore<O> {
             explicit_targets: false,
             projectors: HashMap::new(),
             steps: HashMap::new(),
-            rng: Rng::new(0x6A10E),
+            workspaces: HashMap::new(),
+            svd_ws: SvdWorkspace::new(),
+            rng: Rng::new(PROJECTOR_SEED_TAG),
         }
     }
 
@@ -181,6 +302,13 @@ impl<O: Optimizer> GaLore<O> {
     pub fn with_targets(mut self, targets: impl IntoIterator<Item = usize>) -> Self {
         self.targets = targets.into_iter().collect();
         self.explicit_targets = true;
+        self
+    }
+
+    /// Seed the projector-refresh RNG from the run seed (`RunConfig.seed`),
+    /// so subspace sketches — and therefore whole runs — are reproducible.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.rng = Rng::new(seed ^ PROJECTOR_SEED_TAG);
         self
     }
 
@@ -209,32 +337,46 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
             return;
         }
         let t = self.steps.entry(param).or_insert(0);
+        let needs_refresh = *t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&param);
+        *t += 1;
+        let ws = self.workspaces.entry(param).or_insert_with(Workspace::new);
         // Refresh the subspace every T steps (including step 0).
-        if *t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&param) {
-            let proj = Projector::compute_with(
-                grad,
-                self.cfg.rank,
-                &mut self.rng,
-                self.cfg.quantize_projector,
-            );
-            self.projectors.insert(param, proj);
+        if needs_refresh {
+            match self.projectors.get_mut(&param) {
+                // Steady-state refresh: reuse basis + SVD buffers in place.
+                Some(p) => p.refresh_with(
+                    grad,
+                    self.cfg.rank,
+                    &mut self.rng,
+                    &mut self.svd_ws,
+                    &mut ws.grad_t,
+                ),
+                None => {
+                    let p = Projector::compute_with(
+                        grad,
+                        self.cfg.rank,
+                        &mut self.rng,
+                        self.cfg.quantize_projector,
+                    );
+                    self.projectors.insert(param, p);
+                }
+            }
             // NOTE: like the official implementation, optimizer state is
             // *not* reset on subspace switch — the moments' coordinates are
             // reinterpreted in the new basis (§4.1 discusses the fidelity
             // trade-off).
         }
-        *t += 1;
-        let proj = &self.projectors[&param];
-        let compact_grad = proj.project(grad);
+        let proj = self.projectors.get(&param).expect("projector exists after refresh");
+        proj.project_into(grad, &mut ws.compact_grad);
         // Run the inner optimizer in the compact space against a zero
         // scratch weight with lr=1: the scratch then holds -N_t (the
         // normalized update), regardless of which optimizer it is.
-        let (cr, cc) = compact_grad.shape();
-        let mut scratch = Matrix::zeros(cr, cc);
-        self.inner.step(param, &mut scratch, &compact_grad, 1.0);
+        ws.scratch.resize(ws.compact_grad.rows, ws.compact_grad.cols);
+        ws.scratch.data.fill(0.0);
+        self.inner.step(param, &mut ws.scratch, &ws.compact_grad, 1.0);
         // scratch = -N_t  =>  W <- W - lr * α * P N_t  (Algorithm 2).
-        let full_update = proj.project_back(&scratch); // = -P N_t
-        w.axpy(lr * self.cfg.scale, &full_update);
+        proj.project_back_into(&ws.scratch, &mut ws.full_update); // = -P N_t
+        w.axpy(lr * self.cfg.scale, &ws.full_update);
     }
 
     fn state_bytes(&self) -> usize {
@@ -249,6 +391,7 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
         self.inner.reset_state();
         self.projectors.clear();
         self.steps.clear();
+        self.workspaces.clear();
     }
 }
 
@@ -256,6 +399,7 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
 mod tests {
     use super::*;
     use crate::optim::{Adam, AdamConfig};
+    use crate::tensor::{matmul, matmul_a_bt, matmul_at_b};
     use crate::testing::assert_slice_close;
 
     fn adam() -> Adam {
@@ -345,7 +489,7 @@ mod tests {
             let g = Matrix::randn(32, 48, 1.0, &mut rng.child(s));
             gal.step(0, &mut w, &g, 0.01);
         }
-        let p = gal.projector(0).unwrap().basis();
+        let p = gal.projector(0).unwrap().basis().clone();
         let mut dw = w.clone();
         dw.sub_assign(&w0);
         // Residual orthogonal to span(P) must vanish: dw - P (P^T dw) = 0.
@@ -364,7 +508,7 @@ mod tests {
         let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
         let g0 = Matrix::randn(16, 24, 1.0, &mut rng);
         gal.step(0, &mut w, &g0, 0.01);
-        let basis0 = gal.projector(0).unwrap().basis();
+        let basis0 = gal.projector(0).unwrap().basis().clone();
         for s in 1..5 {
             let g = Matrix::randn(16, 24, 1.0, &mut rng.child(s));
             gal.step(0, &mut w, &g, 0.01);
@@ -373,7 +517,7 @@ mod tests {
         }
         let g5 = Matrix::randn(16, 24, 1.0, &mut rng.child(99));
         gal.step(0, &mut w, &g5, 0.01);
-        let basis1 = gal.projector(0).unwrap().basis();
+        let basis1 = gal.projector(0).unwrap().basis().clone();
         let mut diff = basis1;
         diff.sub_assign(&basis0);
         assert!(diff.frobenius_norm() > 1e-3, "projector did not refresh");
@@ -428,6 +572,68 @@ mod tests {
         let mut d = w1.clone();
         d.sub_assign(&w2);
         assert!(d.frobenius_norm() < 0.05 * w1.frobenius_norm());
+    }
+
+    #[test]
+    fn quant8_basis_cache_invalidated_on_refresh() {
+        // The dequantized basis cache must stay bit-stable within an
+        // update window and change when the subspace refreshes.
+        let mut rng = Rng::new(21);
+        let cfg = GaLoreConfig {
+            rank: 4,
+            update_freq: 3,
+            scale: 0.25,
+            quantize_projector: true,
+        };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
+        let probe = Matrix::randn(16, 24, 1.0, &mut rng);
+        gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(0)), 0.01);
+        assert!(gal.projector(0).unwrap().is_quantized());
+        let cache0 = gal.projector(0).unwrap().basis().clone();
+        let proj0 = gal.projector(0).unwrap().project(&probe);
+        for s in 1..3 {
+            gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(s)), 0.01);
+            assert_eq!(
+                gal.projector(0).unwrap().basis().data,
+                cache0.data,
+                "cache changed inside the update window"
+            );
+        }
+        // Step 3 (t % 3 == 0) refreshes the subspace and rebuilds the cache.
+        gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(99)), 0.01);
+        let cache1 = gal.projector(0).unwrap().basis().clone();
+        let proj1 = gal.projector(0).unwrap().project(&probe);
+        let mut diff = cache1;
+        diff.sub_assign(&cache0);
+        assert!(diff.frobenius_norm() > 1e-3, "cache not invalidated on refresh");
+        let mut pdiff = proj1;
+        pdiff.sub_assign(&proj0);
+        assert!(pdiff.frobenius_norm() > 1e-3, "projected output unchanged after refresh");
+    }
+
+    #[test]
+    fn with_seed_makes_runs_reproducible() {
+        let cfg = GaLoreConfig { rank: 4, update_freq: 5, scale: 0.25, ..Default::default() };
+        let run = |seed: u64| -> Matrix {
+            let mut rng = Rng::new(33);
+            let mut gal = GaLore::new(cfg, adam()).with_seed(seed);
+            let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
+            for s in 0..12 {
+                let g = Matrix::randn(16, 24, 1.0, &mut rng.child(s));
+                gal.step(0, &mut w, &g, 0.01);
+            }
+            w
+        };
+        assert_eq!(run(7).data, run(7).data, "same seed must reproduce exactly");
+        assert_ne!(run(7).data, run(8).data, "different seeds must diverge");
+    }
+
+    #[test]
+    #[should_panic(expected = "update_freq")]
+    fn zero_update_freq_rejected_at_construction() {
+        let cfg = GaLoreConfig { update_freq: 0, ..Default::default() };
+        let _ = GaLore::new(cfg, adam());
     }
 
     #[test]

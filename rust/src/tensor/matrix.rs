@@ -85,9 +85,33 @@ impl Matrix {
         (0..self.rows).map(|i| self.at(i, j)).collect()
     }
 
+    /// Reshape in place to (rows, cols), reusing the existing allocation
+    /// whenever capacity suffices (`Vec::resize` never shrinks capacity, so
+    /// a buffer cycled through the same shapes stops allocating after the
+    /// first pass — the contract the optimizer workspaces rely on).
+    /// Existing contents are unspecified afterwards; callers overwrite.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `other`, reusing this allocation when possible.
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.resize(other.rows, other.cols);
+        self.data.copy_from_slice(&other.data);
+    }
+
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
-        // Blocked transpose for cache friendliness on large matrices.
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a caller-provided buffer (no allocation in steady
+    /// state). Blocked for cache friendliness on large matrices.
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        out.resize(self.cols, self.rows);
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
@@ -98,7 +122,6 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     // -- element-wise ------------------------------------------------------
@@ -235,6 +258,27 @@ mod tests {
         let s = m.slice_cols(1, 3);
         assert_eq!(s.shape(), (2, 2));
         assert_eq!(s.data, vec![2., 3., 6., 7.]);
+    }
+
+    #[test]
+    fn resize_reuses_capacity_and_copy_from_matches() {
+        let mut buf = Matrix::zeros(8, 8);
+        let cap = buf.data.capacity();
+        buf.resize(4, 6);
+        assert_eq!(buf.shape(), (4, 6));
+        assert_eq!(buf.data.capacity(), cap, "shrinking must keep capacity");
+        let src = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        buf.copy_from(&src);
+        assert_eq!(buf, src);
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::randn(37, 53, 1.0, &mut rng);
+        let mut out = Matrix::zeros(0, 0);
+        m.transpose_into(&mut out);
+        assert_eq!(out, m.transpose());
     }
 
     #[test]

@@ -12,4 +12,6 @@ mod matrix;
 mod ops;
 
 pub use matrix::Matrix;
-pub use ops::{matmul, matmul_at_b, matmul_a_bt};
+pub use ops::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into,
+};

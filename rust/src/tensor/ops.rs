@@ -15,18 +15,30 @@ fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
 }
 
-/// C = A @ B. (m,k) x (k,n) -> (m,n).
+/// C = A @ B. (m,k) x (k,n) -> (m,n). Thin allocating wrapper over
+/// [`matmul_into`].
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(0, 0);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B written into a caller-provided buffer. `c` is resized to
+/// (m, n); with a warmed-up buffer the call performs zero heap
+/// allocations — the contract of the optimizer hot path (EXPERIMENTS.md
+/// §Perf). Same blocked/threaded kernels as [`matmul`], so results are
+/// bit-for-bit identical.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows, "matmul: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
+    c.resize(m, n);
+    c.data.fill(0.0);
     let work = m * k * n;
     if work < PAR_THRESHOLD {
         matmul_rows(&a.data, &b.data, &mut c.data, 0, m, k, n);
     } else {
         par_rows(&a.data, &b.data, &mut c.data, m, k, n);
     }
-    c
 }
 
 /// Row-range kernel: i-k-j loop order with 4-way k unrolling — the j-loop
@@ -76,12 +88,22 @@ fn par_rows(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     });
 }
 
-/// C = A^T @ B. (k,m) x (k,n) -> (m,n). Avoids materializing A^T: loop over
-/// k rows of both A and B and accumulate rank-1 updates into C.
+/// C = A^T @ B. (k,m) x (k,n) -> (m,n). Thin allocating wrapper over
+/// [`matmul_at_b_into`].
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(0, 0);
+    matmul_at_b_into(a, b, &mut c);
+    c
+}
+
+/// C = A^T @ B written into a caller-provided buffer (resized to (m, n);
+/// allocation-free once warm). Avoids materializing A^T: loop over k rows
+/// of both A and B and accumulate rank-1 updates into C.
+pub fn matmul_at_b_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.rows, b.rows, "matmul_at_b: A^T({},{}) @ B({},{})", a.cols, a.rows, b.rows, b.cols);
     let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
+    c.resize(m, n);
+    c.data.fill(0.0);
     // Parallelize over output rows (columns of A) when large.
     let work = m * k * n;
     if work < PAR_THRESHOLD {
@@ -101,7 +123,6 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
             }
         });
     }
-    c
 }
 
 fn at_b_rows(a: &[f32], b: &[f32], c: &mut [f32], j0: usize, j1: usize, k: usize, n: usize) {
@@ -149,11 +170,21 @@ fn at_b_rows(a: &[f32], b: &[f32], c: &mut [f32], j0: usize, j1: usize, k: usize
     }
 }
 
-/// C = A @ B^T. (m,k) x (n,k) -> (m,n). Dot products of contiguous rows.
+/// C = A @ B^T. (m,k) x (n,k) -> (m,n). Thin allocating wrapper over
+/// [`matmul_a_bt_into`].
 pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(0, 0);
+    matmul_a_bt_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B^T written into a caller-provided buffer (resized to (m, n);
+/// allocation-free once warm). Dot products of contiguous rows; every
+/// output cell is assigned, so no zero-fill pass is needed.
+pub fn matmul_a_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.cols, "matmul_a_bt: A({},{}) @ B^T({},{})", a.rows, a.cols, b.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Matrix::zeros(m, n);
+    c.resize(m, n);
     let work = m * k * n;
     let kernel = |c: &mut [f32], i0: usize, i1: usize| {
         for i in i0..i1 {
@@ -183,7 +214,6 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
             }
         });
     }
-    c
 }
 
 #[cfg(test)]

@@ -1,0 +1,212 @@
+//! Hot-path properties: the `_into` kernels must match their allocating
+//! counterparts bit-for-bit, and the steady-state optimizer step must be
+//! allocation-free (the acceptance criteria of the workspace refactor —
+//! EXPERIMENTS.md §Perf). These run without artifacts.
+
+use galore::coordinator::thread_alloc_stats;
+use galore::linalg::{qr, qr_with, QrScratch};
+use galore::lowrank::{Factorized, Lora, LoraConfig};
+use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer};
+use galore::rng::Rng;
+use galore::tensor::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into, Matrix,
+};
+use galore::testing::for_all_cases;
+
+// -- _into kernels match the allocating kernels bit-for-bit ----------------
+
+#[test]
+fn prop_into_kernels_match_allocating_bitwise() {
+    // Warm buffers cycled through random rectangular shapes: every result
+    // must equal the allocating kernel exactly (same kernel, same
+    // arithmetic — the property pins the buffer-reuse plumbing).
+    let bufs = std::cell::RefCell::new((
+        Matrix::zeros(0, 0),
+        Matrix::zeros(0, 0),
+        Matrix::zeros(0, 0),
+    ));
+    for_all_cases("into kernels == allocating", |rng: &mut Rng| {
+        let m = 1 + rng.below(40);
+        let k = 1 + rng.below(40);
+        let n = 1 + rng.below(40);
+        (
+            Matrix::randn(m, k, 1.0, rng), // A (m, k)
+            Matrix::randn(k, n, 1.0, rng), // B (k, n)
+            Matrix::randn(k, m, 1.0, rng), // A' for AᵀB (k, m)
+            Matrix::randn(n, k, 1.0, rng), // B' for ABᵀ (n, k)
+        )
+    }, 48, |(a, b, at, bt)| {
+        let mut bufs = bufs.borrow_mut();
+        let (c1, c2, c3) = &mut *bufs;
+        matmul_into(a, b, c1);
+        matmul_at_b_into(at, b, c2);
+        matmul_a_bt_into(a, bt, c3);
+        c1.data == matmul(a, b).data
+            && c2.data == matmul_at_b(at, b).data
+            && c3.data == matmul_a_bt(a, bt).data
+    });
+}
+
+#[test]
+fn into_kernels_match_across_rectangular_shapes() {
+    // Deterministic sweep (tall, wide, square, degenerate, above the
+    // parallel threshold) with shared warm buffers for all three kernels.
+    let mut rng = Rng::new(0xA110C);
+    let mut c1 = Matrix::zeros(0, 0);
+    let mut c2 = Matrix::zeros(0, 0);
+    let mut c3 = Matrix::zeros(0, 0);
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (3, 5, 7),
+        (17, 13, 31),
+        (64, 32, 48),
+        (2, 100, 2),
+        (100, 2, 100),
+        (160, 120, 140), // crosses PAR_THRESHOLD: parallel path
+    ] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        matmul_into(&a, &b, &mut c1);
+        assert_eq!(c1.data, matmul(&a, &b).data, "matmul {m}x{k}x{n}");
+
+        let at = Matrix::randn(k, m, 1.0, &mut rng);
+        matmul_at_b_into(&at, &b, &mut c2);
+        assert_eq!(c2.data, matmul_at_b(&at, &b).data, "at_b {k}x{m}x{n}");
+
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        matmul_a_bt_into(&a, &bt, &mut c3);
+        assert_eq!(c3.data, matmul_a_bt(&a, &bt).data, "a_bt {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn transpose_into_and_qr_with_match_allocating() {
+    let mut rng = Rng::new(0xBEEF);
+    let mut t = Matrix::zeros(0, 0);
+    let mut ws = QrScratch::new();
+    for &(m, n) in &[(5usize, 3usize), (3, 5), (20, 20), (1, 17)] {
+        let a = Matrix::randn(m, n, 1.0, &mut rng);
+        a.transpose_into(&mut t);
+        assert_eq!(t.data, a.transpose().data);
+        qr_with(&a, &mut ws);
+        assert_eq!(ws.q.data, qr(&a).q.data, "qr {m}x{n}");
+    }
+}
+
+// -- steady-state steps are allocation-free --------------------------------
+
+/// Run `steps` pre-warmed optimizer steps and return the allocation count
+/// observed on this thread. Gradients are pre-generated so only the step
+/// itself is measured; shapes stay below the matmul parallel threshold so
+/// no worker threads are spawned.
+fn measure_step_allocs(
+    opt: &mut dyn Optimizer,
+    w: &mut Matrix,
+    grads: &[Matrix],
+    warmup: usize,
+) -> u64 {
+    for g in grads.iter().cycle().take(warmup) {
+        opt.step(0, w, g, 0.01);
+    }
+    let s0 = thread_alloc_stats();
+    for g in grads {
+        opt.step(0, w, g, 0.01);
+    }
+    let s1 = thread_alloc_stats();
+    s1.allocs - s0.allocs
+}
+
+fn grads(m: usize, n: usize, count: usize, seed: u64) -> Vec<Matrix> {
+    let mut rng = Rng::new(seed);
+    (0..count).map(|i| Matrix::randn(m, n, 1.0, &mut rng.child(i as u64))).collect()
+}
+
+#[test]
+fn galore_adam_step_is_allocation_free_after_warmup() {
+    // The tentpole acceptance criterion: steady-state GaLore<Adam>::step on
+    // a projected target performs zero heap allocations after warmup
+    // (update_freq is large so the measured window has no refresh).
+    let cfg = GaLoreConfig { rank: 8, update_freq: 1000, scale: 0.25, ..Default::default() };
+    let mut gal = GaLore::new(cfg, Adam::new(AdamConfig::default()));
+    let mut rng = Rng::new(1);
+    let mut w = Matrix::randn(48, 64, 1.0, &mut rng);
+    let gs = grads(48, 64, 6, 2);
+    let allocs = measure_step_allocs(&mut gal, &mut w, &gs, 3);
+    assert_eq!(allocs, 0, "GaLore<Adam> steady-state step allocated");
+}
+
+#[test]
+fn galore_right_side_step_is_allocation_free_after_warmup() {
+    // Tall parameter (m > n): the Right-projection path must be just as
+    // allocation-free.
+    let cfg = GaLoreConfig { rank: 8, update_freq: 1000, scale: 0.25, ..Default::default() };
+    let mut gal = GaLore::new(cfg, Adam::new(AdamConfig::default()));
+    let mut rng = Rng::new(3);
+    let mut w = Matrix::randn(64, 48, 1.0, &mut rng);
+    let gs = grads(64, 48, 6, 4);
+    let allocs = measure_step_allocs(&mut gal, &mut w, &gs, 3);
+    assert_eq!(allocs, 0, "GaLore Right-side steady-state step allocated");
+}
+
+#[test]
+fn quantized_galore_step_is_allocation_free_after_warmup() {
+    // Q-GaLore-style store: dequantization must stay off the per-step path
+    // (the cache makes each step pure matmuls into workspaces).
+    let cfg = GaLoreConfig {
+        rank: 8,
+        update_freq: 1000,
+        scale: 0.25,
+        quantize_projector: true,
+    };
+    let mut gal = GaLore::new(cfg, Adam::new(AdamConfig::default()));
+    let mut rng = Rng::new(5);
+    let mut w = Matrix::randn(48, 64, 1.0, &mut rng);
+    let gs = grads(48, 64, 6, 6);
+    let allocs = measure_step_allocs(&mut gal, &mut w, &gs, 3);
+    assert_eq!(allocs, 0, "quantized GaLore steady-state step allocated");
+}
+
+#[test]
+fn adam_step_is_allocation_free_after_warmup() {
+    let mut adam = Adam::new(AdamConfig::default());
+    let mut rng = Rng::new(7);
+    let mut w = Matrix::randn(32, 48, 1.0, &mut rng);
+    let gs = grads(32, 48, 6, 8);
+    let allocs = measure_step_allocs(&mut adam, &mut w, &gs, 2);
+    assert_eq!(allocs, 0, "Adam steady-state step allocated");
+}
+
+#[test]
+fn lowrank_steps_are_allocation_free_after_warmup() {
+    let mut rng = Rng::new(9);
+    let mut w = Matrix::randn(24, 32, 1.0, &mut rng);
+    let gs = grads(24, 32, 6, 10);
+    let mut lora = Lora::new(LoraConfig { rank: 4, alpha: 8.0 });
+    assert_eq!(
+        measure_step_allocs(&mut lora, &mut w, &gs, 2),
+        0,
+        "LoRA steady-state step allocated"
+    );
+    let mut fac = Factorized::new(4);
+    let mut w2 = Matrix::randn(24, 32, 1.0, &mut rng);
+    assert_eq!(
+        measure_step_allocs(&mut fac, &mut w2, &gs, 2),
+        0,
+        "Factorized steady-state step allocated"
+    );
+}
+
+#[test]
+fn galore_refresh_reuses_workspaces_after_first_cycle() {
+    // Even the every-T-steps refresh settles to zero allocations once the
+    // basis, SVD, and QR workspaces have warmed up on the shape.
+    let cfg = GaLoreConfig { rank: 4, update_freq: 2, scale: 0.25, ..Default::default() };
+    let mut gal = GaLore::new(cfg, Adam::new(AdamConfig::default()));
+    let mut rng = Rng::new(11);
+    let mut w = Matrix::randn(24, 32, 1.0, &mut rng);
+    let gs = grads(24, 32, 8, 12);
+    // Warmup covers the first refresh (allocating) and one in-place
+    // refresh (buffers reach steady shape).
+    let allocs = measure_step_allocs(&mut gal, &mut w, &gs, 6);
+    assert_eq!(allocs, 0, "refresh path allocated after warm-up cycle");
+}

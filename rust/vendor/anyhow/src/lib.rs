@@ -1,0 +1,142 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access (DESIGN.md §4), so this
+//! vendored crate provides the API subset the framework uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, and the [`Context`]
+//! extension trait. Errors carry a message string (context is folded in as
+//! `"context: cause"` prefixes rather than a source chain).
+
+use std::fmt;
+
+/// A string-backed error value, convertible from any `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error directly from anything displayable.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion coherent
+// (`?` works on io/xla/... errors inside `anyhow::Result` functions).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazily-computed context to an error, mirroring anyhow's trait.
+pub trait Context<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display,
+    {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let name = "artifact";
+        let e = anyhow!("missing '{name}'");
+        assert_eq!(e.to_string(), "missing 'artifact'");
+        let e = anyhow!("got {} of {}", 1, 2);
+        assert_eq!(e.to_string(), "got 1 of 2");
+        let e = anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+
+        let r: std::result::Result<(), String> = Err("cause".into());
+        let e = r.with_context(|| format!("loading {name}")).unwrap_err();
+        assert_eq!(e.to_string(), "loading artifact: cause");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+}
