@@ -1,0 +1,71 @@
+//! Adaptive-rank roster: fixed vs decay vs spectral schedules, the
+//! dynamic-int8 projector store, and the cosine lazy-refresh gate
+//! (EXPERIMENTS.md §Perf, "layer-adaptive rank"). Reports eval perplexity,
+//! measured optimizer-state bytes, and the per-layer rank spread for each
+//! run; the closed-form state envelope prints even without artifacts.
+
+use galore::bench::Table;
+use galore::coordinator::Trainer;
+use galore::exp::adaptive::{adaptive_runs, state_envelope};
+use galore::memory::fmt_gib;
+use galore::model::ModelConfig;
+
+fn main() -> anyhow::Result<()> {
+    let runs = adaptive_runs();
+    let mut table = Table::new(&["run", "eval ppl", "opt state", "ranks min..max", "allocs/step"]);
+    let mut trained = 0;
+    for run in &runs {
+        eprintln!("[adaptive] {} ({} steps)...", run.name, run.cfg.steps);
+        let mut trainer = match Trainer::from_config(run.cfg.clone()) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("[adaptive] SKIP {}: {e:#} (run `make artifacts`)", run.name);
+                continue;
+            }
+        };
+        if let Err(e) = trainer.run() {
+            eprintln!("[adaptive] SKIP {}: {e:#}", run.name);
+            continue;
+        }
+        trained += 1;
+        let eval = trainer.metrics.final_eval_loss().unwrap();
+        let profile = trainer.opt.rank_profile();
+        let (rmin, rmax) = profile
+            .iter()
+            .fold((usize::MAX, 0), |(lo, hi), &(_, r)| (lo.min(r), hi.max(r)));
+        let ranks = if profile.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{rmin}..{rmax} ({} layers)", profile.len())
+        };
+        table.row(&[
+            run.name.into(),
+            format!("{:.2}", eval.exp()),
+            fmt_gib(trainer.optimizer_state_bytes() as u64),
+            ranks,
+            format!("{}", trainer.metrics.allocs_per_step()),
+        ]);
+    }
+    if trained > 0 {
+        table.print("Adaptive-rank roster (same model/steps/seed; policy is the variable)");
+    }
+
+    // Closed-form envelope: the measured adaptive state must land between
+    // the floor and the fixed-rank bytes. Pure Rust, always available.
+    let mut env = Table::new(&["model", "rank", "floor", "fixed-rank state", "floor state"]);
+    for name in ["nano", "micro", "small", "7b"] {
+        let Some(model) = ModelConfig::by_name(name) else { continue };
+        let rank = model.dim / 4;
+        let floor = (model.dim / 16).max(1);
+        let (fixed, at_floor) = state_envelope(model, rank, floor);
+        env.row(&[
+            name.into(),
+            format!("{rank}"),
+            format!("{floor}"),
+            fmt_gib(fixed),
+            fmt_gib(at_floor),
+        ]);
+    }
+    env.print("Adaptive-rank optimizer-state envelope (closed form, BF16)");
+    Ok(())
+}

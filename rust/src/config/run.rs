@@ -1,8 +1,8 @@
 //! RunConfig: the full description of one training run.
 
 use super::TomlDoc;
-use crate::model::ModelConfig;
-use crate::optim::GaLoreConfig;
+use crate::model::{schema, ModelConfig};
+use crate::optim::{GaLoreConfig, ProjectorQuant, RankScheduleKind};
 
 /// Which training method drives the run (paper §5.1 roster).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,7 +95,13 @@ impl RunConfig {
             lr: if method.is_galore() { 0.01 } else { 0.001 },
             warmup_frac: 0.1,
             final_lr_frac: 0.1,
-            galore: GaLoreConfig { rank, update_freq: 200, scale: 0.25, quantize_projector: false },
+            galore: GaLoreConfig {
+                rank,
+                update_freq: 200,
+                scale: 0.25,
+                rank_floor: rank.min(4).max(1),
+                ..Default::default()
+            },
             lowrank_rank: rank,
             relora_merge_every: 200,
             weight_decay: 0.0,
@@ -112,6 +118,16 @@ impl RunConfig {
     /// `Trainer::new`.
     pub fn validate(&self) -> Result<(), String> {
         self.galore.validate()?;
+        // A rank beyond the short side of a target matrix would silently
+        // clamp at projector construction; reject it up front with the
+        // offending parameter named (only GaLore methods project).
+        if self.method.is_galore() {
+            for meta in schema(self.model) {
+                if meta.is_projection_target() {
+                    self.galore.validate_for_shape(meta.rows, meta.cols, &meta.name)?;
+                }
+            }
+        }
         if self.lowrank_rank == 0 {
             return Err("lowrank rank must be >= 1".into());
         }
@@ -158,6 +174,9 @@ impl RunConfig {
         if let Some(v) = doc.get_parse("galore", "rank") {
             cfg.galore.rank = v;
             cfg.lowrank_rank = v;
+            // Keep the default floor consistent with a small explicit rank
+            // (an explicit rank_floor key below still overrides).
+            cfg.galore.rank_floor = cfg.galore.rank_floor.min(cfg.galore.rank).max(1);
         }
         if let Some(v) = doc.get_parse("galore", "update_freq") {
             cfg.galore.update_freq = v;
@@ -165,8 +184,31 @@ impl RunConfig {
         if let Some(v) = doc.get_parse("galore", "scale") {
             cfg.galore.scale = v;
         }
-        if let Some(v) = doc.get_parse("galore", "quantize_projector") {
-            cfg.galore.quantize_projector = v;
+        // Back-compat boolean (pre-adaptive configs): true => Block8.
+        if let Some(true) = doc.get_parse("galore", "quantize_projector") {
+            cfg.galore.projector_quant = ProjectorQuant::Block8;
+        }
+        if let Some(v) = doc.get("galore", "projector_quant") {
+            cfg.galore.projector_quant = ProjectorQuant::parse(v).ok_or_else(|| {
+                format!("unknown galore.projector_quant '{v}' (f32|block8|dyn8)")
+            })?;
+        }
+        if let Some(v) = doc.get("galore", "rank_schedule") {
+            cfg.galore.rank_schedule = RankScheduleKind::parse(v).ok_or_else(|| {
+                format!("unknown galore.rank_schedule '{v}' (fixed|decay|spectral)")
+            })?;
+        }
+        if let Some(v) = doc.get_parse("galore", "rank_floor") {
+            cfg.galore.rank_floor = v;
+        }
+        if let Some(v) = doc.get_parse("galore", "rank_decay") {
+            cfg.galore.rank_decay = v;
+        }
+        if let Some(v) = doc.get_parse("galore", "rank_energy") {
+            cfg.galore.rank_energy = v;
+        }
+        if let Some(v) = doc.get_parse("galore", "refresh_gate_cos") {
+            cfg.galore.refresh_gate_cos = v;
         }
         if let Some(v) = doc.get_parse("lowrank", "rank") {
             cfg.lowrank_rank = v;
@@ -244,6 +286,69 @@ mod tests {
         let mut c = base.clone();
         c.dp_workers = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_parses_adaptive_knobs() {
+        let doc = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"galore\"\n[galore]\nrank = 16\n\
+             rank_schedule = \"spectral\"\nrank_floor = 2\nrank_energy = 0.95\n\
+             refresh_gate_cos = 0.7\nprojector_quant = \"dyn8\"\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.galore.rank_schedule, RankScheduleKind::Spectral);
+        assert_eq!(cfg.galore.rank_floor, 2);
+        assert!((cfg.galore.rank_energy - 0.95).abs() < 1e-6);
+        assert!((cfg.galore.refresh_gate_cos - 0.7).abs() < 1e-6);
+        assert_eq!(cfg.galore.projector_quant, ProjectorQuant::Dyn8);
+        assert!(cfg.galore.is_adaptive());
+    }
+
+    #[test]
+    fn quantize_projector_bool_still_parses_as_block8() {
+        let doc =
+            TomlDoc::parse("model = \"nano\"\n[galore]\nquantize_projector = true\n").unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.galore.projector_quant, ProjectorQuant::Block8);
+    }
+
+    #[test]
+    fn validate_rejects_rank_beyond_target_short_side() {
+        // The fix this PR pins: rank > min(m, n) of a projection target
+        // used to pass validation and silently clamp at construction.
+        let mut cfg = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        cfg.galore.rank = cfg.model.dim + 1;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("exceeds min(m, n)"), "{err}");
+        assert!(err.contains("rank"), "{err}");
+        // Non-GaLore methods carry the knob but never project: accepted.
+        let mut lora = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::Lora);
+        lora.galore.rank = lora.model.dim + 1;
+        assert!(lora.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_adaptive_knobs() {
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        let mut c = base.clone();
+        c.galore.rank_floor = 0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.galore.rank_floor = c.galore.rank + 1;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.galore.rank_decay = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.galore.rank_energy = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.galore.refresh_gate_cos = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = base;
+        c.galore.refresh_gate_cos = 0.9;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

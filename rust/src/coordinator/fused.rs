@@ -16,9 +16,10 @@
 use crate::config::RunConfig;
 use crate::linalg::{top_r_left_subspace_into, SvdWorkspace};
 use crate::model::ParamStore;
+use crate::optim::{subspace_cosine, RefreshGate};
 use crate::rng::Rng;
 use crate::runtime::{Engine, Input};
-use crate::tensor::Matrix;
+use crate::tensor::{matmul_at_b_into, Matrix};
 use anyhow::{bail, Result};
 use std::collections::{HashMap, HashSet};
 
@@ -32,12 +33,19 @@ struct LayerState {
     /// `state_bytes`.
     g_short: Matrix,
     w_short: Matrix,
+    /// Staging for the lazy-refresh gate's projected gradient Pᵀ G.
+    pg: Matrix,
 }
 
 pub struct FusedGaLore {
     rank: usize,
     update_freq: u64,
     scale: f32,
+    /// Cosine lazy-refresh gate (shared with the Rust path; the artifact
+    /// step itself is untouched — only the host-side SVD is skipped).
+    gate: RefreshGate,
+    /// Refresh boundaries skipped by the gate, for metrics.
+    pub gate_skips: u64,
     handled: HashSet<usize>,
     states: HashMap<usize, LayerState>,
     svd_ws: SvdWorkspace,
@@ -53,6 +61,22 @@ impl FusedGaLore {
         targets: &[usize],
         engine: &mut Engine,
     ) -> Result<FusedGaLore> {
+        if cfg.galore.is_adaptive() {
+            bail!(
+                "adaptive rank schedules ('{}') run on the Rust path only — the fused \
+                 galore_step artifacts are lowered for fixed shapes; drop --fused or \
+                 use rank_schedule = \"fixed\"",
+                cfg.galore.rank_schedule.label()
+            );
+        }
+        if cfg.galore.projector_quant != crate::optim::ProjectorQuant::F32 {
+            bail!(
+                "projector_quant = '{}' runs on the Rust path only — the fused step \
+                 feeds the artifact an f32 projector, so the int8 store would be \
+                 silently ignored; drop --fused or use projector_quant = \"f32\"",
+                cfg.galore.projector_quant.label()
+            );
+        }
         let rank = cfg.galore.rank;
         let mut handled = HashSet::new();
         for &idx in targets {
@@ -74,6 +98,8 @@ impl FusedGaLore {
             rank,
             update_freq: cfg.galore.update_freq,
             scale: cfg.galore.scale,
+            gate: cfg.galore.refresh_gate(),
+            gate_skips: 0,
             handled,
             states: HashMap::new(),
             svd_ws: SvdWorkspace::new(),
@@ -111,6 +137,7 @@ impl FusedGaLore {
             t: 0,
             g_short: Matrix::zeros(0, 0),
             w_short: Matrix::zeros(0, 0),
+            pg: Matrix::zeros(0, 0),
         });
         // Refresh the projector every T steps (Rust randomized SVD keeps
         // the refresh off the per-step path; an artifact-based refresh is
@@ -123,7 +150,21 @@ impl FusedGaLore {
         }
         if needs_refresh {
             let g_src = if transposed { &state.g_short } else { grad };
-            top_r_left_subspace_into(g_src, r, &mut self.rng, &mut self.svd_ws, &mut state.p);
+            // Lazy-refresh gate (same semantics as the Rust path): skip
+            // the SVD when the cached basis still captures the gradient.
+            let mut skip = false;
+            if self.gate.enabled() && !state.p.is_empty() {
+                matmul_at_b_into(&state.p, g_src, &mut state.pg);
+                let cos =
+                    subspace_cosine(state.pg.frobenius_norm(), g_src.frobenius_norm());
+                if self.gate.fires(cos) {
+                    skip = true;
+                    self.gate_skips += 1;
+                }
+            }
+            if !skip {
+                top_r_left_subspace_into(g_src, r, &mut self.rng, &mut self.svd_ws, &mut state.p);
+            }
         }
         let g_data: &[f32] = if transposed { &state.g_short.data } else { &grad.data };
         let w_data: &[f32] = if transposed {

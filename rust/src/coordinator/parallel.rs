@@ -9,6 +9,12 @@
 //! hops each), and every worker applies the identical optimizer update —
 //! replicas stay bit-identical without weight broadcasts, exactly like
 //! synchronous DDP.
+//!
+//! Adaptive-rank runs (`galore.rank_schedule`) need no extra coordination:
+//! rank decisions and lazy-refresh gating are deterministic functions of
+//! the *averaged* gradient and the shared run seed, and every worker sees
+//! the same averaged gradient — so per-layer ranks stay identical across
+//! replicas, and so do the remapped moments.
 
 use crate::config::RunConfig;
 use crate::coordinator::Trainer;
@@ -116,6 +122,9 @@ pub struct DpResult {
     pub final_eval_loss: f32,
     pub total_tokens: u64,
     pub elapsed: std::time::Duration,
+    /// Rank-0 optimizer-state bytes at the end of the run (per replica;
+    /// shrinks over time under adaptive rank schedules).
+    pub final_state_bytes: usize,
 }
 
 /// Synchronous data-parallel training of `cfg` over `cfg.dp_workers`
@@ -125,11 +134,11 @@ pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
     let world = cfg.dp_workers.max(1);
     let handles = Ring::new(world).into_handles();
     let t0 = std::time::Instant::now();
-    let results: Vec<Result<(f32, f32, u64)>> = std::thread::scope(|scope| {
+    let results: Vec<Result<(f32, f32, u64, usize)>> = std::thread::scope(|scope| {
         let mut joins = Vec::new();
         for handle in handles {
             let cfg = cfg.clone();
-            joins.push(scope.spawn(move || -> Result<(f32, f32, u64)> {
+            joins.push(scope.spawn(move || -> Result<(f32, f32, u64, usize)> {
                 let engine = Engine::new(default_dir())?;
                 // Disjoint shard streams per worker: offset the corpus seed.
                 let corpus =
@@ -162,7 +171,8 @@ pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
                 Ok((
                     trainer.metrics.tail_loss(10).unwrap_or(f32::NAN),
                     eval,
-                    trainer.metrics.total_tokens() * world as u64 / world as u64,
+                    trainer.metrics.total_tokens(),
+                    trainer.optimizer_state_bytes(),
                 ))
             }));
         }
@@ -172,14 +182,14 @@ pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
     let mut first = None;
     let mut total_tokens = 0;
     for r in results {
-        let (train, eval, tokens) = r?;
+        let (train, eval, tokens, state_bytes) = r?;
         total_tokens += tokens;
         if first.is_none() {
-            first = Some((train, eval));
+            first = Some((train, eval, state_bytes));
         }
     }
-    let (final_train_loss, final_eval_loss) = first.unwrap();
-    Ok(DpResult { final_train_loss, final_eval_loss, total_tokens, elapsed })
+    let (final_train_loss, final_eval_loss, final_state_bytes) = first.unwrap();
+    Ok(DpResult { final_train_loss, final_eval_loss, total_tokens, elapsed, final_state_bytes })
 }
 
 #[cfg(test)]

@@ -145,6 +145,12 @@ impl Trainer {
         self.fused.is_some()
     }
 
+    /// Lazy-refresh-gate skips on the fused path (None when not fused).
+    /// The Rust path reports the same through `GaLore::rank_state`.
+    pub fn fused_gate_skips(&self) -> Option<u64> {
+        self.fused.as_ref().map(|f| f.gate_skips)
+    }
+
     /// Execute the training artifact on a batch, staging gradients into the
     /// trainer's persistent buffers (schema order, no per-step `Matrix`
     /// allocation). Returns the batch loss; read gradients from

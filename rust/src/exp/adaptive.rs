@@ -1,0 +1,91 @@
+//! Adaptive-rank experiment table (the Q-GaLore / AdaRankGrad directions
+//! from PAPERS.md): fixed-rank GaLore against the `decay` and `spectral`
+//! schedules, the dynamic-int8 projector store, and the cosine
+//! lazy-refresh gate — reporting eval loss, optimizer-state bytes, and the
+//! per-layer rank profile. Driven by `cargo bench --bench adaptive_rank`;
+//! the closed-form envelope below works without artifacts.
+
+use crate::config::{MethodKind, RunConfig};
+use crate::exp::scale::{budget, fast_mode};
+use crate::memory::{estimate, estimate_adaptive, Method, TrainOpts};
+use crate::model::ModelConfig;
+use crate::optim::{ProjectorQuant, RankScheduleKind};
+
+/// One row of the adaptive roster.
+pub struct AdaptiveRun {
+    pub name: &'static str,
+    pub cfg: RunConfig,
+}
+
+/// The roster: identical model/steps/seed everywhere so the only variable
+/// is the rank policy (plus the projector store / gate where named).
+pub fn adaptive_runs() -> Vec<AdaptiveRun> {
+    let model = ModelConfig::by_name(if fast_mode() { "nano" } else { "micro" }).unwrap();
+    let steps = budget(model.steps / 2).min(200);
+    let base = || {
+        let mut cfg = RunConfig::new(model, MethodKind::GaLore);
+        cfg.steps = steps;
+        cfg.galore.rank = model.dim / 4;
+        cfg.galore.update_freq = 20;
+        cfg.galore.rank_floor = (model.dim / 16).max(1);
+        cfg
+    };
+    let mut runs = Vec::new();
+    runs.push(AdaptiveRun { name: "fixed", cfg: base() });
+    let mut decay = base();
+    decay.galore.rank_schedule = RankScheduleKind::Decay;
+    decay.galore.rank_decay = 0.5;
+    runs.push(AdaptiveRun { name: "decay", cfg: decay });
+    let mut spectral = base();
+    spectral.galore.rank_schedule = RankScheduleKind::Spectral;
+    spectral.galore.rank_energy = 0.95;
+    runs.push(AdaptiveRun { name: "spectral", cfg: spectral });
+    let mut spectral_d8 = base();
+    spectral_d8.galore.rank_schedule = RankScheduleKind::Spectral;
+    spectral_d8.galore.rank_energy = 0.95;
+    spectral_d8.galore.projector_quant = ProjectorQuant::Dyn8;
+    runs.push(AdaptiveRun { name: "spectral+dyn8", cfg: spectral_d8 });
+    let mut gated = base();
+    gated.galore.refresh_gate_cos = 0.7;
+    runs.push(AdaptiveRun { name: "gated", cfg: gated });
+    runs
+}
+
+/// Closed-form optimizer-state envelope for an adaptive run on `model`:
+/// `(fixed_rank_bytes, floor_bytes)` — the measured adaptive footprint
+/// must land inside this bracket (BF16 model, `memory::breakdown`).
+pub fn state_envelope(model: &ModelConfig, rank: usize, floor: usize) -> (u64, u64) {
+    let opts = TrainOpts::default();
+    let fixed = estimate(model, Method::GaLore { rank }, opts).optim_states;
+    let at_floor = estimate_adaptive(model, opts, |_, _| floor).optim_states;
+    (fixed, at_floor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_covers_every_policy_dimension() {
+        let runs = adaptive_runs();
+        assert!(runs.len() >= 5);
+        let names: Vec<_> = runs.iter().map(|r| r.name).collect();
+        for want in ["fixed", "decay", "spectral", "spectral+dyn8", "gated"] {
+            assert!(names.contains(&want), "{want} missing from {names:?}");
+        }
+        for run in &runs {
+            run.cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", run.name));
+        }
+        // Matched budgets: the policy is the only variable.
+        let steps = runs[0].cfg.steps;
+        assert!(runs.iter().all(|r| r.cfg.steps == steps));
+        assert!(runs.iter().all(|r| r.cfg.seed == runs[0].cfg.seed));
+    }
+
+    #[test]
+    fn envelope_brackets_are_ordered() {
+        let model = ModelConfig::by_name("micro").unwrap();
+        let (fixed, floor) = state_envelope(model, model.dim / 4, model.dim / 16);
+        assert!(floor < fixed, "floor {floor} vs fixed {fixed}");
+    }
+}

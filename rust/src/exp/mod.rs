@@ -1,8 +1,10 @@
 //! Experiment drivers shared by benches and examples: the scaled-down
 //! workload definitions for every paper table/figure (`scale`), the
-//! fine-tuning harness (`finetune`), and the Lemma 3.3 gradient-rank
-//! verification (`lowrank_theory`).
+//! fine-tuning harness (`finetune`), the Lemma 3.3 gradient-rank
+//! verification (`lowrank_theory`), and the adaptive-rank roster
+//! (`adaptive`: rank schedules × projector stores × lazy-refresh gate).
 
+pub mod adaptive;
 pub mod finetune;
 pub mod lowrank_theory;
 pub mod scale;

@@ -20,6 +20,7 @@ mod svd;
 
 pub use qr::{qr, qr_with, QrFactors, QrScratch};
 pub use svd::{
-    eigh_jacobi, randomized_svd, randomized_svd_with, reconstruct, stable_rank, svd_jacobi,
-    top_r_left_subspace, top_r_left_subspace_into, Svd, SvdWorkspace,
+    eigh_jacobi, extract_left_subspace_into, randomized_svd, randomized_svd_with, reconstruct,
+    sketch_left_subspace_into, stable_rank, svd_jacobi, top_r_left_subspace,
+    top_r_left_subspace_into, Svd, SvdWorkspace, SKETCH_OVERSAMPLE,
 };

@@ -236,6 +236,27 @@ impl SvdWorkspace {
             qr: QrScratch::new(),
         }
     }
+
+    /// Squared singular-value estimates (the eigenvalues of B·Bᵀ,
+    /// descending, clamped at zero) left behind by the most recent sketch
+    /// or refresh through this workspace. The rank-adaptation policies
+    /// (`optim::rank::RankSchedule::next_rank`) read the spectrum from
+    /// here, so adapting costs nothing beyond the refresh the optimizer
+    /// was doing anyway.
+    pub fn sq_spectrum(&self) -> &[f32] {
+        &self.evals
+    }
+
+    /// Pre-size the extraction buffer for a `(k, r)` worst case. Every
+    /// other buffer here is sized by the sketch width alone and warms at
+    /// the first (largest) refresh, but `e_r` is `(k, r_eff)` — under an
+    /// adaptive schedule that shrinks and later *grows* the rank, a small
+    /// first extraction would leave it under-sized. Called once per
+    /// parameter by the adaptive GaLore path so rank growth stays
+    /// allocation-free.
+    pub fn warm_extract(&mut self, k: usize, r: usize) {
+        self.e_r.resize(k, r.min(k).max(1));
+    }
 }
 
 impl Default for SvdWorkspace {
@@ -279,6 +300,32 @@ fn stage_e_r(r_eff: usize, ws: &mut SvdWorkspace) {
     }
 }
 
+/// Sketch oversampling used by every randomized-SVD entry point: the
+/// range finder works on `r + SKETCH_OVERSAMPLE` columns (clamped to the
+/// matrix size). The spectral rank policy can also *grow* a layer's rank
+/// by up to this much per refresh, since the sketch sees that many
+/// directions beyond the current rank.
+pub const SKETCH_OVERSAMPLE: usize = 8;
+
+/// Stage 1 of a split projector refresh: range-find + projected eigensolve
+/// for a sketch of width `k`, leaving Q, B and the eigen-pairs in `ws`
+/// (read the squared spectrum via [`SvdWorkspace::sq_spectrum`], then
+/// materialize a basis with [`extract_left_subspace_into`]). Zero heap
+/// allocations once `ws` is warm on the shape.
+pub fn sketch_left_subspace_into(g: &Matrix, k: usize, rng: &mut Rng, ws: &mut SvdWorkspace) {
+    projected_eigh(g, k, 2, rng, ws);
+}
+
+/// Stage 2: write the top-`r` left-subspace basis from the most recent
+/// sketch in `ws` into `out` (clamped to the sketch width). `sketch` +
+/// `extract` at the same `(k, r)` is bit-for-bit identical to
+/// [`top_r_left_subspace_into`].
+pub fn extract_left_subspace_into(r: usize, ws: &mut SvdWorkspace, out: &mut Matrix) {
+    let r_eff = r.min(ws.evecs.cols).max(1);
+    stage_e_r(r_eff, ws);
+    matmul_into(&ws.qr.q, &ws.e_r, out);
+}
+
 /// Randomized truncated SVD (Halko–Martinsson–Tropp): returns the top-`r`
 /// factors of `a` using `power_iters` subspace iterations and oversampling
 /// (clamped to the matrix size). Thin wrapper over [`randomized_svd_with`]
@@ -303,7 +350,7 @@ pub fn randomized_svd_with(
     ws: &mut SvdWorkspace,
 ) -> Svd {
     let (m, n) = a.shape();
-    let k = (r + 8).min(m).min(n); // oversample by up to 8
+    let k = (r + SKETCH_OVERSAMPLE).min(m).min(n);
     projected_eigh(a, k, power_iters, rng, ws);
     let r_eff = r.min(k);
     let s: Vec<f32> = ws.evals[..r_eff].iter().map(|&e| e.sqrt()).collect();
@@ -340,11 +387,9 @@ pub fn top_r_left_subspace_into(
     out: &mut Matrix,
 ) {
     let (m, n) = g.shape();
-    let k = (r + 8).min(m).min(n);
-    projected_eigh(g, k, 2, rng, ws);
-    let r_eff = r.min(k);
-    stage_e_r(r_eff, ws);
-    matmul_into(&ws.qr.q, &ws.e_r, out);
+    let k = (r + SKETCH_OVERSAMPLE).min(m).min(n);
+    sketch_left_subspace_into(g, k, rng, ws);
+    extract_left_subspace_into(r, ws, out);
 }
 
 /// Stable rank ||A||_F^2 / ||A||_2^2 (used by the Lemma 3.3 experiment).

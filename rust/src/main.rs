@@ -16,6 +16,7 @@ use galore::config::{Cli, MethodKind, RunConfig, TomlDoc};
 use galore::coordinator::{train_data_parallel, Trainer};
 use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
 use galore::model::ModelConfig;
+use galore::optim::{ProjectorQuant, RankScheduleKind};
 use galore::runtime::{default_dir, Manifest};
 
 const SWITCHES: &[&str] = &["layerwise", "fused", "help"];
@@ -48,6 +49,9 @@ fn usage() {
 USAGE:
   galore train  [--config FILE] [--model NAME] [--method NAME] [--steps N]
                 [--batch N] [--lr F] [--rank N] [--update-freq N] [--scale F]
+                [--rank-schedule fixed|decay|spectral] [--rank-floor N]
+                [--rank-decay F] [--rank-energy F] [--refresh-gate-cos F]
+                [--projector-quant f32|block8|dyn8]
                 [--seed N] [--eval-every N] [--dp-workers N] [--layerwise]
                 [--fused] [--csv PATH] [--checkpoint PATH]
   galore memory --model NAME [--method NAME] [--rank N] [--layerwise]
@@ -57,7 +61,12 @@ USAGE:
 METHODS: full-rank adamw adam8bit adafactor galore galore8bit
          galore-adafactor lora relora low-rank
 MODELS:  nano micro mini small (trainable proxies) + 60m 130m 350m 1b 7b
-         (paper shapes, memory estimation only)"
+         (paper shapes, memory estimation only)
+
+Adaptive rank (galore methods): --rank-schedule decay|spectral lets each
+layer shrink/grow its projector rank at subspace refreshes within
+[--rank-floor, --rank]; --refresh-gate-cos T skips the refresh SVD when
+the cached subspace still captures cosine >= T of the gradient."
     );
 }
 
@@ -85,12 +94,36 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     if let Some(v) = cli.get_parse::<usize>("rank").map_err(|e| anyhow!("{e}"))? {
         cfg.galore.rank = v;
         cfg.lowrank_rank = v;
+        // A --rank override caps whatever floor the config carried (the
+        // CLI rank wins; a run must stay launchable). Pass --rank-floor
+        // explicitly to set the floor alongside the new rank.
+        cfg.galore.rank_floor = cfg.galore.rank_floor.min(v).max(1);
     }
     if let Some(v) = cli.get_parse::<u64>("update-freq").map_err(|e| anyhow!("{e}"))? {
         cfg.galore.update_freq = v;
     }
     if let Some(v) = cli.get_parse::<f32>("scale").map_err(|e| anyhow!("{e}"))? {
         cfg.galore.scale = v;
+    }
+    if let Some(v) = cli.get("rank-schedule") {
+        cfg.galore.rank_schedule = RankScheduleKind::parse(v)
+            .ok_or_else(|| anyhow!("unknown --rank-schedule '{v}' (fixed|decay|spectral)"))?;
+    }
+    if let Some(v) = cli.get_parse::<usize>("rank-floor").map_err(|e| anyhow!("{e}"))? {
+        cfg.galore.rank_floor = v;
+    }
+    if let Some(v) = cli.get_parse::<f32>("rank-decay").map_err(|e| anyhow!("{e}"))? {
+        cfg.galore.rank_decay = v;
+    }
+    if let Some(v) = cli.get_parse::<f32>("rank-energy").map_err(|e| anyhow!("{e}"))? {
+        cfg.galore.rank_energy = v;
+    }
+    if let Some(v) = cli.get_parse::<f32>("refresh-gate-cos").map_err(|e| anyhow!("{e}"))? {
+        cfg.galore.refresh_gate_cos = v;
+    }
+    if let Some(v) = cli.get("projector-quant") {
+        cfg.galore.projector_quant = ProjectorQuant::parse(v)
+            .ok_or_else(|| anyhow!("unknown --projector-quant '{v}' (f32|block8|dyn8)"))?;
     }
     if let Some(v) = cli.get_parse::<u64>("seed").map_err(|e| anyhow!("{e}"))? {
         cfg.seed = v;
@@ -113,7 +146,8 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
 fn train(cli: &Cli) -> Result<()> {
     let cfg = build_run_config(cli)?;
     println!(
-        "train: model={} method={} steps={} batch={} lr={} rank={} T={} alpha={} layerwise={} dp={}",
+        "train: model={} method={} steps={} batch={} lr={} rank={} T={} alpha={} \
+         schedule={} quant={} gate={} layerwise={} dp={}",
         cfg.model.name,
         cfg.method.label(),
         cfg.steps,
@@ -122,17 +156,22 @@ fn train(cli: &Cli) -> Result<()> {
         cfg.galore.rank,
         cfg.galore.update_freq,
         cfg.galore.scale,
+        cfg.galore.rank_schedule.label(),
+        cfg.galore.projector_quant.label(),
+        cfg.galore.refresh_gate_cos,
         cfg.layerwise,
         cfg.dp_workers
     );
     if cfg.dp_workers > 1 {
         let res = train_data_parallel(&cfg)?;
         println!(
-            "done: train_loss={:.4} eval_loss={:.4} eval_ppl={:.2} tokens={} elapsed={:.1}s",
+            "done: train_loss={:.4} eval_loss={:.4} eval_ppl={:.2} tokens={} \
+             optimizer_state={} elapsed={:.1}s",
             res.final_train_loss,
             res.final_eval_loss,
             res.final_eval_loss.exp(),
             res.total_tokens,
+            fmt_gib(res.final_state_bytes as u64),
             res.elapsed.as_secs_f64()
         );
         return Ok(());
@@ -170,6 +209,18 @@ fn train(cli: &Cli) -> Result<()> {
         fmt_gib(trainer.optimizer_state_bytes() as u64),
         trainer.metrics.tokens_per_sec()
     );
+    if cfg.galore.is_adaptive() {
+        let profile = trainer.opt.rank_profile();
+        if !profile.is_empty() {
+            let ranks: Vec<String> =
+                profile.iter().map(|&(p, r)| format!("{p}:{r}")).collect();
+            println!("final per-layer ranks (param:rank): {}", ranks.join(" "));
+        }
+    }
+    if cfg.galore.refresh_gate_cos > 0.0 {
+        let skips = trainer.opt.gate_skips() + trainer.fused_gate_skips().unwrap_or(0);
+        println!("lazy-refresh gate: {skips} SVD refreshes skipped");
+    }
     if let Some(csv) = cli.get("csv") {
         let p = trainer.metrics.write_csv(csv)?;
         println!("wrote {}", p.display());

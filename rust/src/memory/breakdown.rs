@@ -136,13 +136,19 @@ pub fn activations_bytes(cfg: &ModelConfig, token_batch: usize, checkpointed: bo
     }
 }
 
-/// Estimate the full breakdown for a method on a model config.
-pub fn estimate(cfg: &ModelConfig, method: Method, opts: TrainOpts) -> Breakdown {
+/// Shared accounting walk: the method may vary per parameter (adaptive
+/// ranks); gradient/layerwise/activation bookkeeping is identical for
+/// every estimator built on top.
+fn estimate_by(
+    cfg: &ModelConfig,
+    opts: TrainOpts,
+    mut method_of: impl FnMut(usize, &ParamMeta) -> Method,
+) -> Breakdown {
     let metas = schema(cfg);
     let mut b = Breakdown::default();
     let mut largest_grad = 0u64;
-    for meta in &metas {
-        let (w, s) = per_param(meta, method);
+    for (idx, meta) in metas.iter().enumerate() {
+        let (w, s) = per_param(meta, method_of(idx, meta));
         b.weights += w;
         b.optim_states += s;
         let g = (meta.rows * meta.cols) as u64 * BF16;
@@ -155,6 +161,29 @@ pub fn estimate(cfg: &ModelConfig, method: Method, opts: TrainOpts) -> Breakdown
     }
     b.activations = activations_bytes(cfg, opts.token_batch, opts.activation_checkpoint);
     b
+}
+
+/// Estimate the full breakdown for a method on a model config.
+pub fn estimate(cfg: &ModelConfig, method: Method, opts: TrainOpts) -> Breakdown {
+    estimate_by(cfg, opts, |_, _| method)
+}
+
+/// GaLore breakdown with the projector rank supplied *per parameter* —
+/// the footprint model for adaptive-rank runs, where each layer's rank
+/// drifts independently (feed it a run's measured
+/// `Optimizer::rank_profile`, or a constant closure for an envelope).
+/// `rank_of` receives the schema index and meta of each projection target
+/// and is clamped to the matrix's short side; untargeted parameters cost
+/// full-rank Adam state, exactly like `Method::GaLore`.
+pub fn estimate_adaptive(
+    cfg: &ModelConfig,
+    opts: TrainOpts,
+    mut rank_of: impl FnMut(usize, &ParamMeta) -> usize,
+) -> Breakdown {
+    estimate_by(cfg, opts, |idx, meta| {
+        let rank = rank_of(idx, meta).min(meta.rows.min(meta.cols)).max(1);
+        Method::GaLore { rank }
+    })
 }
 
 #[cfg(test)]
@@ -248,6 +277,23 @@ mod tests {
         );
         assert!(lw.gradients * 10 < dense.gradients);
         assert_eq!(lw.weights, dense.weights);
+    }
+
+    #[test]
+    fn adaptive_estimate_brackets_between_floor_and_max() {
+        // Constant rank recovers the fixed-rank estimate exactly; a decayed
+        // per-layer roster lands strictly between the floor and the max.
+        let c = cfg("350m");
+        let r = c.default_rank();
+        let opts = TrainOpts::default();
+        let fixed = estimate(c, Method::GaLore { rank: r }, opts);
+        let same = estimate_adaptive(c, opts, |_, _| r);
+        assert_eq!(same.optim_states, fixed.optim_states);
+        assert_eq!(same.weights, fixed.weights);
+        let floor = estimate_adaptive(c, opts, |_, _| (r / 8).max(1));
+        let mixed = estimate_adaptive(c, opts, |idx, _| if idx % 2 == 0 { r } else { r / 4 });
+        assert!(floor.optim_states < mixed.optim_states);
+        assert!(mixed.optim_states < fixed.optim_states);
     }
 
     #[test]

@@ -42,6 +42,15 @@ pub fn low_rank_factorized(m: u64, n: u64, r: u64) -> MatrixFootprint {
     MatrixFootprint { weights: m * r + n * r, optim_states: 2 * m * r + 2 * n * r }
 }
 
+/// Optimizer-state elements under an adaptive per-layer rank roster
+/// (`(m, n, r_current)` per projected matrix): `Σ galore(mᵢ, nᵢ, rᵢ)`.
+/// The Table 1 formula is linear in `r`, so rank decay is monotone in
+/// memory — shrinking any layer's rank never increases the total (the
+/// property the adaptive schedules and `tests/adaptive_props.rs` rely on).
+pub fn galore_adaptive_states(layers: &[(u64, u64, u64)]) -> u64 {
+    layers.iter().map(|&(m, n, r)| galore(m, n, r).optim_states).sum()
+}
+
 /// Feature matrix of Table 1 (printed by the table1 bench).
 pub const FEATURES: &[(&str, bool, bool, bool)] = &[
     // (method, multi-subspace, pre-training, fine-tuning)
@@ -95,5 +104,25 @@ mod tests {
     fn full_rank_is_3mn_total() {
         let f = full_rank(100, 200);
         assert_eq!(f.weights + f.optim_states, 3 * 100 * 200);
+    }
+
+    #[test]
+    fn adaptive_states_match_fixed_when_ranks_equal() {
+        let shapes = [(512u64, 1376u64), (512, 512), (2048, 5461)];
+        let fixed: u64 = shapes.iter().map(|&(m, n)| galore(m, n, 128).optim_states).sum();
+        let roster: Vec<(u64, u64, u64)> = shapes.iter().map(|&(m, n)| (m, n, 128)).collect();
+        assert_eq!(galore_adaptive_states(&roster), fixed);
+    }
+
+    #[test]
+    fn adaptive_states_monotone_in_every_rank() {
+        let mut roster = vec![(512u64, 1376u64, 128u64), (512, 512, 128), (2048, 5461, 128)];
+        let mut prev = galore_adaptive_states(&roster);
+        for i in 0..roster.len() {
+            roster[i].2 /= 2;
+            let now = galore_adaptive_states(&roster);
+            assert!(now < prev, "shrinking layer {i} did not shrink the total");
+            prev = now;
+        }
     }
 }

@@ -12,7 +12,9 @@
 mod breakdown;
 pub mod formulas;
 
-pub use breakdown::{activations_bytes, estimate, Breakdown, Method, TrainOpts};
+pub use breakdown::{
+    activations_bytes, estimate, estimate_adaptive, Breakdown, Method, TrainOpts,
+};
 
 /// Pretty-print bytes the way the paper does (G with two decimals), with
 /// auto-scaling to M/K for the proxy-model quantities.

@@ -98,6 +98,13 @@ impl Optimizer for Adafactor {
         "adafactor"
     }
 
+    /// Rank adaptation: the factored row/col statistics have no meaningful
+    /// linear transport across a basis change — drop this parameter's
+    /// state and re-accumulate at the new shape.
+    fn remap_state(&mut self, param: usize, _remap: &mut super::adaptive::StateRemap<'_>) {
+        self.states.remove(&param);
+    }
+
     fn reset_state(&mut self) {
         self.states.clear();
     }

@@ -2,6 +2,7 @@
 //! full-rank baseline (Eqns. 2–4). State: M, V ∈ R^{m×n} per parameter,
 //! i.e. 2·mn floats — the memory GaLore attacks.
 
+use super::adaptive::StateRemap;
 use super::{bias_correction, Optimizer};
 use crate::tensor::Matrix;
 use std::collections::HashMap;
@@ -141,6 +142,18 @@ impl Optimizer for Adam {
 
     fn reset_state(&mut self) {
         self.states.clear();
+    }
+
+    /// Rank adaptation: rotate M linearly and mix V through the squared
+    /// transition (see `optim::adaptive`) so a compact-space change keeps
+    /// the warmed-up moments instead of cold-starting them. `t` is kept —
+    /// bias correction continues across the change. Allocation-free once
+    /// the remap scratch is warm.
+    fn remap_state(&mut self, param: usize, remap: &mut StateRemap<'_>) {
+        if let Some(s) = self.states.get_mut(&param) {
+            remap.first_moment(&mut s.m);
+            remap.second_moment(&mut s.v);
+        }
     }
 }
 

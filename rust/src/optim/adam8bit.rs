@@ -95,6 +95,13 @@ impl Optimizer for Adam8bit {
     fn reset_state(&mut self) {
         self.states.clear();
     }
+
+    /// Rank adaptation: the quantized moments carry no shape metadata, so
+    /// they cannot be rotated in place — drop this parameter's state and
+    /// let the EMAs warm back up at the new shape (~1/(1−β₂) steps).
+    fn remap_state(&mut self, param: usize, _remap: &mut super::adaptive::StateRemap<'_>) {
+        self.states.remove(&param);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,208 @@
+//! The rank-adaptation subsystem: everything `GaLore<O>` needs to let a
+//! layer's projector shrink or grow its rank at subspace-refresh
+//! boundaries *without* throwing the inner optimizer's moments away.
+//!
+//! The policy decisions live in [`crate::optim::rank`]; this module holds
+//! the mechanics:
+//!
+//! * [`RankState`] — per-parameter bookkeeping (current rank, refreshes
+//!   performed, lazy-refresh gate skips, last measured cosine).
+//! * [`basis_transition_into`] — the transition matrix `T` between the
+//!   outgoing and incoming projector bases, written into caller buffers
+//!   (allocation-free once warm, like every other hot-path kernel).
+//! * [`StateRemap`] — the carry-over context handed to
+//!   [`crate::optim::Optimizer::remap_state`] when a projected parameter's
+//!   compact space changes shape. First moments are rotated linearly
+//!   (`M' = T M` for Left-side parameters, `M' = M T` for Right-side);
+//!   second moments are mixed through `T∘T` — if `v ≈ E[r²]` and
+//!   `r' = T r`, then `E[r'²_i] = Σ_j T²_ij E[r²_j]` under coordinate
+//!   independence — which also preserves nonnegativity. This is the
+//!   AdaRankGrad-style moment projection; optimizers whose state cannot be
+//!   rotated (quantized or factored statistics) instead drop the
+//!   parameter's state and let the EMA warm back up.
+//!
+//! Both transforms contract Frobenius norm (`T = P_newᵀ P_old` is a
+//! product of orthonormal-projection factors, so `‖T‖₂ ≤ 1`), the property
+//! pinned by `tests/adaptive_props.rs`.
+
+use super::galore::ProjSide;
+use crate::tensor::{matmul_at_b_into, matmul_into, Matrix};
+
+/// Per-parameter rank-adaptation bookkeeping, exposed by
+/// `GaLore::rank_state` for metrics and tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankState {
+    /// Rank currently in use by this parameter's projector.
+    pub rank: usize,
+    /// Subspace refreshes actually performed (SVDs run).
+    pub refreshes: u64,
+    /// Refresh boundaries skipped by the cosine lazy-refresh gate.
+    pub gate_skips: u64,
+    /// Current run of back-to-back gate skips (reset by a real refresh).
+    /// Under an adaptive schedule the skip streak is capped so the gate
+    /// cannot starve the rank policy of sketches forever.
+    pub consecutive_skips: u64,
+    /// Cosine similarity measured at the most recent gated boundary.
+    pub last_cosine: f32,
+}
+
+/// Write the basis-transition matrix between two projector bases into
+/// `trans`, and its elementwise square into `trans_sq`.
+///
+/// Left side (bases are (m, r)): `T = P_newᵀ P_old`, shape (r_new, r_old).
+/// Right side (bases are (n, r)): `T = Q_oldᵀ Q_new`, shape (r_old, r_new),
+/// so that `M' = M T` maps Right-side compact moments `M ∈ R^{m×r_old}`.
+pub fn basis_transition_into(
+    old: &Matrix,
+    new: &Matrix,
+    side: ProjSide,
+    trans: &mut Matrix,
+    trans_sq: &mut Matrix,
+) {
+    match side {
+        ProjSide::Left => matmul_at_b_into(new, old, trans),
+        ProjSide::Right => matmul_at_b_into(old, new, trans),
+    }
+    trans_sq.copy_from(trans);
+    trans_sq.map_inplace(|x| x * x);
+}
+
+/// Moment carry-over context for one compact-space change. Borrowed
+/// buffers come from the `GaLore` per-parameter workspace, so a remap in
+/// the steady state performs zero heap allocations.
+pub struct StateRemap<'a> {
+    side: ProjSide,
+    trans: &'a Matrix,
+    trans_sq: &'a Matrix,
+    scratch: &'a mut Matrix,
+}
+
+impl<'a> StateRemap<'a> {
+    pub fn new(
+        side: ProjSide,
+        trans: &'a Matrix,
+        trans_sq: &'a Matrix,
+        scratch: &'a mut Matrix,
+    ) -> StateRemap<'a> {
+        StateRemap { side, trans, trans_sq, scratch }
+    }
+
+    /// Rank of the outgoing basis.
+    pub fn old_rank(&self) -> usize {
+        match self.side {
+            ProjSide::Left => self.trans.cols,
+            ProjSide::Right => self.trans.rows,
+        }
+    }
+
+    /// Rank of the incoming basis.
+    pub fn new_rank(&self) -> usize {
+        match self.side {
+            ProjSide::Left => self.trans.rows,
+            ProjSide::Right => self.trans.cols,
+        }
+    }
+
+    fn carry(side: ProjSide, trans: &Matrix, scratch: &mut Matrix, state: &mut Matrix) {
+        match side {
+            // (r_new, r_old) @ (r_old, n) -> (r_new, n)
+            ProjSide::Left => matmul_into(trans, state, scratch),
+            // (m, r_old) @ (r_old, r_new) -> (m, r_new)
+            ProjSide::Right => matmul_into(state, trans, scratch),
+        }
+        state.copy_from(scratch);
+    }
+
+    /// Carry a first-moment matrix into the new basis coordinates
+    /// (linear rotation; Frobenius norm never grows).
+    pub fn first_moment(&mut self, state: &mut Matrix) {
+        Self::carry(self.side, self.trans, self.scratch, state);
+    }
+
+    /// Carry a second-moment (elementwise-variance) matrix: mixed through
+    /// `T∘T`, then clamped at zero so downstream `sqrt`s stay defined.
+    pub fn second_moment(&mut self, state: &mut Matrix) {
+        Self::carry(self.side, self.trans_sq, self.scratch, state);
+        for v in state.data.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr;
+    use crate::rng::Rng;
+
+    fn orthonormal(m: usize, r: usize, rng: &mut Rng) -> Matrix {
+        qr(&Matrix::randn(m, r, 1.0, rng)).q
+    }
+
+    #[test]
+    fn identity_transition_preserves_moments() {
+        let mut rng = Rng::new(0);
+        let p = orthonormal(24, 6, &mut rng);
+        let mut trans = Matrix::zeros(0, 0);
+        let mut trans_sq = Matrix::zeros(0, 0);
+        basis_transition_into(&p, &p, ProjSide::Left, &mut trans, &mut trans_sq);
+        // PᵀP = I for an orthonormal basis.
+        let mut m = Matrix::randn(6, 10, 1.0, &mut rng);
+        let before = m.clone();
+        let mut scratch = Matrix::zeros(0, 0);
+        let mut remap = StateRemap::new(ProjSide::Left, &trans, &trans_sq, &mut scratch);
+        assert_eq!(remap.old_rank(), 6);
+        assert_eq!(remap.new_rank(), 6);
+        remap.first_moment(&mut m);
+        let mut d = m.clone();
+        d.sub_assign(&before);
+        assert!(d.frobenius_norm() < 1e-4 * before.frobenius_norm());
+    }
+
+    #[test]
+    fn rank_shrink_contracts_norm_and_keeps_v_nonnegative() {
+        let mut rng = Rng::new(1);
+        let old = orthonormal(32, 8, &mut rng);
+        let new = orthonormal(32, 4, &mut rng);
+        let mut trans = Matrix::zeros(0, 0);
+        let mut trans_sq = Matrix::zeros(0, 0);
+        basis_transition_into(&old, &new, ProjSide::Left, &mut trans, &mut trans_sq);
+        assert_eq!(trans.shape(), (4, 8));
+        let mut m = Matrix::randn(8, 12, 1.0, &mut rng);
+        let m_norm = m.frobenius_norm();
+        let mut v = Matrix::randn(8, 12, 1.0, &mut rng);
+        v.map_inplace(|x| x * x);
+        let v_sum = v.sum();
+        let mut scratch = Matrix::zeros(0, 0);
+        let mut remap = StateRemap::new(ProjSide::Left, &trans, &trans_sq, &mut scratch);
+        remap.first_moment(&mut m);
+        remap.second_moment(&mut v);
+        assert_eq!(m.shape(), (4, 12));
+        assert_eq!(v.shape(), (4, 12));
+        assert!(m.frobenius_norm() <= m_norm * (1.0 + 1e-4));
+        assert!(v.data.iter().all(|&x| x >= 0.0));
+        assert!(v.sum() <= v_sum * (1.0 + 1e-4));
+    }
+
+    #[test]
+    fn right_side_maps_column_indexed_moments() {
+        let mut rng = Rng::new(2);
+        let old = orthonormal(20, 6, &mut rng);
+        let new = orthonormal(20, 3, &mut rng);
+        let mut trans = Matrix::zeros(0, 0);
+        let mut trans_sq = Matrix::zeros(0, 0);
+        basis_transition_into(&old, &new, ProjSide::Right, &mut trans, &mut trans_sq);
+        assert_eq!(trans.shape(), (6, 3));
+        let mut m = Matrix::randn(10, 6, 1.0, &mut rng);
+        let norm = m.frobenius_norm();
+        let mut scratch = Matrix::zeros(0, 0);
+        let mut remap = StateRemap::new(ProjSide::Right, &trans, &trans_sq, &mut scratch);
+        assert_eq!(remap.old_rank(), 6);
+        assert_eq!(remap.new_rank(), 3);
+        remap.first_moment(&mut m);
+        assert_eq!(m.shape(), (10, 3));
+        assert!(m.frobenius_norm() <= norm * (1.0 + 1e-4));
+    }
+}

@@ -23,11 +23,53 @@
 //! [`SvdWorkspace`] so even the every-`T`-steps path stops allocating once
 //! warm.
 
+use super::adaptive::{basis_transition_into, RankState, StateRemap};
+use super::rank::{subspace_cosine, RankSchedule, RankScheduleKind, RefreshGate};
 use super::Optimizer;
-use crate::linalg::{randomized_svd, top_r_left_subspace_into, SvdWorkspace};
+use crate::linalg::{
+    extract_left_subspace_into, randomized_svd, sketch_left_subspace_into,
+    top_r_left_subspace_into, SvdWorkspace, SKETCH_OVERSAMPLE,
+};
+use crate::quant::DynQuantBuf;
 use crate::rng::Rng;
 use crate::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix};
 use std::collections::{HashMap, HashSet};
+
+/// How the projection basis P is stored (the §7 future-work item (2),
+/// "low-memory projection matrices", generalized): full precision, the
+/// linear absmax int8 grid (`quant::block8`), or the dynamic-tree int8
+/// code (`quant::dynamic`) that spends bits logarithmically and keeps the
+/// small entries of a near-orthonormal basis at fine relative precision.
+/// All three cost the same per step: projections run against a dequantized
+/// cache rebuilt only at subspace refresh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectorQuant {
+    /// 4 bytes/element (the paper's setting).
+    F32,
+    /// 1 byte/element, linear absmax blocks.
+    Block8,
+    /// 1 byte/element, dynamic (logarithmic) code — Q-GaLore-style.
+    Dyn8,
+}
+
+impl ProjectorQuant {
+    pub fn parse(s: &str) -> Option<ProjectorQuant> {
+        Some(match s {
+            "f32" | "none" => ProjectorQuant::F32,
+            "block8" | "q8" | "int8" => ProjectorQuant::Block8,
+            "dyn8" | "dynamic8" => ProjectorQuant::Dyn8,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProjectorQuant::F32 => "f32",
+            ProjectorQuant::Block8 => "block8",
+            ProjectorQuant::Dyn8 => "dyn8",
+        }
+    }
+}
 
 /// Which side of the gradient is projected (§4.2: always the short one).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +93,7 @@ pub enum ProjSide {
 enum BasisStore {
     F32(Matrix),
     Quant8 { buf: crate::quant::QuantizedBuf, cache: Matrix },
+    Dyn8 { buf: DynQuantBuf, cache: Matrix },
 }
 
 /// The low-rank projector for one parameter.
@@ -66,11 +109,16 @@ impl Projector {
     /// truncated SVD (Eqn. 12–13). Chooses the side by shape and clamps the
     /// rank to min(m, n).
     pub fn compute(grad: &Matrix, rank: usize, rng: &mut Rng) -> Projector {
-        Self::compute_with(grad, rank, rng, false)
+        Self::compute_with(grad, rank, rng, ProjectorQuant::F32)
     }
 
-    /// As `compute`, optionally storing the basis 8-bit quantized.
-    pub fn compute_with(grad: &Matrix, rank: usize, rng: &mut Rng, quantized: bool) -> Projector {
+    /// As `compute`, choosing how the basis is stored.
+    pub fn compute_with(
+        grad: &Matrix,
+        rank: usize,
+        rng: &mut Rng,
+        quant: ProjectorQuant,
+    ) -> Projector {
         let (m, n) = grad.shape();
         let r = rank.min(m).min(n).max(1);
         let (side, basis) = if m <= n {
@@ -80,15 +128,23 @@ impl Projector {
             // singular vectors of Gᵀ.
             (ProjSide::Right, randomized_svd(&grad.transpose(), r, 2, rng).u)
         };
-        let store = if quantized {
-            let buf = crate::quant::quantize(&basis.data);
-            // The cache must hold the *dequantized* values — projections
-            // see exactly what the quantized store represents.
-            let cache =
-                Matrix::from_vec(basis.rows, basis.cols, crate::quant::dequantize(&buf));
-            BasisStore::Quant8 { buf, cache }
-        } else {
-            BasisStore::F32(basis)
+        let store = match quant {
+            ProjectorQuant::F32 => BasisStore::F32(basis),
+            ProjectorQuant::Block8 => {
+                let buf = crate::quant::quantize(&basis.data);
+                // The cache must hold the *dequantized* values — projections
+                // see exactly what the quantized store represents.
+                let cache =
+                    Matrix::from_vec(basis.rows, basis.cols, crate::quant::dequantize(&buf));
+                BasisStore::Quant8 { buf, cache }
+            }
+            ProjectorQuant::Dyn8 => {
+                let mut buf = DynQuantBuf::zeros(basis.len(), true);
+                buf.quantize_from(&basis.data);
+                let mut cache = basis;
+                buf.dequantize_into(&mut cache.data);
+                BasisStore::Dyn8 { buf, cache }
+            }
         };
         Projector { side, store, rank: r }
     }
@@ -113,7 +169,7 @@ impl Projector {
         self.side = if m <= n { ProjSide::Left } else { ProjSide::Right };
         let target = match &mut self.store {
             BasisStore::F32(b) => b,
-            BasisStore::Quant8 { cache, .. } => cache,
+            BasisStore::Quant8 { cache, .. } | BasisStore::Dyn8 { cache, .. } => cache,
         };
         match self.side {
             ProjSide::Left => top_r_left_subspace_into(grad, r, rng, ws, target),
@@ -122,13 +178,70 @@ impl Projector {
                 top_r_left_subspace_into(scratch_t, r, rng, ws, target);
             }
         }
-        if let BasisStore::Quant8 { buf, cache } = &mut self.store {
-            if buf.len != cache.len() {
-                *buf = crate::quant::QuantizedBuf::zeros(cache.len());
+        self.requantize_cache();
+    }
+
+    /// Adaptive refresh (`optim::rank` policies): re-sketch the subspace
+    /// at the current rank plus the standard oversampling, let `schedule`
+    /// pick the new rank from the sketch's squared singular spectrum, and
+    /// materialize the basis at that rank — all in place. Zero heap
+    /// allocations once warm: rank growth is bounded by the schedule's
+    /// ceiling, the basis buffer was created at that ceiling, shrinking
+    /// never reallocates, and `GaLore::step` pre-warms the remap and
+    /// extraction buffers at their worst-case shapes before the first
+    /// adaptive refresh. Returns the rank selected.
+    pub fn refresh_ranked_with(
+        &mut self,
+        grad: &Matrix,
+        schedule: &RankSchedule,
+        rng: &mut Rng,
+        ws: &mut SvdWorkspace,
+        scratch_t: &mut Matrix,
+    ) -> usize {
+        let (m, n) = grad.shape();
+        let min_dim = m.min(n);
+        let cur = schedule.clamp(self.rank.max(1), min_dim);
+        let k = (cur + SKETCH_OVERSAMPLE).min(min_dim);
+        self.side = if m <= n { ProjSide::Left } else { ProjSide::Right };
+        match self.side {
+            ProjSide::Left => sketch_left_subspace_into(grad, k, rng, ws),
+            ProjSide::Right => {
+                grad.transpose_into(scratch_t);
+                sketch_left_subspace_into(scratch_t, k, rng, ws);
             }
-            crate::quant::quantize_into(&cache.data, buf);
-            // Round-trip so the cache holds what the store represents.
-            crate::quant::dequantize_into(buf, &mut cache.data);
+        }
+        let r_new = schedule.next_rank(cur, min_dim, ws.sq_spectrum()).min(k).max(1);
+        let target = match &mut self.store {
+            BasisStore::F32(b) => b,
+            BasisStore::Quant8 { cache, .. } | BasisStore::Dyn8 { cache, .. } => cache,
+        };
+        extract_left_subspace_into(r_new, ws, target);
+        self.rank = r_new;
+        self.requantize_cache();
+        r_new
+    }
+
+    /// Re-quantize the basis cache into the 8-bit store after a refresh,
+    /// resizing the quantized buffer in place when the rank changed
+    /// (shrinking never reallocates). The round-trip through the store
+    /// keeps the cache holding exactly what the store represents.
+    fn requantize_cache(&mut self) {
+        match &mut self.store {
+            BasisStore::F32(_) => {}
+            BasisStore::Quant8 { buf, cache } => {
+                if buf.len != cache.len() {
+                    buf.resize(cache.len());
+                }
+                crate::quant::quantize_into(&cache.data, buf);
+                crate::quant::dequantize_into(buf, &mut cache.data);
+            }
+            BasisStore::Dyn8 { buf, cache } => {
+                if buf.len != cache.len() {
+                    buf.resize(cache.len());
+                }
+                buf.quantize_from(&cache.data);
+                buf.dequantize_into(&mut cache.data);
+            }
         }
     }
 
@@ -138,12 +251,21 @@ impl Projector {
     pub fn basis(&self) -> &Matrix {
         match &self.store {
             BasisStore::F32(b) => b,
-            BasisStore::Quant8 { cache, .. } => cache,
+            BasisStore::Quant8 { cache, .. } | BasisStore::Dyn8 { cache, .. } => cache,
         }
     }
 
     pub fn is_quantized(&self) -> bool {
-        matches!(self.store, BasisStore::Quant8 { .. })
+        !matches!(self.store, BasisStore::F32(_))
+    }
+
+    /// How the basis is stored.
+    pub fn quant(&self) -> ProjectorQuant {
+        match &self.store {
+            BasisStore::F32(_) => ProjectorQuant::F32,
+            BasisStore::Quant8 { .. } => ProjectorQuant::Block8,
+            BasisStore::Dyn8 { .. } => ProjectorQuant::Dyn8,
+        }
     }
 
     /// Project the full gradient into the compact space (allocating
@@ -193,34 +315,63 @@ impl Projector {
         match &self.store {
             BasisStore::F32(b) => 4 * b.len(),
             BasisStore::Quant8 { buf, .. } => buf.nbytes(),
+            BasisStore::Dyn8 { buf, .. } => buf.nbytes(),
         }
     }
 }
 
 #[derive(Clone, Copy, Debug)]
 pub struct GaLoreConfig {
-    /// Subspace rank r.
+    /// Subspace rank r — the initial rank and the ceiling for adaptive
+    /// schedules. Must not exceed `min(m, n)` of any targeted parameter
+    /// (`RunConfig::validate` rejects it; projector construction clamps
+    /// defensively).
     pub rank: usize,
     /// Subspace change frequency T (§4.1; paper default 200). Must be >= 1
     /// — validated by `RunConfig::validate` and asserted in `GaLore::new`.
     pub update_freq: u64,
     /// Scale factor α on the projected-back update (§4.4; paper 0.25).
     pub scale: f32,
-    /// Store P 8-bit quantized (§7 future work (2): low-memory projection
-    /// matrices). Quarters the projector memory; dequantization happens
-    /// once per subspace refresh, not per step.
-    pub quantize_projector: bool,
+    /// How the projection basis is stored (§7 future work (2): low-memory
+    /// projection matrices). The 8-bit stores quarter the projector
+    /// memory; dequantization happens once per subspace refresh, not per
+    /// step.
+    pub projector_quant: ProjectorQuant,
+    /// Per-layer rank policy applied at subspace-refresh boundaries
+    /// (`optim::rank` — see its module docs for choosing one).
+    pub rank_schedule: RankScheduleKind,
+    /// Lower rank bound for the adaptive schedules.
+    pub rank_floor: usize,
+    /// Multiplicative rank factor per refresh (`decay` schedule).
+    pub rank_decay: f32,
+    /// Cumulative-energy target in (0, 1] (`spectral` schedule).
+    pub rank_energy: f32,
+    /// Cosine threshold for the lazy-refresh gate (0 disables): at a
+    /// refresh boundary, skip the SVD when the cached subspace still
+    /// captures this fraction of the gradient norm (Q-GaLore-style).
+    pub refresh_gate_cos: f32,
 }
 
 impl Default for GaLoreConfig {
     fn default() -> Self {
-        GaLoreConfig { rank: 128, update_freq: 200, scale: 0.25, quantize_projector: false }
+        GaLoreConfig {
+            rank: 128,
+            update_freq: 200,
+            scale: 0.25,
+            projector_quant: ProjectorQuant::F32,
+            rank_schedule: RankScheduleKind::Fixed,
+            rank_floor: 4,
+            rank_decay: 0.5,
+            rank_energy: 0.99,
+            refresh_gate_cos: 0.0,
+        }
     }
 }
 
 impl GaLoreConfig {
     /// Reject configs that would fault at step time (`t % update_freq`
-    /// divides by zero when `update_freq == 0`).
+    /// divides by zero when `update_freq == 0`) or drive the rank
+    /// policies out of their domains.
     pub fn validate(&self) -> Result<(), String> {
         if self.update_freq == 0 {
             return Err(
@@ -232,19 +383,92 @@ impl GaLoreConfig {
         if self.rank == 0 {
             return Err("galore.rank must be >= 1".into());
         }
+        if self.rank_floor == 0 {
+            return Err("galore.rank_floor must be >= 1".into());
+        }
+        if self.rank_floor > self.rank {
+            return Err(format!(
+                "galore.rank_floor = {} exceeds galore.rank = {} (the floor must sit \
+                 at or below the initial rank)",
+                self.rank_floor, self.rank
+            ));
+        }
+        if !(self.rank_decay > 0.0 && self.rank_decay <= 1.0) {
+            return Err(format!(
+                "galore.rank_decay = {} must be in (0, 1]",
+                self.rank_decay
+            ));
+        }
+        if !(self.rank_energy > 0.0 && self.rank_energy <= 1.0) {
+            return Err(format!(
+                "galore.rank_energy = {} must be in (0, 1]",
+                self.rank_energy
+            ));
+        }
+        if !(0.0..1.0).contains(&self.refresh_gate_cos) {
+            return Err(format!(
+                "galore.refresh_gate_cos = {} must be in [0, 1) (0 disables the gate; \
+                 cosines never exceed 1, so a threshold of 1 would disable refresh \
+                 detection silently)",
+                self.refresh_gate_cos
+            ));
+        }
         Ok(())
+    }
+
+    /// Reject a rank that exceeds the short side of a target matrix
+    /// (called by `RunConfig::validate` with every projection target; the
+    /// projector also clamps defensively at construction).
+    pub fn validate_for_shape(&self, rows: usize, cols: usize, name: &str) -> Result<(), String> {
+        let min_dim = rows.min(cols);
+        if self.rank > min_dim {
+            return Err(format!(
+                "galore.rank = {} exceeds min(m, n) = {min_dim} for target parameter \
+                 '{name}' ({rows}x{cols}); the projector rank cannot exceed the short \
+                 side — use rank <= {min_dim}",
+                self.rank
+            ));
+        }
+        Ok(())
+    }
+
+    /// The rank schedule this config describes.
+    pub fn schedule(&self) -> RankSchedule {
+        RankSchedule {
+            kind: self.rank_schedule,
+            max_rank: self.rank,
+            floor: self.rank_floor.min(self.rank).max(1),
+            decay: self.rank_decay,
+            energy: self.rank_energy,
+        }
+    }
+
+    /// The lazy-refresh gate this config describes.
+    pub fn refresh_gate(&self) -> RefreshGate {
+        RefreshGate { threshold: self.refresh_gate_cos }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.rank_schedule != RankScheduleKind::Fixed
     }
 }
 
 /// Per-parameter reusable buffers for the projected step: `Pᵀ G`, the
-/// inner-optimizer scratch weight, the projected-back update, and (for
-/// tall parameters) the Gᵀ staging used by the refresh. Working memory,
-/// not optimizer state.
+/// inner-optimizer scratch weight, the projected-back update, (for tall
+/// parameters) the Gᵀ staging used by the refresh, and the rank-adaptation
+/// buffers (outgoing-basis copy, basis-transition matrices, moment-remap
+/// scratch). Working memory, not optimizer state.
 struct Workspace {
     compact_grad: Matrix,
     scratch: Matrix,
     full_update: Matrix,
     grad_t: Matrix,
+    prev_basis: Matrix,
+    trans: Matrix,
+    trans_sq: Matrix,
+    remap_scratch: Matrix,
+    /// Rank-adaptation buffers warmed at worst-case shapes (set once).
+    adaptive_warm: bool,
 }
 
 impl Workspace {
@@ -254,7 +478,25 @@ impl Workspace {
             scratch: Matrix::zeros(0, 0),
             full_update: Matrix::zeros(0, 0),
             grad_t: Matrix::zeros(0, 0),
+            prev_basis: Matrix::zeros(0, 0),
+            trans: Matrix::zeros(0, 0),
+            trans_sq: Matrix::zeros(0, 0),
+            remap_scratch: Matrix::zeros(0, 0),
+            adaptive_warm: false,
         }
+    }
+
+    /// Warm the rank-adaptation buffers at their worst-case shapes, once
+    /// per parameter: a schedule that shrinks the rank and later *grows*
+    /// it back (spectral) then stays allocation-free, because `Vec`
+    /// capacity persists across the shrinks in between. Contents are
+    /// scratch; every user overwrites via `resize`/`copy_from`.
+    fn warm_adaptive(&mut self, short: usize, long: usize, max_rank: usize) {
+        self.prev_basis.resize(short, max_rank);
+        self.trans.resize(max_rank, max_rank);
+        self.trans_sq.resize(max_rank, max_rank);
+        self.remap_scratch.resize(max_rank, long);
+        self.adaptive_warm = true;
     }
 }
 
@@ -270,6 +512,7 @@ pub struct GaLore<O: Optimizer> {
     projectors: HashMap<usize, Projector>,
     steps: HashMap<usize, u64>,
     workspaces: HashMap<usize, Workspace>,
+    rank_states: HashMap<usize, RankState>,
     svd_ws: SvdWorkspace,
     rng: Rng,
 }
@@ -277,6 +520,14 @@ pub struct GaLore<O: Optimizer> {
 /// Default projector-RNG seed tag; mixed with the run seed in
 /// [`GaLore::with_seed`] so refresh sketches are reproducible per run.
 const PROJECTOR_SEED_TAG: u64 = 0x6A10E;
+
+/// Under an *adaptive* schedule the lazy-refresh gate may not starve the
+/// rank policy: a gradient that stays inside the cached subspace keeps
+/// the cosine high even after its spectral rank collapses, and only a
+/// real sketch can see that. After this many back-to-back skips a refresh
+/// (and rank decision) is forced — Q-GaLore-style bounded laziness. Fixed
+/// schedules are unaffected (a collinear basis is all they need).
+const MAX_ADAPTIVE_GATE_SKIPS: u64 = 3;
 
 impl<O: Optimizer> GaLore<O> {
     pub fn new(cfg: GaLoreConfig, inner: O) -> Self {
@@ -292,6 +543,7 @@ impl<O: Optimizer> GaLore<O> {
             projectors: HashMap::new(),
             steps: HashMap::new(),
             workspaces: HashMap::new(),
+            rank_states: HashMap::new(),
             svd_ws: SvdWorkspace::new(),
             rng: Rng::new(PROJECTOR_SEED_TAG),
         }
@@ -324,6 +576,12 @@ impl<O: Optimizer> GaLore<O> {
         self.projectors.get(&param)
     }
 
+    /// Rank-adaptation bookkeeping for a parameter (None until its first
+    /// step; gate/refresh counters stay zero for non-adaptive runs).
+    pub fn rank_state(&self, param: usize) -> Option<&RankState> {
+        self.rank_states.get(&param)
+    }
+
     pub fn inner(&self) -> &O {
         &self.inner
     }
@@ -340,34 +598,127 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
         let needs_refresh = *t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&param);
         *t += 1;
         let ws = self.workspaces.entry(param).or_insert_with(Workspace::new);
+        // True when `ws.compact_grad` already holds Pᵀ G for the basis the
+        // step will use (the gate computed it and kept the basis).
+        let mut compact_ready = false;
         // Refresh the subspace every T steps (including step 0).
         if needs_refresh {
+            let schedule = self.cfg.schedule();
+            let gate = self.cfg.refresh_gate();
             match self.projectors.get_mut(&param) {
                 // Steady-state refresh: reuse basis + SVD buffers in place.
-                Some(p) => p.refresh_with(
-                    grad,
-                    self.cfg.rank,
-                    &mut self.rng,
-                    &mut self.svd_ws,
-                    &mut ws.grad_t,
-                ),
+                Some(p) => {
+                    let rs = self.rank_states.entry(param).or_default();
+                    // Lazy-refresh gate (Q-GaLore-style): when the cached
+                    // subspace still captures the current gradient, the new
+                    // basis would be nearly collinear with it — skip the
+                    // SVD and keep projecting through the cached basis.
+                    let mut skip = false;
+                    if gate.enabled() {
+                        p.project_into(grad, &mut ws.compact_grad);
+                        let cos = subspace_cosine(
+                            ws.compact_grad.frobenius_norm(),
+                            grad.frobenius_norm(),
+                        );
+                        rs.last_cosine = cos;
+                        let starving = schedule.is_adaptive()
+                            && rs.consecutive_skips >= MAX_ADAPTIVE_GATE_SKIPS;
+                        if gate.fires(cos) && !starving {
+                            skip = true;
+                            rs.gate_skips += 1;
+                            rs.consecutive_skips += 1;
+                            // Basis unchanged: the projection computed for
+                            // the cosine IS this step's compact gradient.
+                            compact_ready = true;
+                        }
+                    }
+                    if !skip {
+                        rs.consecutive_skips = 0;
+                        if schedule.is_adaptive() {
+                            if !ws.adaptive_warm {
+                                // Worst-case warm-up so later rank *growth*
+                                // (not just shrink) stays allocation-free.
+                                let min_dim = grad.rows.min(grad.cols);
+                                let long = grad.rows.max(grad.cols);
+                                let rmax = schedule.max_rank.min(min_dim).max(1);
+                                ws.warm_adaptive(min_dim, long, rmax);
+                                self.svd_ws
+                                    .warm_extract((rmax + SKETCH_OVERSAMPLE).min(min_dim), rmax);
+                            }
+                            // Save the outgoing basis, refresh at the
+                            // schedule-chosen rank, then — only when the
+                            // rank actually changed — carry the inner
+                            // optimizer's moments into the new coordinates
+                            // (AdaRankGrad-style projection) so a rank
+                            // change does not cold-start the EMAs. Same-
+                            // rank refreshes keep the fixed-rank semantics
+                            // (moments reinterpreted in the new basis), so
+                            // drop-state inners (Adam8bit, Adafactor) are
+                            // not wiped at every stable-rank boundary.
+                            let old_rank = p.rank;
+                            ws.prev_basis.copy_from(p.basis());
+                            let new_rank = p.refresh_ranked_with(
+                                grad,
+                                &schedule,
+                                &mut self.rng,
+                                &mut self.svd_ws,
+                                &mut ws.grad_t,
+                            );
+                            if new_rank != old_rank {
+                                basis_transition_into(
+                                    &ws.prev_basis,
+                                    p.basis(),
+                                    p.side,
+                                    &mut ws.trans,
+                                    &mut ws.trans_sq,
+                                );
+                                let mut remap = StateRemap::new(
+                                    p.side,
+                                    &ws.trans,
+                                    &ws.trans_sq,
+                                    &mut ws.remap_scratch,
+                                );
+                                self.inner.remap_state(param, &mut remap);
+                            }
+                            rs.rank = new_rank;
+                        } else {
+                            p.refresh_with(
+                                grad,
+                                self.cfg.rank,
+                                &mut self.rng,
+                                &mut self.svd_ws,
+                                &mut ws.grad_t,
+                            );
+                            rs.rank = p.rank;
+                        }
+                        rs.refreshes += 1;
+                    }
+                }
                 None => {
                     let p = Projector::compute_with(
                         grad,
                         self.cfg.rank,
                         &mut self.rng,
-                        self.cfg.quantize_projector,
+                        self.cfg.projector_quant,
+                    );
+                    self.rank_states.insert(
+                        param,
+                        RankState { rank: p.rank, refreshes: 1, ..Default::default() },
                     );
                     self.projectors.insert(param, p);
                 }
             }
-            // NOTE: like the official implementation, optimizer state is
-            // *not* reset on subspace switch — the moments' coordinates are
-            // reinterpreted in the new basis (§4.1 discusses the fidelity
-            // trade-off).
+            // NOTE: like the official implementation, a refresh that keeps
+            // the rank does *not* reset optimizer state — the moments'
+            // coordinates are reinterpreted in the new basis (§4.1
+            // discusses the fidelity trade-off). Adaptive schedules remap
+            // the moments explicitly only when the rank — and therefore
+            // the compact shape — changed.
         }
         let proj = self.projectors.get(&param).expect("projector exists after refresh");
-        proj.project_into(grad, &mut ws.compact_grad);
+        if !compact_ready {
+            proj.project_into(grad, &mut ws.compact_grad);
+        }
         // Run the inner optimizer in the compact space against a zero
         // scratch weight with lr=1: the scratch then holds -N_t (the
         // normalized update), regardless of which optimizer it is.
@@ -392,6 +743,18 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
         self.projectors.clear();
         self.steps.clear();
         self.workspaces.clear();
+        self.rank_states.clear();
+    }
+
+    fn rank_profile(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> =
+            self.projectors.iter().map(|(&p, proj)| (p, proj.rank)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn gate_skips(&self) -> u64 {
+        self.rank_states.values().map(|r| r.gate_skips).sum()
     }
 }
 
@@ -554,7 +917,7 @@ mod tests {
         // convergence: same order as f32 GaLore on the toy problem.
         let mut rng = Rng::new(9);
         let cfg_f32 = GaLoreConfig { rank: 8, update_freq: 50, scale: 0.25, ..Default::default() };
-        let cfg_q8 = GaLoreConfig { quantize_projector: true, ..cfg_f32 };
+        let cfg_q8 = GaLoreConfig { projector_quant: ProjectorQuant::Block8, ..cfg_f32 };
         let mut g_f32 = GaLore::new(cfg_f32, adam());
         let mut g_q8 = GaLore::new(cfg_q8, adam());
         let mut w1 = Matrix::randn(32, 64, 1.0, &mut rng);
@@ -583,7 +946,8 @@ mod tests {
             rank: 4,
             update_freq: 3,
             scale: 0.25,
-            quantize_projector: true,
+            projector_quant: ProjectorQuant::Block8,
+            ..Default::default()
         };
         let mut gal = GaLore::new(cfg, adam());
         let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
@@ -682,5 +1046,120 @@ mod tests {
         let (f_gal, l_gal) = run(true, &mut rng.child(2000));
         assert!(l_adam < 0.05 * f_adam, "adam {f_adam} -> {l_adam}");
         assert!(l_gal < 0.10 * f_gal, "galore {f_gal} -> {l_gal}");
+    }
+
+    #[test]
+    fn dyn8_projector_store_trains_and_shrinks_memory() {
+        // The dynamic-code store must behave like Block8: ~1/4 projector
+        // memory, closely tracking trajectory.
+        let mut rng = Rng::new(31);
+        let base = GaLoreConfig { rank: 8, update_freq: 50, scale: 0.25, ..Default::default() };
+        let cfg_d8 = GaLoreConfig { projector_quant: ProjectorQuant::Dyn8, ..base };
+        let mut g_f32 = GaLore::new(base, adam());
+        let mut g_d8 = GaLore::new(cfg_d8, adam());
+        let mut w1 = Matrix::randn(32, 64, 1.0, &mut rng);
+        let mut w2 = w1.clone();
+        for s in 0..30 {
+            let g = Matrix::randn(32, 64, 1.0, &mut rng.child(s));
+            g_f32.step(0, &mut w1, &g, 0.01);
+            g_d8.step(0, &mut w2, &g, 0.01);
+        }
+        let p = g_d8.projector(0).unwrap();
+        assert!(p.is_quantized());
+        assert_eq!(p.quant(), ProjectorQuant::Dyn8);
+        assert!(p.nbytes() * 3 < g_f32.projector(0).unwrap().nbytes());
+        let mut d = w1.clone();
+        d.sub_assign(&w2);
+        assert!(d.frobenius_norm() < 0.05 * w1.frobenius_norm());
+    }
+
+    #[test]
+    fn decay_schedule_shrinks_rank_and_state_at_refresh() {
+        let cfg = GaLoreConfig {
+            rank: 16,
+            update_freq: 4,
+            scale: 0.25,
+            rank_schedule: RankScheduleKind::Decay,
+            rank_floor: 2,
+            rank_decay: 0.5,
+            ..Default::default()
+        };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut rng = Rng::new(41);
+        let mut w = Matrix::randn(24, 40, 1.0, &mut rng);
+        let mut ranks = Vec::new();
+        let mut bytes = Vec::new();
+        for s in 0..14 {
+            let g = Matrix::randn(24, 40, 1.0, &mut rng.child(s));
+            gal.step(0, &mut w, &g, 0.01);
+            ranks.push(gal.projector(0).unwrap().rank);
+            bytes.push(gal.state_bytes());
+        }
+        // Refreshes at t=0 (create, r=16), t=4 (r=8), t=8 (r=4), t=12 (r=2).
+        assert_eq!(ranks[0], 16);
+        assert_eq!(ranks[5], 8);
+        assert_eq!(ranks[9], 4);
+        assert_eq!(ranks[13], 2);
+        assert!(bytes.windows(2).skip(1).all(|w| w[1] <= w[0]), "state grew: {bytes:?}");
+        assert_eq!(gal.rank_state(0).unwrap().rank, 2);
+        assert!(w.all_finite());
+    }
+
+    #[test]
+    fn spectral_schedule_finds_planted_gradient_rank() {
+        // Gradients of exact rank 3: the spectral policy must settle near
+        // rank 3 (within the floor band) while training stays finite.
+        let cfg = GaLoreConfig {
+            rank: 12,
+            update_freq: 5,
+            scale: 0.25,
+            rank_schedule: RankScheduleKind::Spectral,
+            rank_floor: 2,
+            rank_energy: 0.999,
+            ..Default::default()
+        };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut rng = Rng::new(43);
+        let u = Matrix::randn(28, 3, 1.0, &mut rng);
+        let mut w = Matrix::randn(28, 36, 1.0, &mut rng);
+        for s in 0..12 {
+            let v = Matrix::randn(3, 36, 1.0, &mut rng.child(s));
+            let g = matmul(&u, &v); // exact rank 3
+            gal.step(0, &mut w, &g, 0.01);
+        }
+        let r = gal.projector(0).unwrap().rank;
+        assert!((2..=5).contains(&r), "spectral rank {r} far from planted 3");
+        assert!(w.all_finite());
+    }
+
+    #[test]
+    fn gate_skips_refresh_when_subspace_stable() {
+        // The same gradient repeated: after the first refresh the cached
+        // basis captures it fully (cos ~ 1), so every later boundary must
+        // be skipped and the basis must stay bit-stable.
+        let cfg = GaLoreConfig {
+            rank: 4,
+            update_freq: 2,
+            scale: 0.25,
+            refresh_gate_cos: 0.9,
+            ..Default::default()
+        };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut rng = Rng::new(47);
+        let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
+        // Rank-2 gradient: a rank-4 basis captures it entirely (cos ~ 1).
+        let u = Matrix::randn(16, 2, 1.0, &mut rng);
+        let v = Matrix::randn(2, 24, 1.0, &mut rng);
+        let g = matmul(&u, &v);
+        gal.step(0, &mut w, &g, 0.01);
+        let basis0 = gal.projector(0).unwrap().basis().clone();
+        for _ in 1..9 {
+            gal.step(0, &mut w, &g, 0.01);
+        }
+        let rs = gal.rank_state(0).unwrap();
+        assert_eq!(rs.refreshes, 1, "SVD ran despite a stable subspace");
+        assert_eq!(rs.gate_skips, 4, "boundaries at t=2,4,6,8 should all skip");
+        assert!(rs.last_cosine > 0.9, "cosine {}", rs.last_cosine);
+        assert_eq!(gal.projector(0).unwrap().basis().data, basis0.data);
     }
 }

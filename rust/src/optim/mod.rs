@@ -16,13 +16,17 @@
 mod adafactor;
 mod adam;
 mod adam8bit;
+pub mod adaptive;
 pub mod galore;
+pub mod rank;
 mod sgd;
 
 pub use adafactor::Adafactor;
 pub use adam::{Adam, AdamConfig};
 pub use adam8bit::Adam8bit;
-pub use galore::{GaLore, GaLoreConfig, ProjSide, Projector};
+pub use adaptive::{basis_transition_into, RankState, StateRemap};
+pub use galore::{GaLore, GaLoreConfig, ProjSide, Projector, ProjectorQuant};
+pub use rank::{subspace_cosine, RankSchedule, RankScheduleKind, RefreshGate};
 pub use sgd::Sgd;
 
 use crate::tensor::Matrix;
@@ -43,6 +47,27 @@ pub trait Optimizer: Send {
     /// Hook for subspace/trainer events ("new subspace / merge"); no-op by
     /// default.
     fn reset_state(&mut self) {}
+
+    /// Called by `GaLore<O>` when a projected parameter's compact space
+    /// changes shape (rank adaptation): carry this parameter's state into
+    /// the new coordinates via `remap`, or at minimum drop the
+    /// parameter's state so the next `step` re-creates it at the new
+    /// shape. Optimizers that can never be a GaLore inner (or hold no
+    /// per-shape state) may keep the no-op default.
+    fn remap_state(&mut self, _param: usize, _remap: &mut StateRemap<'_>) {}
+
+    /// (param, rank) pairs for every low-rank-projected parameter —
+    /// non-empty only for GaLore wrappers. Lets the coordinator report
+    /// per-layer ranks through `Box<dyn Optimizer>` without downcasting.
+    fn rank_profile(&self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+
+    /// Total lazy-refresh-gate skips across parameters (non-zero only for
+    /// GaLore wrappers running with `refresh_gate_cos` enabled).
+    fn gate_skips(&self) -> u64 {
+        0
+    }
 }
 
 /// Bias-correction factor `1 - beta^t` shared by the moment optimizers.

@@ -1,0 +1,306 @@
+//! Per-parameter rank policies for the GaLore projector.
+//!
+//! GaLore as published fixes one projection rank `r` for the whole run, but
+//! the gradient's effective rank is neither uniform across layers nor
+//! constant over training: Q-GaLore (arXiv:2407.08296) observes that some
+//! layers' gradient subspaces converge early and tolerate aggressively
+//! quantized, rarely-refreshed projectors, and AdaRankGrad
+//! (arXiv:2410.17881) shows the gradient rank *shrinks* as training
+//! proceeds and can be adapted online. This module holds the pure policy
+//! pieces of the rank-adaptation subsystem (`optim::adaptive` wires them
+//! into `GaLore<O>`):
+//!
+//! * [`RankSchedule`] — decides each layer's rank at subspace-refresh
+//!   boundaries, from nothing (fixed), a multiplicative decay, or the
+//!   singular spectrum the randomized SVD already computes at refresh.
+//! * [`RefreshGate`] — the Q-GaLore-style cosine-similarity lazy-refresh
+//!   gate: skip the SVD entirely when the cached basis still captures the
+//!   current gradient.
+//!
+//! # Choosing a rank schedule
+//!
+//! * **`fixed`** (default) — the paper's behavior: rank `r` everywhere,
+//!   forever. Use it for apples-to-apples reproductions and whenever the
+//!   fused (artifact) hot path is in play — the AOT kernels are lowered for
+//!   fixed shapes.
+//! * **`decay`** — halve (or `rank_decay`-multiply) each layer's rank at
+//!   every subspace refresh until `rank_floor`. A blunt instrument, but it
+//!   needs no spectral information, is monotone in memory (optimizer-state
+//!   bytes never grow — pinned by `tests/adaptive_props.rs`), and mirrors
+//!   the Fig. 5-style observation that late training tolerates much
+//!   smaller subspaces. Start from the paper's `r` and set `rank_floor` to
+//!   `r/8` unless the loss curve says otherwise.
+//! * **`spectral`** — at each refresh pick the smallest rank whose sketch
+//!   singular values capture `rank_energy` (default 0.99) of the sketch
+//!   energy, clamped to `[rank_floor, rank]`. This is the AdaRankGrad-style
+//!   choice: layers whose gradients are genuinely low-rank shrink early and
+//!   hard, layers that stay high-rank keep their budget, and a layer whose
+//!   spectrum re-fattens can grow back (up to the oversampling window per
+//!   refresh). Prefer it whenever memory matters and the workload is not
+//!   shape-locked to artifacts.
+//!
+//! The lazy-refresh gate (`refresh_gate_cos`, 0 = off) composes with every
+//! schedule: a typical setting of `0.6–0.9` skips most late-training SVDs
+//! once subspaces stabilize, which is where Q-GaLore's wins come from.
+//! Higher thresholds are stricter (fewer skips); `>= 1` is rejected by
+//! validation because cosines never exceed 1.
+
+/// Which rank policy drives a run (`galore.rank_schedule` in configs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankScheduleKind {
+    /// The paper's behavior: one fixed rank for the whole run.
+    Fixed,
+    /// Multiply the rank by `decay` at every subspace refresh (rounding
+    /// down, stepping by at least 1 while above `floor`, so slow decays
+    /// cannot stall at a rounding fixed point), down to `floor`.
+    Decay,
+    /// Pick the smallest rank capturing `energy` of the refresh sketch's
+    /// squared singular values, within `[floor, max_rank]`.
+    Spectral,
+}
+
+impl RankScheduleKind {
+    pub fn parse(s: &str) -> Option<RankScheduleKind> {
+        Some(match s {
+            "fixed" => RankScheduleKind::Fixed,
+            "decay" => RankScheduleKind::Decay,
+            "spectral" | "adaptive" => RankScheduleKind::Spectral,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RankScheduleKind::Fixed => "fixed",
+            RankScheduleKind::Decay => "decay",
+            RankScheduleKind::Spectral => "spectral",
+        }
+    }
+}
+
+/// A per-parameter rank schedule: the policy plus its band and knobs.
+/// Pure decision logic — no optimizer state — so it is trivially testable
+/// and `Copy`-cheap to thread through the coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct RankSchedule {
+    pub kind: RankScheduleKind,
+    /// Initial rank and ceiling (the `galore.rank` knob). Buffers are
+    /// warmed at this size, so staying under it keeps rank *growth*
+    /// allocation-free too.
+    pub max_rank: usize,
+    /// Lower bound for the adaptive policies.
+    pub floor: usize,
+    /// Multiplicative factor per refresh (`Decay`; in (0, 1]).
+    pub decay: f32,
+    /// Cumulative-energy target (`Spectral`; in (0, 1]).
+    pub energy: f32,
+}
+
+impl RankSchedule {
+    /// The schedule every run without adaptive knobs gets.
+    pub fn fixed(rank: usize) -> RankSchedule {
+        RankSchedule {
+            kind: RankScheduleKind::Fixed,
+            max_rank: rank,
+            floor: rank,
+            decay: 1.0,
+            energy: 1.0,
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.kind != RankScheduleKind::Fixed
+    }
+
+    /// Clamp a candidate rank into the schedule band and the matrix's
+    /// feasible range (`min(m, n)`).
+    pub fn clamp(&self, r: usize, min_dim: usize) -> usize {
+        r.max(self.floor).min(self.max_rank).min(min_dim).max(1)
+    }
+
+    /// Decide the rank for the refresh that is about to happen.
+    /// `sq_spectrum` holds the *squared* singular values of the refresh
+    /// sketch, descending (empty for policies that do not need it — the
+    /// spectral policy then keeps the current rank).
+    pub fn next_rank(&self, current: usize, min_dim: usize, sq_spectrum: &[f32]) -> usize {
+        match self.kind {
+            RankScheduleKind::Fixed => self.clamp(self.max_rank, min_dim),
+            RankScheduleKind::Decay => {
+                // Round down and force at least one step of progress:
+                // ceil() would stall at a fixed point above the floor for
+                // any decay > (r-1)/r (e.g. 0.9 stalls at rank 9 forever).
+                let shrunk = ((current as f32) * self.decay).floor() as usize;
+                let shrunk = if self.decay < 1.0 {
+                    shrunk.min(current.saturating_sub(1))
+                } else {
+                    current
+                };
+                self.clamp(shrunk, min_dim)
+            }
+            RankScheduleKind::Spectral => {
+                if sq_spectrum.is_empty() {
+                    return self.clamp(current, min_dim);
+                }
+                let total: f32 = sq_spectrum.iter().map(|&e| e.max(0.0)).sum();
+                if total <= 0.0 {
+                    // Zero gradient sketch: nothing to capture.
+                    return self.clamp(self.floor, min_dim);
+                }
+                let target = self.energy * total;
+                let mut acc = 0.0f32;
+                let mut r = sq_spectrum.len();
+                for (i, &e) in sq_spectrum.iter().enumerate() {
+                    acc += e.max(0.0);
+                    if acc >= target {
+                        r = i + 1;
+                        break;
+                    }
+                }
+                self.clamp(r, min_dim)
+            }
+        }
+    }
+}
+
+/// The Q-GaLore-style lazy-refresh gate. `threshold <= 0` disables it.
+#[derive(Clone, Copy, Debug)]
+pub struct RefreshGate {
+    /// Skip the SVD at a refresh boundary when the cosine similarity
+    /// between the gradient and its projection onto the cached subspace
+    /// meets this threshold (the new basis would be nearly collinear with
+    /// the cached one).
+    pub threshold: f32,
+}
+
+impl RefreshGate {
+    pub fn disabled() -> RefreshGate {
+        RefreshGate { threshold: 0.0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.threshold > 0.0
+    }
+
+    /// The gate *fires* — the refresh SVD is skipped — iff the gate is
+    /// enabled and the cosine meets the threshold (the property pinned by
+    /// `tests/adaptive_props.rs`).
+    pub fn fires(&self, cosine: f32) -> bool {
+        self.enabled() && cosine >= self.threshold
+    }
+}
+
+/// Cosine of the angle between the gradient and its projection onto the
+/// cached subspace: `‖Pᵀ G‖_F / ‖G‖_F` (Left side; `‖G Q‖_F / ‖G‖_F`
+/// Right). 1.0 means the subspace still captures the gradient entirely;
+/// 0.0 means the gradient is orthogonal to it. A (near-)zero gradient
+/// reports 1.0 — there is nothing to refresh for. Computed from norms the
+/// step has on hand anyway, so gating costs one projection and no SVD.
+pub fn subspace_cosine(projected_norm: f32, grad_norm: f32) -> f32 {
+    if grad_norm <= f32::EPSILON {
+        return 1.0;
+    }
+    (projected_norm / grad_norm).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spectral(max_rank: usize, floor: usize, energy: f32) -> RankSchedule {
+        RankSchedule { kind: RankScheduleKind::Spectral, max_rank, floor, decay: 1.0, energy }
+    }
+
+    #[test]
+    fn fixed_always_returns_clamped_max() {
+        let s = RankSchedule::fixed(16);
+        assert_eq!(s.next_rank(16, 64, &[]), 16);
+        assert_eq!(s.next_rank(16, 8, &[]), 8); // clamped to min_dim
+        assert!(!s.is_adaptive());
+    }
+
+    #[test]
+    fn decay_is_monotone_and_respects_floor() {
+        let s = RankSchedule {
+            kind: RankScheduleKind::Decay,
+            max_rank: 32,
+            floor: 4,
+            decay: 0.5,
+            energy: 1.0,
+        };
+        let mut r = 32;
+        let mut seen = vec![r];
+        for _ in 0..6 {
+            let next = s.next_rank(r, 64, &[]);
+            assert!(next <= r, "decay grew the rank: {r} -> {next}");
+            r = next;
+            seen.push(r);
+        }
+        assert_eq!(r, 4, "decay did not reach the floor: {seen:?}");
+    }
+
+    #[test]
+    fn slow_decay_never_stalls_above_the_floor() {
+        // decay = 0.9 used to stall at rank 9 (ceil fixed point); the
+        // forced step-down must walk it all the way to the floor.
+        let s = RankSchedule {
+            kind: RankScheduleKind::Decay,
+            max_rank: 32,
+            floor: 2,
+            decay: 0.9,
+            energy: 1.0,
+        };
+        let mut r = 32;
+        for _ in 0..40 {
+            let next = s.next_rank(r, 64, &[]);
+            assert!(next <= r);
+            r = next;
+        }
+        assert_eq!(r, 2, "slow decay stalled above the floor");
+        // decay = 1.0 means "hold": no forced shrink.
+        let hold = RankSchedule { decay: 1.0, ..s };
+        assert_eq!(hold.next_rank(16, 64, &[]), 16);
+    }
+
+    #[test]
+    fn spectral_picks_planted_rank() {
+        // 4 dominant squared singular values, then near-zero noise:
+        // energy=0.99 lands exactly on r=4.
+        let planted = [100.0f32, 90.0, 80.0, 70.0, 1e-4, 1e-4, 1e-4, 1e-4];
+        assert_eq!(spectral(8, 1, 0.99).next_rank(8, 64, &planted), 4);
+        // A heavier tail: looser targets shrink, stricter targets grow.
+        let heavy = [100.0f32, 90.0, 80.0, 70.0, 30.0, 20.0, 10.0, 5.0];
+        assert!(spectral(8, 1, 0.50).next_rank(8, 64, &heavy) <= 3);
+        assert_eq!(spectral(8, 1, 0.80).next_rank(8, 64, &heavy), 4);
+        assert_eq!(spectral(8, 1, 0.99).next_rank(8, 64, &heavy), 8);
+    }
+
+    #[test]
+    fn spectral_clamps_into_band() {
+        let spec = [100.0f32, 0.0, 0.0, 0.0];
+        assert_eq!(spectral(8, 3, 0.99).next_rank(8, 64, &spec), 3); // floor
+        let flat = [1.0f32; 16];
+        assert_eq!(spectral(8, 1, 1.0).next_rank(8, 64, &flat), 8); // ceiling
+        // Degenerate inputs keep a sane rank.
+        assert_eq!(spectral(8, 2, 0.99).next_rank(5, 64, &[]), 5);
+        assert_eq!(spectral(8, 2, 0.99).next_rank(5, 64, &[0.0, 0.0]), 2);
+    }
+
+    #[test]
+    fn gate_fires_iff_threshold_met() {
+        let g = RefreshGate { threshold: 0.8 };
+        assert!(g.enabled());
+        assert!(g.fires(0.8));
+        assert!(g.fires(0.95));
+        assert!(!g.fires(0.7999));
+        let off = RefreshGate::disabled();
+        assert!(!off.enabled());
+        assert!(!off.fires(1.0));
+    }
+
+    #[test]
+    fn cosine_is_ratio_clamped() {
+        assert!((subspace_cosine(0.5, 1.0) - 0.5).abs() < 1e-7);
+        assert_eq!(subspace_cosine(1.2, 1.0), 1.0); // numeric overshoot clamps
+        assert_eq!(subspace_cosine(0.0, 0.0), 1.0); // zero gradient
+    }
+}

@@ -46,6 +46,13 @@ impl Optimizer for Sgd {
     fn reset_state(&mut self) {
         self.velocity.clear();
     }
+
+    /// Rank adaptation: momentum is a first moment — rotate it linearly.
+    fn remap_state(&mut self, param: usize, remap: &mut super::adaptive::StateRemap<'_>) {
+        if let Some(v) = self.velocity.get_mut(&param) {
+            remap.first_moment(v);
+        }
+    }
 }
 
 #[cfg(test)]

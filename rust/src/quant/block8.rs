@@ -24,6 +24,16 @@ impl QuantizedBuf {
     pub fn nbytes(&self) -> usize {
         self.q.len() + 4 * self.scales.len()
     }
+
+    /// Resize in place to `len` elements, reusing the allocations
+    /// (shrinking never reallocates; growing back within prior capacity is
+    /// free too — the contract the rank-adaptation refresh relies on).
+    /// Contents are unspecified afterwards; callers re-quantize.
+    pub fn resize(&mut self, len: usize) {
+        self.q.resize(len, 0);
+        self.scales.resize(len.div_ceil(BLOCK), 1.0);
+        self.len = len;
+    }
 }
 
 /// Quantize a f32 slice into a fresh buffer.

@@ -124,6 +124,15 @@ impl DynQuantBuf {
         self.q.len() + 4 * self.scales.len()
     }
 
+    /// Resize in place to `len` elements, reusing the allocations
+    /// (shrinking never reallocates — the rank-adaptation refresh relies
+    /// on this). Contents are unspecified afterwards; callers re-quantize.
+    pub fn resize(&mut self, len: usize) {
+        self.q.resize(len, 0);
+        self.scales.resize(len.div_ceil(DYN_BLOCK), 1.0);
+        self.len = len;
+    }
+
     pub fn quantize_from(&mut self, x: &[f32]) {
         assert_eq!(x.len(), self.len);
         let code = if self.signed { DynamicCode::signed() } else { DynamicCode::unsigned() };

@@ -6,7 +6,7 @@
 use galore::coordinator::thread_alloc_stats;
 use galore::linalg::{qr, qr_with, QrScratch};
 use galore::lowrank::{Factorized, Lora, LoraConfig};
-use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer};
+use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer, ProjectorQuant};
 use galore::rng::Rng;
 use galore::tensor::{
     matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into, Matrix,
@@ -156,7 +156,8 @@ fn quantized_galore_step_is_allocation_free_after_warmup() {
         rank: 8,
         update_freq: 1000,
         scale: 0.25,
-        quantize_projector: true,
+        projector_quant: ProjectorQuant::Block8,
+        ..Default::default()
     };
     let mut gal = GaLore::new(cfg, Adam::new(AdamConfig::default()));
     let mut rng = Rng::new(5);

@@ -1,0 +1,184 @@
+//! Direct property tests for the quantization codecs (`quant::block8`,
+//! `quant::dynamic`) — previously exercised only indirectly through the
+//! optimizers: max-abs error bounds, idempotent re-quantization, and
+//! empty/odd-length buffers.
+
+use galore::quant::{dequantize, quantize, DynQuantBuf, QuantizedBuf, BLOCK, DYN_BLOCK};
+use galore::rng::Rng;
+use galore::testing::for_all_cases;
+
+fn random_buf(len: usize, scale_pow: i32, rng: &mut Rng) -> Vec<f32> {
+    let mut x = vec![0.0f32; len];
+    rng.fill_normal(&mut x, 10f32.powi(scale_pow));
+    x
+}
+
+// -- block8 (linear absmax int8) --------------------------------------------
+
+#[test]
+fn prop_block8_roundtrip_error_within_half_step() {
+    // |x - dq(q(x))| <= absmax/254 per block (half of one int8 step), at
+    // every length including 0, 1, odd tails, and exact block multiples.
+    for_all_cases(
+        "block8 max-abs error bound",
+        |rng: &mut Rng| {
+            let len = [0, 1, 7, BLOCK - 1, BLOCK, BLOCK + 1, 2 * BLOCK + 13]
+                [rng.below(7)];
+            let pow = rng.below(7) as i32 - 3; // magnitudes 1e-3 .. 1e3
+            (random_buf(len, pow, rng), rng.next_u64())
+        },
+        32,
+        |case| {
+            let (x, _) = case;
+            let buf = quantize(x);
+            let xd = dequantize(&buf);
+            x.chunks(BLOCK).zip(xd.chunks(BLOCK)).all(|(c, d)| {
+                let absmax = c.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                c.iter()
+                    .zip(d.iter())
+                    .all(|(&a, &b)| (a - b).abs() <= absmax / 254.0 + 1e-7)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_block8_requantization_is_idempotent() {
+    // Quantizing an already-quantized signal must not walk: the second
+    // round-trip reproduces the first to within a small fraction of one
+    // quantization step (the absmax element pins the block scale).
+    for_all_cases(
+        "block8 idempotent requantization",
+        |rng: &mut Rng| {
+            let len = 1 + rng.below(2 * BLOCK + 40);
+            let pow = rng.below(5) as i32 - 2;
+            random_buf(len, pow, rng)
+        },
+        32,
+        |x| {
+            let x1 = dequantize(&quantize(x));
+            let x2 = dequantize(&quantize(&x1));
+            x1.chunks(BLOCK).zip(x2.chunks(BLOCK)).all(|(c1, c2)| {
+                let absmax = c1.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let tol = absmax / 200.0 + 1e-7;
+                c1.iter().zip(c2.iter()).all(|(&a, &b)| (a - b).abs() <= tol)
+            })
+        },
+    );
+}
+
+#[test]
+fn block8_empty_and_degenerate_buffers() {
+    let empty = quantize(&[]);
+    assert_eq!(empty.len, 0);
+    assert_eq!(empty.nbytes(), 0);
+    assert!(dequantize(&empty).is_empty());
+    // Single element, all-zero block, single-block resize round trip.
+    let one = quantize(&[3.5]);
+    assert_eq!(dequantize(&one).len(), 1);
+    assert!((dequantize(&one)[0] - 3.5).abs() < 3.5 / 127.0);
+    let zeros = quantize(&vec![0.0; BLOCK + 3]);
+    assert!(dequantize(&zeros).iter().all(|&v| v == 0.0));
+    let mut buf = QuantizedBuf::zeros(2 * BLOCK);
+    buf.resize(BLOCK / 2);
+    assert_eq!(buf.len, BLOCK / 2);
+    assert_eq!(buf.q.len(), BLOCK / 2);
+    assert_eq!(buf.scales.len(), 1);
+}
+
+// -- dynamic (logarithmic) 8-bit code ---------------------------------------
+
+#[test]
+fn prop_dynamic_roundtrip_error_bounded() {
+    // The dynamic code's largest gap is in its top decade: 0.9/64 of the
+    // block scale for the signed table (0.9/128 unsigned), so the
+    // round-trip error is bounded by half that gap plus float noise.
+    for_all_cases(
+        "dynamic max-abs error bound",
+        |rng: &mut Rng| {
+            let len = [1, 5, DYN_BLOCK - 1, DYN_BLOCK, DYN_BLOCK + 9, 3 * DYN_BLOCK + 17]
+                [rng.below(6)];
+            let pow = rng.below(7) as i32 - 3;
+            let signed = rng.below(2) == 0;
+            let mut x = random_buf(len, pow, rng);
+            if !signed {
+                for v in x.iter_mut() {
+                    *v = v.abs();
+                }
+            }
+            (x, signed)
+        },
+        32,
+        |case| {
+            let (x, signed) = case;
+            let mut buf = DynQuantBuf::zeros(x.len(), *signed);
+            buf.quantize_from(x);
+            let mut out = vec![0.0f32; x.len()];
+            buf.dequantize_into(&mut out);
+            x.chunks(DYN_BLOCK).zip(out.chunks(DYN_BLOCK)).all(|(c, d)| {
+                let absmax = c.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let tol = 0.0075 * absmax + 1e-7 * absmax.max(1.0);
+                c.iter().zip(d.iter()).all(|(&a, &b)| (a - b).abs() <= tol)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_dynamic_requantization_is_idempotent() {
+    // The absmax element of each block encodes to the code value 1.0, so
+    // re-quantizing a round-tripped block reuses the same scale and the
+    // same code cells — the second round trip must match the first to
+    // within float noise.
+    for_all_cases(
+        "dynamic idempotent requantization",
+        |rng: &mut Rng| {
+            let len = 1 + rng.below(2 * DYN_BLOCK + 21);
+            random_buf(len, 0, rng)
+        },
+        32,
+        |x| {
+            let mut buf = DynQuantBuf::zeros(x.len(), true);
+            buf.quantize_from(x);
+            let mut x1 = vec![0.0f32; x.len()];
+            buf.dequantize_into(&mut x1);
+            let mut buf2 = DynQuantBuf::zeros(x1.len(), true);
+            buf2.quantize_from(&x1);
+            let mut x2 = vec![0.0f32; x1.len()];
+            buf2.dequantize_into(&mut x2);
+            x1.chunks(DYN_BLOCK).zip(x2.chunks(DYN_BLOCK)).all(|(c1, c2)| {
+                let absmax = c1.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let tol = 1e-5 * absmax.max(1e-20) + 1e-9;
+                c1.iter().zip(c2.iter()).all(|(&a, &b)| (a - b).abs() <= tol)
+            })
+        },
+    );
+}
+
+#[test]
+fn dynamic_empty_and_degenerate_buffers() {
+    let mut empty = DynQuantBuf::zeros(0, true);
+    empty.quantize_from(&[]);
+    let mut out: Vec<f32> = Vec::new();
+    empty.dequantize_into(&mut out);
+    assert_eq!(empty.nbytes(), 0);
+    // All-zero block round-trips to zeros (scale guard against absmax 0).
+    let mut zeros = DynQuantBuf::zeros(DYN_BLOCK + 5, false);
+    zeros.quantize_from(&vec![0.0; DYN_BLOCK + 5]);
+    let mut zout = vec![1.0f32; DYN_BLOCK + 5];
+    zeros.dequantize_into(&mut zout);
+    assert!(zout.iter().all(|&v| v == 0.0));
+    // In-place resize keeps the block/scale bookkeeping consistent.
+    let mut buf = DynQuantBuf::zeros(3 * DYN_BLOCK, true);
+    buf.resize(DYN_BLOCK + 1);
+    assert_eq!(buf.len, DYN_BLOCK + 1);
+    assert_eq!(buf.q.len(), DYN_BLOCK + 1);
+    assert_eq!(buf.scales.len(), 2);
+    let x: Vec<f32> = (0..DYN_BLOCK + 1).map(|i| (i as f32 - 100.0) / 64.0).collect();
+    buf.quantize_from(&x);
+    let mut out = vec![0.0f32; DYN_BLOCK + 1];
+    buf.dequantize_into(&mut out);
+    for (a, b) in x.iter().zip(out.iter()) {
+        assert!((a - b).abs() <= 0.02 * 4.0 + 1e-6, "{a} vs {b}");
+    }
+}
