@@ -82,6 +82,13 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// Data-parallel worker count (1 = single process).
     pub dp_workers: usize,
+    /// Write a full-state (v2) checkpoint every N steps (0 = off). Under
+    /// data parallelism rank 0 writes; replicas are bit-identical.
+    pub checkpoint_every: usize,
+    /// Periodic-checkpoint retention: keep the newest N (0 = keep all).
+    pub checkpoint_keep_last: usize,
+    /// Directory for periodic checkpoints.
+    pub checkpoint_dir: String,
 }
 
 impl RunConfig {
@@ -109,7 +116,47 @@ impl RunConfig {
             layerwise: false,
             eval_every: 0,
             dp_workers: 1,
+            checkpoint_every: 0,
+            checkpoint_keep_last: 3,
+            checkpoint_dir: "checkpoints".into(),
         }
+    }
+
+    /// Stable one-line digest of every knob that shapes the training
+    /// *trajectory*. Stored in v2 checkpoints and compared on resume: a
+    /// run resumed under a different fingerprint could silently diverge
+    /// from the uninterrupted trajectory, so `Trainer::restore` rejects
+    /// the mismatch. Observation-only knobs (eval cadence, checkpoint
+    /// cadence, CSV paths) are deliberately excluded.
+    pub fn fingerprint(&self) -> String {
+        let g = &self.galore;
+        format!(
+            "model={} method={} steps={} batch={} lr={} warmup={} final_lr={} wd={} \
+             seed={} layerwise={} dp={} rank={} T={} scale={} quant={} schedule={} \
+             floor={} decay={} energy={} gate={} lowrank_rank={} merge={}",
+            self.model.name,
+            self.method.label(),
+            self.steps,
+            self.batch,
+            self.lr,
+            self.warmup_frac,
+            self.final_lr_frac,
+            self.weight_decay,
+            self.seed,
+            self.layerwise,
+            self.dp_workers,
+            g.rank,
+            g.update_freq,
+            g.scale,
+            g.projector_quant.label(),
+            g.rank_schedule.label(),
+            g.rank_floor,
+            g.rank_decay,
+            g.rank_energy,
+            g.refresh_gate_cos,
+            self.lowrank_rank,
+            self.relora_merge_every,
+        )
     }
 
     /// Reject configs that would fault at step time instead of panicking
@@ -138,6 +185,13 @@ impl RunConfig {
         }
         if self.dp_workers == 0 {
             return Err("dp_workers must be >= 1".into());
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
+            return Err(
+                "checkpoint.every is set but checkpoint.dir is empty — periodic \
+                 checkpoints need a directory"
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -215,6 +269,15 @@ impl RunConfig {
         }
         if let Some(v) = doc.get_parse("lowrank", "merge_every") {
             cfg.relora_merge_every = v;
+        }
+        if let Some(v) = doc.get_parse("checkpoint", "every") {
+            cfg.checkpoint_every = v;
+        }
+        if let Some(v) = doc.get_parse("checkpoint", "keep_last") {
+            cfg.checkpoint_keep_last = v;
+        }
+        if let Some(v) = doc.get("checkpoint", "dir") {
+            cfg.checkpoint_dir = v.to_string();
         }
         cfg.validate()?;
         Ok(cfg)
@@ -349,6 +412,39 @@ mod tests {
         let mut c = base;
         c.galore.refresh_gate_cos = 0.9;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn from_toml_parses_checkpoint_knobs() {
+        let doc = TomlDoc::parse(
+            "model = \"nano\"\n[checkpoint]\nevery = 50\nkeep_last = 2\ndir = \"ckpts/run1\"\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.checkpoint_every, 50);
+        assert_eq!(cfg.checkpoint_keep_last, 2);
+        assert_eq!(cfg.checkpoint_dir, "ckpts/run1");
+        // Empty dir with cadence on is rejected.
+        let bad =
+            TomlDoc::parse("model = \"nano\"\n[checkpoint]\nevery = 50\ndir = \"\"\n").unwrap();
+        assert!(RunConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_trajectory_knobs_only() {
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        let fp = base.fingerprint();
+        assert_eq!(fp, base.clone().fingerprint(), "fingerprint must be deterministic");
+        let mut diff = base.clone();
+        diff.lr *= 2.0;
+        assert_ne!(fp, diff.fingerprint(), "lr must change the fingerprint");
+        let mut diff = base.clone();
+        diff.galore.rank = 8;
+        assert_ne!(fp, diff.fingerprint());
+        let mut same = base.clone();
+        same.eval_every = 10;
+        same.checkpoint_every = 50;
+        assert_eq!(fp, same.fingerprint(), "observation knobs must not change it");
     }
 
     #[test]

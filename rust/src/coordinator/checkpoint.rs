@@ -1,98 +1,276 @@
-//! Binary checkpointing: weights + step counter + config fingerprint.
+//! Versioned binary checkpointing.
 //!
-//! Format (little-endian):
-//!   magic "GLCK" | version u32 | step u64 | model-name len u32 + bytes |
+//! Two on-disk formats share the `"GLCK"` magic:
+//!
+//! **v1** (legacy, weights-only):
+//!   magic "GLCK" | version=1 u32 | step u64 | model-name str |
 //!   n_tensors u32 | per tensor: rows u32, cols u32, f32 data.
+//!
+//! **v2** (full training state — the resume format):
+//!   magic "GLCK" | version=2 u32 | payload-len u64 | payload |
+//!   fnv1a-64(payload) u64
+//!
+//! where the payload is
+//!   config-fingerprint str | step u64 | model-name str |
+//!   n_tensors u32 | tensors (v1 layout) |
+//!   n_sections u32 | per section: 4-byte tag, length-prefixed bytes.
+//!
+//! Sections carry the rest of the training state as opaque `crate::ser`
+//! blobs — optimizer moments/projectors (`OPTS`), the fused-path state
+//! (`FUSD`), the data-loader position (`LOAD`), and metrics counters
+//! (`METR`). Unknown tags are preserved on read, so older binaries skip
+//! newer sections instead of failing. The trailing checksum plus the
+//! length prefix reject truncated or bit-flipped files up front — a
+//! partial checkpoint must never poison a resume.
+//!
+//! Durability: every save writes to a `.tmp` sibling, fsyncs, then
+//! renames over the target, so a crash mid-save leaves either the old
+//! checkpoint or the new one — never a torn file.
+//!
+//! v1 files still load (`read` returns [`Checkpoint::V1`]); resuming from
+//! one restores weights + step only and the trainer warns loudly that
+//! optimizer moments are cold-started.
 
 use crate::model::{ModelConfig, ParamStore};
-use crate::tensor::Matrix;
-use std::io::{Read, Write};
+use crate::ser::{self, Reader};
+use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"GLCK";
-const VERSION: u32 = 1;
+const VERSION_V1: u32 = 1;
+const VERSION_V2: u32 = 2;
 
-pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> std::io::Result<()> {
-    let path = path.as_ref();
+/// Section tags for the v2 state blobs.
+pub const SEC_OPTIMIZER: &[u8; 4] = b"OPTS";
+pub const SEC_FUSED: &[u8; 4] = b"FUSD";
+pub const SEC_LOADER: &[u8; 4] = b"LOAD";
+pub const SEC_METRICS: &[u8; 4] = b"METR";
+
+/// Everything a v2 checkpoint carries beyond the weights.
+pub struct V2Data {
+    pub fingerprint: String,
+    pub step: u64,
+    pub params: ParamStore,
+    pub sections: Vec<([u8; 4], Vec<u8>)>,
+}
+
+impl V2Data {
+    pub fn section(&self, tag: &[u8; 4]) -> Option<&[u8]> {
+        self.sections.iter().find(|(t, _)| t == tag).map(|(_, b)| b.as_slice())
+    }
+}
+
+/// A parsed checkpoint of either version.
+pub enum Checkpoint {
+    V1 { params: ParamStore, step: u64 },
+    V2(V2Data),
+}
+
+fn err(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
+/// FNV-1a 64-bit — cheap, dependency-free integrity check for the v2
+/// payload (not cryptographic; it guards against truncation and stray
+/// bit flips, which is what crash-interrupted writes produce).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Write `bytes` to `path` atomically: `.tmp` sibling, flush + fsync,
+/// rename. The target is either the old file or the complete new one.
+fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&step.to_le_bytes())?;
-    let name = params.cfg.name.as_bytes();
-    f.write_all(&(name.len() as u32).to_le_bytes())?;
-    f.write_all(name)?;
-    f.write_all(&(params.tensors.len() as u32).to_le_bytes())?;
-    for t in &params.tensors {
-        f.write_all(&(t.rows as u32).to_le_bytes())?;
-        f.write_all(&(t.cols as u32).to_le_bytes())?;
-        // Safe little-endian serialization of the f32 payload.
-        let mut bytes = Vec::with_capacity(t.data.len() * 4);
-        for &v in &t.data {
-            bytes.extend_from_slice(&v.to_le_bytes());
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
         }
-        f.write_all(&bytes)?;
     }
-    Ok(())
-}
-
-fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn err(msg: &str) -> std::io::Error {
-    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
-}
-
-/// Load a checkpoint; the model config must match the stored name.
-pub fn load(path: impl AsRef<Path>, cfg: &'static ModelConfig) -> std::io::Result<(ParamStore, u64)> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(err("not a GaLore checkpoint"));
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| err(format!("checkpoint path {path:?} has no file name")))?;
+    let mut tmp_name = file_name.to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.flush()?;
+        f.sync_all()?;
     }
-    if read_u32(&mut f)? != VERSION {
-        return Err(err("unsupported checkpoint version"));
+    std::fs::rename(&tmp, path)
+}
+
+fn put_params(out: &mut Vec<u8>, params: &ParamStore) {
+    ser::put_str(out, &params.cfg.name);
+    ser::put_u32(out, params.tensors.len() as u32);
+    for t in &params.tensors {
+        ser::put_matrix(out, t);
     }
-    let step = read_u64(&mut f)?;
-    let name_len = read_u32(&mut f)? as usize;
-    let mut name = vec![0u8; name_len];
-    f.read_exact(&mut name)?;
-    let name = String::from_utf8(name).map_err(|_| err("bad model name"))?;
+}
+
+fn read_params(r: &mut Reader<'_>, cfg: &'static ModelConfig) -> std::io::Result<ParamStore> {
+    let name = r.str().map_err(err)?;
     if name != cfg.name {
-        return Err(err(&format!("checkpoint is for model '{name}', not '{}'", cfg.name)));
+        return Err(err(format!("checkpoint is for model '{name}', not '{}'", cfg.name)));
     }
-    let n = read_u32(&mut f)? as usize;
+    let n = r.u32().map_err(err)? as usize;
     let mut store = ParamStore::zeros(cfg);
     if n != store.tensors.len() {
-        return Err(err("tensor count mismatch"));
+        return Err(err(format!(
+            "tensor count mismatch: checkpoint has {n}, schema has {}",
+            store.tensors.len()
+        )));
     }
     for (i, t) in store.tensors.iter_mut().enumerate() {
-        let rows = read_u32(&mut f)? as usize;
-        let cols = read_u32(&mut f)? as usize;
-        if (rows, cols) != (t.rows, t.cols) {
-            return Err(err(&format!("tensor {i} shape mismatch")));
+        let m = r.matrix().map_err(err)?;
+        if m.shape() != t.shape() {
+            return Err(err(format!(
+                "tensor {i} shape mismatch: checkpoint {:?}, schema {:?}",
+                m.shape(),
+                t.shape()
+            )));
         }
-        let mut bytes = vec![0u8; rows * cols * 4];
-        f.read_exact(&mut bytes)?;
-        let data: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        *t = Matrix::from_vec(rows, cols, data);
+        *t = m;
     }
-    Ok((store, step))
+    Ok(store)
+}
+
+/// Save a weights-only v1 checkpoint (legacy format; kept for
+/// interoperability with pre-v2 tooling). Atomic like every save.
+pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> std::io::Result<()> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    ser::put_u32(&mut out, VERSION_V1);
+    ser::put_u64(&mut out, step);
+    put_params(&mut out, params);
+    atomic_write(path.as_ref(), &out)
+}
+
+/// Save a full-state v2 checkpoint: weights + step + config fingerprint +
+/// the given state sections (tag, blob), checksummed and written
+/// atomically.
+pub fn save_v2(
+    path: impl AsRef<Path>,
+    params: &ParamStore,
+    fingerprint: &str,
+    step: u64,
+    sections: &[(&[u8; 4], &[u8])],
+) -> std::io::Result<()> {
+    let mut payload = Vec::new();
+    ser::put_str(&mut payload, fingerprint);
+    ser::put_u64(&mut payload, step);
+    put_params(&mut payload, params);
+    ser::put_u32(&mut payload, sections.len() as u32);
+    for (tag, blob) in sections {
+        payload.extend_from_slice(*tag);
+        ser::put_bytes(&mut payload, blob);
+    }
+    let mut out = Vec::with_capacity(payload.len() + 24);
+    out.extend_from_slice(MAGIC);
+    ser::put_u32(&mut out, VERSION_V2);
+    ser::put_u64(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    ser::put_u64(&mut out, fnv1a64(&payload));
+    atomic_write(path.as_ref(), &out)
+}
+
+/// Parse a checkpoint of either version. v2 files are checksum-verified
+/// before any field is trusted; truncated or corrupted files are rejected
+/// with a descriptive error.
+pub fn read(path: impl AsRef<Path>, cfg: &'static ModelConfig) -> std::io::Result<Checkpoint> {
+    let bytes = std::fs::read(path.as_ref())?;
+    let mut r = Reader::new(&bytes);
+    let magic = r.take(4).map_err(err)?;
+    if magic != &MAGIC[..] {
+        return Err(err("not a GaLore checkpoint"));
+    }
+    match r.u32().map_err(err)? {
+        VERSION_V1 => {
+            let step = r.u64().map_err(err)?;
+            let params = read_params(&mut r, cfg)?;
+            r.expect_end().map_err(err)?;
+            Ok(Checkpoint::V1 { params, step })
+        }
+        VERSION_V2 => {
+            let payload_len = r.u64().map_err(err)? as usize;
+            let payload = r
+                .take(payload_len)
+                .map_err(|_| err("checkpoint truncated: payload shorter than header claims"))?;
+            let want = r.u64().map_err(|_| err("checkpoint truncated: checksum missing"))?;
+            r.expect_end().map_err(err)?;
+            let got = fnv1a64(payload);
+            if got != want {
+                return Err(err(format!(
+                    "checkpoint corrupted: checksum {got:#018x} != stored {want:#018x}"
+                )));
+            }
+            let mut p = Reader::new(payload);
+            let fingerprint = p.str().map_err(err)?;
+            let step = p.u64().map_err(err)?;
+            let params = read_params(&mut p, cfg)?;
+            let n_sections = p.u32().map_err(err)? as usize;
+            let mut sections = Vec::with_capacity(n_sections);
+            for _ in 0..n_sections {
+                let tag_bytes = p.take(4).map_err(err)?;
+                let tag = [tag_bytes[0], tag_bytes[1], tag_bytes[2], tag_bytes[3]];
+                let blob = p.bytes().map_err(err)?.to_vec();
+                sections.push((tag, blob));
+            }
+            p.expect_end().map_err(err)?;
+            Ok(Checkpoint::V2(V2Data { fingerprint, step, params, sections }))
+        }
+        v => Err(err(format!("unsupported checkpoint version {v}"))),
+    }
+}
+
+/// Load weights + step from a checkpoint of either version (the v1-era
+/// convenience API; full-state resume goes through `Trainer::restore`).
+pub fn load(
+    path: impl AsRef<Path>,
+    cfg: &'static ModelConfig,
+) -> std::io::Result<(ParamStore, u64)> {
+    match read(path, cfg)? {
+        Checkpoint::V1 { params, step } => Ok((params, step)),
+        Checkpoint::V2(d) => Ok((d.params, d.step)),
+    }
+}
+
+/// Retention: keep the lexicographically-last `keep_last` files in `dir`
+/// matching `prefix*.ckpt` (periodic names zero-pad the step, so
+/// lexicographic == chronological) and delete the rest. Returns how many
+/// files were removed. `keep_last == 0` keeps everything.
+pub fn prune(dir: impl AsRef<Path>, prefix: &str, keep_last: usize) -> std::io::Result<usize> {
+    if keep_last == 0 {
+        return Ok(0);
+    }
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(dir.as_ref())? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with(prefix) && name.ends_with(".ckpt") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    let mut removed = 0;
+    if names.len() > keep_last {
+        for name in &names[..names.len() - keep_last] {
+            std::fs::remove_file(dir.as_ref().join(name))?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+/// File name for a periodic checkpoint at `step` (zero-padded so
+/// lexicographic order is step order — the contract `prune` relies on).
+pub fn periodic_name(step: usize) -> String {
+    format!("step_{step:08}.ckpt")
 }
 
 #[cfg(test)]
@@ -100,11 +278,15 @@ mod tests {
     use super::*;
     use crate::model::{init_params, ModelConfig};
 
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("galore_test_ckpt").join(name)
+    }
+
     #[test]
     fn save_load_roundtrip() {
         let cfg = ModelConfig::by_name("nano").unwrap();
         let params = init_params(cfg, 42);
-        let path = std::env::temp_dir().join("galore_test_ckpt/nano.ckpt");
+        let path = tmp("nano.ckpt");
         save(&path, &params, 123).unwrap();
         let (loaded, step) = load(&path, cfg).unwrap();
         assert_eq!(step, 123);
@@ -114,21 +296,120 @@ mod tests {
     }
 
     #[test]
+    fn v2_roundtrip_with_sections() {
+        let cfg = ModelConfig::by_name("nano").unwrap();
+        let params = init_params(cfg, 7);
+        let path = tmp("nano_v2.ckpt");
+        let opt = vec![1u8, 2, 3, 4, 5];
+        let loader = vec![9u8; 17];
+        save_v2(&path, &params, "fp=test", 55, &[(SEC_OPTIMIZER, &opt), (SEC_LOADER, &loader)])
+            .unwrap();
+        match read(&path, cfg).unwrap() {
+            Checkpoint::V2(d) => {
+                assert_eq!(d.fingerprint, "fp=test");
+                assert_eq!(d.step, 55);
+                assert_eq!(d.section(SEC_OPTIMIZER), Some(opt.as_slice()));
+                assert_eq!(d.section(SEC_LOADER), Some(loader.as_slice()));
+                assert_eq!(d.section(SEC_FUSED), None);
+                for (a, b) in params.tensors.iter().zip(d.params.tensors.iter()) {
+                    assert_eq!(a.data, b.data);
+                }
+            }
+            _ => panic!("expected v2"),
+        }
+        // The convenience loader also reads v2 (weights + step).
+        let (_, step) = load(&path, cfg).unwrap();
+        assert_eq!(step, 55);
+    }
+
+    #[test]
     fn wrong_model_is_rejected() {
         let cfg = ModelConfig::by_name("nano").unwrap();
         let params = init_params(cfg, 0);
-        let path = std::env::temp_dir().join("galore_test_ckpt/mismatch.ckpt");
+        let path = tmp("mismatch.ckpt");
         save(&path, &params, 1).unwrap();
         let other = ModelConfig::by_name("micro").unwrap();
         assert!(load(&path, other).is_err());
+        let path2 = tmp("mismatch_v2.ckpt");
+        save_v2(&path2, &params, "fp", 1, &[]).unwrap();
+        assert!(load(&path2, other).is_err());
     }
 
     #[test]
     fn garbage_is_rejected() {
-        let path = std::env::temp_dir().join("galore_test_ckpt/garbage.ckpt");
+        let path = tmp("garbage.ckpt");
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, b"not a checkpoint").unwrap();
         let cfg = ModelConfig::by_name("nano").unwrap();
         assert!(load(&path, cfg).is_err());
+    }
+
+    #[test]
+    fn truncated_v2_is_rejected() {
+        let cfg = ModelConfig::by_name("nano").unwrap();
+        let params = init_params(cfg, 3);
+        let path = tmp("trunc.ckpt");
+        save_v2(&path, &params, "fp", 9, &[(SEC_OPTIMIZER, &[1, 2, 3])]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // A crash mid-write can leave any prefix; every prefix must fail
+        // cleanly (v1 had no defense against this).
+        for frac in [1, 2, 3, 4] {
+            let cut = bytes.len() * frac / 5;
+            let path_cut = tmp("trunc_cut.ckpt");
+            std::fs::write(&path_cut, &bytes[..cut]).unwrap();
+            assert!(read(&path_cut, cfg).is_err(), "prefix of {cut} bytes parsed");
+        }
+    }
+
+    #[test]
+    fn bit_flip_is_rejected_by_checksum() {
+        let cfg = ModelConfig::by_name("nano").unwrap();
+        let params = init_params(cfg, 3);
+        let path = tmp("flip.ckpt");
+        save_v2(&path, &params, "fp", 9, &[]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let e = read(&path, cfg).unwrap_err();
+        assert!(e.to_string().contains("checksum") || e.to_string().contains("corrupt"), "{e}");
+    }
+
+    #[test]
+    fn saves_are_atomic_no_tmp_left_behind() {
+        let cfg = ModelConfig::by_name("nano").unwrap();
+        let params = init_params(cfg, 1);
+        // Own directory: other tests write checkpoints concurrently and a
+        // scan of the shared dir could catch their in-flight .tmp files.
+        let path = std::env::temp_dir().join("galore_test_ckpt_atomic").join("atomic.ckpt");
+        save_v2(&path, &params, "fp", 1, &[]).unwrap();
+        // Overwrite an existing checkpoint in place.
+        save_v2(&path, &params, "fp", 2, &[]).unwrap();
+        let (_, step) = load(&path, cfg).unwrap();
+        assert_eq!(step, 2);
+        let dir = path.parent().unwrap();
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(!name.ends_with(".tmp"), "stale tmp file {name}");
+        }
+    }
+
+    #[test]
+    fn prune_keeps_newest_checkpoints() {
+        let dir = std::env::temp_dir().join("galore_test_prune");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in [10usize, 20, 30, 40] {
+            std::fs::write(dir.join(periodic_name(step)), b"x").unwrap();
+        }
+        std::fs::write(dir.join("other.txt"), b"x").unwrap();
+        let removed = prune(&dir, "step_", 2).unwrap();
+        assert_eq!(removed, 2);
+        assert!(!dir.join(periodic_name(10)).exists());
+        assert!(!dir.join(periodic_name(20)).exists());
+        assert!(dir.join(periodic_name(30)).exists());
+        assert!(dir.join(periodic_name(40)).exists());
+        assert!(dir.join("other.txt").exists(), "prune must only touch its own files");
+        assert_eq!(prune(&dir, "step_", 0).unwrap(), 0, "keep_last=0 keeps everything");
     }
 }

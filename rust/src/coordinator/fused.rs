@@ -19,6 +19,7 @@ use crate::model::ParamStore;
 use crate::optim::{subspace_cosine, RefreshGate};
 use crate::rng::Rng;
 use crate::runtime::{Engine, Input};
+use crate::ser;
 use crate::tensor::{matmul_at_b_into, Matrix};
 use anyhow::{bail, Result};
 use std::collections::{HashMap, HashSet};
@@ -109,6 +110,65 @@ impl FusedGaLore {
 
     pub fn handles(&self, idx: usize) -> bool {
         self.handled.contains(&idx)
+    }
+
+    /// Checkpoint v2 (`FUSD` section): per-layer compact moments,
+    /// projector, and step counter, plus the refresh RNG and gate
+    /// counter. Staging buffers are per-step scratch and restart empty.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        ser::put_rng(out, &self.rng);
+        ser::put_u64(out, self.gate_skips);
+        let mut idxs: Vec<usize> = self.states.keys().copied().collect();
+        idxs.sort_unstable();
+        ser::put_u32(out, idxs.len() as u32);
+        for idx in idxs {
+            let s = &self.states[&idx];
+            ser::put_usize(out, idx);
+            ser::put_u64(out, s.t);
+            ser::put_matrix(out, &s.m);
+            ser::put_matrix(out, &s.v);
+            ser::put_matrix(out, &s.p);
+        }
+    }
+
+    pub fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.rng = r.rng()?;
+        self.gate_skips = r.u64()?;
+        self.states.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let idx = r.usize()?;
+            if !self.handled.contains(&idx) {
+                return Err(format!(
+                    "fused state for parameter {idx}, which this run's artifact set \
+                     does not handle"
+                ));
+            }
+            let t = r.u64()?;
+            let m = r.matrix()?;
+            let v = r.matrix()?;
+            let p = r.matrix()?;
+            if m.shape() != v.shape() {
+                return Err(format!(
+                    "fused param {idx}: M shape {:?} != V shape {:?}",
+                    m.shape(),
+                    v.shape()
+                ));
+            }
+            self.states.insert(
+                idx,
+                LayerState {
+                    m,
+                    v,
+                    p,
+                    t,
+                    g_short: Matrix::zeros(0, 0),
+                    w_short: Matrix::zeros(0, 0),
+                    pg: Matrix::zeros(0, 0),
+                },
+            );
+        }
+        Ok(())
     }
 
     pub fn state_bytes(&self) -> usize {

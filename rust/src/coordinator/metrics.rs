@@ -89,6 +89,12 @@ pub struct Metrics {
     pub eval_records: Vec<(usize, f32)>, // (step, eval loss)
     started: Instant,
     total_tokens: u64,
+    /// Tokens already counted when this process started — non-zero only
+    /// after a checkpoint restore. Throughput is a per-process
+    /// measurement, so `tokens_per_sec` excludes pre-resume tokens (the
+    /// restored cumulative counter over a fresh wall clock would report
+    /// absurd rates).
+    resumed_tokens: u64,
     /// Wall time spent inside artifact execution (for coordinator-overhead
     /// accounting in §Perf).
     pub exec_time: std::time::Duration,
@@ -112,6 +118,7 @@ impl Metrics {
             eval_records: Vec::new(),
             started: Instant::now(),
             total_tokens: 0,
+            resumed_tokens: 0,
             exec_time: std::time::Duration::ZERO,
             last_step_allocs: 0,
             last_step_alloc_bytes: 0,
@@ -144,9 +151,11 @@ impl Metrics {
         self.records.last().map(|r| r.loss)
     }
 
-    /// Mean loss over the final `n` steps (robust final metric).
+    /// Mean loss over the final `n` steps (robust final metric). `None`
+    /// for an empty window — `n == 0` used to divide by zero and return
+    /// NaN, which poisons any comparison downstream.
     pub fn tail_loss(&self, n: usize) -> Option<f32> {
-        if self.records.is_empty() {
+        if n == 0 || self.records.is_empty() {
             return None;
         }
         let tail = &self.records[self.records.len().saturating_sub(n)..];
@@ -162,12 +171,59 @@ impl Metrics {
         loss.exp()
     }
 
+    /// Tokens/s of *this process* (tokens restored from a checkpoint are
+    /// excluded — they were consumed on someone else's wall clock).
     pub fn tokens_per_sec(&self) -> f64 {
-        self.total_tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+        let session_tokens = self.total_tokens.saturating_sub(self.resumed_tokens);
+        session_tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
     }
 
     pub fn total_tokens(&self) -> u64 {
         self.total_tokens
+    }
+
+    /// Checkpoint v2: token counter plus the full step/eval history, so a
+    /// resumed run's CSV and tail metrics match the uninterrupted run's.
+    /// Wall-clock fields (`started`, `exec_time`) restart at resume —
+    /// throughput is a per-process measurement, not training state.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        crate::ser::put_u64(out, self.total_tokens);
+        crate::ser::put_u64(out, self.records.len() as u64);
+        for r in &self.records {
+            crate::ser::put_u64(out, r.step as u64);
+            crate::ser::put_f32(out, r.loss);
+            crate::ser::put_f32(out, r.lr);
+            crate::ser::put_u64(out, r.tokens as u64);
+        }
+        crate::ser::put_u64(out, self.eval_records.len() as u64);
+        for &(s, l) in &self.eval_records {
+            crate::ser::put_u64(out, s as u64);
+            crate::ser::put_f32(out, l);
+        }
+    }
+
+    pub fn load_state(&mut self, r: &mut crate::ser::Reader<'_>) -> Result<(), String> {
+        self.total_tokens = r.u64()?;
+        // Pre-resume tokens were consumed by another process: exclude
+        // them from this process's throughput measurement.
+        self.resumed_tokens = self.total_tokens;
+        let n = r.u64()? as usize;
+        self.records.clear();
+        for _ in 0..n {
+            let step = r.u64()? as usize;
+            let loss = r.f32()?;
+            let lr = r.f32()?;
+            let tokens = r.u64()? as usize;
+            self.records.push(StepRecord { step, loss, lr, tokens });
+        }
+        let n = r.u64()? as usize;
+        self.eval_records.clear();
+        for _ in 0..n {
+            let step = r.u64()? as usize;
+            let loss = r.f32()?;
+            self.eval_records.push((step, loss));
+        }
+        Ok(())
     }
 
     /// Write `step,loss,lr,tokens` CSV (plus eval rows) for figure benches.
@@ -202,6 +258,40 @@ mod tests {
         assert_eq!(m.tail_loss(2), Some(4.5));
         assert_eq!(m.total_tokens(), 1024);
         assert!(m.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn tail_loss_zero_window_is_none_not_nan() {
+        let mut m = Metrics::new();
+        m.log_step(0, 5.0, 0.01, 512);
+        assert_eq!(m.tail_loss(0), None, "n=0 used to return NaN");
+        assert_eq!(Metrics::new().tail_loss(0), None);
+        assert_eq!(Metrics::new().tail_loss(3), None);
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_history() {
+        let mut m = Metrics::new();
+        m.log_step(0, 5.0, 0.01, 512);
+        m.log_step(1, 4.5, 0.009, 512);
+        m.log_eval(1, 4.6);
+        let mut blob = Vec::new();
+        m.save_state(&mut blob);
+        let mut n = Metrics::new();
+        let mut r = crate::ser::Reader::new(&blob);
+        n.load_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(n.total_tokens(), 1024);
+        assert_eq!(n.records.len(), 2);
+        assert_eq!(n.records[1].loss, 4.5);
+        assert_eq!(n.eval_records, vec![(1, 4.6)]);
+        assert_eq!(n.tail_loss(2), m.tail_loss(2));
+        // Restored tokens were earned on another process's clock: they
+        // must not inflate this process's throughput.
+        assert_eq!(n.tokens_per_sec(), 0.0);
+        n.log_step(2, 4.0, 0.008, 512);
+        assert_eq!(n.total_tokens(), 1536);
+        assert!(n.tokens_per_sec() > 0.0);
     }
 
     #[test]

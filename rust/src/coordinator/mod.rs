@@ -8,7 +8,9 @@
 //!   all-reduce over channels.
 //! * [`schedule`] — warmup + cosine LR (Appendix C.1).
 //! * [`metrics`] — loss/ppl/throughput tracking, CSV sinks for figures.
-//! * [`checkpoint`] — binary weight checkpoints.
+//! * [`checkpoint`] — versioned full-training-state checkpoints (v2:
+//!   weights + optimizer moments + projectors + loader position + metrics,
+//!   atomic writes, checksum-verified; v1 weights-only files still load).
 
 pub mod checkpoint;
 pub mod fused;
@@ -18,6 +20,6 @@ pub mod schedule;
 pub mod trainer;
 
 pub use metrics::{thread_alloc_stats, AllocStats, Metrics};
-pub use parallel::{train_data_parallel, DpResult, Ring, RingHandle};
+pub use parallel::{train_data_parallel, train_data_parallel_resumable, DpResult, Ring, RingHandle};
 pub use schedule::LrSchedule;
 pub use trainer::{build_optimizer, Trainer};

@@ -131,6 +131,20 @@ pub struct DpResult {
 /// workers. Each worker holds a replica; gradients are ring-averaged each
 /// step. Returns the rank-0 metrics.
 pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
+    train_data_parallel_resumable(cfg, None)
+}
+
+/// As [`train_data_parallel`], optionally resuming from a full-state (v2)
+/// checkpoint. Checkpoint participation follows the replica invariant:
+/// replicas are bit-identical after every step (same averaged gradient,
+/// same seeds), so **rank 0 alone writes** periodic checkpoints
+/// (`cfg.checkpoint_every`) and **every replica restores** from the same
+/// file on resume — the loader position it carries (the shard counter)
+/// applies to each worker's own seed-offset corpus.
+pub fn train_data_parallel_resumable(
+    cfg: &RunConfig,
+    resume: Option<&std::path::Path>,
+) -> Result<DpResult> {
     let world = cfg.dp_workers.max(1);
     let handles = Ring::new(world).into_handles();
     let t0 = std::time::Instant::now();
@@ -138,6 +152,7 @@ pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
         let mut joins = Vec::new();
         for handle in handles {
             let cfg = cfg.clone();
+            let resume = resume.map(|p| p.to_path_buf());
             joins.push(scope.spawn(move || -> Result<(f32, f32, u64, usize)> {
                 let engine = Engine::new(default_dir())?;
                 // Disjoint shard streams per worker: offset the corpus seed.
@@ -145,7 +160,11 @@ pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
                     SyntheticCorpus::new(cfg.model.vocab, cfg.seed ^ 0xDA7A ^ (handle.rank as u64) << 32);
                 let loader = DataLoader::synthetic(corpus, cfg.batch, cfg.model.seq);
                 let mut trainer = Trainer::new(cfg.clone(), engine, loader)?;
-                for step in 0..cfg.steps {
+                if let Some(path) = &resume {
+                    trainer.restore_checkpoint(path)?;
+                }
+                while trainer.step < cfg.steps {
+                    let step = trainer.step;
                     let batch = trainer.loader.next_batch();
                     // Gradients land in the trainer's persistent buffers
                     // and are ring-reduced in place — no per-step clones.
@@ -166,6 +185,12 @@ pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
                         .log_step_allocs(a1.allocs - a0.allocs, a1.bytes - a0.bytes);
                     trainer.metrics.log_step(step, loss_buf[0], lr, batch.n_tokens());
                     trainer.step += 1;
+                    if handle.rank == 0
+                        && cfg.checkpoint_every > 0
+                        && trainer.step % cfg.checkpoint_every == 0
+                    {
+                        trainer.save_periodic_checkpoint()?;
+                    }
                 }
                 let eval = trainer.eval(2)?;
                 Ok((

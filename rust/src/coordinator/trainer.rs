@@ -2,6 +2,7 @@
 //! optimizer updates out — with §4.3 per-layer weight updates and the
 //! paper's full method roster.
 
+use super::checkpoint;
 use super::fused::FusedGaLore;
 use super::metrics::{thread_alloc_stats, Metrics};
 use super::schedule::LrSchedule;
@@ -57,19 +58,46 @@ pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Box<dyn Optimizer>
 
 /// Copy artifact outputs into persistent gradient buffers, allocating the
 /// buffers only on first use (thereafter a plain memcpy per tensor —
-/// EXPERIMENTS.md §Perf).
-fn stage_grads(outputs: &[Output], metas: &[ParamMeta], bufs: &mut Vec<Matrix>) {
-    debug_assert_eq!(outputs.len(), metas.len());
+/// EXPERIMENTS.md §Perf). Shape agreement between the artifact outputs
+/// and the parameter schema is a *real* error, not a `debug_assert`: a
+/// release-mode artifact/schema mismatch used to copy misaligned
+/// gradients silently.
+fn stage_grads(outputs: &[Output], metas: &[ParamMeta], bufs: &mut Vec<Matrix>) -> Result<()> {
+    if outputs.len() != metas.len() {
+        bail!(
+            "artifact returned {} gradient tensors, parameter schema has {} — \
+             artifact set and model schema disagree (re-run `make artifacts`?)",
+            outputs.len(),
+            metas.len()
+        );
+    }
     if bufs.is_empty() {
         for (o, meta) in outputs.iter().zip(metas.iter()) {
+            if o.data.len() != meta.numel() {
+                bail!(
+                    "gradient for '{}' has {} elements, schema says {}x{}",
+                    meta.name,
+                    o.data.len(),
+                    meta.rows,
+                    meta.cols
+                );
+            }
             bufs.push(Matrix::from_vec(meta.rows, meta.cols, o.data.clone()));
         }
-        return;
+        return Ok(());
     }
-    for (b, o) in bufs.iter_mut().zip(outputs.iter()) {
-        debug_assert_eq!(b.len(), o.data.len());
+    for ((b, o), meta) in bufs.iter_mut().zip(outputs.iter()).zip(metas.iter()) {
+        if b.len() != o.data.len() {
+            bail!(
+                "gradient for '{}' has {} elements, staged buffer holds {}",
+                meta.name,
+                o.data.len(),
+                b.len()
+            );
+        }
         b.data.copy_from_slice(&o.data);
     }
+    Ok(())
 }
 
 pub struct Trainer {
@@ -175,7 +203,7 @@ impl Trainer {
         self.metrics.exec_time += t0.elapsed();
         let loss = outputs[0].scalar();
         let bufs = if staging { &mut self.mb_bufs } else { &mut self.grad_bufs };
-        stage_grads(&outputs[1..], &self.params.metas, bufs);
+        stage_grads(&outputs[1..], &self.params.metas, bufs)?;
         Ok(loss)
     }
 
@@ -296,13 +324,24 @@ impl Trainer {
         Ok((total / n_batches as f64) as f32)
     }
 
-    /// Run the configured number of steps with periodic eval.
+    /// Run the configured number of steps with periodic eval and (when
+    /// `checkpoint_every` is set) periodic full-state checkpoints with
+    /// `checkpoint_keep_last` retention. Resume-aware: starts from
+    /// `self.step`, and the in-loop eval skips the final step so the
+    /// run's last eval is logged exactly once (the old loop logged a
+    /// duplicate row when `steps % eval_every == 0`).
     pub fn run(&mut self) -> Result<()> {
-        for _ in self.step..self.cfg.steps {
+        while self.step < self.cfg.steps {
             self.train_step()?;
-            if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
+            if self.cfg.eval_every > 0
+                && self.step % self.cfg.eval_every == 0
+                && self.step < self.cfg.steps
+            {
                 let l = self.eval(2)?;
                 self.metrics.log_eval(self.step, l);
+            }
+            if self.cfg.checkpoint_every > 0 && self.step % self.cfg.checkpoint_every == 0 {
+                self.save_periodic_checkpoint()?;
             }
         }
         let l = self.eval(4)?;
@@ -314,5 +353,130 @@ impl Trainer {
     /// `memory::formulas` predictions by the integration tests).
     pub fn optimizer_state_bytes(&self) -> usize {
         self.opt.state_bytes() + self.fused.as_ref().map_or(0, |f| f.state_bytes())
+    }
+
+    /// Write a full-state (v2) checkpoint: weights, step, config
+    /// fingerprint, optimizer state (moments, projectors, RNG streams),
+    /// fused-path state when enabled, data-loader position, and metrics
+    /// counters. Atomic on disk; bit-exact on resume.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut opt_blob = Vec::new();
+        self.opt
+            .save_state(&mut opt_blob)
+            .map_err(|e| anyhow!("cannot checkpoint optimizer state: {e}"))?;
+        let mut loader_blob = Vec::new();
+        self.loader.save_state(&mut loader_blob);
+        let mut metrics_blob = Vec::new();
+        self.metrics.save_state(&mut metrics_blob);
+        let fused_blob = self.fused.as_ref().map(|f| {
+            let mut b = Vec::new();
+            f.save_state(&mut b);
+            b
+        });
+        let mut sections: Vec<(&[u8; 4], &[u8])> = vec![
+            (checkpoint::SEC_OPTIMIZER, opt_blob.as_slice()),
+            (checkpoint::SEC_LOADER, loader_blob.as_slice()),
+            (checkpoint::SEC_METRICS, metrics_blob.as_slice()),
+        ];
+        if let Some(fb) = &fused_blob {
+            sections.push((checkpoint::SEC_FUSED, fb.as_slice()));
+        }
+        checkpoint::save_v2(
+            path,
+            &self.params,
+            &self.cfg.fingerprint(),
+            self.step as u64,
+            &sections,
+        )?;
+        Ok(())
+    }
+
+    /// Periodic checkpoint into `cfg.checkpoint_dir` with retention
+    /// (`cfg.checkpoint_keep_last`, 0 = keep all).
+    pub fn save_periodic_checkpoint(&self) -> Result<()> {
+        let dir = std::path::Path::new(&self.cfg.checkpoint_dir);
+        self.save_checkpoint(dir.join(checkpoint::periodic_name(self.step)))?;
+        checkpoint::prune(dir, "step_", self.cfg.checkpoint_keep_last)?;
+        Ok(())
+    }
+
+    /// Restore a checkpoint into this trainer. v2 restores the *entire*
+    /// training state and requires the stored config fingerprint to match
+    /// this run's (a mismatched config would silently diverge from the
+    /// uninterrupted trajectory). v1 checkpoints still load — weights and
+    /// step only, with a loud warning that optimizer moments cold-start.
+    /// For fused runs call `enable_fused_galore` before restoring.
+    pub fn restore_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        match checkpoint::read(path, self.cfg.model)? {
+            checkpoint::Checkpoint::V1 { params, step } => {
+                eprintln!(
+                    "WARNING: {path:?} is a v1 (weights-only) checkpoint: optimizer \
+                     moments, projector bases, and the data-loader position are NOT \
+                     restored. The resumed run will cold-start its moments and will \
+                     not match an uninterrupted trajectory. Re-save with `galore \
+                     train --checkpoint-every N` to get full-state (v2) checkpoints."
+                );
+                self.params = params;
+                self.step = step as usize;
+                self.opt.reset_state();
+                Ok(())
+            }
+            checkpoint::Checkpoint::V2(d) => {
+                let want = self.cfg.fingerprint();
+                if d.fingerprint != want {
+                    bail!(
+                        "checkpoint config mismatch — resuming would diverge from the \
+                         uninterrupted trajectory.\n  checkpoint: {}\n  this run:   {want}",
+                        d.fingerprint
+                    );
+                }
+                let opt_bytes = d
+                    .section(checkpoint::SEC_OPTIMIZER)
+                    .ok_or_else(|| anyhow!("checkpoint is missing its optimizer-state section"))?;
+                let loader_bytes = d
+                    .section(checkpoint::SEC_LOADER)
+                    .ok_or_else(|| anyhow!("checkpoint is missing its data-loader section"))?;
+                let metrics_bytes = d
+                    .section(checkpoint::SEC_METRICS)
+                    .ok_or_else(|| anyhow!("checkpoint is missing its metrics section"))?;
+                let fused_bytes = d.section(checkpoint::SEC_FUSED);
+                match (&self.fused, fused_bytes) {
+                    (Some(_), None) => bail!(
+                        "this run uses the fused GaLore path but the checkpoint has no \
+                         fused-path state (it was written by a non-fused run)"
+                    ),
+                    (None, Some(_)) => bail!(
+                        "checkpoint contains fused-path state — call \
+                         enable_fused_galore() before restoring"
+                    ),
+                    _ => {}
+                }
+                let mut r = crate::ser::Reader::new(opt_bytes);
+                self.opt.load_state(&mut r).map_err(|e| anyhow!("optimizer state: {e}"))?;
+                r.expect_end().map_err(|e| anyhow!("optimizer state: {e}"))?;
+                let mut r = crate::ser::Reader::new(loader_bytes);
+                self.loader.load_state(&mut r).map_err(|e| anyhow!("data-loader state: {e}"))?;
+                r.expect_end().map_err(|e| anyhow!("data-loader state: {e}"))?;
+                let mut r = crate::ser::Reader::new(metrics_bytes);
+                self.metrics.load_state(&mut r).map_err(|e| anyhow!("metrics state: {e}"))?;
+                r.expect_end().map_err(|e| anyhow!("metrics state: {e}"))?;
+                if let (Some(f), Some(fb)) = (&mut self.fused, fused_bytes) {
+                    let mut r = crate::ser::Reader::new(fb);
+                    f.load_state(&mut r).map_err(|e| anyhow!("fused-path state: {e}"))?;
+                    r.expect_end().map_err(|e| anyhow!("fused-path state: {e}"))?;
+                }
+                self.params = d.params;
+                self.step = d.step as usize;
+                Ok(())
+            }
+        }
+    }
+
+    /// Convenience: build a trainer for `cfg` and restore `path` into it.
+    pub fn resume(cfg: RunConfig, path: impl AsRef<std::path::Path>) -> Result<Trainer> {
+        let mut trainer = Trainer::from_config(cfg)?;
+        trainer.restore_checkpoint(path)?;
+        Ok(trainer)
     }
 }

@@ -4,9 +4,16 @@
 //! shape the AOT training artifact was lowered for. Two sources:
 //! fresh-shard synthetic data (pre-training; never repeats) or a fixed
 //! token buffer cycled with a shuffled window order (fine-tuning epochs).
+//!
+//! Both sources reserve genuinely held-out evaluation data: synthetic
+//! sources use a shard range training never mints, fixed sources a tail
+//! slice of windows that is excluded from the shuffled training order
+//! *and* separated by a `seq`-token gap, so no training window shares even
+//! one token with the eval tail.
 
 use super::SyntheticCorpus;
 use crate::rng::Rng;
+use crate::ser;
 
 /// One training batch: row-major (batch, seq) token ids and their
 /// next-token targets.
@@ -25,8 +32,21 @@ impl Batch {
 }
 
 enum Source {
-    Synthetic { corpus: SyntheticCorpus, next_shard: u64 },
-    Fixed { data: Vec<i32>, order: Vec<usize>, cursor: usize, rng: Rng },
+    Synthetic {
+        corpus: SyntheticCorpus,
+        next_shard: u64,
+    },
+    Fixed {
+        data: Vec<i32>,
+        /// Shuffled *training* window starts — never reaches `eval_start`.
+        order: Vec<usize>,
+        cursor: usize,
+        rng: Rng,
+        /// First window start of the held-out eval tail.
+        eval_start: usize,
+        /// Number of eval windows in the tail.
+        n_eval: usize,
+    },
 }
 
 pub struct DataLoader {
@@ -42,13 +62,29 @@ impl DataLoader {
     }
 
     /// Fixed-buffer loader (fine-tuning / eval) over windows of `seq`+1.
+    /// The last ~10% of windows (at least one) are reserved as a held-out
+    /// eval tail; training windows additionally stop `seq` starts earlier,
+    /// so training and eval are disjoint at the *token* level, not just by
+    /// window index.
     pub fn fixed(data: Vec<i32>, batch: usize, seq: usize, seed: u64) -> Self {
         assert!(data.len() > seq + 1, "corpus shorter than one window");
         let n_windows = data.len() - seq - 1;
-        let mut order: Vec<usize> = (0..n_windows).collect();
+        let n_eval = (n_windows / 10).max(1);
+        let eval_start = n_windows - n_eval;
+        let n_train = eval_start.saturating_sub(seq);
+        assert!(
+            n_train >= 1,
+            "fixed corpus too short to reserve a held-out eval tail: \
+             {n_windows} windows of seq {seq} leave no training windows"
+        );
+        let mut order: Vec<usize> = (0..n_train).collect();
         let mut rng = Rng::new(seed);
         rng.shuffle(&mut order);
-        DataLoader { batch, seq, source: Source::Fixed { data, order, cursor: 0, rng } }
+        DataLoader {
+            batch,
+            seq,
+            source: Source::Fixed { data, order, cursor: 0, rng, eval_start, n_eval },
+        }
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -70,7 +106,7 @@ impl DataLoader {
                     targets.extend_from_slice(&row[1..]);
                 }
             }
-            Source::Fixed { data, order, cursor, rng } => {
+            Source::Fixed { data, order, cursor, rng, .. } => {
                 for _ in 0..b {
                     if *cursor >= order.len() {
                         rng.shuffle(order);
@@ -87,7 +123,8 @@ impl DataLoader {
     }
 
     /// A held-out evaluation batch that training never sees: synthetic
-    /// sources use a reserved shard range, fixed sources the tail windows.
+    /// sources use a reserved shard range, fixed sources the reserved tail
+    /// windows (disjoint from every training window's tokens).
     pub fn eval_batch(&self, index: u64) -> Batch {
         let (b, s) = (self.batch, self.seq);
         let mut tokens = Vec::with_capacity(b * s);
@@ -102,16 +139,82 @@ impl DataLoader {
                     targets.extend_from_slice(&row[1..]);
                 }
             }
-            Source::Fixed { data, .. } => {
-                let n_windows = data.len() - s - 1;
+            Source::Fixed { data, eval_start, n_eval, .. } => {
                 for i in 0..b {
-                    let start = ((index as usize * b + i) * 97) % n_windows;
+                    // Walk the tail directly — a fancier stride (the old
+                    // `* 97`) collapses to one window whenever the factor
+                    // divides n_eval.
+                    let start = *eval_start + (index as usize * b + i) % *n_eval;
                     tokens.extend_from_slice(&data[start..start + s]);
                     targets.extend_from_slice(&data[start + 1..start + s + 1]);
                 }
             }
         }
         Batch { batch: b, seq: s, tokens, targets }
+    }
+
+    /// Checkpoint v2: the loader's *position* — the synthetic shard
+    /// counter, or the fixed source's shuffled order + cursor + shuffle
+    /// RNG. The corpus/data themselves are reconstructed from the run
+    /// config, so the blob stays small.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        match &self.source {
+            Source::Synthetic { next_shard, .. } => {
+                ser::put_u8(out, 0);
+                ser::put_u64(out, *next_shard);
+            }
+            Source::Fixed { order, cursor, rng, .. } => {
+                ser::put_u8(out, 1);
+                ser::put_u64(out, *cursor as u64);
+                ser::put_u64(out, order.len() as u64);
+                for &w in order {
+                    ser::put_u64(out, w as u64);
+                }
+                ser::put_rng(out, rng);
+            }
+        }
+    }
+
+    /// Restore a position saved by [`DataLoader::save_state`] into a
+    /// loader built from the same config. Errors on a source-kind or
+    /// window-count mismatch (different corpus/seq than the checkpoint).
+    pub fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        let tag = r.u8()?;
+        match (&mut self.source, tag) {
+            (Source::Synthetic { next_shard, .. }, 0) => {
+                *next_shard = r.u64()?;
+                Ok(())
+            }
+            (Source::Fixed { order, cursor, rng, .. }, 1) => {
+                let cur = r.u64()? as usize;
+                let n = r.u64()? as usize;
+                if n != order.len() {
+                    return Err(format!(
+                        "fixed loader has {} training windows, checkpoint has {n} \
+                         (different corpus or seq)",
+                        order.len()
+                    ));
+                }
+                if cur > n {
+                    return Err(format!("loader cursor {cur} beyond {n} windows"));
+                }
+                let limit = order.len();
+                for w in order.iter_mut() {
+                    let v = r.u64()? as usize;
+                    if v >= limit {
+                        return Err(format!("window start {v} outside training range {limit}"));
+                    }
+                    *w = v;
+                }
+                *cursor = cur;
+                *rng = r.rng()?;
+                Ok(())
+            }
+            (_, t) => Err(format!(
+                "loader source kind mismatch: checkpoint tag {t} does not match this run's \
+                 data source"
+            )),
+        }
     }
 }
 
@@ -167,5 +270,89 @@ mod tests {
         let e1 = dl.eval_batch(1);
         assert_eq!(e0.tokens, e0b.tokens, "eval must be deterministic");
         assert_ne!(e0.tokens, e1.tokens);
+    }
+
+    #[test]
+    fn fixed_eval_tail_is_token_disjoint_from_training() {
+        // Ramp data: a token's value IS its position, so disjointness of
+        // token values proves disjointness of the underlying slices. This
+        // pins the fix for the old eval path, which strode over *all*
+        // windows and so evaluated on training data.
+        let data: Vec<i32> = (0..400).collect();
+        let mut dl = DataLoader::fixed(data, 4, 8, 7);
+        let mut max_train_token = i32::MIN;
+        // Several epochs so every training window is visited.
+        for _ in 0..300 {
+            let b = dl.next_batch();
+            max_train_token = max_train_token.max(*b.targets.iter().max().unwrap());
+        }
+        let mut min_eval_token = i32::MAX;
+        for i in 0..64 {
+            let e = dl.eval_batch(i);
+            min_eval_token = min_eval_token.min(*e.tokens.iter().min().unwrap());
+        }
+        assert!(
+            max_train_token < min_eval_token,
+            "training tokens reach {max_train_token}, eval tail starts at {min_eval_token}"
+        );
+    }
+
+    #[test]
+    fn fixed_eval_batches_are_deterministic_and_vary() {
+        let data: Vec<i32> = (0..400).collect();
+        let dl = DataLoader::fixed(data, 4, 8, 7);
+        assert_eq!(dl.eval_batch(0).tokens, dl.eval_batch(0).tokens);
+        assert_ne!(dl.eval_batch(0).tokens, dl.eval_batch(1).tokens);
+    }
+
+    #[test]
+    fn synthetic_state_roundtrip_resumes_stream() {
+        let mut a = DataLoader::synthetic(SyntheticCorpus::new(128, 5), 2, 16);
+        for _ in 0..7 {
+            a.next_batch();
+        }
+        let mut blob = Vec::new();
+        a.save_state(&mut blob);
+        let mut b = DataLoader::synthetic(SyntheticCorpus::new(128, 5), 2, 16);
+        let mut r = crate::ser::Reader::new(&blob);
+        b.load_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+        for _ in 0..5 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn fixed_state_roundtrip_resumes_mid_epoch() {
+        let data: Vec<i32> = (0..400).collect();
+        let mut a = DataLoader::fixed(data.clone(), 4, 8, 11);
+        for _ in 0..13 {
+            a.next_batch();
+        }
+        let mut blob = Vec::new();
+        a.save_state(&mut blob);
+        let mut b = DataLoader::fixed(data, 4, 8, 11);
+        let mut r = crate::ser::Reader::new(&blob);
+        b.load_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+        // Identical through the epoch boundary (same reshuffle RNG state).
+        for _ in 0..200 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn state_kind_mismatch_is_rejected() {
+        let mut syn = DataLoader::synthetic(SyntheticCorpus::new(128, 0), 2, 16);
+        let mut blob = Vec::new();
+        syn.save_state(&mut blob);
+        let data: Vec<i32> = (0..400).collect();
+        let mut fixed = DataLoader::fixed(data, 2, 16, 0);
+        let mut r = crate::ser::Reader::new(&blob);
+        assert!(fixed.load_state(&mut r).is_err());
+        let mut blob2 = Vec::new();
+        fixed.save_state(&mut blob2);
+        let mut r2 = crate::ser::Reader::new(&blob2);
+        assert!(syn.load_state(&mut r2).is_err());
     }
 }

@@ -37,6 +37,7 @@ pub mod optim;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod ser;
 pub mod tensor;
 pub mod testing;
 

@@ -6,6 +6,7 @@
 use super::FactorState;
 use crate::optim::{Adam, AdamConfig, Optimizer};
 use crate::rng::Rng;
+use crate::ser;
 use crate::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix};
 use std::collections::{HashMap, HashSet};
 
@@ -106,6 +107,56 @@ impl Optimizer for Factorized {
     fn reset_state(&mut self) {
         self.factors.clear();
         self.full_rank.reset_state();
+    }
+
+    /// Checkpoint v2: the learned factors ARE the weights here — without
+    /// them a resumed run cannot even rebuild W = BA.
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        ser::put_rng(out, &self.rng);
+        let mut fr = Vec::new();
+        self.full_rank.save_state(&mut fr)?;
+        ser::put_bytes(out, &fr);
+        let mut params: Vec<usize> = self.factors.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in params {
+            let f = &self.factors[&p];
+            ser::put_usize(out, p);
+            ser::put_matrix(out, &f.b);
+            ser::put_matrix(out, &f.a);
+            f.opt_b.save_state(out);
+            f.opt_a.save_state(out);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.rng = r.rng()?;
+        let fr = r.bytes()?;
+        let mut frr = ser::Reader::new(fr);
+        self.full_rank.load_state(&mut frr)?;
+        frr.expect_end()?;
+        self.factors.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let b = r.matrix()?;
+            let a = r.matrix()?;
+            let opt_b = FactorState::load_state(r)?;
+            let opt_a = FactorState::load_state(r)?;
+            if b.cols != a.rows {
+                return Err(format!(
+                    "factorized param {p}: B {:?} and A {:?} disagree on rank",
+                    b.shape(),
+                    a.shape()
+                ));
+            }
+            self.factors.insert(
+                p,
+                Factors { b, a, opt_b, opt_a, gb: Matrix::zeros(0, 0), ga: Matrix::zeros(0, 0) },
+            );
+        }
+        Ok(())
     }
 }
 

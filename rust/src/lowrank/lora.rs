@@ -3,6 +3,7 @@
 use super::FactorState;
 use crate::optim::{Adam, AdamConfig, Optimizer};
 use crate::rng::Rng;
+use crate::ser;
 use crate::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix};
 use std::collections::{HashMap, HashSet};
 
@@ -89,6 +90,43 @@ impl AdaptorState {
     pub fn adaptor_bytes(&self) -> usize {
         4 * (self.b.len() + self.a.len())
     }
+
+    /// Checkpoint v2: the frozen base, both factors, and their optimizer
+    /// moments. The adaptor factors are *trained weights* that live
+    /// outside the `ParamStore`, so a weights-only checkpoint genuinely
+    /// loses them — full fidelity requires this path.
+    pub(crate) fn save_state(&self, out: &mut Vec<u8>) {
+        ser::put_matrix(out, &self.w0);
+        ser::put_matrix(out, &self.b);
+        ser::put_matrix(out, &self.a);
+        self.opt_b.save_state(out);
+        self.opt_a.save_state(out);
+    }
+
+    pub(crate) fn load_state(r: &mut ser::Reader<'_>) -> Result<AdaptorState, String> {
+        let w0 = r.matrix()?;
+        let b = r.matrix()?;
+        let a = r.matrix()?;
+        let opt_b = FactorState::load_state(r)?;
+        let opt_a = FactorState::load_state(r)?;
+        if b.cols != a.rows || b.rows != w0.rows || a.cols != w0.cols {
+            return Err(format!(
+                "adaptor shapes disagree: w0 {:?}, B {:?}, A {:?}",
+                w0.shape(),
+                b.shape(),
+                a.shape()
+            ));
+        }
+        Ok(AdaptorState {
+            w0,
+            b,
+            a,
+            opt_b,
+            opt_a,
+            gb: Matrix::zeros(0, 0),
+            ga: Matrix::zeros(0, 0),
+        })
+    }
 }
 
 pub struct Lora {
@@ -168,6 +206,39 @@ impl Optimizer for Lora {
     fn reset_state(&mut self) {
         self.adaptors.clear();
         self.full_rank.reset_state();
+    }
+
+    /// Checkpoint v2: adaptor-init RNG, the full-rank Adam for untargeted
+    /// parameters, and every adaptor (base + factors + moments).
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        ser::put_rng(out, &self.rng);
+        let mut fr = Vec::new();
+        self.full_rank.save_state(&mut fr)?;
+        ser::put_bytes(out, &fr);
+        let mut params: Vec<usize> = self.adaptors.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in params {
+            ser::put_usize(out, p);
+            self.adaptors[&p].save_state(out);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.rng = r.rng()?;
+        let fr = r.bytes()?;
+        let mut frr = ser::Reader::new(fr);
+        self.full_rank.load_state(&mut frr)?;
+        frr.expect_end()?;
+        self.adaptors.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let ad = AdaptorState::load_state(r)?;
+            self.adaptors.insert(p, ad);
+        }
+        Ok(())
     }
 }
 

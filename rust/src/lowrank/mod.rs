@@ -22,6 +22,7 @@ pub use lora::{Lora, LoraConfig};
 pub use relora::ReLora;
 
 use crate::optim::AdamConfig;
+use crate::ser;
 use crate::tensor::Matrix;
 
 /// Adam moments for one factor matrix.
@@ -60,5 +61,26 @@ impl FactorState {
 
     pub fn nbytes(&self) -> usize {
         4 * (self.m.len() + self.v.len())
+    }
+
+    /// Checkpoint v2: moments + step counter (`upd` is per-step scratch).
+    pub(crate) fn save_state(&self, out: &mut Vec<u8>) {
+        ser::put_u64(out, self.t);
+        ser::put_matrix(out, &self.m);
+        ser::put_matrix(out, &self.v);
+    }
+
+    pub(crate) fn load_state(r: &mut ser::Reader<'_>) -> Result<FactorState, String> {
+        let t = r.u64()?;
+        let m = r.matrix()?;
+        let v = r.matrix()?;
+        if m.shape() != v.shape() {
+            return Err(format!(
+                "factor state: M shape {:?} != V shape {:?}",
+                m.shape(),
+                v.shape()
+            ));
+        }
+        Ok(FactorState { m, v, upd: Matrix::zeros(0, 0), t })
     }
 }

@@ -5,6 +5,7 @@
 use super::lora::{AdaptorState, LoraConfig};
 use crate::optim::{Adam, AdamConfig, Optimizer};
 use crate::rng::Rng;
+use crate::ser;
 use crate::tensor::Matrix;
 use std::collections::{HashMap, HashSet};
 
@@ -93,6 +94,53 @@ impl Optimizer for ReLora {
         self.adaptors.clear();
         self.steps.clear();
         self.full_rank.reset_state();
+    }
+
+    /// Checkpoint v2: like LoRA plus the per-parameter step counters that
+    /// drive the merge cadence, so a resumed run merges at the same steps.
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        ser::put_rng(out, &self.rng);
+        let mut fr = Vec::new();
+        self.full_rank.save_state(&mut fr)?;
+        ser::put_bytes(out, &fr);
+        let mut params: Vec<usize> = self.steps.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in &params {
+            ser::put_usize(out, *p);
+            ser::put_u64(out, self.steps[p]);
+        }
+        let mut params: Vec<usize> = self.adaptors.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in params {
+            ser::put_usize(out, p);
+            self.adaptors[&p].save_state(out);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.rng = r.rng()?;
+        let fr = r.bytes()?;
+        let mut frr = ser::Reader::new(fr);
+        self.full_rank.load_state(&mut frr)?;
+        frr.expect_end()?;
+        self.steps.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let t = r.u64()?;
+            self.steps.insert(p, t);
+        }
+        self.adaptors.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let ad = AdaptorState::load_state(r)?;
+            self.adaptors.insert(p, ad);
+        }
+        Ok(())
     }
 }
 

@@ -13,7 +13,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use galore::config::{Cli, MethodKind, RunConfig, TomlDoc};
-use galore::coordinator::{train_data_parallel, Trainer};
+use galore::coordinator::{train_data_parallel_resumable, Trainer};
 use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
 use galore::model::ModelConfig;
 use galore::optim::{ProjectorQuant, RankScheduleKind};
@@ -54,6 +54,8 @@ USAGE:
                 [--projector-quant f32|block8|dyn8]
                 [--seed N] [--eval-every N] [--dp-workers N] [--layerwise]
                 [--fused] [--csv PATH] [--checkpoint PATH]
+                [--checkpoint-every N] [--checkpoint-dir DIR] [--keep-last N]
+                [--resume PATH]
   galore memory --model NAME [--method NAME] [--rank N] [--layerwise]
                 [--token-batch N]
   galore info
@@ -66,7 +68,13 @@ MODELS:  nano micro mini small (trainable proxies) + 60m 130m 350m 1b 7b
 Adaptive rank (galore methods): --rank-schedule decay|spectral lets each
 layer shrink/grow its projector rank at subspace refreshes within
 [--rank-floor, --rank]; --refresh-gate-cos T skips the refresh SVD when
-the cached subspace still captures cosine >= T of the gradient."
+the cached subspace still captures cosine >= T of the gradient.
+
+Checkpoint/resume: --checkpoint-every N writes a full-state (v2) snapshot
+every N steps into --checkpoint-dir (retention --keep-last, 0 = keep all);
+--resume PATH restores one and continues bit-exactly (same config
+required); --checkpoint PATH writes a final full-state snapshot. See
+EXPERIMENTS.md §Checkpoint/resume."
     );
 }
 
@@ -137,6 +145,15 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     if cli.has("layerwise") {
         cfg.layerwise = true;
     }
+    if let Some(v) = cli.get_parse::<usize>("checkpoint-every").map_err(|e| anyhow!("{e}"))? {
+        cfg.checkpoint_every = v;
+    }
+    if let Some(v) = cli.get_parse::<usize>("keep-last").map_err(|e| anyhow!("{e}"))? {
+        cfg.checkpoint_keep_last = v;
+    }
+    if let Some(v) = cli.get("checkpoint-dir") {
+        cfg.checkpoint_dir = v.to_string();
+    }
     // CLI overrides can reintroduce degenerate values (e.g. --update-freq
     // 0) after from_toml validated; re-check the final config.
     cfg.validate().map_err(|e| anyhow!(e))?;
@@ -162,8 +179,9 @@ fn train(cli: &Cli) -> Result<()> {
         cfg.layerwise,
         cfg.dp_workers
     );
+    let resume = cli.get("resume").map(std::path::PathBuf::from);
     if cfg.dp_workers > 1 {
-        let res = train_data_parallel(&cfg)?;
+        let res = train_data_parallel_resumable(&cfg, resume.as_deref())?;
         println!(
             "done: train_loss={:.4} eval_loss={:.4} eval_ppl={:.2} tokens={} \
              optimizer_state={} elapsed={:.1}s",
@@ -181,8 +199,13 @@ fn train(cli: &Cli) -> Result<()> {
         trainer.enable_fused_galore()?;
         println!("fused GaLore hot path: ON (Pallas/HLO artifacts)");
     }
+    if let Some(path) = &resume {
+        trainer.restore_checkpoint(path)?;
+        println!("resumed from {} at step {}", path.display(), trainer.step);
+    }
     let log_every = (cfg.steps / 20).max(1);
-    for step in 0..cfg.steps {
+    while trainer.step < cfg.steps {
+        let step = trainer.step;
         let loss = trainer.train_step()?;
         if step % log_every == 0 || step + 1 == cfg.steps {
             println!(
@@ -194,10 +217,16 @@ fn train(cli: &Cli) -> Result<()> {
                 trainer.metrics.tokens_per_sec()
             );
         }
-        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+        // The final eval is logged once, below — skip the in-loop row at
+        // the last step (the old loop logged it twice when
+        // steps % eval_every == 0).
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 && step + 1 < cfg.steps {
             let l = trainer.eval(2)?;
             trainer.metrics.log_eval(step + 1, l);
             println!("  eval loss {:.4} ppl {:.2}", l, l.exp());
+        }
+        if cfg.checkpoint_every > 0 && trainer.step % cfg.checkpoint_every == 0 {
+            trainer.save_periodic_checkpoint()?;
         }
     }
     let eval = trainer.eval(4)?;
@@ -226,8 +255,8 @@ fn train(cli: &Cli) -> Result<()> {
         println!("wrote {}", p.display());
     }
     if let Some(ckpt) = cli.get("checkpoint") {
-        galore::coordinator::checkpoint::save(ckpt, &trainer.params, cfg.steps as u64)?;
-        println!("wrote checkpoint {ckpt}");
+        trainer.save_checkpoint(ckpt)?;
+        println!("wrote full-state checkpoint {ckpt}");
     }
     Ok(())
 }

@@ -9,6 +9,7 @@
 //! by running this update in the compact space).
 
 use super::{bias_correction, Optimizer};
+use crate::ser;
 use crate::tensor::Matrix;
 use std::collections::HashMap;
 
@@ -107,6 +108,45 @@ impl Optimizer for Adafactor {
 
     fn reset_state(&mut self) {
         self.states.clear();
+    }
+
+    /// Checkpoint v2: first moment plus the factored row/col second-moment
+    /// statistics and the step counter, sorted by parameter id.
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        let mut params: Vec<usize> = self.states.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in params {
+            let s = &self.states[&p];
+            ser::put_usize(out, p);
+            ser::put_u64(out, s.t);
+            ser::put_matrix(out, &s.m);
+            ser::put_f32s(out, &s.row);
+            ser::put_f32s(out, &s.col);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.states.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let t = r.u64()?;
+            let m = r.matrix()?;
+            let row = r.f32s()?;
+            let col = r.f32s()?;
+            if row.len() != m.rows || col.len() != m.cols {
+                return Err(format!(
+                    "adafactor param {p}: factors ({}, {}) disagree with M {:?}",
+                    row.len(),
+                    col.len(),
+                    m.shape()
+                ));
+            }
+            self.states.insert(p, State { m, row, col, t });
+        }
+        Ok(())
     }
 }
 

@@ -4,6 +4,7 @@
 
 use super::adaptive::StateRemap;
 use super::{bias_correction, Optimizer};
+use crate::ser;
 use crate::tensor::Matrix;
 use std::collections::HashMap;
 
@@ -154,6 +155,45 @@ impl Optimizer for Adam {
             remap.first_moment(&mut s.m);
             remap.second_moment(&mut s.v);
         }
+    }
+
+    /// Checkpoint v2: M/V moments and the per-parameter step counter,
+    /// sorted by parameter id for a deterministic byte stream. The `upd`
+    /// scratch is working memory (fully rewritten every step) and is
+    /// recreated as zeros on load.
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        let mut params: Vec<usize> = self.states.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in params {
+            let s = &self.states[&p];
+            ser::put_usize(out, p);
+            ser::put_u64(out, s.t);
+            ser::put_matrix(out, &s.m);
+            ser::put_matrix(out, &s.v);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.states.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let t = r.u64()?;
+            let m = r.matrix()?;
+            let v = r.matrix()?;
+            if m.shape() != v.shape() {
+                return Err(format!(
+                    "adam param {p}: M shape {:?} != V shape {:?}",
+                    m.shape(),
+                    v.shape()
+                ));
+            }
+            let upd = Matrix::zeros(m.rows, m.cols);
+            self.states.insert(p, State { m, v, upd, t });
+        }
+        Ok(())
     }
 }
 

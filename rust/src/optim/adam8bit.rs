@@ -11,6 +11,7 @@
 
 use super::{bias_correction, Optimizer};
 use crate::quant::DynQuantBuf;
+use crate::ser;
 use crate::tensor::Matrix;
 use std::collections::HashMap;
 
@@ -101,6 +102,40 @@ impl Optimizer for Adam8bit {
     /// let the EMAs warm back up at the new shape (~1/(1−β₂) steps).
     fn remap_state(&mut self, param: usize, _remap: &mut super::adaptive::StateRemap<'_>) {
         self.states.remove(&param);
+    }
+
+    /// Checkpoint v2: the quantized M/V buffers travel as their exact
+    /// int8 codes + block scales, so a resumed run dequantizes to the very
+    /// same floats the uninterrupted run would. Scratch buffers are not
+    /// state (fully rewritten per step).
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        let mut params: Vec<usize> = self.states.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in params {
+            let s = &self.states[&p];
+            ser::put_usize(out, p);
+            ser::put_u64(out, s.t);
+            ser::put_dyn_quant_buf(out, &s.m);
+            ser::put_dyn_quant_buf(out, &s.v);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.states.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let t = r.u64()?;
+            let m = r.dyn_quant_buf()?;
+            let v = r.dyn_quant_buf()?;
+            if m.len != v.len {
+                return Err(format!("adam8bit param {p}: M len {} != V len {}", m.len, v.len));
+            }
+            self.states.insert(p, State { m, v, t });
+        }
+        Ok(())
     }
 }
 

@@ -32,6 +32,7 @@ use crate::linalg::{
 };
 use crate::quant::DynQuantBuf;
 use crate::rng::Rng;
+use crate::ser;
 use crate::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix};
 use std::collections::{HashMap, HashSet};
 
@@ -317,6 +318,78 @@ impl Projector {
             BasisStore::Quant8 { buf, .. } => buf.nbytes(),
             BasisStore::Dyn8 { buf, .. } => buf.nbytes(),
         }
+    }
+
+    /// Checkpoint v2: side, rank, and the basis store. Quantized stores
+    /// serialize the int8 codes + scales only; the dequantized cache is
+    /// rebuilt on load and is bit-identical because the live cache always
+    /// holds exactly `dequantize(store)` (see `requantize_cache`).
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        ser::put_u8(out, match self.side {
+            ProjSide::Left => 0,
+            ProjSide::Right => 1,
+        });
+        ser::put_u64(out, self.rank as u64);
+        match &self.store {
+            BasisStore::F32(b) => {
+                ser::put_u8(out, 0);
+                ser::put_matrix(out, b);
+            }
+            BasisStore::Quant8 { buf, cache } => {
+                ser::put_u8(out, 1);
+                ser::put_u32(out, cache.rows as u32);
+                ser::put_u32(out, cache.cols as u32);
+                ser::put_quant_buf(out, buf);
+            }
+            BasisStore::Dyn8 { buf, cache } => {
+                ser::put_u8(out, 2);
+                ser::put_u32(out, cache.rows as u32);
+                ser::put_u32(out, cache.cols as u32);
+                ser::put_dyn_quant_buf(out, buf);
+            }
+        }
+    }
+
+    /// Rebuild a projector from [`Projector::save_state`] bytes.
+    pub fn load_state(r: &mut ser::Reader<'_>) -> Result<Projector, String> {
+        let side = match r.u8()? {
+            0 => ProjSide::Left,
+            1 => ProjSide::Right,
+            other => return Err(format!("bad projector side tag {other}")),
+        };
+        let rank = r.u64()? as usize;
+        let store = match r.u8()? {
+            0 => BasisStore::F32(r.matrix()?),
+            1 => {
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                let buf = r.quant_buf()?;
+                if buf.len != rows * cols {
+                    return Err(format!(
+                        "quant8 basis has {} elements for a {rows}x{cols} cache",
+                        buf.len
+                    ));
+                }
+                let cache = Matrix::from_vec(rows, cols, crate::quant::dequantize(&buf));
+                BasisStore::Quant8 { buf, cache }
+            }
+            2 => {
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                let buf = r.dyn_quant_buf()?;
+                if buf.len != rows * cols {
+                    return Err(format!(
+                        "dyn8 basis has {} elements for a {rows}x{cols} cache",
+                        buf.len
+                    ));
+                }
+                let mut cache = Matrix::zeros(rows, cols);
+                buf.dequantize_into(&mut cache.data);
+                BasisStore::Dyn8 { buf, cache }
+            }
+            other => return Err(format!("bad projector store tag {other}")),
+        };
+        Ok(Projector { side, store, rank })
     }
 }
 
@@ -755,6 +828,83 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
 
     fn gate_skips(&self) -> u64 {
         self.rank_states.values().map(|r| r.gate_skips).sum()
+    }
+
+    /// Checkpoint v2: projector RNG, the inner optimizer's state (nested,
+    /// length-prefixed so the two formats stay separable), per-parameter
+    /// step counters, rank-adaptation bookkeeping, and the projector bases
+    /// themselves. Workspaces and the SVD scratch are working memory —
+    /// rebuilt lazily after load with identical arithmetic.
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        ser::put_rng(out, &self.rng);
+        let mut inner = Vec::new();
+        self.inner.save_state(&mut inner)?;
+        ser::put_bytes(out, &inner);
+        let mut params: Vec<usize> = self.steps.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in &params {
+            ser::put_usize(out, *p);
+            ser::put_u64(out, self.steps[p]);
+        }
+        let mut params: Vec<usize> = self.rank_states.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in &params {
+            let rs = &self.rank_states[p];
+            ser::put_usize(out, *p);
+            ser::put_usize(out, rs.rank);
+            ser::put_u64(out, rs.refreshes);
+            ser::put_u64(out, rs.gate_skips);
+            ser::put_u64(out, rs.consecutive_skips);
+            ser::put_f32(out, rs.last_cosine);
+        }
+        let mut params: Vec<usize> = self.projectors.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in &params {
+            ser::put_usize(out, *p);
+            self.projectors[p].save_state(out);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.rng = r.rng()?;
+        let inner_bytes = r.bytes()?;
+        let mut ir = ser::Reader::new(inner_bytes);
+        self.inner.load_state(&mut ir)?;
+        ir.expect_end()?;
+        self.steps.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let t = r.u64()?;
+            self.steps.insert(p, t);
+        }
+        self.rank_states.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let rs = RankState {
+                rank: r.usize()?,
+                refreshes: r.u64()?,
+                gate_skips: r.u64()?,
+                consecutive_skips: r.u64()?,
+                last_cosine: r.f32()?,
+            };
+            self.rank_states.insert(p, rs);
+        }
+        self.projectors.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let proj = Projector::load_state(r)?;
+            self.projectors.insert(p, proj);
+        }
+        // Workspaces are scratch; drop any stale shapes and re-warm lazily.
+        self.workspaces.clear();
+        Ok(())
     }
 }
 

@@ -68,6 +68,25 @@ pub trait Optimizer: Send {
     fn gate_skips(&self) -> u64 {
         0
     }
+
+    /// Serialize the optimizer's *complete* state (moments, step counters,
+    /// projector bases, RNG streams — everything `step` reads) into `out`
+    /// using the `crate::ser` vocabulary, such that `load_state` on a
+    /// freshly constructed optimizer of the same configuration reproduces
+    /// the uninterrupted trajectory bit-for-bit (checkpoint v2 contract,
+    /// `coordinator::checkpoint`). The default refuses: an optimizer that
+    /// has not opted in must fail a checkpoint loudly rather than silently
+    /// dropping its state.
+    fn save_state(&self, _out: &mut Vec<u8>) -> Result<(), String> {
+        Err(format!("optimizer '{}' does not support full-state checkpointing", self.name()))
+    }
+
+    /// Restore state written by `save_state`. The optimizer must already be
+    /// constructed with the same configuration (targets, seeds, knobs) —
+    /// only the mutable training state travels through the blob.
+    fn load_state(&mut self, _r: &mut crate::ser::Reader<'_>) -> Result<(), String> {
+        Err(format!("optimizer '{}' does not support full-state checkpointing", self.name()))
+    }
 }
 
 /// Bias-correction factor `1 - beta^t` shared by the moment optimizers.

@@ -2,6 +2,7 @@
 //! experiment (vanilla SGD) and as the cheapest baseline.
 
 use super::Optimizer;
+use crate::ser;
 use crate::tensor::Matrix;
 use std::collections::HashMap;
 
@@ -52,6 +53,29 @@ impl Optimizer for Sgd {
         if let Some(v) = self.velocity.get_mut(&param) {
             remap.first_moment(v);
         }
+    }
+
+    /// Checkpoint v2: the velocity buffers (empty for vanilla SGD).
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        let mut params: Vec<usize> = self.velocity.keys().copied().collect();
+        params.sort_unstable();
+        ser::put_u32(out, params.len() as u32);
+        for p in params {
+            ser::put_usize(out, p);
+            ser::put_matrix(out, &self.velocity[&p]);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        self.velocity.clear();
+        let n = r.u32()?;
+        for _ in 0..n {
+            let p = r.usize()?;
+            let v = r.matrix()?;
+            self.velocity.insert(p, v);
+        }
+        Ok(())
     }
 }
 

@@ -37,6 +37,18 @@ impl Rng {
         Rng { s, spare_normal: None }
     }
 
+    /// Snapshot the generator's full internal state — the xoshiro words
+    /// plus the cached Box–Muller spare — for checkpointing. A generator
+    /// rebuilt via [`Rng::from_state`] continues the exact same stream.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare_normal)
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4], spare_normal: Option<f64>) -> Rng {
+        Rng { s, spare_normal }
+    }
+
     /// Derive an independent child generator (for per-worker / per-layer
     /// streams). Deterministic in (self seed, tag).
     pub fn child(&self, tag: u64) -> Rng {

@@ -1,0 +1,383 @@
+//! Compact binary state (de)serialization for checkpoint v2.
+//!
+//! Checkpointing the *entire* training state (optimizer moments, projector
+//! bases, quantized buffers, RNG streams, loader cursors — see
+//! `coordinator::checkpoint`) needs one shared wire vocabulary so every
+//! `Optimizer::save_state` / `load_state` implementation composes into a
+//! single self-describing blob. This module is that vocabulary: fixed-width
+//! little-endian scalars, length-prefixed strings/slices, and typed helpers
+//! for the crate's state-bearing containers (`Matrix`, `QuantizedBuf`,
+//! `DynQuantBuf`, `Rng`).
+//!
+//! Writers append to a `Vec<u8>`; [`Reader`] walks a byte slice with
+//! bounds-checked typed reads that return `Err(String)` instead of
+//! panicking — a truncated or corrupted checkpoint must surface as a clean
+//! error, never a crash or (worse) silently misaligned state.
+
+use crate::quant::{DynQuantBuf, QuantizedBuf, BLOCK, DYN_BLOCK};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+// -- writers ----------------------------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Length-prefixed raw bytes.
+pub fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    put_u64(out, bytes.len() as u64);
+    out.extend_from_slice(bytes);
+}
+
+/// Length-prefixed f32 slice (little-endian payload).
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Shape header + raw f32 payload.
+pub fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    put_u32(out, m.rows as u32);
+    put_u32(out, m.cols as u32);
+    out.reserve(m.data.len() * 4);
+    for &x in &m.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Block8 (linear absmax) quantized buffer: logical length, int8 codes,
+/// per-block scales.
+pub fn put_quant_buf(out: &mut Vec<u8>, b: &QuantizedBuf) {
+    put_u64(out, b.len as u64);
+    out.reserve(b.q.len());
+    for &q in &b.q {
+        out.push(q as u8);
+    }
+    put_f32s(out, &b.scales);
+}
+
+/// Dynamic-code quantized buffer: logical length, signedness, codes,
+/// per-block scales.
+pub fn put_dyn_quant_buf(out: &mut Vec<u8>, b: &DynQuantBuf) {
+    put_u64(out, b.len as u64);
+    put_bool(out, b.signed);
+    out.extend_from_slice(&b.q);
+    put_f32s(out, &b.scales);
+}
+
+/// Full RNG stream state (xoshiro words + the cached Box–Muller spare),
+/// so a resumed run draws the exact sequence the uninterrupted run would.
+pub fn put_rng(out: &mut Vec<u8>, rng: &Rng) {
+    let (s, spare) = rng.state();
+    for w in s {
+        put_u64(out, w);
+    }
+    match spare {
+        Some(x) => {
+            put_u8(out, 1);
+            put_f64(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+// -- reader -----------------------------------------------------------------
+
+/// Bounds-checked cursor over a serialized state blob. Every read returns
+/// `Err` on underrun or malformed data instead of panicking.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take the next `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "state blob truncated: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, String> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(format!("bad bool byte {other}")),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, String> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f32(&mut self) -> Result<f32, String> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "invalid utf-8 string".to_string())
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], String> {
+        let n = self.u64()? as usize;
+        self.take(n)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u64()? as usize;
+        // Checked arithmetic: corrupt length fields must surface as a
+        // clean error, not an overflow panic (or a wrapped small length
+        // that silently misaligns every later read).
+        let nbytes =
+            n.checked_mul(4).ok_or_else(|| format!("f32 slice length {n} overflows"))?;
+        let bytes = self.take(nbytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn matrix(&mut self) -> Result<Matrix, String> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let nbytes = rows
+            .checked_mul(cols)
+            .and_then(|n| n.checked_mul(4))
+            .ok_or_else(|| format!("matrix shape {rows}x{cols} overflows"))?;
+        let bytes = self.take(nbytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    pub fn quant_buf(&mut self) -> Result<QuantizedBuf, String> {
+        let len = self.u64()? as usize;
+        let raw = self.take(len)?;
+        let q: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+        let scales = self.f32s()?;
+        if scales.len() != len.div_ceil(BLOCK) {
+            return Err(format!(
+                "quantized buffer has {} scales for {len} elements (want {})",
+                scales.len(),
+                len.div_ceil(BLOCK)
+            ));
+        }
+        Ok(QuantizedBuf { q, scales, len })
+    }
+
+    pub fn dyn_quant_buf(&mut self) -> Result<DynQuantBuf, String> {
+        let len = self.u64()? as usize;
+        let signed = self.bool()?;
+        let q = self.take(len)?.to_vec();
+        let scales = self.f32s()?;
+        if scales.len() != len.div_ceil(DYN_BLOCK) {
+            return Err(format!(
+                "dyn-quantized buffer has {} scales for {len} elements (want {})",
+                scales.len(),
+                len.div_ceil(DYN_BLOCK)
+            ));
+        }
+        Ok(DynQuantBuf { q, scales, len, signed })
+    }
+
+    pub fn rng(&mut self) -> Result<Rng, String> {
+        let mut s = [0u64; 4];
+        for w in s.iter_mut() {
+            *w = self.u64()?;
+        }
+        let spare = match self.u8()? {
+            0 => None,
+            1 => Some(self.f64()?),
+            other => return Err(format!("bad rng spare flag {other}")),
+        };
+        Ok(Rng::from_state(s, spare))
+    }
+
+    /// Assert the blob was fully consumed — trailing bytes mean a format
+    /// mismatch between writer and reader.
+    pub fn expect_end(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} trailing bytes in state blob", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 7);
+        put_bool(&mut out, true);
+        put_u32(&mut out, 0xDEADBEEF);
+        put_u64(&mut out, u64::MAX - 1);
+        put_f32(&mut out, -1.5);
+        put_f64(&mut out, std::f64::consts::PI);
+        put_str(&mut out, "galore");
+        let mut r = Reader::new(&out);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str().unwrap(), "galore");
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn matrix_roundtrip_bit_exact() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(7, 13, 1.0, &mut rng);
+        let mut out = Vec::new();
+        put_matrix(&mut out, &m);
+        let got = Reader::new(&out).matrix().unwrap();
+        assert_eq!(got.shape(), m.shape());
+        assert_eq!(got.data, m.data);
+    }
+
+    #[test]
+    fn quant_buffers_roundtrip_bit_exact() {
+        let mut rng = Rng::new(2);
+        let mut xs = vec![0.0f32; 3 * BLOCK + 17];
+        rng.fill_normal(&mut xs, 0.3);
+        let qb = crate::quant::quantize(&xs);
+        let mut db = DynQuantBuf::zeros(xs.len(), true);
+        db.quantize_from(&xs);
+        let mut out = Vec::new();
+        put_quant_buf(&mut out, &qb);
+        put_dyn_quant_buf(&mut out, &db);
+        let mut r = Reader::new(&out);
+        let qb2 = r.quant_buf().unwrap();
+        let db2 = r.dyn_quant_buf().unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(qb2.q, qb.q);
+        assert_eq!(qb2.scales, qb.scales);
+        assert_eq!(qb2.len, qb.len);
+        assert_eq!(db2.q, db.q);
+        assert_eq!(db2.scales, db.scales);
+        assert_eq!(db2.signed, db.signed);
+    }
+
+    #[test]
+    fn rng_roundtrip_continues_identical_stream() {
+        let mut a = Rng::new(42);
+        let _ = a.normal(); // populate the Box–Muller spare
+        let mut out = Vec::new();
+        put_rng(&mut out, &a);
+        let mut b = Reader::new(&out).rng().unwrap();
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+            assert_eq!(a.normal(), b.normal());
+        }
+    }
+
+    #[test]
+    fn truncated_blob_is_rejected_not_panicking() {
+        let mut out = Vec::new();
+        put_matrix(&mut out, &Matrix::ones(8, 8));
+        for cut in [0, 1, 4, 7, out.len() - 1] {
+            let err = Reader::new(&out[..cut]).matrix();
+            assert!(err.is_err(), "cut at {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn absurd_shape_fields_error_instead_of_panicking() {
+        // Corrupt shape/length fields must not overflow-panic.
+        let mut out = Vec::new();
+        put_u32(&mut out, u32::MAX);
+        put_u32(&mut out, u32::MAX);
+        assert!(Reader::new(&out).matrix().is_err());
+        let mut out = Vec::new();
+        put_u64(&mut out, u64::MAX);
+        assert!(Reader::new(&out).f32s().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_detected() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 5);
+        put_u8(&mut out, 9);
+        let mut r = Reader::new(&out);
+        r.u32().unwrap();
+        assert!(r.expect_end().is_err());
+        r.u8().unwrap();
+        r.expect_end().unwrap();
+    }
+}

@@ -256,6 +256,162 @@ fn checkpoint_roundtrip_through_training() {
 }
 
 #[test]
+fn resume_matches_uninterrupted_run_bit_exact() {
+    if !artifacts_ready() {
+        return;
+    }
+    // The PR's acceptance bar, trainer-level: save at step k, "kill",
+    // resume in a fresh trainer, and the per-step losses, LR, ranks, and
+    // optimizer-state bytes must match the uninterrupted run exactly.
+    for method in [MethodKind::FullRank, MethodKind::GaLore, MethodKind::GaLore8bit] {
+        let mut cfg = nano_cfg(method, 12);
+        cfg.galore.update_freq = 5; // refresh inside both segments
+        let mut full = Trainer::from_config(cfg.clone()).unwrap();
+        let mut full_losses = Vec::new();
+        for _ in 0..12 {
+            full_losses.push(full.train_step().unwrap());
+        }
+
+        let mut first = Trainer::from_config(cfg.clone()).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..7 {
+            losses.push(first.train_step().unwrap());
+        }
+        let path = std::env::temp_dir().join(format!("galore_it_resume/{method:?}.ckpt"));
+        first.save_checkpoint(&path).unwrap();
+        drop(first);
+        let mut resumed = Trainer::resume(cfg.clone(), &path).unwrap();
+        assert_eq!(resumed.step, 7);
+        for _ in 7..12 {
+            losses.push(resumed.train_step().unwrap());
+        }
+        assert_eq!(full_losses, losses, "{method:?}: loss trajectory diverged after resume");
+        assert_eq!(
+            full.optimizer_state_bytes(),
+            resumed.optimizer_state_bytes(),
+            "{method:?}: state bytes diverged"
+        );
+        for (a, b) in full.params.tensors.iter().zip(resumed.params.tensors.iter()) {
+            assert_eq!(a.data, b.data, "{method:?}: weights diverged");
+        }
+        assert_eq!(full.opt.rank_profile(), resumed.opt.rank_profile());
+    }
+}
+
+#[test]
+fn adaptive_rank_resume_matches_uninterrupted_run() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = nano_cfg(MethodKind::GaLore, 12);
+    cfg.galore.update_freq = 4;
+    cfg.galore.rank_schedule = RankScheduleKind::Spectral;
+    cfg.galore.rank_floor = 2;
+    cfg.galore.refresh_gate_cos = 0.6;
+    let mut full = Trainer::from_config(cfg.clone()).unwrap();
+    let mut full_losses = Vec::new();
+    for _ in 0..12 {
+        full_losses.push(full.train_step().unwrap());
+    }
+    let mut first = Trainer::from_config(cfg.clone()).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        losses.push(first.train_step().unwrap());
+    }
+    let path = std::env::temp_dir().join("galore_it_resume/adaptive.ckpt");
+    first.save_checkpoint(&path).unwrap();
+    let mut resumed = Trainer::resume(cfg, &path).unwrap();
+    for _ in 6..12 {
+        losses.push(resumed.train_step().unwrap());
+    }
+    assert_eq!(full_losses, losses, "adaptive loss trajectory diverged after resume");
+    assert_eq!(full.opt.rank_profile(), resumed.opt.rank_profile(), "per-layer ranks diverged");
+    assert_eq!(full.optimizer_state_bytes(), resumed.optimizer_state_bytes());
+}
+
+#[test]
+fn resume_rejects_mismatched_config() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = nano_cfg(MethodKind::GaLore, 8);
+    let mut trainer = Trainer::from_config(cfg.clone()).unwrap();
+    for _ in 0..3 {
+        trainer.train_step().unwrap();
+    }
+    let path = std::env::temp_dir().join("galore_it_resume/fp_mismatch.ckpt");
+    trainer.save_checkpoint(&path).unwrap();
+    let mut other = cfg.clone();
+    other.lr *= 2.0;
+    let err = Trainer::resume(other, &path).unwrap_err();
+    assert!(err.to_string().contains("config mismatch"), "{err}");
+    // The matching config still resumes.
+    assert!(Trainer::resume(cfg, &path).is_ok());
+}
+
+#[test]
+fn v1_checkpoint_resumes_weights_only_with_warning() {
+    if !artifacts_ready() {
+        return;
+    }
+    use galore::coordinator::checkpoint;
+    let cfg = nano_cfg(MethodKind::FullRank, 8);
+    let mut trainer = Trainer::from_config(cfg.clone()).unwrap();
+    for _ in 0..4 {
+        trainer.train_step().unwrap();
+    }
+    let path = std::env::temp_dir().join("galore_it_resume/legacy.ckpt");
+    checkpoint::save(&path, &trainer.params, 4).unwrap();
+    let resumed = Trainer::resume(cfg, &path).unwrap();
+    assert_eq!(resumed.step, 4);
+    assert_eq!(resumed.optimizer_state_bytes(), 0, "v1 resume must cold-start moments");
+    for (a, b) in trainer.params.tensors.iter().zip(resumed.params.tensors.iter()) {
+        assert_eq!(a.data, b.data);
+    }
+}
+
+#[test]
+fn run_logs_final_eval_exactly_once() {
+    if !artifacts_ready() {
+        return;
+    }
+    // steps % eval_every == 0 used to log the final eval twice.
+    let mut cfg = nano_cfg(MethodKind::FullRank, 6);
+    cfg.eval_every = 3;
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    trainer.run().unwrap();
+    let finals: Vec<_> =
+        trainer.metrics.eval_records.iter().filter(|&&(s, _)| s == 6).collect();
+    assert_eq!(finals.len(), 1, "final eval logged {} times", finals.len());
+    // The mid-run eval is still there.
+    assert!(trainer.metrics.eval_records.iter().any(|&(s, _)| s == 3));
+}
+
+#[test]
+fn periodic_checkpoints_with_retention() {
+    if !artifacts_ready() {
+        return;
+    }
+    use galore::coordinator::checkpoint;
+    let dir = std::env::temp_dir().join("galore_it_periodic");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = nano_cfg(MethodKind::GaLore, 8);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep_last = 2;
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    let mut trainer = Trainer::from_config(cfg.clone()).unwrap();
+    trainer.run().unwrap();
+    // Steps 2,4,6,8 checkpointed; retention keeps the newest 2.
+    assert!(!dir.join(checkpoint::periodic_name(2)).exists());
+    assert!(!dir.join(checkpoint::periodic_name(4)).exists());
+    assert!(dir.join(checkpoint::periodic_name(6)).exists());
+    assert!(dir.join(checkpoint::periodic_name(8)).exists());
+    // And the newest one resumes (already at the final step).
+    let resumed = Trainer::resume(cfg, dir.join(checkpoint::periodic_name(8))).unwrap();
+    assert_eq!(resumed.step, 8);
+}
+
+#[test]
 fn gradient_accumulation_matches_larger_effective_batch() {
     if !artifacts_ready() {
         return;

@@ -1,0 +1,427 @@
+//! Checkpoint/resume equivalence and durability properties (pure Rust —
+//! no artifacts needed, so these run everywhere including CI).
+//!
+//! The acceptance bar (ISSUE 3): save at step k, kill, resume, and the
+//! trajectory matches an uninterrupted run **bit-for-bit** — weights,
+//! per-step losses, per-layer ranks, and `state_bytes` — for every
+//! optimizer in the roster, including the GaLore wrappers with quantized
+//! projectors, adaptive rank schedules, and the lazy-refresh gate.
+//! Durability: truncated and bit-flipped checkpoint files are rejected up
+//! front, saves are atomic, and v1 (weights-only) files still load.
+
+use galore::coordinator::checkpoint::{self, Checkpoint};
+use galore::data::{DataLoader, SyntheticCorpus};
+use galore::lowrank::{Factorized, Lora, LoraConfig, ReLora};
+use galore::model::{init_params, ModelConfig};
+use galore::optim::{
+    Adafactor, Adam, Adam8bit, GaLore, GaLoreConfig, Optimizer, ProjectorQuant, RankScheduleKind,
+    Sgd,
+};
+use galore::rng::Rng;
+use galore::ser::Reader;
+use galore::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+
+/// Parameter shapes exercised by every round-trip: a wide matrix
+/// (Left-side projector), a tall one (Right side), and a small untargeted
+/// one (full-rank pass-through inside the wrappers).
+const SHAPES: [(usize, usize); 3] = [(16, 24), (24, 12), (8, 8)];
+
+/// Deterministic gradient stream: the same (param, step) always yields the
+/// same gradient, in every run of every test.
+fn grad_for(param: usize, t: usize) -> Matrix {
+    let (m, n) = SHAPES[param];
+    let mut rng = Rng::new(0xC0FFEE ^ ((param as u64) << 32) ^ t as u64);
+    Matrix::randn(m, n, 1.0, &mut rng)
+}
+
+fn init_weights() -> Vec<Matrix> {
+    SHAPES
+        .iter()
+        .enumerate()
+        .map(|(p, &(m, n))| Matrix::randn(m, n, 1.0, &mut Rng::new(7 ^ p as u64)))
+        .collect()
+}
+
+/// Advance `opt` over steps [from, to) with a varying lr (stands in for a
+/// schedule — resume must reproduce lr-dependent state too).
+fn drive(opt: &mut dyn Optimizer, ws: &mut [Matrix], from: usize, to: usize) {
+    for t in from..to {
+        let lr = 0.01 / (1.0 + t as f32 * 0.05);
+        for p in 0..SHAPES.len() {
+            let g = grad_for(p, t);
+            opt.step(p, &mut ws[p], &g, lr);
+        }
+    }
+}
+
+/// The property: run `total` steps uninterrupted; run `cut` steps, save,
+/// load into a *freshly constructed* optimizer, run the rest. Weights and
+/// state bytes must agree bit-for-bit.
+fn assert_resume_bit_exact(
+    name: &str,
+    mk: &dyn Fn() -> Box<dyn Optimizer>,
+    cut: usize,
+    total: usize,
+) {
+    let mut opt_a = mk();
+    let mut w_a = init_weights();
+    drive(opt_a.as_mut(), &mut w_a, 0, total);
+
+    let mut opt_b = mk();
+    let mut w_b = init_weights();
+    drive(opt_b.as_mut(), &mut w_b, 0, cut);
+    let mut blob = Vec::new();
+    opt_b.save_state(&mut blob).unwrap_or_else(|e| panic!("{name}: save failed: {e}"));
+
+    let mut opt_c = mk();
+    let mut r = Reader::new(&blob);
+    opt_c.load_state(&mut r).unwrap_or_else(|e| panic!("{name}: load failed: {e}"));
+    r.expect_end().unwrap_or_else(|e| panic!("{name}: {e}"));
+    assert_eq!(
+        opt_c.state_bytes(),
+        opt_b.state_bytes(),
+        "{name}: restored state_bytes differ at the cut"
+    );
+    drive(opt_c.as_mut(), &mut w_b, cut, total);
+
+    for (p, (a, b)) in w_a.iter().zip(w_b.iter()).enumerate() {
+        assert_eq!(a.data, b.data, "{name}: param {p} weights diverged after resume at {cut}");
+    }
+    assert_eq!(
+        opt_a.state_bytes(),
+        opt_c.state_bytes(),
+        "{name}: final state_bytes diverged after resume"
+    );
+    assert_eq!(
+        opt_a.rank_profile(),
+        opt_c.rank_profile(),
+        "{name}: per-layer ranks diverged after resume"
+    );
+    assert_eq!(opt_a.gate_skips(), opt_c.gate_skips(), "{name}: gate skips diverged");
+}
+
+fn galore_cfg(rank: usize, update_freq: u64) -> GaLoreConfig {
+    GaLoreConfig { rank, update_freq, scale: 0.25, ..Default::default() }
+}
+
+type MkOpt = Box<dyn Fn() -> Box<dyn Optimizer>>;
+
+fn add(
+    r: &mut Vec<(&'static str, MkOpt)>,
+    name: &'static str,
+    f: impl Fn() -> Box<dyn Optimizer> + 'static,
+) {
+    let mk: MkOpt = Box::new(f);
+    r.push((name, mk));
+}
+
+fn roster() -> Vec<(&'static str, MkOpt)> {
+    let mut r: Vec<(&'static str, MkOpt)> = Vec::new();
+    add(&mut r, "adam", || Box::new(Adam::default_paper()));
+    add(&mut r, "adamw", || Box::new(Adam::adamw(0.05)));
+    add(&mut r, "adam8bit", || Box::new(Adam8bit::new()));
+    add(&mut r, "adafactor", || Box::new(Adafactor::new()));
+    add(&mut r, "sgd-momentum", || Box::new(Sgd::new(0.9)));
+    add(&mut r, "sgd-vanilla", || Box::new(Sgd::vanilla()));
+    add(&mut r, "galore-adam", || {
+        Box::new(
+            GaLore::new(galore_cfg(4, 4), Adam::default_paper())
+                .with_targets([0usize, 1])
+                .with_seed(5),
+        )
+    });
+    add(&mut r, "galore-adam8bit-block8", || {
+        let cfg = GaLoreConfig { projector_quant: ProjectorQuant::Block8, ..galore_cfg(4, 4) };
+        Box::new(GaLore::new(cfg, Adam8bit::new()).with_targets([0usize, 1]).with_seed(5))
+    });
+    add(&mut r, "galore-adafactor", || {
+        Box::new(
+            GaLore::new(galore_cfg(4, 5), Adafactor::new())
+                .with_targets([0usize, 1])
+                .with_seed(9),
+        )
+    });
+    add(&mut r, "galore-adaptive-spectral-dyn8-gated", || {
+        let cfg = GaLoreConfig {
+            rank: 8,
+            update_freq: 3,
+            scale: 0.25,
+            projector_quant: ProjectorQuant::Dyn8,
+            rank_schedule: RankScheduleKind::Spectral,
+            rank_floor: 2,
+            rank_energy: 0.95,
+            refresh_gate_cos: 0.7,
+            ..Default::default()
+        };
+        Box::new(
+            GaLore::new(cfg, Adam::default_paper()).with_targets([0usize, 1]).with_seed(13),
+        )
+    });
+    add(&mut r, "galore-adaptive-decay", || {
+        let cfg = GaLoreConfig {
+            rank: 8,
+            update_freq: 4,
+            scale: 0.25,
+            rank_schedule: RankScheduleKind::Decay,
+            rank_floor: 2,
+            rank_decay: 0.5,
+            ..Default::default()
+        };
+        Box::new(
+            GaLore::new(cfg, Adam::default_paper()).with_targets([0usize, 1]).with_seed(21),
+        )
+    });
+    add(&mut r, "lora", || {
+        Box::new(
+            Lora::new(LoraConfig { rank: 4, alpha: 16.0 }).with_targets([0usize, 1]).with_seed(3),
+        )
+    });
+    add(&mut r, "relora", || {
+        Box::new(
+            ReLora::new(LoraConfig { rank: 4, alpha: 16.0 }, 6)
+                .with_targets([0usize, 1])
+                .with_seed(3),
+        )
+    });
+    add(&mut r, "low-rank", || {
+        Box::new(Factorized::new(4).with_targets([0usize, 1]).with_seed(3))
+    });
+    r
+}
+
+#[test]
+fn every_optimizer_resumes_bit_exact_mid_window() {
+    for (name, mk) in roster() {
+        // Cut at 10: mid refresh-window for the GaLore variants, mid
+        // merge-window for ReLoRA.
+        assert_resume_bit_exact(name, mk.as_ref(), 10, 16);
+    }
+}
+
+#[test]
+fn every_optimizer_resumes_bit_exact_at_refresh_boundary() {
+    for (name, mk) in roster() {
+        // Cut at 8: exactly a refresh boundary for update_freq 4 — the
+        // next step after resume must refresh, like the uninterrupted run.
+        assert_resume_bit_exact(name, mk.as_ref(), 8, 16);
+    }
+}
+
+#[test]
+fn save_load_roundtrips_state_bytes_exactly() {
+    // (a) of the satellite: the serialized state itself round-trips —
+    // saving the restored optimizer again yields identical bytes.
+    for (name, mk) in roster() {
+        let mut opt = mk();
+        let mut ws = init_weights();
+        drive(opt.as_mut(), &mut ws, 0, 9);
+        let mut blob = Vec::new();
+        opt.save_state(&mut blob).unwrap();
+        let mut opt2 = mk();
+        let mut r = Reader::new(&blob);
+        opt2.load_state(&mut r).unwrap();
+        let mut blob2 = Vec::new();
+        opt2.save_state(&mut blob2).unwrap();
+        assert_eq!(blob, blob2, "{name}: save→load→save is not the identity");
+    }
+}
+
+// -- interrupted GaLore-adaptive run reproduces the loss curve --------------
+
+/// Loss trajectory of a GaLore-adaptive run on the Lemma 3.3 synthetic
+/// workload, optionally interrupted (save + rebuild + load) at `cut`.
+fn adaptive_lsq_losses(cut: Option<usize>, steps: usize) -> Vec<f32> {
+    let mk = || {
+        let cfg = GaLoreConfig {
+            rank: 6,
+            update_freq: 5,
+            scale: 1.0,
+            rank_schedule: RankScheduleKind::Spectral,
+            rank_floor: 2,
+            rank_energy: 0.97,
+            refresh_gate_cos: 0.6,
+            projector_quant: ProjectorQuant::Dyn8,
+            ..Default::default()
+        };
+        GaLore::new(cfg, Adam::default_paper()).with_seed(31)
+    };
+    fn segment(
+        opt: &mut GaLore<Adam>,
+        w: &mut Matrix,
+        basis: &Matrix,
+        w_star: &Matrix,
+        from: usize,
+        to: usize,
+        losses: &mut Vec<f32>,
+    ) {
+        for t in from..to {
+            let mut brng = Rng::new(0xBA7C4 ^ t as u64);
+            let z = Matrix::randn(64, 4, 1.0, &mut brng);
+            let x = matmul(&z, basis);
+            let mut err = matmul_a_bt(&x, w);
+            err.sub_assign(&matmul_a_bt(&x, w_star));
+            losses.push(err.frobenius_norm().powi(2) / 64.0);
+            let mut g = matmul_at_b(&err, &x);
+            g.scale(2.0 / 64.0);
+            opt.step(0, w, &g, 0.02);
+        }
+    }
+    let mut setup = Rng::new(77);
+    let w_star = Matrix::randn(24, 16, 1.0, &mut setup);
+    let basis = Matrix::randn(4, 16, 1.0, &mut setup);
+    let mut losses = Vec::with_capacity(steps);
+    let mut w = Matrix::zeros(24, 16);
+    let mut opt = mk();
+    match cut {
+        None => segment(&mut opt, &mut w, &basis, &w_star, 0, steps, &mut losses),
+        Some(k) => {
+            segment(&mut opt, &mut w, &basis, &w_star, 0, k, &mut losses);
+            let mut blob = Vec::new();
+            opt.save_state(&mut blob).unwrap();
+            // "Kill" the process: everything but the checkpoint is gone.
+            let mut opt2 = mk();
+            let mut r = Reader::new(&blob);
+            opt2.load_state(&mut r).unwrap();
+            r.expect_end().unwrap();
+            segment(&mut opt2, &mut w, &basis, &w_star, k, steps, &mut losses);
+        }
+    }
+    losses
+}
+
+#[test]
+fn interrupted_adaptive_run_reproduces_uninterrupted_loss_curve() {
+    let full = adaptive_lsq_losses(None, 40);
+    for cut in [7, 15, 20] {
+        let resumed = adaptive_lsq_losses(Some(cut), 40);
+        assert_eq!(full, resumed, "loss curve diverged when interrupted at {cut}");
+    }
+    assert!(
+        full[39] < 0.2 * full[0],
+        "sanity: the workload must actually converge ({} -> {})",
+        full[0],
+        full[39]
+    );
+}
+
+// -- checkpoint-file level: v2 roundtrip, v1 compat, corruption -------------
+
+#[test]
+fn full_v2_checkpoint_roundtrips_all_components() {
+    // Component-level mirror of Trainer::save_checkpoint/restore (the
+    // trainer itself needs AOT artifacts; every piece of its checkpoint
+    // path is exercised here without them).
+    let cfg = ModelConfig::by_name("nano").unwrap();
+    let params = init_params(cfg, 11);
+    let mut opt = GaLore::new(galore_cfg(8, 4), Adam::default_paper()).with_seed(2);
+    let mut ws = init_weights();
+    drive(&mut opt, &mut ws, 0, 6);
+    let mut loader = DataLoader::synthetic(SyntheticCorpus::new(cfg.vocab, 3), 4, cfg.seq);
+    for _ in 0..9 {
+        loader.next_batch();
+    }
+    let mut opt_blob = Vec::new();
+    opt.save_state(&mut opt_blob).unwrap();
+    let mut loader_blob = Vec::new();
+    loader.save_state(&mut loader_blob);
+
+    let dir = std::env::temp_dir().join("galore_resume_props");
+    let path = dir.join("full_v2.ckpt");
+    checkpoint::save_v2(
+        &path,
+        &params,
+        "fp=resume-props",
+        6,
+        &[
+            (checkpoint::SEC_OPTIMIZER, &opt_blob),
+            (checkpoint::SEC_LOADER, &loader_blob),
+        ],
+    )
+    .unwrap();
+
+    let Checkpoint::V2(d) = checkpoint::read(&path, cfg).unwrap() else {
+        panic!("expected v2 checkpoint");
+    };
+    assert_eq!(d.fingerprint, "fp=resume-props");
+    assert_eq!(d.step, 6);
+    for (a, b) in params.tensors.iter().zip(d.params.tensors.iter()) {
+        assert_eq!(a.data, b.data);
+    }
+    // Restore the optimizer and loader from the stored sections and check
+    // both continue identically to the originals.
+    let mut opt2 = GaLore::new(galore_cfg(8, 4), Adam::default_paper()).with_seed(2);
+    let mut r = Reader::new(d.section(checkpoint::SEC_OPTIMIZER).unwrap());
+    opt2.load_state(&mut r).unwrap();
+    let mut loader2 = DataLoader::synthetic(SyntheticCorpus::new(cfg.vocab, 3), 4, cfg.seq);
+    let mut r = Reader::new(d.section(checkpoint::SEC_LOADER).unwrap());
+    loader2.load_state(&mut r).unwrap();
+    let mut ws2 = ws.clone();
+    drive(&mut opt, &mut ws, 6, 12);
+    drive(&mut opt2, &mut ws2, 6, 12);
+    for (a, b) in ws.iter().zip(ws2.iter()) {
+        assert_eq!(a.data, b.data);
+    }
+    assert_eq!(loader.next_batch().tokens, loader2.next_batch().tokens);
+}
+
+#[test]
+fn v1_checkpoints_still_load_weights_and_step() {
+    let cfg = ModelConfig::by_name("nano").unwrap();
+    let params = init_params(cfg, 4);
+    let path = std::env::temp_dir().join("galore_resume_props").join("legacy_v1.ckpt");
+    checkpoint::save(&path, &params, 42).unwrap();
+    match checkpoint::read(&path, cfg).unwrap() {
+        Checkpoint::V1 { params: loaded, step } => {
+            assert_eq!(step, 42);
+            for (a, b) in params.tensors.iter().zip(loaded.tensors.iter()) {
+                assert_eq!(a.data, b.data);
+            }
+        }
+        _ => panic!("v1 file parsed as something else"),
+    }
+    let (_, step) = checkpoint::load(&path, cfg).unwrap();
+    assert_eq!(step, 42);
+}
+
+#[test]
+fn truncated_and_corrupted_checkpoints_are_rejected() {
+    let cfg = ModelConfig::by_name("nano").unwrap();
+    let params = init_params(cfg, 8);
+    let dir = std::env::temp_dir().join("galore_resume_props");
+    let path = dir.join("durability.ckpt");
+    checkpoint::save_v2(&path, &params, "fp", 3, &[(checkpoint::SEC_OPTIMIZER, &[7u8; 64])])
+        .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // Every truncation point must be rejected — a crash can stop a
+    // non-atomic write anywhere (the bug this PR fixes is that such a file
+    // used to poison the next resume).
+    for cut in [0, 3, 9, bytes.len() / 3, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+        let p = dir.join("durability_cut.ckpt");
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(checkpoint::read(&p, cfg).is_err(), "truncation at {cut} accepted");
+    }
+    // Bit flips anywhere in the payload must fail the checksum.
+    for pos in [20, bytes.len() / 2, bytes.len() - 12] {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0x10;
+        let p = dir.join("durability_flip.ckpt");
+        std::fs::write(&p, &corrupt).unwrap();
+        assert!(checkpoint::read(&p, cfg).is_err(), "bit flip at {pos} accepted");
+    }
+    // The original still reads fine after all that.
+    assert!(checkpoint::read(&path, cfg).is_ok());
+}
+
+#[test]
+fn optimizer_blob_truncation_is_an_error_not_a_panic() {
+    let mut opt = GaLore::new(galore_cfg(4, 4), Adam::default_paper()).with_seed(1);
+    let mut ws = init_weights();
+    drive(&mut opt, &mut ws, 0, 5);
+    let mut blob = Vec::new();
+    opt.save_state(&mut blob).unwrap();
+    for cut in [0, 1, blob.len() / 4, blob.len() / 2, blob.len() - 1] {
+        let mut fresh = GaLore::new(galore_cfg(4, 4), Adam::default_paper()).with_seed(1);
+        let mut r = Reader::new(&blob[..cut]);
+        assert!(fresh.load_state(&mut r).is_err(), "truncated blob at {cut} loaded");
+    }
+}
