@@ -1,0 +1,168 @@
+//! DP communication bench: full vs. compact gradient all-reduce
+//! (`dp_compress`) over a real ring of worker threads at model schema
+//! shapes — no artifacts needed, gradients are synthetic. Reproduces the
+//! EXPERIMENTS.md §DP communication table: reduced f32s per step (full vs.
+//! steady-state compact), the closed-form `min(m,n)/r` cut per targeted
+//! layer, and end-to-end exchange+update throughput per mode.
+
+use galore::bench::Table;
+use galore::coordinator::{exchange_grads, Ring};
+use galore::model::{schema, ModelConfig, ParamStore};
+use galore::optim::{Adam, GaLore, GaLoreConfig, GradReduceMode, Optimizer};
+use galore::rng::Rng;
+use galore::tensor::Matrix;
+
+const WORLD: usize = 4;
+const STEPS: usize = 24;
+const REFRESH_T: u64 = 8;
+
+struct ModeStats {
+    /// Payload of a steady-state (non-refresh) step, f32 elements.
+    steady_f32s: u64,
+    /// Payload of a refresh-boundary step.
+    boundary_f32s: u64,
+    /// Wall-clock steps/s for the exchange+update loop (all workers).
+    steps_per_sec: f64,
+}
+
+fn run_mode(model: &'static ModelConfig, rank: usize, compress: bool) -> ModeStats {
+    let handles = Ring::new(WORLD).into_handles();
+    let t0 = std::time::Instant::now();
+    let payload_sets: Vec<Vec<u64>> = std::thread::scope(|scope| {
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                scope.spawn(move || {
+                    let store = ParamStore::zeros(model);
+                    let targets = store.projection_targets();
+                    let cfg = GaLoreConfig {
+                        rank,
+                        update_freq: REFRESH_T,
+                        scale: 0.25,
+                        ..Default::default()
+                    };
+                    let mut opt: Box<dyn Optimizer> = Box::new(
+                        GaLore::new(cfg, Adam::default_paper())
+                            .with_targets(targets.iter().copied())
+                            .with_seed(3),
+                    );
+                    let mut rng = Rng::new(0xD1 ^ h.rank as u64);
+                    let mut weights: Vec<Matrix> = store
+                        .metas
+                        .iter()
+                        .map(|m| Matrix::zeros(m.rows, m.cols))
+                        .collect();
+                    // One synthetic gradient set per worker, reused every
+                    // step — contents only shape the projector, not the
+                    // traffic being measured.
+                    let mut grads: Vec<Matrix> = store
+                        .metas
+                        .iter()
+                        .map(|m| Matrix::randn(m.rows, m.cols, 1.0, &mut rng))
+                        .collect();
+                    let mut compact = Vec::new();
+                    let mut plan = Vec::new();
+                    let mut payloads = Vec::new();
+                    for _ in 0..STEPS {
+                        let p = exchange_grads(
+                            &h,
+                            opt.as_ref(),
+                            &mut grads,
+                            &mut compact,
+                            &mut plan,
+                            compress,
+                        )
+                        .expect("ring healthy");
+                        payloads.push(p);
+                        for idx in 0..grads.len() {
+                            match plan[idx] {
+                                GradReduceMode::Full => {
+                                    opt.step(idx, &mut weights[idx], &grads[idx], 0.01)
+                                }
+                                GradReduceMode::Compact { .. } => {
+                                    opt.step_compact(idx, &mut weights[idx], &compact[idx], 0.01)
+                                }
+                            }
+                        }
+                    }
+                    payloads
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let payloads = &payload_sets[0];
+    ModeStats {
+        steady_f32s: payloads[STEPS - 1], // STEPS-1 not divisible by REFRESH_T
+        boundary_f32s: payloads[0],
+        steps_per_sec: STEPS as f64 / elapsed.max(1e-9),
+    }
+}
+
+fn fmt_mib(f32s: u64) -> String {
+    format!("{:.2} MiB", 4.0 * f32s as f64 / (1024.0 * 1024.0))
+}
+
+fn main() {
+    // The "steady" sample is the last step; it must not be a boundary.
+    assert!((STEPS - 1) as u64 % REFRESH_T != 0);
+    let mut table = Table::new(&[
+        "model",
+        "rank",
+        "mode",
+        "f32s/step (steady)",
+        "bytes/step",
+        "cut vs full",
+        "steps/s (W=4)",
+    ]);
+    for name in ["nano", "micro"] {
+        let model = ModelConfig::by_name(name).unwrap();
+        let rank = model.default_rank();
+        let full = run_mode(model, rank, false);
+        let comp = run_mode(model, rank, true);
+        assert_eq!(
+            comp.boundary_f32s, full.steady_f32s,
+            "refresh boundaries must exchange the full gradient"
+        );
+        // Closed-form steady-state compact payload from the schema.
+        let mut want_compact = 0u64;
+        for meta in schema(model) {
+            if meta.is_projection_target() {
+                let r = (rank as u64).min(meta.rows as u64).min(meta.cols as u64);
+                want_compact += r * meta.rows.max(meta.cols) as u64;
+            } else {
+                want_compact += (meta.rows * meta.cols) as u64;
+            }
+        }
+        assert_eq!(comp.steady_f32s, want_compact, "{name}: payload vs closed form");
+        let cut = full.steady_f32s as f64 / comp.steady_f32s as f64;
+        table.row(&[
+            name.into(),
+            format!("{rank}"),
+            "full".into(),
+            format!("{}", full.steady_f32s),
+            fmt_mib(full.steady_f32s),
+            "1.00x".into(),
+            format!("{:.1}", full.steps_per_sec),
+        ]);
+        table.row(&[
+            name.into(),
+            format!("{rank}"),
+            "compact".into(),
+            format!("{}", comp.steady_f32s),
+            fmt_mib(comp.steady_f32s),
+            format!("{cut:.2}x"),
+            format!("{:.1}", comp.steps_per_sec),
+        ]);
+    }
+    table.print(&format!(
+        "DP gradient exchange, W={WORLD}, T={REFRESH_T} (reduced payload per step; \
+         ring wire traffic per worker = 2(W-1)/W of it)"
+    ));
+    println!(
+        "\nNote: full gradients still flow at refresh boundaries (every T steps) and\n\
+         for non-target parameters; between refreshes each targeted layer ships\n\
+         r*max(m,n) instead of m*n f32s — a min(m,n)/r cut per layer."
+    );
+}

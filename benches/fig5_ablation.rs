@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..cfg.steps {
             trainer.train_step()?;
         }
-        let loss = trainer.eval(2)?;
+        let loss = trainer.eval(cfg.eval_batches)?;
         let label = if f >= 1_000_000 { "never".into() } else { f.to_string() };
         t.row(&[label, format!("{loss:.4}"), format!("{:.2}", loss.exp())]);
         results.push((f, loss));
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..cfg.steps {
             trainer.train_step()?;
         }
-        let loss = trainer.eval(2)?;
+        let loss = trainer.eval(cfg.eval_batches)?;
         t2.row(&[rank.to_string(), steps.to_string(), format!("{loss:.4}"), format!("{:.2}", loss.exp())]);
     }
     t2.print("Fig. 5 right (rank x steps trade-off; paper: rank 128 x 80K beats rank 512 x 20K)");

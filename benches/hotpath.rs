@@ -126,7 +126,7 @@ fn main() -> anyhow::Result<()> {
             for h in handles {
                 scope.spawn(move || {
                     let mut data = vec![1.0f32; 1 << 20];
-                    h.all_reduce_sum(&mut data);
+                    h.all_reduce_sum(&mut data).expect("ring healthy");
                 });
             }
         });

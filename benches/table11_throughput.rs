@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
             trainer.train_step()?;
         }
         let wall = t0.elapsed();
-        let loss = trainer.eval(2)?;
+        let loss = trainer.eval(cfg.eval_batches)?;
         let tps = trainer.metrics.total_tokens() as f64 / wall.as_secs_f64();
         let exec_frac = 100.0 * trainer.metrics.exec_time.as_secs_f64() / wall.as_secs_f64();
         t.row(&[

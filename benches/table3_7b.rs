@@ -22,12 +22,12 @@ fn main() -> anyhow::Result<()> {
         for step in 0..cfg.steps {
             trainer.train_step()?;
             if checkpoints.contains(&(step + 1)) {
-                let l = trainer.eval(2)?;
+                let l = trainer.eval(cfg.eval_batches)?;
                 ppls.push(l.exp());
             }
         }
         while ppls.len() < 4 {
-            ppls.push(trainer.eval(2)?.exp());
+            ppls.push(trainer.eval(cfg.eval_batches)?.exp());
         }
         let (mem, paper) = match cfg.method {
             MethodKind::GaLore8bit => (

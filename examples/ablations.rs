@@ -12,7 +12,7 @@ fn run(cfg: RunConfig) -> anyhow::Result<f32> {
     for _ in 0..cfg.steps {
         trainer.train_step()?;
     }
-    Ok(trainer.eval(2)?)
+    Ok(trainer.eval(cfg.eval_batches)?)
 }
 
 fn main() -> anyhow::Result<()> {

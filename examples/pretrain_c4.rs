@@ -62,13 +62,13 @@ fn main() -> anyhow::Result<()> {
             );
         }
         if (step + 1) % cfg.eval_every == 0 {
-            let l = trainer.eval(2)?;
+            let l = trainer.eval(cfg.eval_batches)?;
             trainer.metrics.log_eval(step + 1, l);
             println!("  >> eval loss {:.4}  ppl {:.2}", l, l.exp());
         }
     }
     let elapsed = t0.elapsed();
-    let eval = trainer.eval(4)?;
+    let eval = trainer.eval(cfg.eval_batches)?;
     trainer.metrics.log_eval(cfg.steps, eval);
 
     let csv = format!("runs/pretrain_{}_{}.csv", model.name, method.label());

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
                 println!("  step {step:>4}  loss {loss:.4}");
             }
         }
-        let eval = trainer.eval(2)?;
+        let eval = trainer.eval(trainer.cfg.eval_batches)?;
         let state = trainer.optimizer_state_bytes();
         println!("  final eval loss {:.4} (ppl {:.2}), optimizer state {}", eval, eval.exp(), fmt_gib(state as u64));
         results.push((method.label(), eval, state));

@@ -80,8 +80,19 @@ pub struct RunConfig {
     pub layerwise: bool,
     /// Evaluate every N steps (0 = only at end).
     pub eval_every: usize,
+    /// Held-out batches per evaluation — the *single* eval window used by
+    /// in-loop, final, and data-parallel evals alike, so every point on
+    /// the eval curve is comparable (the old code used 2 in-loop but 4 at
+    /// the end).
+    pub eval_batches: usize,
     /// Data-parallel worker count (1 = single process).
     pub dp_workers: usize,
+    /// Compact-gradient data parallelism: between subspace refreshes,
+    /// replicas exchange the projected `r×n` gradient instead of the full
+    /// `m×n` one for GaLore-targeted layers (full gradients still flow at
+    /// refresh boundaries and for non-target parameters). Exact in real
+    /// arithmetic; requires a GaLore method.
+    pub dp_compress: bool,
     /// Write a full-state (v2) checkpoint every N steps (0 = off). Under
     /// data parallelism rank 0 writes; replicas are bit-identical.
     pub checkpoint_every: usize,
@@ -115,7 +126,9 @@ impl RunConfig {
             seed: 0,
             layerwise: false,
             eval_every: 0,
+            eval_batches: 4,
             dp_workers: 1,
+            dp_compress: false,
             checkpoint_every: 0,
             checkpoint_keep_last: 3,
             checkpoint_dir: "checkpoints".into(),
@@ -132,8 +145,8 @@ impl RunConfig {
         let g = &self.galore;
         format!(
             "model={} method={} steps={} batch={} lr={} warmup={} final_lr={} wd={} \
-             seed={} layerwise={} dp={} rank={} T={} scale={} quant={} schedule={} \
-             floor={} decay={} energy={} gate={} lowrank_rank={} merge={}",
+             seed={} layerwise={} dp={} dp_compress={} rank={} T={} scale={} quant={} \
+             schedule={} floor={} decay={} energy={} gate={} lowrank_rank={} merge={}",
             self.model.name,
             self.method.label(),
             self.steps,
@@ -145,6 +158,7 @@ impl RunConfig {
             self.seed,
             self.layerwise,
             self.dp_workers,
+            self.dp_compress,
             g.rank,
             g.update_freq,
             g.scale,
@@ -186,6 +200,24 @@ impl RunConfig {
         if self.dp_workers == 0 {
             return Err("dp_workers must be >= 1".into());
         }
+        if self.dp_compress && !self.method.is_galore() {
+            return Err(format!(
+                "dp_compress requires a GaLore method (got '{}'): only projected \
+                 gradients have a compact form to exchange",
+                self.method.label()
+            ));
+        }
+        if self.dp_compress && self.dp_workers < 2 {
+            return Err(
+                "dp_compress requires dp_workers >= 2: with a single worker there \
+                 is no gradient exchange to compress (the flag would be a silent \
+                 no-op)"
+                    .into(),
+            );
+        }
+        if self.eval_batches == 0 {
+            return Err("eval_batches must be >= 1 (the held-out eval window)".into());
+        }
         if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
             return Err(
                 "checkpoint.every is set but checkpoint.dir is empty — periodic \
@@ -222,8 +254,14 @@ impl RunConfig {
         if let Some(v) = doc.get_parse("", "eval_every") {
             cfg.eval_every = v;
         }
+        if let Some(v) = doc.get_parse("", "eval_batches") {
+            cfg.eval_batches = v;
+        }
         if let Some(v) = doc.get_parse("", "dp_workers") {
             cfg.dp_workers = v;
+        }
+        if let Some(v) = doc.get_parse("", "dp_compress") {
+            cfg.dp_compress = v;
         }
         if let Some(v) = doc.get_parse("galore", "rank") {
             cfg.galore.rank = v;
@@ -431,6 +469,45 @@ mod tests {
     }
 
     #[test]
+    fn dp_compress_parses_and_requires_galore() {
+        let doc = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"galore\"\ndp_workers = 4\ndp_compress = true\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert!(cfg.dp_compress);
+        assert_eq!(cfg.dp_workers, 4);
+        // Non-GaLore methods have no compact gradient to exchange.
+        let bad = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"adamw\"\ndp_workers = 4\ndp_compress = true\n",
+        )
+        .unwrap();
+        let err = RunConfig::from_toml(&bad).unwrap_err();
+        assert!(err.contains("dp_compress"), "{err}");
+        assert!(err.contains("GaLore"), "{err}");
+        // A single worker has no exchange to compress: reject the silent
+        // no-op instead of printing a banner that reads like it's on.
+        let solo =
+            TomlDoc::parse("model = \"nano\"\nmethod = \"galore\"\ndp_compress = true\n").unwrap();
+        let err = RunConfig::from_toml(&solo).unwrap_err();
+        assert!(err.contains("dp_workers >= 2"), "{err}");
+    }
+
+    #[test]
+    fn eval_batches_parses_and_rejects_zero() {
+        let doc = TomlDoc::parse("model = \"nano\"\neval_batches = 8\n").unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.eval_batches, 8);
+        assert_eq!(
+            RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore)
+                .eval_batches,
+            4
+        );
+        let bad = TomlDoc::parse("model = \"nano\"\neval_batches = 0\n").unwrap();
+        assert!(RunConfig::from_toml(&bad).unwrap_err().contains("eval_batches"));
+    }
+
+    #[test]
     fn fingerprint_tracks_trajectory_knobs_only() {
         let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
         let fp = base.fingerprint();
@@ -441,8 +518,12 @@ mod tests {
         let mut diff = base.clone();
         diff.galore.rank = 8;
         assert_ne!(fp, diff.fingerprint());
+        let mut diff = base.clone();
+        diff.dp_compress = true;
+        assert_ne!(fp, diff.fingerprint(), "dp_compress changes reduction order");
         let mut same = base.clone();
         same.eval_every = 10;
+        same.eval_batches = 8;
         same.checkpoint_every = 50;
         assert_eq!(fp, same.fingerprint(), "observation knobs must not change it");
     }

@@ -22,7 +22,7 @@ use crate::runtime::{Engine, Input};
 use crate::ser;
 use crate::tensor::{matmul_at_b_into, Matrix};
 use anyhow::{bail, Result};
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 
 struct LayerState {
     m: Matrix, // (r, n) compact first moment
@@ -47,7 +47,13 @@ pub struct FusedGaLore {
     gate: RefreshGate,
     /// Refresh boundaries skipped by the gate, for metrics.
     pub gate_skips: u64,
-    handled: HashSet<usize>,
+    /// Per handled parameter: the short-side-first gradient shape and the
+    /// effective rank its artifact was lowered for — the shapes every
+    /// restored state blob must match (`load_state` cross-checks all of
+    /// M, V, *and* P against these; a wrong-shape projector used to slip
+    /// through and fail much later as an opaque artifact input-length
+    /// error).
+    expect: HashMap<usize, (usize, usize, usize)>,
     states: HashMap<usize, LayerState>,
     svd_ws: SvdWorkspace,
     rng: Rng,
@@ -79,7 +85,7 @@ impl FusedGaLore {
             );
         }
         let rank = cfg.galore.rank;
-        let mut handled = HashSet::new();
+        let mut expect = HashMap::new();
         for &idx in targets {
             let meta = &params.metas[idx];
             let (m, n) = short_side_first(meta.rows, meta.cols);
@@ -93,7 +99,7 @@ impl FusedGaLore {
             };
             let name = art.name.clone();
             engine.prepare(&name)?;
-            handled.insert(idx);
+            expect.insert(idx, (m, n, rank.min(m)));
         }
         Ok(FusedGaLore {
             rank,
@@ -101,7 +107,7 @@ impl FusedGaLore {
             scale: cfg.galore.scale,
             gate: cfg.galore.refresh_gate(),
             gate_skips: 0,
-            handled,
+            expect,
             states: HashMap::new(),
             svd_ws: SvdWorkspace::new(),
             rng: Rng::new(cfg.seed ^ 0xF05ED),
@@ -109,7 +115,7 @@ impl FusedGaLore {
     }
 
     pub fn handles(&self, idx: usize) -> bool {
-        self.handled.contains(&idx)
+        self.expect.contains_key(&idx)
     }
 
     /// Checkpoint v2 (`FUSD` section): per-layer compact moments,
@@ -138,23 +144,17 @@ impl FusedGaLore {
         let n = r.u32()?;
         for _ in 0..n {
             let idx = r.usize()?;
-            if !self.handled.contains(&idx) {
+            let Some(&want) = self.expect.get(&idx) else {
                 return Err(format!(
                     "fused state for parameter {idx}, which this run's artifact set \
                      does not handle"
                 ));
-            }
+            };
             let t = r.u64()?;
             let m = r.matrix()?;
             let v = r.matrix()?;
             let p = r.matrix()?;
-            if m.shape() != v.shape() {
-                return Err(format!(
-                    "fused param {idx}: M shape {:?} != V shape {:?}",
-                    m.shape(),
-                    v.shape()
-                ));
-            }
+            check_layer_state(idx, &m, &v, &p, want)?;
             self.states.insert(
                 idx,
                 LayerState {
@@ -268,5 +268,75 @@ fn short_side_first(rows: usize, cols: usize) -> (usize, usize) {
         (rows, cols)
     } else {
         (cols, rows)
+    }
+}
+
+/// Cross-check one restored fused layer state against the shapes this
+/// run's artifacts were lowered for: compact moments `(r, n)` and
+/// projector `(m, r)` with `(m, n, r)` the expected short-side-first
+/// shape and effective rank. Every mismatch is named here at restore
+/// time; the old check compared M against V only, so a wrong-shape or
+/// wrong-rank projector surfaced much later as an opaque artifact
+/// input-length error mid-run.
+fn check_layer_state(
+    idx: usize,
+    m: &Matrix,
+    v: &Matrix,
+    p: &Matrix,
+    (gm, gn, r): (usize, usize, usize),
+) -> Result<(), String> {
+    if m.shape() != (r, gn) {
+        return Err(format!(
+            "fused param {idx}: M shape {:?} does not match this run's compact shape \
+             ({r}, {gn}) — checkpoint from a different rank or model?",
+            m.shape()
+        ));
+    }
+    if v.shape() != (r, gn) {
+        return Err(format!(
+            "fused param {idx}: V shape {:?} does not match this run's compact shape \
+             ({r}, {gn})",
+            v.shape()
+        ));
+    }
+    if p.shape() != (gm, r) {
+        return Err(format!(
+            "fused param {idx}: projector shape {:?} does not match this run's \
+             ({gm}, {r}) — the galore_step_{gm}x{gn}_r{r} artifact would reject it \
+             as an input-length mismatch mid-run",
+            p.shape()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_state_shape_checks_name_every_mismatch() {
+        let want = (16usize, 64usize, 4usize); // (m, n, r)
+        let good_m = Matrix::zeros(4, 64);
+        let good_v = Matrix::zeros(4, 64);
+        let good_p = Matrix::zeros(16, 4);
+        assert!(check_layer_state(0, &good_m, &good_v, &good_p, want).is_ok());
+        // Wrong-rank projector: the case that used to slip through (only
+        // M/V were cross-checked) and die later inside the artifact call.
+        let bad_p = Matrix::zeros(16, 8);
+        let err = check_layer_state(3, &good_m, &good_v, &bad_p, want).unwrap_err();
+        assert!(err.contains("projector"), "{err}");
+        assert!(err.contains("param 3"), "{err}");
+        // Wrong-shape moments are still rejected, now against the run's
+        // expected shape rather than merely against each other.
+        let bad_m = Matrix::zeros(8, 64);
+        let err = check_layer_state(1, &bad_m, &good_v, &good_p, want).unwrap_err();
+        assert!(err.contains("M shape"), "{err}");
+        let bad_v = Matrix::zeros(4, 32);
+        let err = check_layer_state(2, &good_m, &bad_v, &good_p, want).unwrap_err();
+        assert!(err.contains("V shape"), "{err}");
+        // A transposed projector (n×r instead of m×r) is caught too.
+        let transposed_p = Matrix::zeros(4, 16);
+        assert!(check_layer_state(0, &good_m, &good_v, &transposed_p, want).is_err());
     }
 }

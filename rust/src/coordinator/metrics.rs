@@ -103,6 +103,13 @@ pub struct Metrics {
     pub last_step_allocs: u64,
     /// Bytes requested by those allocations.
     pub last_step_alloc_bytes: u64,
+    /// Cumulative f32 elements this worker contributed to gradient
+    /// all-reduces (the logical reduced payload, summed over steps).
+    /// Observational — like `exec_time` it restarts at resume and is not
+    /// checkpointed.
+    total_comm_f32s: u64,
+    /// Reduced payload of the most recent step (f32 elements).
+    pub last_step_comm_f32s: u64,
 }
 
 impl Default for Metrics {
@@ -122,6 +129,8 @@ impl Metrics {
             exec_time: std::time::Duration::ZERO,
             last_step_allocs: 0,
             last_step_alloc_bytes: 0,
+            total_comm_f32s: 0,
+            last_step_comm_f32s: 0,
         }
     }
 
@@ -141,6 +150,24 @@ impl Metrics {
     /// workspaces are warm).
     pub fn allocs_per_step(&self) -> u64 {
         self.last_step_allocs
+    }
+
+    /// Record one step's gradient-exchange payload (f32 elements reduced;
+    /// `coordinator::parallel` logs the comm plan's logical size — the
+    /// wire traffic per worker is `2·(W−1)/W` of it for a ring).
+    pub fn log_step_comm(&mut self, f32s: u64) {
+        self.last_step_comm_f32s = f32s;
+        self.total_comm_f32s += f32s;
+    }
+
+    /// Cumulative reduced payload in f32 elements.
+    pub fn comm_f32s_total(&self) -> u64 {
+        self.total_comm_f32s
+    }
+
+    /// Cumulative reduced payload in bytes.
+    pub fn comm_bytes_total(&self) -> u64 {
+        4 * self.total_comm_f32s
     }
 
     pub fn log_eval(&mut self, step: usize, loss: f32) {
@@ -180,6 +207,21 @@ impl Metrics {
 
     pub fn total_tokens(&self) -> u64 {
         self.total_tokens
+    }
+
+    /// Tokens consumed by *this process* (excludes the counter restored
+    /// from a checkpoint). `total_tokens() = resumed_tokens() +
+    /// session_tokens()` — the split the data-parallel aggregation needs
+    /// to attribute restored tokens exactly once per replica.
+    pub fn session_tokens(&self) -> u64 {
+        self.total_tokens.saturating_sub(self.resumed_tokens)
+    }
+
+    /// The token counter as restored from a checkpoint (0 for a fresh
+    /// run). Per-replica: under data parallelism this is rank-0's own
+    /// pre-interrupt consumption, not the global total.
+    pub fn resumed_tokens(&self) -> u64 {
+        self.resumed_tokens
     }
 
     /// Checkpoint v2: token counter plus the full step/eval history, so a
@@ -326,6 +368,24 @@ mod tests {
         m.log_step_allocs(5, 1234);
         assert_eq!(m.allocs_per_step(), 5);
         assert_eq!(m.last_step_alloc_bytes, 1234);
+    }
+
+    #[test]
+    fn comm_counters_accumulate_and_restart_on_resume() {
+        let mut m = Metrics::new();
+        assert_eq!(m.comm_f32s_total(), 0);
+        m.log_step_comm(100);
+        m.log_step_comm(40);
+        assert_eq!(m.last_step_comm_f32s, 40);
+        assert_eq!(m.comm_f32s_total(), 140);
+        assert_eq!(m.comm_bytes_total(), 560);
+        // Observational counter: a state roundtrip does not carry it.
+        let mut blob = Vec::new();
+        m.save_state(&mut blob);
+        let mut n = Metrics::new();
+        let mut r = crate::ser::Reader::new(&blob);
+        n.load_state(&mut r).unwrap();
+        assert_eq!(n.comm_f32s_total(), 0);
     }
 
     #[test]

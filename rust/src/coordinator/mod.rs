@@ -20,6 +20,9 @@ pub mod schedule;
 pub mod trainer;
 
 pub use metrics::{thread_alloc_stats, AllocStats, Metrics};
-pub use parallel::{train_data_parallel, train_data_parallel_resumable, DpResult, Ring, RingHandle};
+pub use parallel::{
+    collect_worker_results, exchange_grads, train_data_parallel,
+    train_data_parallel_resumable, DpResult, Ring, RingClosed, RingHandle, RING_ABORT_MSG,
+};
 pub use schedule::LrSchedule;
 pub use trainer::{build_optimizer, Trainer};

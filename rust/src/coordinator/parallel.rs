@@ -10,18 +10,60 @@
 //! replicas stay bit-identical without weight broadcasts, exactly like
 //! synchronous DDP.
 //!
+//! **Compact-gradient exchange** (`cfg.dp_compress`): between subspace
+//! refreshes a GaLore-targeted layer's update consumes only the projected
+//! gradient `R = Pᵀ G` (`r×n`), and every replica holds a bit-identical
+//! basis `P` — so replicas project *before* the all-reduce and exchange
+//! `R` instead of `G`, an exact (real-arithmetic) `min(m,n)/r`× traffic
+//! cut per targeted layer. Full gradients still flow for non-target
+//! parameters and at refresh boundaries, where the randomized SVD, the
+//! rank schedule, and the lazy-refresh gate all need the *averaged* `G`
+//! to keep replica projectors bit-identical. The per-parameter decision
+//! is the optimizer's ([`Optimizer::grad_reduce_mode`]); this module just
+//! executes the plan and accounts the traffic.
+//!
 //! Adaptive-rank runs (`galore.rank_schedule`) need no extra coordination:
 //! rank decisions and lazy-refresh gating are deterministic functions of
 //! the *averaged* gradient and the shared run seed, and every worker sees
 //! the same averaged gradient — so per-layer ranks stay identical across
-//! replicas, and so do the remapped moments.
+//! replicas, and so do the remapped moments. Under `dp_compress` the rank
+//! decision points are exactly the refresh boundaries, where the full
+//! gradient is reduced, so compact exchange composes with every schedule.
+//!
+//! Failure handling: collectives are fallible. A worker that errors (or
+//! panics) drops its channel handles; neighbours observe [`RingClosed`]
+//! on their next hop, shut down in turn, and the aggregator surfaces the
+//! *first root-cause* worker error instead of a process-wide recv panic.
 
 use crate::config::RunConfig;
 use crate::coordinator::Trainer;
 use crate::data::{DataLoader, SyntheticCorpus};
+use crate::optim::{GradReduceMode, Optimizer};
 use crate::runtime::{default_dir, Engine};
-use anyhow::Result;
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Marker text shared by every ring-shutdown error. The aggregator uses
+/// it to demote these secondary failures below the root-cause worker
+/// error (a `RingClosed` is a symptom of *another* worker dying).
+pub const RING_ABORT_MSG: &str =
+    "ring all-reduce aborted: a peer worker shut down mid-collective";
+
+/// The ring collective could not complete because a peer dropped its
+/// handles — it returned an error or panicked. Not a data error: the
+/// observing worker should abort its replica and let the aggregator
+/// surface the peer's failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RingClosed;
+
+impl std::fmt::Display for RingClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(RING_ABORT_MSG)
+    }
+}
+
+impl std::error::Error for RingClosed {}
 
 /// Channel mesh for a ring of `n` participants exchanging f32 chunks.
 pub struct Ring {
@@ -72,10 +114,12 @@ pub struct RingHandle {
 impl RingHandle {
     /// In-place ring all-reduce (sum) over `data`, chunked into `world`
     /// segments: W−1 reduce-scatter hops then W−1 all-gather hops.
-    pub fn all_reduce_sum(&self, data: &mut [f32]) {
+    /// Errors with [`RingClosed`] when a peer has dropped its handles —
+    /// the collective cannot complete and the caller should shut down.
+    pub fn all_reduce_sum(&self, data: &mut [f32]) -> Result<(), RingClosed> {
         let w = self.world;
         if w == 1 {
-            return;
+            return Ok(());
         }
         let n = data.len();
         let chunk = n.div_ceil(w);
@@ -86,8 +130,8 @@ impl RingHandle {
         for s in 0..w - 1 {
             let send_c = (self.rank + w - s) % w;
             let (a, b) = bounds(send_c);
-            self.to_next.send(data[a..b].to_vec()).expect("ring send");
-            let recv = self.from_prev.recv().expect("ring recv");
+            self.to_next.send(data[a..b].to_vec()).map_err(|_| RingClosed)?;
+            let recv = self.from_prev.recv().map_err(|_| RingClosed)?;
             let recv_c = (self.rank + w - s - 1) % w;
             let (a, b) = bounds(recv_c);
             for (d, r) in data[a..b].iter_mut().zip(recv.iter()) {
@@ -98,38 +142,116 @@ impl RingHandle {
         for s in 0..w - 1 {
             let send_c = (self.rank + 1 + w - s) % w;
             let (a, b) = bounds(send_c);
-            self.to_next.send(data[a..b].to_vec()).expect("ring send");
-            let recv = self.from_prev.recv().expect("ring recv");
+            self.to_next.send(data[a..b].to_vec()).map_err(|_| RingClosed)?;
+            let recv = self.from_prev.recv().map_err(|_| RingClosed)?;
             let recv_c = (self.rank + w - s) % w;
             let (a, b) = bounds(recv_c);
             data[a..b].copy_from_slice(&recv);
         }
+        Ok(())
     }
 
     /// Average instead of sum.
-    pub fn all_reduce_mean(&self, data: &mut [f32]) {
-        self.all_reduce_sum(data);
+    pub fn all_reduce_mean(&self, data: &mut [f32]) -> Result<(), RingClosed> {
+        self.all_reduce_sum(data)?;
         let inv = 1.0 / self.world as f32;
         for v in data.iter_mut() {
             *v *= inv;
         }
+        Ok(())
     }
+}
+
+/// Execute one step's gradient exchange according to the per-parameter
+/// communication plan (written into `plan`, schema order): a full ring
+/// average for [`GradReduceMode::Full`] entries, project-then-average
+/// into `compact[idx]` for [`GradReduceMode::Compact`] ones. With
+/// `compress` off every parameter reduces full (the plan is still
+/// recorded, all-`Full`). Returns the logical reduced payload in f32
+/// elements — the per-step communication the metrics account; ring wire
+/// traffic per worker is `2·(W−1)/W` of it.
+///
+/// `compact` and `plan` are caller-owned workspaces reused across steps:
+/// zero steady-state allocations once warm, matching the hot-path
+/// contract of the single-process loop.
+pub fn exchange_grads(
+    handle: &RingHandle,
+    opt: &dyn Optimizer,
+    grads: &mut [Matrix],
+    compact: &mut Vec<Matrix>,
+    plan: &mut Vec<GradReduceMode>,
+    compress: bool,
+) -> Result<u64, RingClosed> {
+    if compact.len() < grads.len() {
+        compact.resize_with(grads.len(), || Matrix::zeros(0, 0));
+    }
+    plan.clear();
+    let mut payload = 0u64;
+    for (idx, g) in grads.iter_mut().enumerate() {
+        let mode = if compress {
+            opt.grad_reduce_mode(idx, g.rows, g.cols)
+        } else {
+            GradReduceMode::Full
+        };
+        match mode {
+            GradReduceMode::Full => {
+                handle.all_reduce_mean(&mut g.data)?;
+            }
+            GradReduceMode::Compact { .. } => {
+                // The plan and the projection come from the same optimizer
+                // state, so a refusal here is a contract violation — fail
+                // loudly rather than reduce a stale buffer.
+                assert!(
+                    opt.project_grad_into(idx, g, &mut compact[idx]),
+                    "optimizer planned a compact reduce for param {idx} but refused \
+                     to project its gradient"
+                );
+                handle.all_reduce_mean(&mut compact[idx].data)?;
+            }
+        }
+        payload += mode.payload_f32s(g.rows, g.cols) as u64;
+        plan.push(mode);
+    }
+    Ok(payload)
 }
 
 /// Result of a data-parallel run.
 pub struct DpResult {
     pub final_train_loss: f32,
     pub final_eval_loss: f32,
+    /// Global tokens consumed across all replicas over the whole training
+    /// run, including any segment before a checkpoint restore.
     pub total_tokens: u64,
     pub elapsed: std::time::Duration,
     /// Rank-0 optimizer-state bytes at the end of the run (per replica;
     /// shrinks over time under adaptive rank schedules).
     pub final_state_bytes: usize,
+    /// Rank-0's cumulative reduced gradient payload (f32 elements;
+    /// logical all-reduce size, see [`exchange_grads`]). Observational
+    /// and per-process, like throughput: a resumed run counts only the
+    /// post-restore segment (unlike `total_tokens`, which attributes the
+    /// pre-interrupt segment explicitly).
+    pub comm_f32s_total: u64,
+    /// Rank-0's reduced payload on the final step (the steady-state
+    /// per-step figure when the run does not end on a refresh boundary).
+    pub comm_f32s_last_step: u64,
+}
+
+/// What one worker thread reports back on success.
+struct WorkerOutcome {
+    train_loss: f32,
+    eval_loss: f32,
+    session_tokens: u64,
+    resumed_tokens: u64,
+    state_bytes: usize,
+    comm_f32s_total: u64,
+    comm_f32s_last_step: u64,
 }
 
 /// Synchronous data-parallel training of `cfg` over `cfg.dp_workers`
 /// workers. Each worker holds a replica; gradients are ring-averaged each
-/// step. Returns the rank-0 metrics.
+/// step (compact-projected first when `cfg.dp_compress` is set). Returns
+/// the rank-0 metrics.
 pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
     train_data_parallel_resumable(cfg, None)
 }
@@ -148,12 +270,12 @@ pub fn train_data_parallel_resumable(
     let world = cfg.dp_workers.max(1);
     let handles = Ring::new(world).into_handles();
     let t0 = std::time::Instant::now();
-    let results: Vec<Result<(f32, f32, u64, usize)>> = std::thread::scope(|scope| {
+    let results: Vec<Result<WorkerOutcome>> = std::thread::scope(|scope| {
         let mut joins = Vec::new();
         for handle in handles {
             let cfg = cfg.clone();
             let resume = resume.map(|p| p.to_path_buf());
-            joins.push(scope.spawn(move || -> Result<(f32, f32, u64, usize)> {
+            joins.push(scope.spawn(move || -> Result<WorkerOutcome> {
                 let engine = Engine::new(default_dir())?;
                 // Disjoint shard streams per worker: offset the corpus seed.
                 let corpus =
@@ -163,26 +285,38 @@ pub fn train_data_parallel_resumable(
                 if let Some(path) = &resume {
                     trainer.restore_checkpoint(path)?;
                 }
+                let mut compact_bufs: Vec<Matrix> = Vec::new();
+                let mut plan: Vec<GradReduceMode> = Vec::new();
                 while trainer.step < cfg.steps {
                     let step = trainer.step;
                     let batch = trainer.loader.next_batch();
                     // Gradients land in the trainer's persistent buffers
                     // and are ring-reduced in place — no per-step clones.
                     let loss = trainer.compute_grads_into(&batch)?;
-                    for g in trainer.grad_bufs.iter_mut() {
-                        handle.all_reduce_mean(&mut g.data);
-                    }
+                    // `mem::take` detaches the buffers (no allocation) so
+                    // the optimizer can plan/project against them while the
+                    // trainer is mutably borrowed below.
+                    let mut bufs = std::mem::take(&mut trainer.grad_bufs);
+                    let comm = exchange_grads(
+                        &handle,
+                        trainer.opt.as_ref(),
+                        &mut bufs,
+                        &mut compact_bufs,
+                        &mut plan,
+                        cfg.dp_compress,
+                    )?;
                     let mut loss_buf = [loss];
-                    handle.all_reduce_mean(&mut loss_buf);
+                    handle.all_reduce_mean(&mut loss_buf)?;
                     let lr = trainer.schedule.at(step);
                     let a0 = crate::coordinator::metrics::thread_alloc_stats();
-                    let bufs = std::mem::take(&mut trainer.grad_bufs);
-                    trainer.apply_updates(&bufs, lr);
+                    let applied = trainer.apply_updates_planned(&bufs, &plan, &compact_bufs, lr);
                     trainer.grad_bufs = bufs;
+                    applied?;
                     let a1 = crate::coordinator::metrics::thread_alloc_stats();
                     trainer
                         .metrics
                         .log_step_allocs(a1.allocs - a0.allocs, a1.bytes - a0.bytes);
+                    trainer.metrics.log_step_comm(comm);
                     trainer.metrics.log_step(step, loss_buf[0], lr, batch.n_tokens());
                     trainer.step += 1;
                     if handle.rank == 0
@@ -192,29 +326,103 @@ pub fn train_data_parallel_resumable(
                         trainer.save_periodic_checkpoint()?;
                     }
                 }
-                let eval = trainer.eval(2)?;
-                Ok((
-                    trainer.metrics.tail_loss(10).unwrap_or(f32::NAN),
-                    eval,
-                    trainer.metrics.total_tokens(),
-                    trainer.optimizer_state_bytes(),
-                ))
+                let eval = trainer.eval(cfg.eval_batches)?;
+                Ok(WorkerOutcome {
+                    train_loss: trainer.metrics.tail_loss(10).unwrap_or(f32::NAN),
+                    eval_loss: eval,
+                    session_tokens: trainer.metrics.session_tokens(),
+                    resumed_tokens: trainer.metrics.resumed_tokens(),
+                    state_bytes: trainer.optimizer_state_bytes(),
+                    comm_f32s_total: trainer.metrics.comm_f32s_total(),
+                    comm_f32s_last_step: trainer.metrics.last_step_comm_f32s,
+                })
             }));
         }
-        joins.into_iter().map(|j| j.join().expect("worker panicked")).collect()
+        joins
+            .into_iter()
+            .enumerate()
+            .map(|(rank, j)| match j.join() {
+                Ok(r) => r,
+                // A panicking worker drops its ring handles like an erroring
+                // one; convert the payload into an error so neighbours'
+                // RingClosed shutdowns and this root cause aggregate the
+                // same way instead of poisoning the whole process.
+                Err(payload) => Err(anyhow!(
+                    "worker {rank} panicked: {}",
+                    panic_message(payload.as_ref())
+                )),
+            })
+            .collect()
     });
     let elapsed = t0.elapsed();
-    let mut first = None;
-    let mut total_tokens = 0;
-    for r in results {
-        let (train, eval, tokens, state_bytes) = r?;
-        total_tokens += tokens;
-        if first.is_none() {
-            first = Some((train, eval, state_bytes));
+    let outcomes = collect_worker_results(results)?;
+    // Global token accounting: every replica consumed `session_tokens`
+    // in this process, plus — by the lockstep-replica invariant — the
+    // same per-replica `resumed` share before the interrupt (the
+    // checkpoint's counter is rank-0's *own* consumption, not a global
+    // sum). Attribute the restored share explicitly once per replica;
+    // summing raw `total_tokens()` counters would instead bake rank-0's
+    // restored counter into every worker implicitly, which is only
+    // correct while every replica's per-step token count stays equal.
+    let resumed = outcomes[0].resumed_tokens;
+    let total_tokens = outcomes.iter().map(|o| o.session_tokens).sum::<u64>()
+        + world as u64 * resumed;
+    let r0 = &outcomes[0];
+    Ok(DpResult {
+        final_train_loss: r0.train_loss,
+        final_eval_loss: r0.eval_loss,
+        total_tokens,
+        elapsed,
+        final_state_bytes: r0.state_bytes,
+        comm_f32s_total: r0.comm_f32s_total,
+        comm_f32s_last_step: r0.comm_f32s_last_step,
+    })
+}
+
+/// Fold per-rank worker results into their outcomes, or the run's error.
+/// When workers failed, surface the first **root cause**: a failing
+/// worker drops its ring handles, which makes every neighbour's next
+/// collective fail with a [`RingClosed`]-derived error — those shutdown
+/// echoes are demoted below the first error that is *not* one, so the
+/// run reports "rank 0: checkpoint save failed", not "rank 1: ring
+/// all-reduce aborted".
+pub fn collect_worker_results<T>(results: Vec<Result<T>>) -> Result<Vec<T>> {
+    let mut outcomes = Vec::with_capacity(results.len());
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut first_root_err: Option<anyhow::Error> = None;
+    for (rank, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(o) => outcomes.push(o),
+            Err(e) => {
+                // Substring classification is deliberate: the vendored
+                // anyhow is string-backed with no downcast/source chain,
+                // and its `context(..)` folds wrappers into the message as
+                // "context: cause" — so the marker text survives wrapping,
+                // which a type-based check could not even attempt here.
+                let is_ring_echo = e.to_string().contains(RING_ABORT_MSG);
+                let tagged = anyhow!("data-parallel worker {rank} failed: {e}");
+                if !is_ring_echo && first_root_err.is_none() {
+                    first_root_err = Some(tagged);
+                } else if first_err.is_none() {
+                    first_err = Some(tagged);
+                }
+            }
         }
     }
-    let (final_train_loss, final_eval_loss, final_state_bytes) = first.unwrap();
-    Ok(DpResult { final_train_loss, final_eval_loss, total_tokens, elapsed, final_state_bytes })
+    match first_root_err.or(first_err) {
+        Some(e) => Err(e),
+        None => Ok(outcomes),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 #[cfg(test)]
@@ -230,7 +438,7 @@ mod tests {
                     scope.spawn(move || {
                         let mut data: Vec<f32> =
                             (0..len).map(|i| (h.rank * len + i) as f32).collect();
-                        h.all_reduce_sum(&mut data);
+                        h.all_reduce_sum(&mut data).unwrap();
                         data
                     })
                 })
@@ -264,7 +472,7 @@ mod tests {
                 .map(|h| {
                     scope.spawn(move || {
                         let mut data = vec![(h.rank + 1) as f32; 8];
-                        h.all_reduce_mean(&mut data);
+                        h.all_reduce_mean(&mut data).unwrap();
                         data
                     })
                 })
@@ -276,5 +484,48 @@ mod tests {
                 assert!((v - 2.5).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn dead_peer_yields_ring_closed_not_panic() {
+        // Worker 1 "fails" before its first collective (drops its handle);
+        // the survivors' all-reduce must come back as RingClosed, not hang
+        // or panic.
+        let handles = Ring::new(3).into_handles();
+        let results: Vec<Result<(), RingClosed>> = std::thread::scope(|scope| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|h| {
+                    scope.spawn(move || {
+                        if h.rank == 1 {
+                            return Err(RingClosed); // simulate an early worker error
+                        }
+                        let mut data = vec![1.0f32; 64];
+                        // Loop: the first collective may partially succeed
+                        // on buffered sends; shutdown must surface within a
+                        // bounded number of rounds.
+                        for _ in 0..4 {
+                            h.all_reduce_sum(&mut data)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert!(
+            results.iter().filter(|r| r.is_err()).count() >= 2,
+            "survivors did not observe the shutdown: {results:?}"
+        );
+    }
+
+    #[test]
+    fn panic_payloads_render() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_message(p.as_ref()), "boom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("kaboom"));
+        assert_eq!(panic_message(p.as_ref()), "kaboom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
     }
 }

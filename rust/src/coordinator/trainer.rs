@@ -226,34 +226,100 @@ impl Trainer {
     /// the seed also materialized the full set before dropping layer by
     /// layer), so `peak_grad_bytes` is the accelerator-memory *model* of
     /// layerwise backprop, not a measurement of host RSS.
-    pub fn apply_updates(&mut self, grads: &[Matrix], lr: f32) {
+    pub fn apply_updates(&mut self, grads: &[Matrix], lr: f32) -> Result<()> {
+        self.apply_updates_inner(grads, None, lr)
+    }
+
+    /// Apply updates under a data-parallel communication plan
+    /// (`coordinator::parallel::exchange_grads`): parameters the plan
+    /// reduced in full take the normal [`Trainer::update_one`] path;
+    /// compact-reduced parameters feed their averaged `Pᵀ G` straight
+    /// into `Optimizer::step_compact`. The fused artifact path consumes
+    /// full gradients only, so a compact entry on a fused-handled
+    /// parameter is an error (run `dp_compress` on the Rust path).
+    /// Peak-gradient accounting is unchanged — the full gradient was
+    /// materialized locally before projection either way.
+    pub fn apply_updates_planned(
+        &mut self,
+        grads: &[Matrix],
+        plan: &[crate::optim::GradReduceMode],
+        compact: &[Matrix],
+        lr: f32,
+    ) -> Result<()> {
+        if plan.len() != grads.len() || compact.len() < grads.len() {
+            bail!(
+                "communication plan covers {} of {} parameters ({} compact buffers)",
+                plan.len(),
+                grads.len(),
+                compact.len()
+            );
+        }
+        self.apply_updates_inner(grads, Some((plan, compact)), lr)
+    }
+
+    /// Shared update walk: §4.3 layerwise / dense ordering and the
+    /// peak-gradient accounting live here once; the optional plan swaps
+    /// compact-reduced parameters onto `Optimizer::step_compact`.
+    fn apply_updates_inner(
+        &mut self,
+        grads: &[Matrix],
+        planned: Option<(&[crate::optim::GradReduceMode], &[Matrix])>,
+        lr: f32,
+    ) -> Result<()> {
+        use crate::optim::GradReduceMode;
+        let one = |this: &mut Self, idx: usize| -> Result<()> {
+            if let Some((plan, compact)) = planned {
+                if matches!(plan[idx], GradReduceMode::Compact { .. }) {
+                    if this.fused.as_ref().is_some_and(|f| f.handles(idx)) {
+                        bail!(
+                            "the fused GaLore path cannot consume compact-reduced \
+                             gradients yet — its artifacts take the full gradient; \
+                             run dp_compress on the Rust optimizer path (drop --fused)"
+                        );
+                    }
+                    this.opt.step_compact(idx, &mut this.params.tensors[idx], &compact[idx], lr);
+                    return Ok(());
+                }
+            }
+            this.update_one(idx, &grads[idx], lr)
+        };
         let total_bytes: usize = grads.iter().map(|g| 4 * g.len()).sum();
         if self.cfg.layerwise {
             let mut peak_single = 0usize;
             // Reverse schema order ≈ backprop arrival order.
-            for (idx, grad) in grads.iter().enumerate().rev() {
-                peak_single = peak_single.max(4 * grad.len());
-                self.update_one(idx, grad, lr);
+            for idx in (0..grads.len()).rev() {
+                peak_single = peak_single.max(4 * grads[idx].len());
+                one(self, idx)?;
             }
             self.peak_grad_bytes = self.peak_grad_bytes.max(peak_single);
         } else {
-            for (idx, grad) in grads.iter().enumerate() {
-                self.update_one(idx, grad, lr);
+            for idx in 0..grads.len() {
+                one(self, idx)?;
             }
             self.peak_grad_bytes = self.peak_grad_bytes.max(total_bytes);
         }
+        Ok(())
     }
 
-    fn update_one(&mut self, idx: usize, grad: &Matrix, lr: f32) {
+    /// Apply one parameter's update. Artifact failures on the fused path
+    /// surface as errors (the old path `expect`ed here, turning a missing
+    /// or mis-shaped artifact mid-run into a process abort).
+    fn update_one(&mut self, idx: usize, grad: &Matrix, lr: f32) -> Result<()> {
         if let Some(fused) = &mut self.fused {
             if fused.handles(idx) {
-                fused
-                    .step(&mut self.engine, idx, &mut self.params.tensors[idx], grad, lr)
-                    .expect("fused galore step failed");
-                return;
+                let res =
+                    fused.step(&mut self.engine, idx, &mut self.params.tensors[idx], grad, lr);
+                return match res {
+                    Ok(()) => Ok(()),
+                    Err(e) => Err(anyhow!(
+                        "fused galore step failed on parameter {idx} ('{}'): {e}",
+                        self.params.metas[idx].name
+                    )),
+                };
             }
         }
         self.opt.step(idx, &mut self.params.tensors[idx], grad, lr);
+        Ok(())
     }
 
     /// One full training step. Returns the batch loss.
@@ -295,10 +361,13 @@ impl Trainer {
         let lr = self.schedule.at(self.step);
         let a0 = thread_alloc_stats();
         // `mem::take` detaches the buffers (no allocation) so the borrow
-        // checker allows `&mut self` dispatch while reading them.
+        // checker allows `&mut self` dispatch while reading them. Restore
+        // them before surfacing any update error — the trainer must stay
+        // usable (e.g. for a checkpoint) after a failed step.
         let bufs = std::mem::take(&mut self.grad_bufs);
-        self.apply_updates(&bufs, lr);
+        let applied = self.apply_updates(&bufs, lr);
         self.grad_bufs = bufs;
+        applied?;
         let a1 = thread_alloc_stats();
         self.metrics.log_step_allocs(a1.allocs - a0.allocs, a1.bytes - a0.bytes);
         self.metrics.log_step(self.step, loss, lr, tokens);
@@ -329,7 +398,10 @@ impl Trainer {
     /// `checkpoint_keep_last` retention. Resume-aware: starts from
     /// `self.step`, and the in-loop eval skips the final step so the
     /// run's last eval is logged exactly once (the old loop logged a
-    /// duplicate row when `steps % eval_every == 0`).
+    /// duplicate row when `steps % eval_every == 0`). Every eval —
+    /// in-loop and final — uses the same `cfg.eval_batches` window, so
+    /// the eval curve's last point is comparable to the rest (the old
+    /// loop evaluated 2 batches in-loop but 4 at the end).
     pub fn run(&mut self) -> Result<()> {
         while self.step < self.cfg.steps {
             self.train_step()?;
@@ -337,14 +409,14 @@ impl Trainer {
                 && self.step % self.cfg.eval_every == 0
                 && self.step < self.cfg.steps
             {
-                let l = self.eval(2)?;
+                let l = self.eval(self.cfg.eval_batches)?;
                 self.metrics.log_eval(self.step, l);
             }
             if self.cfg.checkpoint_every > 0 && self.step % self.cfg.checkpoint_every == 0 {
                 self.save_periodic_checkpoint()?;
             }
         }
-        let l = self.eval(4)?;
+        let l = self.eval(self.cfg.eval_batches)?;
         self.metrics.log_eval(self.step, l);
         Ok(())
     }

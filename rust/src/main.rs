@@ -19,7 +19,7 @@ use galore::model::ModelConfig;
 use galore::optim::{ProjectorQuant, RankScheduleKind};
 use galore::runtime::{default_dir, Manifest};
 
-const SWITCHES: &[&str] = &["layerwise", "fused", "help"];
+const SWITCHES: &[&str] = &["layerwise", "fused", "dp-compress", "help"];
 
 fn main() {
     if let Err(e) = run() {
@@ -52,7 +52,8 @@ USAGE:
                 [--rank-schedule fixed|decay|spectral] [--rank-floor N]
                 [--rank-decay F] [--rank-energy F] [--refresh-gate-cos F]
                 [--projector-quant f32|block8|dyn8]
-                [--seed N] [--eval-every N] [--dp-workers N] [--layerwise]
+                [--seed N] [--eval-every N] [--eval-batches N]
+                [--dp-workers N] [--dp-compress] [--layerwise]
                 [--fused] [--csv PATH] [--checkpoint PATH]
                 [--checkpoint-every N] [--checkpoint-dir DIR] [--keep-last N]
                 [--resume PATH]
@@ -69,6 +70,12 @@ Adaptive rank (galore methods): --rank-schedule decay|spectral lets each
 layer shrink/grow its projector rank at subspace refreshes within
 [--rank-floor, --rank]; --refresh-gate-cos T skips the refresh SVD when
 the cached subspace still captures cosine >= T of the gradient.
+
+Data parallelism: --dp-workers W trains W lockstep replicas with a ring
+all-reduce; --dp-compress (GaLore methods) exchanges the projected r x n
+gradient between subspace refreshes instead of the full m x n one — a
+min(m,n)/r traffic cut per targeted layer. See EXPERIMENTS.md
+section 'DP communication'.
 
 Checkpoint/resume: --checkpoint-every N writes a full-state (v2) snapshot
 every N steps into --checkpoint-dir (retention --keep-last, 0 = keep all);
@@ -139,8 +146,14 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     if let Some(v) = cli.get_parse::<usize>("eval-every").map_err(|e| anyhow!("{e}"))? {
         cfg.eval_every = v;
     }
+    if let Some(v) = cli.get_parse::<usize>("eval-batches").map_err(|e| anyhow!("{e}"))? {
+        cfg.eval_batches = v;
+    }
     if let Some(v) = cli.get_parse::<usize>("dp-workers").map_err(|e| anyhow!("{e}"))? {
         cfg.dp_workers = v;
+    }
+    if cli.has("dp-compress") {
+        cfg.dp_compress = true;
     }
     if cli.has("layerwise") {
         cfg.layerwise = true;
@@ -164,7 +177,7 @@ fn train(cli: &Cli) -> Result<()> {
     let cfg = build_run_config(cli)?;
     println!(
         "train: model={} method={} steps={} batch={} lr={} rank={} T={} alpha={} \
-         schedule={} quant={} gate={} layerwise={} dp={}",
+         schedule={} quant={} gate={} layerwise={} dp={} dp_compress={}",
         cfg.model.name,
         cfg.method.label(),
         cfg.steps,
@@ -177,19 +190,32 @@ fn train(cli: &Cli) -> Result<()> {
         cfg.galore.projector_quant.label(),
         cfg.galore.refresh_gate_cos,
         cfg.layerwise,
-        cfg.dp_workers
+        cfg.dp_workers,
+        cfg.dp_compress
     );
     let resume = cli.get("resume").map(std::path::PathBuf::from);
     if cfg.dp_workers > 1 {
+        // The fused artifact path is single-process: it consumes full
+        // gradients only and `parallel.rs` never enables it. Reject the
+        // combination instead of silently ignoring the flag (the old
+        // behavior), which read like the fused path was running.
+        if cli.has("fused") {
+            bail!(
+                "--fused is not available with --dp-workers > 1: the fused \
+                 GaLore artifacts run single-process (and cannot consume the \
+                 compact-reduced gradients of --dp-compress); drop --fused"
+            );
+        }
         let res = train_data_parallel_resumable(&cfg, resume.as_deref())?;
         println!(
             "done: train_loss={:.4} eval_loss={:.4} eval_ppl={:.2} tokens={} \
-             optimizer_state={} elapsed={:.1}s",
+             optimizer_state={} comm={}/step elapsed={:.1}s",
             res.final_train_loss,
             res.final_eval_loss,
             res.final_eval_loss.exp(),
             res.total_tokens,
             fmt_gib(res.final_state_bytes as u64),
+            fmt_gib(4 * res.comm_f32s_last_step),
             res.elapsed.as_secs_f64()
         );
         return Ok(());
@@ -221,7 +247,7 @@ fn train(cli: &Cli) -> Result<()> {
         // the last step (the old loop logged it twice when
         // steps % eval_every == 0).
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 && step + 1 < cfg.steps {
-            let l = trainer.eval(2)?;
+            let l = trainer.eval(cfg.eval_batches)?;
             trainer.metrics.log_eval(step + 1, l);
             println!("  eval loss {:.4} ppl {:.2}", l, l.exp());
         }
@@ -229,7 +255,7 @@ fn train(cli: &Cli) -> Result<()> {
             trainer.save_periodic_checkpoint()?;
         }
     }
-    let eval = trainer.eval(4)?;
+    let eval = trainer.eval(cfg.eval_batches)?;
     trainer.metrics.log_eval(cfg.steps, eval);
     println!(
         "final: eval_loss={:.4} eval_ppl={:.2} optimizer_state={} tok/s={:.0}",

@@ -25,7 +25,7 @@
 
 use super::adaptive::{basis_transition_into, RankState, StateRemap};
 use super::rank::{subspace_cosine, RankSchedule, RankScheduleKind, RefreshGate};
-use super::Optimizer;
+use super::{GradReduceMode, Optimizer};
 use crate::linalg::{
     extract_left_subspace_into, randomized_svd, sketch_left_subspace_into,
     top_r_left_subspace_into, SvdWorkspace, SKETCH_OVERSAMPLE,
@@ -571,6 +571,30 @@ impl Workspace {
         self.remap_scratch.resize(max_rank, long);
         self.adaptive_warm = true;
     }
+
+    /// The compact-update tail shared by `GaLore::step` and
+    /// `GaLore::step_compact` — one implementation, so the two entry
+    /// points stay bit-identical *by construction* (the property the
+    /// compact data-parallel all-reduce rests on): run the inner
+    /// optimizer in the compact space against a zero scratch weight with
+    /// lr=1 — the scratch then holds -N_t regardless of which optimizer
+    /// it is — project back, and apply with `W <- W - lr·α·P N_t`
+    /// (Algorithm 2). `lr_scale` is `lr * α`.
+    fn apply_compact_update<O: Optimizer>(
+        &mut self,
+        inner: &mut O,
+        param: usize,
+        proj: &Projector,
+        compact: &Matrix,
+        w: &mut Matrix,
+        lr_scale: f32,
+    ) {
+        self.scratch.resize(compact.rows, compact.cols);
+        self.scratch.data.fill(0.0);
+        inner.step(param, &mut self.scratch, compact, 1.0);
+        proj.project_back_into(&self.scratch, &mut self.full_update);
+        w.axpy(lr_scale, &self.full_update);
+    }
 }
 
 /// GaLore wrapper around an arbitrary inner optimizer.
@@ -792,15 +816,11 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
         if !compact_ready {
             proj.project_into(grad, &mut ws.compact_grad);
         }
-        // Run the inner optimizer in the compact space against a zero
-        // scratch weight with lr=1: the scratch then holds -N_t (the
-        // normalized update), regardless of which optimizer it is.
-        ws.scratch.resize(ws.compact_grad.rows, ws.compact_grad.cols);
-        ws.scratch.data.fill(0.0);
-        self.inner.step(param, &mut ws.scratch, &ws.compact_grad, 1.0);
-        // scratch = -N_t  =>  W <- W - lr * α * P N_t  (Algorithm 2).
-        proj.project_back_into(&ws.scratch, &mut ws.full_update); // = -P N_t
-        w.axpy(lr * self.cfg.scale, &ws.full_update);
+        // Detach the compact gradient (empty-matrix swap, no allocation)
+        // so the shared tail can borrow the workspace mutably.
+        let compact = std::mem::replace(&mut ws.compact_grad, Matrix::zeros(0, 0));
+        ws.apply_compact_update(&mut self.inner, param, proj, &compact, w, lr * self.cfg.scale);
+        ws.compact_grad = compact;
     }
 
     fn state_bytes(&self) -> usize {
@@ -828,6 +848,60 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
 
     fn gate_skips(&self) -> u64 {
         self.rank_states.values().map(|r| r.gate_skips).sum()
+    }
+
+    /// Communication plan for data parallelism: between subspace refreshes
+    /// a targeted parameter needs only `Pᵀ G`, so replicas can exchange
+    /// the `r×n` compact gradient. At a refresh boundary (`t % T == 0`) —
+    /// including a boundary the lazy-refresh gate may end up skipping,
+    /// since the gate's cosine itself needs `‖G_avg‖` — and before the
+    /// first step, the full gradient must be reduced so the randomized
+    /// SVD (and the rank schedule, and the gate) see the *averaged*
+    /// gradient and replicas keep bit-identical projectors.
+    fn grad_reduce_mode(&self, param: usize, rows: usize, cols: usize) -> GradReduceMode {
+        let Some(p) = self.projectors.get(&param) else {
+            return GradReduceMode::Full;
+        };
+        let t = self.steps.get(&param).copied().unwrap_or(0);
+        if t % self.cfg.update_freq == 0 {
+            return GradReduceMode::Full;
+        }
+        let (r, c) = p.compact_shape(rows, cols);
+        GradReduceMode::Compact { rows: r, cols: c }
+    }
+
+    fn project_grad_into(&self, param: usize, grad: &Matrix, out: &mut Matrix) -> bool {
+        let Some(p) = self.projectors.get(&param) else {
+            return false;
+        };
+        let t = self.steps.get(&param).copied().unwrap_or(0);
+        if t % self.cfg.update_freq == 0 {
+            return false;
+        }
+        p.project_into(grad, out);
+        true
+    }
+
+    /// The non-refresh tail of [`GaLore::step`], fed an already-projected
+    /// compact gradient: identical arithmetic (same scratch, same inner
+    /// step, same project-back), so a data-parallel step that averaged
+    /// compact gradients is bit-identical to one that averaged full
+    /// gradients and projected — up to the all-reduce's own summation
+    /// order.
+    fn step_compact(&mut self, param: usize, w: &mut Matrix, compact: &Matrix, lr: f32) {
+        let t = self
+            .steps
+            .get_mut(&param)
+            .expect("step_compact before the parameter's first full step");
+        assert!(
+            *t % self.cfg.update_freq != 0,
+            "step_compact at a refresh boundary — the caller must reduce the full \
+             gradient there (grad_reduce_mode returns Full at boundaries)"
+        );
+        *t += 1;
+        let ws = self.workspaces.entry(param).or_insert_with(Workspace::new);
+        let proj = self.projectors.get(&param).expect("projector exists between refreshes");
+        ws.apply_compact_update(&mut self.inner, param, proj, compact, w, lr * self.cfg.scale);
     }
 
     /// Checkpoint v2: projector RNG, the inner optimizer's state (nested,
@@ -1311,5 +1385,76 @@ mod tests {
         assert_eq!(rs.gate_skips, 4, "boundaries at t=2,4,6,8 should all skip");
         assert!(rs.last_cosine > 0.9, "cosine {}", rs.last_cosine);
         assert_eq!(gal.projector(0).unwrap().basis().data, basis0.data);
+    }
+
+    #[test]
+    fn grad_reduce_mode_full_at_boundaries_compact_between() {
+        // The DP comm plan: full before the first step and at every
+        // refresh boundary, compact (r×n for a wide param) in between.
+        let cfg = GaLoreConfig { rank: 4, update_freq: 3, scale: 0.25, ..Default::default() };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut rng = Rng::new(51);
+        let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
+        assert_eq!(gal.grad_reduce_mode(0, 16, 24), GradReduceMode::Full, "no projector yet");
+        for s in 0..7 {
+            let want = if s % 3 == 0 {
+                GradReduceMode::Full
+            } else {
+                GradReduceMode::Compact { rows: 4, cols: 24 }
+            };
+            assert_eq!(gal.grad_reduce_mode(0, 16, 24), want, "step {s}");
+            let g = Matrix::randn(16, 24, 1.0, &mut rng.child(s as u64));
+            gal.step(0, &mut w, &g, 0.01);
+        }
+        // Untargeted params always reduce full.
+        let mut gal2 = GaLore::new(cfg, adam()).with_targets([9usize]);
+        let mut w2 = Matrix::zeros(16, 16);
+        let g = Matrix::ones(16, 16);
+        gal2.step(0, &mut w2, &g, 0.01);
+        assert_eq!(gal2.grad_reduce_mode(0, 16, 16), GradReduceMode::Full);
+    }
+
+    #[test]
+    fn compact_step_surface_bit_exact_with_monolithic_step() {
+        // step(G) vs project_grad_into(G) + step_compact(R): the compact
+        // surface must reproduce the monolithic step bit-for-bit when fed
+        // the same gradient — the property that makes the compact DP
+        // all-reduce exact in real arithmetic.
+        let cfg = GaLoreConfig { rank: 4, update_freq: 4, scale: 0.25, ..Default::default() };
+        let mut mono = GaLore::new(cfg, adam());
+        let mut split = GaLore::new(cfg, adam());
+        let mut rng = Rng::new(53);
+        let mut w_mono = Matrix::randn(12, 20, 1.0, &mut rng);
+        let mut w_split = w_mono.clone();
+        let mut compact = Matrix::zeros(0, 0);
+        for s in 0..11 {
+            let g = Matrix::randn(12, 20, 1.0, &mut rng.child(s));
+            mono.step(0, &mut w_mono, &g, 0.01);
+            match split.grad_reduce_mode(0, 12, 20) {
+                GradReduceMode::Full => split.step(0, &mut w_split, &g, 0.01),
+                GradReduceMode::Compact { rows, cols } => {
+                    assert!(split.project_grad_into(0, &g, &mut compact));
+                    assert_eq!(compact.shape(), (rows, cols));
+                    split.step_compact(0, &mut w_split, &compact, 0.01);
+                }
+            }
+            assert_eq!(w_mono.data, w_split.data, "diverged at step {s}");
+        }
+        assert_eq!(mono.state_bytes(), split.state_bytes());
+        assert_eq!(mono.rank_profile(), split.rank_profile());
+    }
+
+    #[test]
+    #[should_panic(expected = "refresh boundary")]
+    fn step_compact_rejected_at_refresh_boundary() {
+        let cfg = GaLoreConfig { rank: 4, update_freq: 2, scale: 0.25, ..Default::default() };
+        let mut gal = GaLore::new(cfg, adam());
+        let mut rng = Rng::new(55);
+        let mut w = Matrix::randn(8, 12, 1.0, &mut rng);
+        let g = Matrix::randn(8, 12, 1.0, &mut rng);
+        gal.step(0, &mut w, &g, 0.01); // t=1
+        let compact = gal.projector(0).unwrap().project(&g);
+        gal.step_compact(0, &mut w, &compact, 0.01); // t=2: fine
+        gal.step_compact(0, &mut w, &compact, 0.01); // t=2 % 2 == 0: boundary
     }
 }

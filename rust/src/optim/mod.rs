@@ -31,6 +31,31 @@ pub use sgd::Sgd;
 
 use crate::tensor::Matrix;
 
+/// How a data-parallel worker should exchange one parameter's gradient
+/// this step (the §5.5 communication plan). `Full` ships the whole `m×n`
+/// gradient; `Compact` ships the projected `r×n` (or `m×r`) gradient —
+/// valid only between subspace refreshes, when every replica holds the
+/// same basis and the update consumes nothing but `Pᵀ G`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradReduceMode {
+    /// Reduce the full gradient (non-target params, refresh boundaries,
+    /// optimizers without a compact surface).
+    Full,
+    /// Reduce the compact projected gradient of this shape.
+    Compact { rows: usize, cols: usize },
+}
+
+impl GradReduceMode {
+    /// Elements exchanged per all-reduce for a full gradient of
+    /// `rows × cols` under this mode.
+    pub fn payload_f32s(&self, full_rows: usize, full_cols: usize) -> usize {
+        match self {
+            GradReduceMode::Full => full_rows * full_cols,
+            GradReduceMode::Compact { rows, cols } => rows * cols,
+        }
+    }
+}
+
 /// A stateful, per-parameter optimizer. Parameters are identified by a
 /// stable index (schema order) so state survives across steps.
 pub trait Optimizer: Send {
@@ -67,6 +92,40 @@ pub trait Optimizer: Send {
     /// GaLore wrappers running with `refresh_gate_cos` enabled).
     fn gate_skips(&self) -> u64 {
         0
+    }
+
+    /// How a data-parallel worker should exchange this parameter's
+    /// gradient on its *next* `step`/`step_compact` call. `rows`/`cols`
+    /// are the full gradient shape. The default (and the only mode
+    /// non-projecting optimizers ever report) is [`GradReduceMode::Full`];
+    /// GaLore wrappers report `Compact` between subspace refreshes, where
+    /// the update consumes only `Pᵀ G` and replicas hold bit-identical
+    /// bases. Contract: when this returns `Compact`, `project_grad_into`
+    /// must succeed and `step_compact` must be the step entry point.
+    fn grad_reduce_mode(&self, _param: usize, _rows: usize, _cols: usize) -> GradReduceMode {
+        GradReduceMode::Full
+    }
+
+    /// Project `grad` into this parameter's compact space (`out` is a
+    /// caller-owned workspace, resized as needed). Returns `false` — and
+    /// leaves `out` untouched — when the parameter currently reduces
+    /// full (see [`Optimizer::grad_reduce_mode`]).
+    fn project_grad_into(&self, _param: usize, _grad: &Matrix, _out: &mut Matrix) -> bool {
+        false
+    }
+
+    /// Apply one update from an already-projected (and, under data
+    /// parallelism, already-averaged) compact gradient. Bit-identical to
+    /// `step` fed the corresponding full gradient, because `step` itself
+    /// computes exactly this projection first. Only callable when
+    /// `grad_reduce_mode` returned `Compact` for this parameter; the
+    /// default panics because plain optimizers have no compact space.
+    fn step_compact(&mut self, _param: usize, _w: &mut Matrix, _compact: &Matrix, _lr: f32) {
+        panic!(
+            "optimizer '{}' cannot consume compact (pre-projected) gradients — \
+             grad_reduce_mode never returns Compact for it",
+            self.name()
+        );
     }
 
     /// Serialize the optimizer's *complete* state (moments, step counters,

@@ -224,7 +224,7 @@ pub fn assert_run_converges(
     for _ in 0..steps {
         trainer.train_step()?;
     }
-    let eval = trainer.eval(2)?;
+    let eval = trainer.eval(trainer.cfg.eval_batches)?;
     if !(eval.is_finite() && eval <= max_loss) {
         anyhow::bail!(
             "run did not converge: eval loss {eval} > max {max_loss} \

@@ -148,7 +148,7 @@ fn prop_ring_allreduce_equals_serial_sum() {
                     scope.spawn(move || {
                         let mut rng = Rng::new(h.rank as u64);
                         let mut data: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
-                        h.all_reduce_sum(&mut data);
+                        h.all_reduce_sum(&mut data).unwrap();
                         data
                     })
                 })

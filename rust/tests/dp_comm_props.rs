@@ -1,0 +1,414 @@
+//! Compact-gradient data parallelism (`dp_compress`) properties.
+//!
+//! Pure-Rust tests (no artifacts) drive the DP machinery at the optimizer
+//! level — a real ring of worker threads exchanging synthetic gradients —
+//! and pin:
+//!   * compact vs. full exchange equivalence per GaLore inner variant
+//!     (Adam, Adam8bit, Adafactor, adaptive+gated), with replicas staying
+//!     **bit-identical** within each mode,
+//!   * exact per-step ring payload sizes (full at refresh boundaries and
+//!     for untargeted params, `r×long` in between — the `min(m,n)/r`×
+//!     traffic cut),
+//!   * graceful worker-failure propagation (root cause surfaces, ring
+//!     shutdown echoes are demoted, nothing panics).
+//!
+//! Artifact-gated tests (self-skip without `make artifacts`) run the full
+//! trainer: a W=4 `dp_compress` run against the full-gradient baseline,
+//! interrupted-resume token accounting, and the single eval window.
+
+use galore::config::{MethodKind, RunConfig};
+use galore::coordinator::{
+    checkpoint, collect_worker_results, exchange_grads, train_data_parallel,
+    train_data_parallel_resumable, Ring, RingClosed, Trainer, RING_ABORT_MSG,
+};
+use galore::model::{schema, ModelConfig};
+use galore::optim::{
+    Adafactor, Adam, Adam8bit, GaLore, GaLoreConfig, GradReduceMode, Optimizer,
+    RankScheduleKind,
+};
+use galore::rng::Rng;
+use galore::runtime::default_dir;
+use galore::tensor::Matrix;
+
+// ---------------------------------------------------------------------------
+// Optimizer-level DP harness (no artifacts): a ring of threads, one GaLore
+// replica each, synthetic per-worker gradient streams. Param 0 is a
+// targeted 16×40 projection weight; param 1 an untargeted 1×24 vector.
+
+type MakeOpt = fn() -> Box<dyn Optimizer>;
+
+const T: u64 = 4; // refresh period used by every variant below
+const TARGET_SHAPE: (usize, usize) = (16, 40);
+const OTHER_SHAPE: (usize, usize) = (1, 24);
+
+fn fixed_cfg(rank: usize) -> GaLoreConfig {
+    GaLoreConfig { rank, update_freq: T, scale: 0.25, ..Default::default() }
+}
+
+fn make_adam() -> Box<dyn Optimizer> {
+    Box::new(GaLore::new(fixed_cfg(4), Adam::default_paper()).with_targets([0usize]).with_seed(11))
+}
+
+fn make_adam8bit() -> Box<dyn Optimizer> {
+    Box::new(GaLore::new(fixed_cfg(4), Adam8bit::new()).with_targets([0usize]).with_seed(11))
+}
+
+fn make_adafactor() -> Box<dyn Optimizer> {
+    Box::new(GaLore::new(fixed_cfg(4), Adafactor::new()).with_targets([0usize]).with_seed(11))
+}
+
+fn make_adaptive_gated() -> Box<dyn Optimizer> {
+    let cfg = GaLoreConfig {
+        rank: 8,
+        update_freq: T,
+        scale: 0.25,
+        rank_schedule: RankScheduleKind::Spectral,
+        rank_floor: 2,
+        rank_energy: 0.95,
+        refresh_gate_cos: 0.5,
+        ..Default::default()
+    };
+    Box::new(GaLore::new(cfg, Adam::default_paper()).with_targets([0usize]).with_seed(11))
+}
+
+struct ModeOutcome {
+    weights: Vec<Matrix>,
+    payloads: Vec<u64>,
+}
+
+/// Run `steps` synchronous DP steps over `world` replicas, exchanging
+/// gradients full or compact per the optimizer's plan. Replicas start
+/// bit-identical (shared init seed) and see *different* per-worker
+/// gradient streams, like real data-parallel shards.
+fn run_dp(world: usize, steps: usize, compress: bool, make: MakeOpt) -> Vec<ModeOutcome> {
+    let handles = Ring::new(world).into_handles();
+    std::thread::scope(|scope| {
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                scope.spawn(move || {
+                    let mut opt = make();
+                    let mut init = Rng::new(7);
+                    let mut weights = vec![
+                        Matrix::randn(TARGET_SHAPE.0, TARGET_SHAPE.1, 1.0, &mut init),
+                        Matrix::randn(OTHER_SHAPE.0, OTHER_SHAPE.1, 1.0, &mut init),
+                    ];
+                    let mut grads = vec![
+                        Matrix::zeros(TARGET_SHAPE.0, TARGET_SHAPE.1),
+                        Matrix::zeros(OTHER_SHAPE.0, OTHER_SHAPE.1),
+                    ];
+                    let mut compact = Vec::new();
+                    let mut plan = Vec::new();
+                    let mut payloads = Vec::new();
+                    let mut stream = Rng::new(0xBEEF ^ h.rank as u64);
+                    for s in 0..steps {
+                        grads[0] = Matrix::randn(
+                            TARGET_SHAPE.0,
+                            TARGET_SHAPE.1,
+                            1.0,
+                            &mut stream.child(2 * s as u64),
+                        );
+                        grads[1] = Matrix::randn(
+                            OTHER_SHAPE.0,
+                            OTHER_SHAPE.1,
+                            1.0,
+                            &mut stream.child(2 * s as u64 + 1),
+                        );
+                        let p = exchange_grads(
+                            &h,
+                            opt.as_ref(),
+                            &mut grads,
+                            &mut compact,
+                            &mut plan,
+                            compress,
+                        )
+                        .unwrap();
+                        payloads.push(p);
+                        for idx in 0..grads.len() {
+                            match plan[idx] {
+                                GradReduceMode::Full => {
+                                    opt.step(idx, &mut weights[idx], &grads[idx], 0.01)
+                                }
+                                GradReduceMode::Compact { .. } => {
+                                    opt.step_compact(idx, &mut weights[idx], &compact[idx], 0.01)
+                                }
+                            }
+                        }
+                    }
+                    ModeOutcome { weights, payloads }
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn compact_exchange_matches_full_exchange_for_every_variant() {
+    let variants: [(&str, MakeOpt, Option<u64>); 4] = [
+        ("galore-adam", make_adam, Some(4)),
+        ("galore-adam8bit", make_adam8bit, Some(4)),
+        ("galore-adafactor", make_adafactor, Some(4)),
+        ("galore-adaptive-gated", make_adaptive_gated, None),
+    ];
+    let (m, n) = TARGET_SHAPE;
+    let other = (OTHER_SHAPE.0 * OTHER_SHAPE.1) as u64;
+    let full_payload = (m * n) as u64 + other;
+    for (name, make, fixed_rank) in variants {
+        let steps = 10;
+        let world = 4;
+        let full = run_dp(world, steps, false, make);
+        let comp = run_dp(world, steps, true, make);
+        // (1) The determinism invariant: replicas stay bit-identical
+        // within each mode — under compact exchange every worker sees the
+        // same averaged compact gradient and applies identical arithmetic.
+        for (mode, runs) in [("full", &full), ("compact", &comp)] {
+            for r in 1..world {
+                for (a, b) in runs[0].weights.iter().zip(runs[r].weights.iter()) {
+                    assert_eq!(a.data, b.data, "{name}/{mode}: replica {r} diverged");
+                }
+            }
+        }
+        // (2) Compact exchange is exact in real arithmetic; in f32 the two
+        // modes differ only by the all-reduce's summation order (project-
+        // then-average vs average-then-project), a few ulps per step.
+        for (a, b) in full[0].weights.iter().zip(comp[0].weights.iter()) {
+            let mut d = a.clone();
+            d.sub_assign(b);
+            let rel = d.frobenius_norm() / a.frobenius_norm().max(1.0);
+            assert!(rel < 1e-3, "{name}: compact run drifted {rel} from full run");
+        }
+        // (3) Traffic: full payload at refresh boundaries (the SVD needs
+        // the averaged G), compact in between — the min(m,n)/r× cut.
+        for (s, (&pf, &pc)) in
+            full[0].payloads.iter().zip(comp[0].payloads.iter()).enumerate()
+        {
+            assert_eq!(pf, full_payload, "{name}: full mode payload at step {s}");
+            if s as u64 % T == 0 {
+                assert_eq!(pc, full_payload, "{name}: boundary step {s} must reduce full");
+            } else {
+                match fixed_rank {
+                    Some(r) => {
+                        let want = r * n as u64 + other;
+                        assert_eq!(pc, want, "{name}: compact payload at step {s}");
+                        // The targeted layer shrank by exactly min(m,n)/r.
+                        assert_eq!(
+                            (pf - other) / (pc - other),
+                            m as u64 / r,
+                            "{name}: reduction factor at step {s}"
+                        );
+                    }
+                    None => {
+                        // Adaptive: rank moves within [floor, ceiling].
+                        let compact_target = pc - other;
+                        assert!(
+                            compact_target >= 2 * n as u64 && compact_target <= 8 * n as u64,
+                            "{name}: adaptive compact payload {compact_target} at step {s}"
+                        );
+                        assert!(pc < pf, "{name}: no traffic cut at step {s}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_worker_compact_plan_is_bit_exact_with_full_plan() {
+    // With world = 1 the all-reduce is the identity, so the compact plan
+    // must reproduce the full plan *bit-for-bit* — pinning that the
+    // compact surface changes only the communication, not the math.
+    for (name, make) in [
+        ("galore-adam", make_adam as MakeOpt),
+        ("galore-adam8bit", make_adam8bit as MakeOpt),
+        ("galore-adafactor", make_adafactor as MakeOpt),
+        ("galore-adaptive-gated", make_adaptive_gated as MakeOpt),
+    ] {
+        let full = run_dp(1, 9, false, make);
+        let comp = run_dp(1, 9, true, make);
+        for (a, b) in full[0].weights.iter().zip(comp[0].weights.iter()) {
+            assert_eq!(a.data, b.data, "{name}: compact plan changed the arithmetic");
+        }
+    }
+}
+
+#[test]
+fn worker_error_surfacing_prefers_root_cause_over_ring_echo() {
+    // Rank 1 hits a real error; its neighbours observe ring shutdowns.
+    // The aggregate error must name rank 1's failure, not the echoes.
+    let results: Vec<anyhow::Result<u32>> = vec![
+        Err(anyhow::Error::from(RingClosed)),
+        Err(anyhow::anyhow!("checkpoint save failed: disk full")),
+        Err(anyhow::Error::from(RingClosed)),
+    ];
+    let err = collect_worker_results(results).unwrap_err().to_string();
+    assert!(err.contains("worker 1"), "{err}");
+    assert!(err.contains("disk full"), "{err}");
+    assert!(!err.contains(RING_ABORT_MSG), "{err}");
+    // An all-echo cascade still surfaces an error instead of panicking.
+    let all_echo: Vec<anyhow::Result<u32>> =
+        vec![Ok(7), Err(anyhow::Error::from(RingClosed))];
+    let err = collect_worker_results(all_echo).unwrap_err().to_string();
+    assert!(err.contains("worker 1"), "{err}");
+    assert!(err.contains(RING_ABORT_MSG), "{err}");
+    // No failures: outcomes come back in rank order.
+    let oks: Vec<anyhow::Result<u32>> = vec![Ok(5), Ok(6)];
+    assert_eq!(collect_worker_results(oks).unwrap(), vec![5, 6]);
+}
+
+#[test]
+fn dead_peer_mid_run_degrades_to_error_for_all_survivors() {
+    // A worker that errors after a few healthy steps (its handles drop)
+    // must turn every survivor's next exchange into RingClosed — the DP
+    // loop then aborts cleanly and `collect_worker_results` surfaces the
+    // root cause.
+    let world = 3;
+    let handles = Ring::new(world).into_handles();
+    let results: Vec<Result<(), RingClosed>> = std::thread::scope(|scope| {
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                scope.spawn(move || {
+                    let mut data = vec![1.0f32; 128];
+                    for s in 0..6 {
+                        if h.rank == 1 && s == 3 {
+                            return Err(RingClosed); // simulated worker failure
+                        }
+                        h.all_reduce_mean(&mut data)?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().expect("no panics allowed")).collect()
+    });
+    assert_eq!(
+        results.iter().filter(|r| r.is_err()).count(),
+        world,
+        "every worker must shut down cleanly: {results:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated trainer-level tests (self-skip on a bare checkout).
+
+fn artifacts_ready() -> bool {
+    let ok = default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn nano_dp_cfg(steps: usize, workers: usize) -> RunConfig {
+    let model = ModelConfig::by_name("nano").unwrap();
+    let mut cfg = RunConfig::new(model, MethodKind::GaLore);
+    cfg.steps = steps;
+    cfg.galore.rank = 16;
+    cfg.lowrank_rank = 16;
+    cfg.galore.update_freq = 5;
+    cfg.dp_workers = workers;
+    cfg
+}
+
+#[test]
+fn dp_compress_w4_matches_full_gradient_run() {
+    if !artifacts_ready() {
+        return;
+    }
+    // The acceptance bar: a W=4 GaLore run with dp_compress tracks the
+    // full-gradient all-reduce run (identical up to reduction-order
+    // rounding) while steady-state traffic drops by min(m,n)/r on every
+    // targeted layer — asserted against the closed-form payload.
+    let cfg_full = nano_dp_cfg(10, 4);
+    let mut cfg_comp = cfg_full.clone();
+    cfg_comp.dp_compress = true;
+    let full = train_data_parallel(&cfg_full).unwrap();
+    let comp = train_data_parallel(&cfg_comp).unwrap();
+    assert!(
+        (full.final_train_loss - comp.final_train_loss).abs() < 1e-3,
+        "train loss diverged: {} vs {}",
+        full.final_train_loss,
+        comp.final_train_loss
+    );
+    assert!(
+        (full.final_eval_loss - comp.final_eval_loss).abs() < 1e-3,
+        "eval loss diverged: {} vs {}",
+        full.final_eval_loss,
+        comp.final_eval_loss
+    );
+    // Closed-form payloads: step 9 is not a refresh boundary (T=5), so
+    // targeted layers ship r×long f32s; everything else ships full.
+    let model = cfg_full.model;
+    let mut compact_expected = 0u64;
+    let mut full_expected = 0u64;
+    for meta in schema(model) {
+        let numel = (meta.rows * meta.cols) as u64;
+        full_expected += numel;
+        if meta.is_projection_target() {
+            let r = 16u64.min(meta.rows as u64).min(meta.cols as u64);
+            compact_expected += r * meta.rows.max(meta.cols) as u64;
+        } else {
+            compact_expected += numel;
+        }
+    }
+    assert_eq!(full.comm_f32s_last_step, full_expected);
+    assert_eq!(comp.comm_f32s_last_step, compact_expected);
+    assert!(
+        comp.comm_f32s_total < full.comm_f32s_total,
+        "compact total {} not below full {}",
+        comp.comm_f32s_total,
+        full.comm_f32s_total
+    );
+}
+
+#[test]
+fn dp_resume_token_accounting_matches_uninterrupted() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("galore_dp_resume_tokens");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = nano_dp_cfg(8, 2);
+    cfg.checkpoint_every = 4;
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    let full = train_data_parallel(&cfg).unwrap();
+    let per_worker_step = (cfg.batch * cfg.model.seq) as u64;
+    assert_eq!(
+        full.total_tokens,
+        2 * 8 * per_worker_step,
+        "uninterrupted global token count"
+    );
+    let ckpt = dir.join(checkpoint::periodic_name(4));
+    assert!(ckpt.exists(), "rank 0 should have checkpointed step 4");
+    let resumed = train_data_parallel_resumable(&cfg, Some(&ckpt)).unwrap();
+    assert_eq!(
+        resumed.total_tokens, full.total_tokens,
+        "interrupted-resume run must report the same global token count \
+         (restored tokens attributed exactly once per replica)"
+    );
+    assert!((resumed.final_train_loss - full.final_train_loss).abs() < 1e-4);
+}
+
+#[test]
+fn run_evals_use_the_single_configured_window() {
+    if !artifacts_ready() {
+        return;
+    }
+    // The final eval row must be computed over the same eval_batches
+    // window as every in-loop row (the old loop used 2 in-loop, 4 final).
+    let model = ModelConfig::by_name("nano").unwrap();
+    let mut cfg = RunConfig::new(model, MethodKind::FullRank);
+    cfg.steps = 4;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 3;
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    trainer.run().unwrap();
+    let &(last_step, last_loss) = trainer.metrics.eval_records.last().unwrap();
+    assert_eq!(last_step, 4);
+    let recomputed = trainer.eval(3).unwrap();
+    assert_eq!(
+        last_loss, recomputed,
+        "final eval was not computed over the configured eval_batches window"
+    );
+}
