@@ -77,11 +77,11 @@ fn run_mode(model: &'static ModelConfig, rank: usize, compress: bool) -> ModeSta
                         for idx in 0..grads.len() {
                             match plan[idx] {
                                 GradReduceMode::Full => {
-                                    opt.step(idx, &mut weights[idx], &grads[idx], 0.01)
+                                    opt.step(idx, &mut weights[idx], &grads[idx], 0.01).unwrap()
                                 }
-                                GradReduceMode::Compact { .. } => {
-                                    opt.step_compact(idx, &mut weights[idx], &compact[idx], 0.01)
-                                }
+                                GradReduceMode::Compact { .. } => opt
+                                    .step_compact(idx, &mut weights[idx], &compact[idx], 0.01)
+                                    .unwrap(),
                             }
                         }
                     }

@@ -79,12 +79,12 @@ fn main() -> anyhow::Result<()> {
     let grad = Matrix::randn(512, 1376, 0.02, &mut rng);
     let mut adam = Adam::new(AdamConfig::default());
     report(&bench("full-rank Adam step", || {
-        adam.step(0, &mut w, &grad, 1e-4);
+        adam.step(0, &mut w, &grad, 1e-4).unwrap();
     }));
     let mut gal = GaLore::new(GaLoreConfig { rank: 128, update_freq: 200, scale: 0.25, ..Default::default() }, Adam::new(AdamConfig::default()));
-    gal.step(0, &mut w, &grad, 1e-4); // pay the first refresh outside timing
+    gal.step(0, &mut w, &grad, 1e-4).unwrap(); // pay the first refresh outside timing
     report(&bench("GaLore-Adam step (rust, amortized)", || {
-        gal.step(0, &mut w, &grad, 1e-4);
+        gal.step(0, &mut w, &grad, 1e-4).unwrap();
     }));
     let proj = Projector::compute(&grad, 128, &mut rng);
     report(&bench("project+back only", || {
@@ -99,10 +99,10 @@ fn main() -> anyhow::Result<()> {
     // must report 0 allocs/step.
     println!("\n== steady-state allocator traffic ==");
     report_allocs("full-rank Adam step allocs (512x1376)", 50, || {
-        adam.step(0, &mut w, &grad, 1e-4);
+        adam.step(0, &mut w, &grad, 1e-4).unwrap();
     });
     report_allocs("GaLore-Adam step allocs (512x1376, threaded)", 50, || {
-        gal.step(0, &mut w, &grad, 1e-4);
+        gal.step(0, &mut w, &grad, 1e-4).unwrap();
     });
     {
         let mut w_s = Matrix::randn(128, 344, 0.02, &mut rng);
@@ -112,10 +112,10 @@ fn main() -> anyhow::Result<()> {
             Adam::new(AdamConfig::default()),
         );
         for _ in 0..3 {
-            gal_s.step(0, &mut w_s, &grad_s, 1e-4); // warm workspaces
+            gal_s.step(0, &mut w_s, &grad_s, 1e-4).unwrap(); // warm workspaces
         }
         report_allocs("GaLore-Adam step allocs (128x344, 1 thread)", 200, || {
-            gal_s.step(0, &mut w_s, &grad_s, 1e-4);
+            gal_s.step(0, &mut w_s, &grad_s, 1e-4).unwrap();
         });
     }
 

@@ -33,15 +33,8 @@ fn main() -> anyhow::Result<()> {
         trainer
             .metrics
             .write_csv(format!("runs/table2_{}_{}.csv", cfg.model.name, cfg.method.label()))?;
-        let rank = cfg.galore.rank;
-        let m = match cfg.method {
-            MethodKind::FullRank => Method::FullRank,
-            MethodKind::GaLore => Method::GaLore { rank },
-            MethodKind::LowRank => Method::LowRank { rank },
-            MethodKind::Lora => Method::Lora { rank },
-            MethodKind::ReLora => Method::ReLora { rank },
-            _ => Method::FullRank,
-        };
+        // One mapping for trainer-method -> memory-model (no local drift).
+        let m = Method::for_kind(cfg.method, cfg.galore.rank);
         let b = estimate(cfg.model, m, TrainOpts::default());
         let paper_cell = paper
             .iter()

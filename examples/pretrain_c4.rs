@@ -74,13 +74,9 @@ fn main() -> anyhow::Result<()> {
     let csv = format!("runs/pretrain_{}_{}.csv", model.name, method.label());
     let path = trainer.metrics.write_csv(&csv)?;
 
-    // Memory story: measured Rust-side state vs the analytic estimator.
-    let est_method = match method {
-        MethodKind::GaLore8bit => Method::GaLore8bit { rank: cfg.galore.rank },
-        MethodKind::GaLore => Method::GaLore { rank: cfg.galore.rank },
-        MethodKind::Adam8bit => Method::Adam8bit,
-        _ => Method::FullRank,
-    };
+    // Memory story: measured Rust-side state vs the analytic estimator,
+    // through the single trainer-method -> memory-model mapping.
+    let est_method = Method::for_kind(method, cfg.galore.rank);
     let est = estimate(
         model,
         est_method,

@@ -56,12 +56,48 @@ impl MethodKind {
     }
 }
 
+/// Which execution substrate runs the GaLore compact update (the
+/// `optim::backend::StepBackend` plugged into `GaLore<O>` at construction).
+/// A backend choice, not a different optimizer: schedules, gating, the DP
+/// communication plan, and checkpointing compose identically on either.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust compact-update tail (every method; the default).
+    Rust,
+    /// Fused `galore_step_{m}x{n}_r{r}` AOT artifacts (Pallas/HLO kernels)
+    /// through a backend-owned PJRT engine. Requires `method = "galore"`
+    /// (the kernels implement the paper-default GaLore-Adam step) and a
+    /// `make artifacts` run covering the model's target shapes.
+    Artifact,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "rust" => BackendKind::Rust,
+            // "fused" kept as the historical CLI spelling of the same thing.
+            "artifact" | "fused" => BackendKind::Artifact,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Rust => "rust",
+            BackendKind::Artifact => "artifact",
+        }
+    }
+}
+
 /// Full run description. Defaults reproduce the paper's §5.1 settings
 /// scaled to the proxy configs.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub model: &'static ModelConfig,
     pub method: MethodKind,
+    /// Step backend for the GaLore compact update (`--backend` /
+    /// TOML `backend`; `--fused` is shorthand for `artifact`).
+    pub backend: BackendKind,
     pub steps: usize,
     pub batch: usize,
     /// Peak learning rate. Paper: GaLore 0.01 with α=0.25; baselines tuned
@@ -108,6 +144,7 @@ impl RunConfig {
         RunConfig {
             model,
             method,
+            backend: BackendKind::Rust,
             steps: model.steps,
             batch: 8,
             lr: if method.is_galore() { 0.01 } else { 0.001 },
@@ -144,11 +181,16 @@ impl RunConfig {
     pub fn fingerprint(&self) -> String {
         let g = &self.galore;
         format!(
-            "model={} method={} steps={} batch={} lr={} warmup={} final_lr={} wd={} \
+            "model={} method={} backend={} steps={} batch={} lr={} warmup={} final_lr={} wd={} \
              seed={} layerwise={} dp={} dp_compress={} rank={} T={} scale={} quant={} \
              schedule={} floor={} decay={} energy={} gate={} lowrank_rank={} merge={}",
             self.model.name,
             self.method.label(),
+            // The backend shapes the trajectory: the artifact kernels round
+            // their matmuls differently than the Rust tail, so a resume
+            // under the other backend would drift off the uninterrupted
+            // run. (The state *blob* itself is backend-agnostic.)
+            self.backend.label(),
             self.steps,
             self.batch,
             self.lr,
@@ -200,6 +242,14 @@ impl RunConfig {
         if self.dp_workers == 0 {
             return Err("dp_workers must be >= 1".into());
         }
+        if self.backend == BackendKind::Artifact && self.method != MethodKind::GaLore {
+            return Err(format!(
+                "backend = 'artifact' drives the fused GaLore-Adam kernels and \
+                 requires method = 'galore' (got '{}'); other methods run on the \
+                 rust backend",
+                self.method.label()
+            ));
+        }
         if self.dp_compress && !self.method.is_galore() {
             return Err(format!(
                 "dp_compress requires a GaLore method (got '{}'): only projected \
@@ -236,6 +286,10 @@ impl RunConfig {
         let method = MethodKind::parse(doc.get("", "method").unwrap_or("galore"))
             .ok_or("unknown method")?;
         let mut cfg = RunConfig::new(model, method);
+        if let Some(v) = doc.get("", "backend") {
+            cfg.backend = BackendKind::parse(v)
+                .ok_or_else(|| format!("unknown backend '{v}' (rust|artifact)"))?;
+        }
         if let Some(v) = doc.get_parse("", "steps") {
             cfg.steps = v;
         }
@@ -526,6 +580,43 @@ mod tests {
         same.eval_batches = 8;
         same.checkpoint_every = 50;
         assert_eq!(fp, same.fingerprint(), "observation knobs must not change it");
+    }
+
+    #[test]
+    fn backend_parses_requires_galore_and_fingerprints() {
+        // Spellings: "fused" is the historical alias for the artifact backend.
+        assert_eq!(BackendKind::parse("rust"), Some(BackendKind::Rust));
+        assert_eq!(BackendKind::parse("artifact"), Some(BackendKind::Artifact));
+        assert_eq!(BackendKind::parse("fused"), Some(BackendKind::Artifact));
+        assert_eq!(BackendKind::parse("pallas"), None);
+        // TOML plumbing.
+        let doc =
+            TomlDoc::parse("model = \"nano\"\nmethod = \"galore\"\nbackend = \"artifact\"\n")
+                .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Artifact);
+        // The artifact backend implements GaLore-Adam only.
+        let bad = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"galore8bit\"\nbackend = \"artifact\"\n",
+        )
+        .unwrap();
+        let err = RunConfig::from_toml(&bad).unwrap_err();
+        assert!(err.contains("artifact"), "{err}");
+        assert!(err.contains("galore"), "{err}");
+        // The backend shapes the trajectory => it participates in the
+        // resume fingerprint.
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        let mut fused = base.clone();
+        fused.backend = BackendKind::Artifact;
+        assert_ne!(base.fingerprint(), fused.fingerprint());
+        // ...and composes with dp_compress in validation (the PR 4
+        // restriction is lifted at the config level).
+        let both = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"galore\"\nbackend = \"artifact\"\n\
+             dp_workers = 4\ndp_compress = true\n",
+        )
+        .unwrap();
+        assert!(RunConfig::from_toml(&both).is_ok());
     }
 
     #[test]

@@ -16,10 +16,13 @@
 //!   n_sections u32 | per section: 4-byte tag, length-prefixed bytes.
 //!
 //! Sections carry the rest of the training state as opaque `crate::ser`
-//! blobs — optimizer moments/projectors (`OPTS`), the fused-path state
-//! (`FUSD`), the data-loader position (`LOAD`), and metrics counters
-//! (`METR`). Unknown tags are preserved on read, so older binaries skip
-//! newer sections instead of failing. The trailing checksum plus the
+//! blobs — optimizer moments/projectors (`OPTS`), the data-loader
+//! position (`LOAD`), and metrics counters (`METR`). Unknown tags are
+//! preserved on read, so older binaries skip newer sections instead of
+//! failing. (`FUSD` is legacy: pre-StepBackend fused runs kept their
+//! per-layer moments there; current artifact-backend runs carry
+//! everything in `OPTS`, and the trainer rejects files that still have a
+//! `FUSD` section rather than cold-start those layers.) The trailing checksum plus the
 //! length prefix reject truncated or bit-flipped files up front — a
 //! partial checkpoint must never poison a resume.
 //!
@@ -42,6 +45,8 @@ const VERSION_V2: u32 = 2;
 
 /// Section tags for the v2 state blobs.
 pub const SEC_OPTIMIZER: &[u8; 4] = b"OPTS";
+/// Legacy (pre-StepBackend) fused-path section — recognized only to
+/// reject such files loudly; never written anymore.
 pub const SEC_FUSED: &[u8; 4] = b"FUSD";
 pub const SEC_LOADER: &[u8; 4] = b"LOAD";
 pub const SEC_METRICS: &[u8; 4] = b"METR";

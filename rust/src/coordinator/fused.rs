@@ -1,342 +1,61 @@
-//! Fused GaLore-Adam hot path: per-layer updates executed through the
-//! `galore_step_{m}x{n}_r{r}` AOT artifacts (the Pallas kernels of
-//! `python/compile/kernels/galore.py`), with projector refreshes through
-//! either the `proj_refresh` artifact or the Rust randomized SVD.
+//! Thin artifact-discovery/validation helper for the fused GaLore step.
 //!
-//! Tall gradients (m > n) are handled by transposition on entry/exit, so a
-//! model needs artifacts only for its short-side-first shapes — exactly
-//! what `aot.py` lowers (§4.2: only the short side is projected).
-//!
-//! Host-side staging (transposes, weight copies) runs through per-layer
-//! reusable buffers and the shared SVD workspace, so the Rust side of a
-//! fused step performs no steady-state allocations; the remaining
-//! allocator traffic is the PJRT literal marshalling inside `execute`
-//! (EXPERIMENTS.md §Perf).
+//! The standalone `FusedGaLore` optimizer that used to live here was
+//! retired by the `StepBackend` redesign: the fused Pallas/HLO path is now
+//! [`ArtifactBackend`](crate::optim::backend::ArtifactBackend) — a
+//! pluggable execution substrate inside the one `GaLore<O>` optimizer —
+//! so data parallelism (`dp_compress` included), rank schedules, the
+//! cosine refresh gate, and checkpoint v2 compose with the fused kernels
+//! through the ordinary [`Optimizer`](crate::optim::Optimizer) surface
+//! instead of a parallel implementation. What remains here is the
+//! coordinator-side glue: resolve the run's projection-target shapes from
+//! the model schema, stand up the backend-owned PJRT engine, and let the
+//! backend validate/pre-compile every `galore_step_{m}x{n}_r{r}` artifact
+//! before the first step.
 
 use crate::config::RunConfig;
-use crate::linalg::{top_r_left_subspace_into, SvdWorkspace};
-use crate::model::ParamStore;
-use crate::optim::{subspace_cosine, RefreshGate};
-use crate::rng::Rng;
-use crate::runtime::{Engine, Input};
-use crate::ser;
-use crate::tensor::{matmul_at_b_into, Matrix};
-use anyhow::{bail, Result};
-use std::collections::HashMap;
+use crate::model::schema;
+use crate::optim::ArtifactBackend;
+use crate::runtime::{default_dir, Engine};
+use anyhow::{anyhow, Result};
 
-struct LayerState {
-    m: Matrix, // (r, n) compact first moment
-    v: Matrix, // (r, n) compact second moment
-    p: Matrix, // (m, r) projector
-    t: u64,
-    /// Reusable staging for Gᵀ / Wᵀ / W' on transposed (tall) layers and
-    /// for the short-side gradient copy. Working memory, excluded from
-    /// `state_bytes`.
-    g_short: Matrix,
-    w_short: Matrix,
-    /// Staging for the lazy-refresh gate's projected gradient Pᵀ G.
-    pg: Matrix,
+/// The short-side-first shapes of a run's projection targets — the shapes
+/// the artifact set must cover (tall layers are handled by transposition,
+/// so only `m ≤ n` shapes are ever lowered; §4.2).
+pub fn target_shapes(cfg: &RunConfig) -> Vec<(usize, usize)> {
+    schema(cfg.model)
+        .into_iter()
+        .filter(|meta| meta.is_projection_target())
+        .map(|meta| (meta.rows, meta.cols))
+        .collect()
 }
 
-pub struct FusedGaLore {
-    rank: usize,
-    update_freq: u64,
-    scale: f32,
-    /// Cosine lazy-refresh gate (shared with the Rust path; the artifact
-    /// step itself is untouched — only the host-side SVD is skipped).
-    gate: RefreshGate,
-    /// Refresh boundaries skipped by the gate, for metrics.
-    pub gate_skips: u64,
-    /// Per handled parameter: the short-side-first gradient shape and the
-    /// effective rank its artifact was lowered for — the shapes every
-    /// restored state blob must match (`load_state` cross-checks all of
-    /// M, V, *and* P against these; a wrong-shape projector used to slip
-    /// through and fail much later as an opaque artifact input-length
-    /// error).
-    expect: HashMap<usize, (usize, usize, usize)>,
-    states: HashMap<usize, LayerState>,
-    svd_ws: SvdWorkspace,
-    rng: Rng,
-}
-
-impl FusedGaLore {
-    /// Validate that every target shape has a matching artifact and
-    /// pre-compile them.
-    pub fn new(
-        cfg: &RunConfig,
-        params: &ParamStore,
-        targets: &[usize],
-        engine: &mut Engine,
-    ) -> Result<FusedGaLore> {
-        if cfg.galore.is_adaptive() {
-            bail!(
-                "adaptive rank schedules ('{}') run on the Rust path only — the fused \
-                 galore_step artifacts are lowered for fixed shapes; drop --fused or \
-                 use rank_schedule = \"fixed\"",
-                cfg.galore.rank_schedule.label()
-            );
-        }
-        if cfg.galore.projector_quant != crate::optim::ProjectorQuant::F32 {
-            bail!(
-                "projector_quant = '{}' runs on the Rust path only — the fused step \
-                 feeds the artifact an f32 projector, so the int8 store would be \
-                 silently ignored; drop --fused or use projector_quant = \"f32\"",
-                cfg.galore.projector_quant.label()
-            );
-        }
-        let rank = cfg.galore.rank;
-        let mut expect = HashMap::new();
-        for &idx in targets {
-            let meta = &params.metas[idx];
-            let (m, n) = short_side_first(meta.rows, meta.cols);
-            let Some(art) = engine.manifest.galore_step_for(m, n, rank) else {
-                bail!(
-                    "no galore_step artifact for shape {}x{} rank {rank} — \
-                     re-run `make artifacts` with matching ranks",
-                    m,
-                    n
-                );
-            };
-            let name = art.name.clone();
-            engine.prepare(&name)?;
-            expect.insert(idx, (m, n, rank.min(m)));
-        }
-        Ok(FusedGaLore {
-            rank,
-            update_freq: cfg.galore.update_freq,
-            scale: cfg.galore.scale,
-            gate: cfg.galore.refresh_gate(),
-            gate_skips: 0,
-            expect,
-            states: HashMap::new(),
-            svd_ws: SvdWorkspace::new(),
-            rng: Rng::new(cfg.seed ^ 0xF05ED),
-        })
-    }
-
-    pub fn handles(&self, idx: usize) -> bool {
-        self.expect.contains_key(&idx)
-    }
-
-    /// Checkpoint v2 (`FUSD` section): per-layer compact moments,
-    /// projector, and step counter, plus the refresh RNG and gate
-    /// counter. Staging buffers are per-step scratch and restart empty.
-    pub fn save_state(&self, out: &mut Vec<u8>) {
-        ser::put_rng(out, &self.rng);
-        ser::put_u64(out, self.gate_skips);
-        let mut idxs: Vec<usize> = self.states.keys().copied().collect();
-        idxs.sort_unstable();
-        ser::put_u32(out, idxs.len() as u32);
-        for idx in idxs {
-            let s = &self.states[&idx];
-            ser::put_usize(out, idx);
-            ser::put_u64(out, s.t);
-            ser::put_matrix(out, &s.m);
-            ser::put_matrix(out, &s.v);
-            ser::put_matrix(out, &s.p);
-        }
-    }
-
-    pub fn load_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
-        self.rng = r.rng()?;
-        self.gate_skips = r.u64()?;
-        self.states.clear();
-        let n = r.u32()?;
-        for _ in 0..n {
-            let idx = r.usize()?;
-            let Some(&want) = self.expect.get(&idx) else {
-                return Err(format!(
-                    "fused state for parameter {idx}, which this run's artifact set \
-                     does not handle"
-                ));
-            };
-            let t = r.u64()?;
-            let m = r.matrix()?;
-            let v = r.matrix()?;
-            let p = r.matrix()?;
-            check_layer_state(idx, &m, &v, &p, want)?;
-            self.states.insert(
-                idx,
-                LayerState {
-                    m,
-                    v,
-                    p,
-                    t,
-                    g_short: Matrix::zeros(0, 0),
-                    w_short: Matrix::zeros(0, 0),
-                    pg: Matrix::zeros(0, 0),
-                },
-            );
-        }
-        Ok(())
-    }
-
-    pub fn state_bytes(&self) -> usize {
-        self.states
-            .values()
-            .map(|s| 4 * (s.m.len() + s.v.len() + s.p.len()))
-            .sum()
-    }
-
-    /// One fused step on parameter `idx`.
-    pub fn step(
-        &mut self,
-        engine: &mut Engine,
-        idx: usize,
-        w: &mut Matrix,
-        grad: &Matrix,
-        lr: f32,
-    ) -> Result<()> {
-        let transposed = grad.rows > grad.cols;
-        let (gm, gn) = short_side_first(grad.rows, grad.cols);
-        let r = self.rank.min(gm);
-        let state = self.states.entry(idx).or_insert_with(|| LayerState {
-            m: Matrix::zeros(r, gn),
-            v: Matrix::zeros(r, gn),
-            p: Matrix::zeros(0, 0),
-            t: 0,
-            g_short: Matrix::zeros(0, 0),
-            w_short: Matrix::zeros(0, 0),
-            pg: Matrix::zeros(0, 0),
-        });
-        // Refresh the projector every T steps (Rust randomized SVD keeps
-        // the refresh off the per-step path; an artifact-based refresh is
-        // available via `proj_refresh_*` for benchmarking). t == 0 right
-        // after creation, so the first step always refreshes.
-        let needs_refresh = state.t % self.update_freq == 0;
-        state.t += 1;
-        if transposed {
-            grad.transpose_into(&mut state.g_short);
-        }
-        if needs_refresh {
-            let g_src = if transposed { &state.g_short } else { grad };
-            // Lazy-refresh gate (same semantics as the Rust path): skip
-            // the SVD when the cached basis still captures the gradient.
-            let mut skip = false;
-            if self.gate.enabled() && !state.p.is_empty() {
-                matmul_at_b_into(&state.p, g_src, &mut state.pg);
-                let cos =
-                    subspace_cosine(state.pg.frobenius_norm(), g_src.frobenius_norm());
-                if self.gate.fires(cos) {
-                    skip = true;
-                    self.gate_skips += 1;
-                }
-            }
-            if !skip {
-                top_r_left_subspace_into(g_src, r, &mut self.rng, &mut self.svd_ws, &mut state.p);
-            }
-        }
-        let g_data: &[f32] = if transposed { &state.g_short.data } else { &grad.data };
-        let w_data: &[f32] = if transposed {
-            w.transpose_into(&mut state.w_short);
-            &state.w_short.data
-        } else {
-            &w.data
-        };
-        let artifact = format!("galore_step_{gm}x{gn}_r{r}");
-        let t_in = [state.t as f32];
-        let la_in = [lr * self.scale];
-        let outputs = engine.execute(
-            &artifact,
-            &[
-                Input::F32(w_data),
-                Input::F32(&state.m.data),
-                Input::F32(&state.v.data),
-                Input::F32(g_data),
-                Input::F32(&state.p.data),
-                Input::F32(&t_in),
-                Input::F32(&la_in),
-            ],
-        )?;
-        if transposed {
-            // Stage W' short-side-first, then transpose back into the
-            // original (tall) weight layout.
-            state.w_short.resize(gm, gn);
-            state.w_short.data.copy_from_slice(&outputs[0].data);
-            state.w_short.transpose_into(w);
-        } else {
-            w.data.copy_from_slice(&outputs[0].data);
-        }
-        state.m.data.copy_from_slice(&outputs[1].data);
-        state.v.data.copy_from_slice(&outputs[2].data);
-        Ok(())
-    }
-}
-
-fn short_side_first(rows: usize, cols: usize) -> (usize, usize) {
-    if rows <= cols {
-        (rows, cols)
-    } else {
-        (cols, rows)
-    }
-}
-
-/// Cross-check one restored fused layer state against the shapes this
-/// run's artifacts were lowered for: compact moments `(r, n)` and
-/// projector `(m, r)` with `(m, n, r)` the expected short-side-first
-/// shape and effective rank. Every mismatch is named here at restore
-/// time; the old check compared M against V only, so a wrong-shape or
-/// wrong-rank projector surfaced much later as an opaque artifact
-/// input-length error mid-run.
-fn check_layer_state(
-    idx: usize,
-    m: &Matrix,
-    v: &Matrix,
-    p: &Matrix,
-    (gm, gn, r): (usize, usize, usize),
-) -> Result<(), String> {
-    if m.shape() != (r, gn) {
-        return Err(format!(
-            "fused param {idx}: M shape {:?} does not match this run's compact shape \
-             ({r}, {gn}) — checkpoint from a different rank or model?",
-            m.shape()
-        ));
-    }
-    if v.shape() != (r, gn) {
-        return Err(format!(
-            "fused param {idx}: V shape {:?} does not match this run's compact shape \
-             ({r}, {gn})",
-            v.shape()
-        ));
-    }
-    if p.shape() != (gm, r) {
-        return Err(format!(
-            "fused param {idx}: projector shape {:?} does not match this run's \
-             ({gm}, {r}) — the galore_step_{gm}x{gn}_r{r} artifact would reject it \
-             as an input-length mismatch mid-run",
-            p.shape()
-        ));
-    }
-    Ok(())
+/// Build the artifact step backend for a run: its own engine on the
+/// default artifact directory (`GALORE_ARTIFACTS`/./artifacts), validated
+/// against every projection-target shape at the configured rank. Fails
+/// fast — a missing artifact or a broken manifest surfaces here, at
+/// construction, not mid-run.
+pub fn build_artifact_backend(cfg: &RunConfig) -> Result<ArtifactBackend> {
+    let engine = Engine::new(default_dir())?;
+    let shapes = target_shapes(cfg);
+    ArtifactBackend::new(engine, cfg.galore.rank, &shapes).map_err(|e| anyhow!(e))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::MethodKind;
+    use crate::model::ModelConfig;
 
     #[test]
-    fn layer_state_shape_checks_name_every_mismatch() {
-        let want = (16usize, 64usize, 4usize); // (m, n, r)
-        let good_m = Matrix::zeros(4, 64);
-        let good_v = Matrix::zeros(4, 64);
-        let good_p = Matrix::zeros(16, 4);
-        assert!(check_layer_state(0, &good_m, &good_v, &good_p, want).is_ok());
-        // Wrong-rank projector: the case that used to slip through (only
-        // M/V were cross-checked) and die later inside the artifact call.
-        let bad_p = Matrix::zeros(16, 8);
-        let err = check_layer_state(3, &good_m, &good_v, &bad_p, want).unwrap_err();
-        assert!(err.contains("projector"), "{err}");
-        assert!(err.contains("param 3"), "{err}");
-        // Wrong-shape moments are still rejected, now against the run's
-        // expected shape rather than merely against each other.
-        let bad_m = Matrix::zeros(8, 64);
-        let err = check_layer_state(1, &bad_m, &good_v, &good_p, want).unwrap_err();
-        assert!(err.contains("M shape"), "{err}");
-        let bad_v = Matrix::zeros(4, 32);
-        let err = check_layer_state(2, &good_m, &bad_v, &good_p, want).unwrap_err();
-        assert!(err.contains("V shape"), "{err}");
-        // A transposed projector (n×r instead of m×r) is caught too.
-        let transposed_p = Matrix::zeros(4, 16);
-        assert!(check_layer_state(0, &good_m, &good_v, &transposed_p, want).is_err());
+    fn target_shapes_cover_projection_targets_only() {
+        let cfg = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        let shapes = target_shapes(&cfg);
+        assert!(!shapes.is_empty(), "nano has attention/FFN targets");
+        let metas = schema(cfg.model);
+        let n_targets = metas.iter().filter(|m| m.is_projection_target()).count();
+        assert_eq!(shapes.len(), n_targets);
+        // Every shape is a real 2-D matrix (vectors are never targeted).
+        assert!(shapes.iter().all(|&(r, c)| r > 1 && c > 1));
     }
 }

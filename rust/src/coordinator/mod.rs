@@ -2,8 +2,11 @@
 //!
 //! * [`trainer`] — the core loop: artifact execution, §4.3 per-layer
 //!   weight updates, optimizer dispatch for every method in the paper.
-//! * [`fused`] — the GaLore-Adam hot path through the Pallas-kernel
-//!   artifacts (L1/L2) instead of the Rust-side optimizer.
+//!   The GaLore step backend (pure Rust vs the fused Pallas-kernel
+//!   artifacts, `optim::backend`) is chosen once in `build_optimizer` —
+//!   the loop itself is backend-agnostic.
+//! * [`fused`] — thin artifact-discovery/validation glue for the fused
+//!   backend (shape gathering + engine construction).
 //! * [`parallel`] — synchronous data-parallel workers with a chunked ring
 //!   all-reduce over channels.
 //! * [`schedule`] — warmup + cosine LR (Appendix C.1).

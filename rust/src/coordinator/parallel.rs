@@ -22,6 +22,13 @@
 //! is the optimizer's ([`Optimizer::grad_reduce_mode`]); this module just
 //! executes the plan and accounts the traffic.
 //!
+//! **Step backends** compose with all of this: each worker's
+//! `build_optimizer` plugs the configured `optim::backend::StepBackend`
+//! into its replica (the artifact backend brings its own PJRT engine per
+//! worker), and the compact entry point is backend-agnostic — so
+//! `--backend artifact` (né `--fused`) now runs under `dp_workers > 1`
+//! *and* `dp_compress`, a combination the pre-backend design rejected.
+//!
 //! Adaptive-rank runs (`galore.rank_schedule`) need no extra coordination:
 //! rank decisions and lazy-refresh gating are deterministic functions of
 //! the *averaged* gradient and the shared run seed, and every worker sees

@@ -3,10 +3,10 @@
 //! paper's full method roster.
 
 use super::checkpoint;
-use super::fused::FusedGaLore;
+use super::fused::build_artifact_backend;
 use super::metrics::{thread_alloc_stats, Metrics};
 use super::schedule::LrSchedule;
-use crate::config::{MethodKind, RunConfig};
+use crate::config::{BackendKind, MethodKind, RunConfig};
 use crate::data::{Batch, DataLoader, SyntheticCorpus};
 use crate::lowrank::{Factorized, Lora, LoraConfig, ReLora};
 use crate::model::{init_params, ParamMeta, ParamStore};
@@ -19,18 +19,41 @@ use anyhow::{anyhow, bail, Context, Result};
 /// attention/FFN projections (§5.1's low-rank target set). Stochastic
 /// optimizer internals (projector sketches, adaptor inits) are seeded from
 /// `cfg.seed` so runs are reproducible end to end.
-pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Box<dyn Optimizer> {
+///
+/// `cfg.backend` selects the GaLore step backend here, at construction —
+/// the only place "fused" exists anymore. `BackendKind::Artifact` stands
+/// up a backend-owned PJRT engine and validates every target-shape
+/// artifact (fallible: hence the `Result`); everything downstream — the
+/// trainer's step/checkpoint paths, the DP worker loop — is
+/// backend-agnostic.
+pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Result<Box<dyn Optimizer>> {
+    // The artifact backend exists for exactly one method — GaLore-Adam,
+    // what its kernels implement. Guarded here for *every* other method
+    // (also enforced by `RunConfig::validate`; repeated because benches
+    // and tests call `build_optimizer` with hand-rolled configs, and a
+    // silently ignored backend would read as a fused run that wasn't).
+    if cfg.backend == BackendKind::Artifact && cfg.method != MethodKind::GaLore {
+        bail!(
+            "backend 'artifact' drives the fused GaLore-Adam kernels; method '{}' \
+             runs on the rust backend only",
+            cfg.method.label()
+        );
+    }
     let t = targets.iter().copied();
-    match cfg.method {
+    Ok(match cfg.method {
         MethodKind::FullRank => Box::new(Adam::default_paper()),
         MethodKind::AdamW => Box::new(Adam::adamw(cfg.weight_decay.max(0.01))),
         MethodKind::Adam8bit => Box::new(Adam8bit::new()),
         MethodKind::Adafactor => Box::new(Adafactor::new()),
-        MethodKind::GaLore => Box::new(
-            GaLore::new(cfg.galore, Adam::default_paper())
+        MethodKind::GaLore => {
+            let mut g = GaLore::new(cfg.galore, Adam::default_paper())
                 .with_targets(t)
-                .with_seed(cfg.seed),
-        ),
+                .with_seed(cfg.seed);
+            if cfg.backend == BackendKind::Artifact {
+                g = g.with_backend(Box::new(build_artifact_backend(cfg)?));
+            }
+            Box::new(g)
+        }
         MethodKind::GaLore8bit => Box::new(
             GaLore::new(cfg.galore, Adam8bit::new()).with_targets(t).with_seed(cfg.seed),
         ),
@@ -53,7 +76,7 @@ pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Box<dyn Optimizer>
         MethodKind::LowRank => {
             Box::new(Factorized::new(cfg.lowrank_rank).with_targets(t).with_seed(cfg.seed))
         }
-    }
+    })
 }
 
 /// Copy artifact outputs into persistent gradient buffers, allocating the
@@ -112,9 +135,6 @@ pub struct Trainer {
     /// Peak bytes of gradient tensors held simultaneously (layerwise
     /// accounting — the quantity Fig. 1 calls "weight gradients").
     pub peak_grad_bytes: usize,
-    /// Optional fused HLO hot path for GaLore-Adam (uses the Pallas-kernel
-    /// artifacts instead of the Rust-side optimizer).
-    fused: Option<FusedGaLore>,
     /// Persistent gradient buffers, reused across `compute_grads` calls
     /// (schema order). Working memory; the §4.3 peak-gradient *accounting*
     /// still models layerwise consumption via `peak_grad_bytes`.
@@ -129,7 +149,7 @@ impl Trainer {
         cfg.validate().map_err(|e| anyhow!(e))?;
         let params = init_params(cfg.model, cfg.seed);
         let targets = params.projection_targets();
-        let opt = build_optimizer(&cfg, &targets);
+        let opt = build_optimizer(&cfg, &targets)?;
         let schedule = LrSchedule::cosine(cfg.lr, cfg.steps, cfg.warmup_frac, cfg.final_lr_frac);
         Ok(Trainer {
             cfg,
@@ -141,7 +161,6 @@ impl Trainer {
             metrics: Metrics::new(),
             step: 0,
             peak_grad_bytes: 0,
-            fused: None,
             grad_bufs: Vec::new(),
             mb_bufs: Vec::new(),
         })
@@ -154,29 +173,6 @@ impl Trainer {
         let corpus = SyntheticCorpus::new(cfg.model.vocab, cfg.seed ^ 0xDA7A);
         let loader = DataLoader::synthetic(corpus, cfg.batch, cfg.model.seq);
         Self::new(cfg, engine, loader)
-    }
-
-    /// Switch the GaLore update onto the fused Pallas/HLO artifacts
-    /// (errors if the run is not a GaLore-Adam run or the artifact set
-    /// lacks this shape/rank).
-    pub fn enable_fused_galore(&mut self) -> Result<()> {
-        if self.cfg.method != MethodKind::GaLore {
-            bail!("fused path implements GaLore-Adam (method is {:?})", self.cfg.method);
-        }
-        let targets = self.params.projection_targets();
-        let fused = FusedGaLore::new(&self.cfg, &self.params, &targets, &mut self.engine)?;
-        self.fused = Some(fused);
-        Ok(())
-    }
-
-    pub fn is_fused(&self) -> bool {
-        self.fused.is_some()
-    }
-
-    /// Lazy-refresh-gate skips on the fused path (None when not fused).
-    /// The Rust path reports the same through `GaLore::rank_state`.
-    pub fn fused_gate_skips(&self) -> Option<u64> {
-        self.fused.as_ref().map(|f| f.gate_skips)
     }
 
     /// Execute the training artifact on a batch, staging gradients into the
@@ -232,11 +228,11 @@ impl Trainer {
 
     /// Apply updates under a data-parallel communication plan
     /// (`coordinator::parallel::exchange_grads`): parameters the plan
-    /// reduced in full take the normal [`Trainer::update_one`] path;
+    /// reduced in full take the normal `Trainer::update_one` path;
     /// compact-reduced parameters feed their averaged `Pᵀ G` straight
-    /// into `Optimizer::step_compact`. The fused artifact path consumes
-    /// full gradients only, so a compact entry on a fused-handled
-    /// parameter is an error (run `dp_compress` on the Rust path).
+    /// into `Optimizer::step_compact`. Backend-agnostic: the artifact
+    /// backend's compact entry runs the shared Rust tail against the same
+    /// moments, so `dp_compress` composes with `--backend artifact`.
     /// Peak-gradient accounting is unchanged — the full gradient was
     /// materialized locally before projection either way.
     pub fn apply_updates_planned(
@@ -270,15 +266,15 @@ impl Trainer {
         let one = |this: &mut Self, idx: usize| -> Result<()> {
             if let Some((plan, compact)) = planned {
                 if matches!(plan[idx], GradReduceMode::Compact { .. }) {
-                    if this.fused.as_ref().is_some_and(|f| f.handles(idx)) {
-                        bail!(
-                            "the fused GaLore path cannot consume compact-reduced \
-                             gradients yet — its artifacts take the full gradient; \
-                             run dp_compress on the Rust optimizer path (drop --fused)"
-                        );
-                    }
-                    this.opt.step_compact(idx, &mut this.params.tensors[idx], &compact[idx], lr);
-                    return Ok(());
+                    return this
+                        .opt
+                        .step_compact(idx, &mut this.params.tensors[idx], &compact[idx], lr)
+                        .map_err(|e| {
+                            anyhow!(
+                                "compact optimizer step failed on parameter {idx} ('{}'): {e}",
+                                this.params.metas[idx].name
+                            )
+                        });
                 }
             }
             this.update_one(idx, &grads[idx], lr)
@@ -301,25 +297,17 @@ impl Trainer {
         Ok(())
     }
 
-    /// Apply one parameter's update. Artifact failures on the fused path
-    /// surface as errors (the old path `expect`ed here, turning a missing
-    /// or mis-shaped artifact mid-run into a process abort).
+    /// Apply one parameter's update. Optimizer failures — including
+    /// artifact-backend engine faults — surface as errors, never process
+    /// aborts (PR 4's "no `.expect` mid-run" policy; the buffers are
+    /// restored by the caller so the trainer stays checkpointable).
     fn update_one(&mut self, idx: usize, grad: &Matrix, lr: f32) -> Result<()> {
-        if let Some(fused) = &mut self.fused {
-            if fused.handles(idx) {
-                let res =
-                    fused.step(&mut self.engine, idx, &mut self.params.tensors[idx], grad, lr);
-                return match res {
-                    Ok(()) => Ok(()),
-                    Err(e) => Err(anyhow!(
-                        "fused galore step failed on parameter {idx} ('{}'): {e}",
-                        self.params.metas[idx].name
-                    )),
-                };
-            }
-        }
-        self.opt.step(idx, &mut self.params.tensors[idx], grad, lr);
-        Ok(())
+        self.opt.step(idx, &mut self.params.tensors[idx], grad, lr).map_err(|e| {
+            anyhow!(
+                "optimizer step failed on parameter {idx} ('{}'): {e}",
+                self.params.metas[idx].name
+            )
+        })
     }
 
     /// One full training step. Returns the batch loss.
@@ -422,14 +410,17 @@ impl Trainer {
     }
 
     /// Optimizer-state bytes currently held (checked against the
-    /// `memory::formulas` predictions by the integration tests).
+    /// `memory::formulas` predictions by the integration tests). Identical
+    /// across step backends: the artifact backend keeps no state of its
+    /// own — it writes through the inner optimizer's moments.
     pub fn optimizer_state_bytes(&self) -> usize {
-        self.opt.state_bytes() + self.fused.as_ref().map_or(0, |f| f.state_bytes())
+        self.opt.state_bytes()
     }
 
     /// Write a full-state (v2) checkpoint: weights, step, config
-    /// fingerprint, optimizer state (moments, projectors, RNG streams),
-    /// fused-path state when enabled, data-loader position, and metrics
+    /// fingerprint, optimizer state (moments, projectors, RNG streams —
+    /// the *whole* training state on either step backend, through the one
+    /// `Optimizer::save_state`), data-loader position, and metrics
     /// counters. Atomic on disk; bit-exact on resume.
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let mut opt_blob = Vec::new();
@@ -440,19 +431,11 @@ impl Trainer {
         self.loader.save_state(&mut loader_blob);
         let mut metrics_blob = Vec::new();
         self.metrics.save_state(&mut metrics_blob);
-        let fused_blob = self.fused.as_ref().map(|f| {
-            let mut b = Vec::new();
-            f.save_state(&mut b);
-            b
-        });
-        let mut sections: Vec<(&[u8; 4], &[u8])> = vec![
+        let sections: Vec<(&[u8; 4], &[u8])> = vec![
             (checkpoint::SEC_OPTIMIZER, opt_blob.as_slice()),
             (checkpoint::SEC_LOADER, loader_blob.as_slice()),
             (checkpoint::SEC_METRICS, metrics_blob.as_slice()),
         ];
-        if let Some(fb) = &fused_blob {
-            sections.push((checkpoint::SEC_FUSED, fb.as_slice()));
-        }
         checkpoint::save_v2(
             path,
             &self.params,
@@ -477,7 +460,8 @@ impl Trainer {
     /// this run's (a mismatched config would silently diverge from the
     /// uninterrupted trajectory). v1 checkpoints still load — weights and
     /// step only, with a loud warning that optimizer moments cold-start.
-    /// For fused runs call `enable_fused_galore` before restoring.
+    /// Backend-agnostic: artifact-backend runs save and restore through
+    /// the same `OPTS` section as everything else.
     pub fn restore_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let path = path.as_ref();
         match checkpoint::read(path, self.cfg.model)? {
@@ -512,17 +496,19 @@ impl Trainer {
                 let metrics_bytes = d
                     .section(checkpoint::SEC_METRICS)
                     .ok_or_else(|| anyhow!("checkpoint is missing its metrics section"))?;
-                let fused_bytes = d.section(checkpoint::SEC_FUSED);
-                match (&self.fused, fused_bytes) {
-                    (Some(_), None) => bail!(
-                        "this run uses the fused GaLore path but the checkpoint has no \
-                         fused-path state (it was written by a non-fused run)"
-                    ),
-                    (None, Some(_)) => bail!(
-                        "checkpoint contains fused-path state — call \
-                         enable_fused_galore() before restoring"
-                    ),
-                    _ => {}
+                if d.section(checkpoint::SEC_FUSED).is_some() {
+                    // Pre-StepBackend fused checkpoints kept the targeted
+                    // layers' moments in a separate FUSD section whose
+                    // OPTS blob is incomplete; loading one here would
+                    // silently cold-start those moments. (Current fused
+                    // runs carry everything in OPTS — this only rejects
+                    // files from before the backend redesign.)
+                    bail!(
+                        "checkpoint carries a legacy fused-path (FUSD) section from \
+                         before the step-backend redesign; re-train or re-save it \
+                         with this binary — its optimizer section does not contain \
+                         the fused layers' moments"
+                    );
                 }
                 let mut r = crate::ser::Reader::new(opt_bytes);
                 self.opt.load_state(&mut r).map_err(|e| anyhow!("optimizer state: {e}"))?;
@@ -533,11 +519,6 @@ impl Trainer {
                 let mut r = crate::ser::Reader::new(metrics_bytes);
                 self.metrics.load_state(&mut r).map_err(|e| anyhow!("metrics state: {e}"))?;
                 r.expect_end().map_err(|e| anyhow!("metrics state: {e}"))?;
-                if let (Some(f), Some(fb)) = (&mut self.fused, fused_bytes) {
-                    let mut r = crate::ser::Reader::new(fb);
-                    f.load_state(&mut r).map_err(|e| anyhow!("fused-path state: {e}"))?;
-                    r.expect_end().map_err(|e| anyhow!("fused-path state: {e}"))?;
-                }
                 self.params = d.params;
                 self.step = d.step as usize;
                 Ok(())

@@ -11,7 +11,10 @@
 //!   workers with a ring all-reduce, the full optimizer zoo (Adam, AdamW,
 //!   Adafactor, 8-bit Adam, GaLore wrappers, LoRA/ReLoRA baselines), memory
 //!   accounting, metrics, checkpoints, and the PJRT runtime that executes
-//!   the artifacts. Python never runs on the training path.
+//!   the artifacts. The fused GaLore kernels plug into the one `GaLore<O>`
+//!   optimizer as a swappable step backend (`optim::backend`), so "fused"
+//!   is a backend choice, not a second implementation. Python never runs
+//!   on the training path.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index that
 //! maps every table/figure of the paper to a module and bench.

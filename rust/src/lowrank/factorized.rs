@@ -64,10 +64,10 @@ impl Factorized {
 }
 
 impl Optimizer for Factorized {
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String> {
         if !self.is_target(param, grad) {
-            self.full_rank.step(param, w, grad, lr);
-            return;
+            return self.full_rank.step(param, w, grad, lr);
         }
         let (m, n) = w.shape();
         let r = self.rank.min(m).min(n);
@@ -89,6 +89,7 @@ impl Optimizer for Factorized {
         f.opt_b.adam_step(&mut f.b, &f.gb, lr, &self.adam_cfg);
         f.opt_a.adam_step(&mut f.a, &f.ga, lr, &self.adam_cfg);
         matmul_into(&f.b, &f.a, w);
+        Ok(())
     }
 
     fn state_bytes(&self) -> usize {
@@ -173,7 +174,7 @@ mod tests {
         let mut w = Matrix::randn(12, 16, 1.0, &mut rng);
         for s in 0..10 {
             let g = Matrix::randn(12, 16, 1.0, &mut rng.child(s));
-            fac.step(0, &mut w, &g, 0.01);
+            fac.step(0, &mut w, &g, 0.01).unwrap();
             let svd = svd_jacobi(&w);
             assert!(svd.s[2] < 1e-4 * svd.s[0].max(1e-6));
         }
@@ -192,7 +193,7 @@ mod tests {
             let mut g = w.clone();
             g.sub_assign(&w_star);
             last = g.frobenius_norm();
-            fac.step(0, &mut w, &g, 0.05);
+            fac.step(0, &mut w, &g, 0.05).unwrap();
         }
         // Best possible rank-2 approximation of I_12 leaves sqrt(10) ≈ 3.16.
         assert!(last > 2.5, "impossibly good: {last}");
@@ -216,7 +217,7 @@ mod tests {
                 first = loss;
             }
             last = loss;
-            fac.step(0, &mut w, &g, 0.05);
+            fac.step(0, &mut w, &g, 0.05).unwrap();
         }
         assert!(last < 0.15 * first, "{first} -> {last}");
     }

@@ -178,10 +178,10 @@ impl Lora {
 }
 
 impl Optimizer for Lora {
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String> {
         if !self.is_target(param, grad) {
-            self.full_rank.step(param, w, grad, lr);
-            return;
+            return self.full_rank.step(param, w, grad, lr);
         }
         let scale = self.cfg.scale();
         let rank = self.cfg.rank;
@@ -192,6 +192,7 @@ impl Optimizer for Lora {
             .or_insert_with(|| AdaptorState::new(w, rank, rng));
         ad.update_factors(grad, lr, scale, &self.adam_cfg);
         ad.materialize_into(scale, w);
+        Ok(())
     }
 
     fn state_bytes(&self) -> usize {
@@ -255,7 +256,7 @@ mod tests {
         let w0 = w.clone();
         for s in 0..20 {
             let g = Matrix::randn(12, 16, 1.0, &mut rng.child(s));
-            lora.step(0, &mut w, &g, 0.05);
+            lora.step(0, &mut w, &g, 0.05).unwrap();
         }
         // ΔW must have rank <= 2.
         let mut dw = w.clone();
@@ -270,7 +271,7 @@ mod tests {
         let mut lora = Lora::new(LoraConfig { rank: 4, alpha: 32.0 });
         let mut w = Matrix::randn(16, 32, 1.0, &mut rng);
         let g = Matrix::ones(16, 32);
-        lora.step(0, &mut w, &g, 0.01);
+        lora.step(0, &mut w, &g, 0.01).unwrap();
         // Table 1: 2mr + 2nr floats.
         assert_eq!(lora.state_bytes(), 4 * (2 * 16 * 4 + 2 * 32 * 4));
         assert_eq!(lora.adaptor_bytes(), 4 * (16 * 4 + 4 * 32));
@@ -297,7 +298,7 @@ mod tests {
                 first = loss;
             }
             last = loss;
-            lora.step(0, &mut w, &g, 0.05);
+            lora.step(0, &mut w, &g, 0.05).unwrap();
         }
         assert!(last < 0.1 * first, "{first} -> {last}");
     }

@@ -57,10 +57,10 @@ impl ReLora {
 }
 
 impl Optimizer for ReLora {
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String> {
         if !self.is_target(param, grad) {
-            self.full_rank.step(param, w, grad, lr);
-            return;
+            return self.full_rank.step(param, w, grad, lr);
         }
         let scale = self.cfg.scale();
         let rank = self.cfg.rank;
@@ -79,6 +79,7 @@ impl Optimizer for ReLora {
         let ad = self.adaptors.get_mut(&param).unwrap();
         ad.update_factors(grad, lr, scale, &self.adam_cfg);
         ad.materialize_into(scale, w);
+        Ok(())
     }
 
     fn state_bytes(&self) -> usize {
@@ -158,7 +159,7 @@ mod tests {
         let w0 = w.clone();
         for s in 0..60 {
             let g = Matrix::randn(12, 12, 1.0, &mut rng.child(s));
-            relora.step(0, &mut w, &g, 0.05);
+            relora.step(0, &mut w, &g, 0.05).unwrap();
         }
         let mut dw = w.clone();
         dw.sub_assign(&w0);
@@ -175,12 +176,12 @@ mod tests {
         let mut w = Matrix::randn(8, 8, 1.0, &mut rng);
         for s in 0..5 {
             let g = Matrix::randn(8, 8, 1.0, &mut rng.child(s));
-            relora.step(0, &mut w, &g, 0.01);
+            relora.step(0, &mut w, &g, 0.01).unwrap();
         }
         let before = relora.adaptors[&0].opt_b.t;
         assert_eq!(before, 5);
         let g = Matrix::randn(8, 8, 1.0, &mut rng.child(99));
-        relora.step(0, &mut w, &g, 0.01); // step 6 triggers merge+reset
+        relora.step(0, &mut w, &g, 0.01).unwrap(); // step 6 triggers merge+reset
         assert_eq!(relora.adaptors[&0].opt_b.t, 1);
     }
 
@@ -201,7 +202,7 @@ mod tests {
                 first = loss;
             }
             last = loss;
-            relora.step(0, &mut w, &g, 0.05);
+            relora.step(0, &mut w, &g, 0.05).unwrap();
         }
         assert!(last < 0.3 * first, "{first} -> {last}");
     }

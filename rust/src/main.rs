@@ -12,7 +12,7 @@
 //!   galore info
 
 use anyhow::{anyhow, bail, Result};
-use galore::config::{Cli, MethodKind, RunConfig, TomlDoc};
+use galore::config::{BackendKind, Cli, MethodKind, RunConfig, TomlDoc};
 use galore::coordinator::{train_data_parallel_resumable, Trainer};
 use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
 use galore::model::ModelConfig;
@@ -54,9 +54,9 @@ USAGE:
                 [--projector-quant f32|block8|dyn8]
                 [--seed N] [--eval-every N] [--eval-batches N]
                 [--dp-workers N] [--dp-compress] [--layerwise]
-                [--fused] [--csv PATH] [--checkpoint PATH]
-                [--checkpoint-every N] [--checkpoint-dir DIR] [--keep-last N]
-                [--resume PATH]
+                [--backend rust|artifact] [--fused] [--csv PATH]
+                [--checkpoint PATH] [--checkpoint-every N]
+                [--checkpoint-dir DIR] [--keep-last N] [--resume PATH]
   galore memory --model NAME [--method NAME] [--rank N] [--layerwise]
                 [--token-batch N]
   galore info
@@ -76,6 +76,12 @@ all-reduce; --dp-compress (GaLore methods) exchanges the projected r x n
 gradient between subspace refreshes instead of the full m x n one — a
 min(m,n)/r traffic cut per targeted layer. See EXPERIMENTS.md
 section 'DP communication'.
+
+Step backend: --backend artifact (alias --fused) runs the GaLore compact
+update through the fused Pallas/HLO AOT kernels instead of the Rust tail
+(method galore only; needs `make artifacts`). Composes with --dp-workers,
+--dp-compress, rank schedules, the refresh gate, and checkpoints — see
+EXPERIMENTS.md section 'Backend API'.
 
 Checkpoint/resume: --checkpoint-every N writes a full-state (v2) snapshot
 every N steps into --checkpoint-dir (retention --keep-last, 0 = keep all);
@@ -167,6 +173,19 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     if let Some(v) = cli.get("checkpoint-dir") {
         cfg.checkpoint_dir = v.to_string();
     }
+    // Step backend: --backend NAME, with --fused kept as the historical
+    // shorthand for --backend artifact. Contradictory spellings are an
+    // error, not a silent override.
+    if let Some(v) = cli.get("backend") {
+        cfg.backend = BackendKind::parse(v)
+            .ok_or_else(|| anyhow!("unknown --backend '{v}' (rust|artifact)"))?;
+        if cli.has("fused") && cfg.backend != BackendKind::Artifact {
+            bail!("--fused contradicts --backend {v}: drop one of the two flags");
+        }
+    }
+    if cli.has("fused") {
+        cfg.backend = BackendKind::Artifact;
+    }
     // CLI overrides can reintroduce degenerate values (e.g. --update-freq
     // 0) after from_toml validated; re-check the final config.
     cfg.validate().map_err(|e| anyhow!(e))?;
@@ -176,10 +195,11 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
 fn train(cli: &Cli) -> Result<()> {
     let cfg = build_run_config(cli)?;
     println!(
-        "train: model={} method={} steps={} batch={} lr={} rank={} T={} alpha={} \
+        "train: model={} method={} backend={} steps={} batch={} lr={} rank={} T={} alpha={} \
          schedule={} quant={} gate={} layerwise={} dp={} dp_compress={}",
         cfg.model.name,
         cfg.method.label(),
+        cfg.backend.label(),
         cfg.steps,
         cfg.batch,
         cfg.lr,
@@ -195,17 +215,12 @@ fn train(cli: &Cli) -> Result<()> {
     );
     let resume = cli.get("resume").map(std::path::PathBuf::from);
     if cfg.dp_workers > 1 {
-        // The fused artifact path is single-process: it consumes full
-        // gradients only and `parallel.rs` never enables it. Reject the
-        // combination instead of silently ignoring the flag (the old
-        // behavior), which read like the fused path was running.
-        if cli.has("fused") {
-            bail!(
-                "--fused is not available with --dp-workers > 1: the fused \
-                 GaLore artifacts run single-process (and cannot consume the \
-                 compact-reduced gradients of --dp-compress); drop --fused"
-            );
-        }
+        // Backends compose with data parallelism: each worker's
+        // `build_optimizer` stands up its own artifact engine when
+        // `--backend artifact` (alias `--fused`) is set, and the compact
+        // (`dp_compress`) entry runs the shared tail on either backend —
+        // the old "--fused is not available with --dp-workers" restriction
+        // is gone.
         let res = train_data_parallel_resumable(&cfg, resume.as_deref())?;
         println!(
             "done: train_loss={:.4} eval_loss={:.4} eval_ppl={:.2} tokens={} \
@@ -221,9 +236,8 @@ fn train(cli: &Cli) -> Result<()> {
         return Ok(());
     }
     let mut trainer = Trainer::from_config(cfg.clone())?;
-    if cli.has("fused") {
-        trainer.enable_fused_galore()?;
-        println!("fused GaLore hot path: ON (Pallas/HLO artifacts)");
+    if cfg.backend == BackendKind::Artifact {
+        println!("step backend: artifact (fused Pallas/HLO AOT kernels)");
     }
     if let Some(path) = &resume {
         trainer.restore_checkpoint(path)?;
@@ -273,7 +287,9 @@ fn train(cli: &Cli) -> Result<()> {
         }
     }
     if cfg.galore.refresh_gate_cos > 0.0 {
-        let skips = trainer.opt.gate_skips() + trainer.fused_gate_skips().unwrap_or(0);
+        // One gate implementation across backends: `GaLore` counts skips
+        // itself regardless of which substrate applies the update.
+        let skips = trainer.opt.gate_skips();
         println!("lazy-refresh gate: {skips} SVD refreshes skipped");
     }
     if let Some(csv) = cli.get("csv") {
@@ -295,17 +311,15 @@ fn memory(cli: &Cli) -> Result<()> {
         .get_parse::<usize>("rank")
         .map_err(|e| anyhow!("{e}"))?
         .unwrap_or_else(|| model.default_rank());
-    let method = match cli.get("method").unwrap_or("galore8bit") {
-        "full-rank" | "adam" => Method::FullRank,
-        "adam8bit" => Method::Adam8bit,
-        "galore" => Method::GaLore { rank },
-        "galore8bit" => Method::GaLore8bit { rank },
-        "lora" => Method::Lora { rank },
-        "relora" => Method::ReLora { rank },
-        "low-rank" => Method::LowRank { rank },
-        "adafactor" => Method::Adafactor,
-        other => bail!("unknown method '{other}'"),
-    };
+    // One method vocabulary: the same `MethodKind::parse` the trainer
+    // uses, then the single `Method::for_kind` conversion — the estimator
+    // cannot drift from the trainer about what a method string means (the
+    // old hand-rolled match here silently lacked `adamw`,
+    // `galore-adafactor`, and the alias spellings).
+    let method_str = cli.get("method").unwrap_or("galore8bit");
+    let kind = MethodKind::parse(method_str)
+        .ok_or_else(|| anyhow!("unknown method '{method_str}' (see METHODS in --help)"))?;
+    let method = Method::for_kind(kind, rank);
     let opts = TrainOpts {
         layerwise_updates: cli.has("layerwise"),
         activation_checkpoint: false,

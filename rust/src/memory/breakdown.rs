@@ -31,6 +31,9 @@ pub enum Method {
     LowRank { rank: usize },
     /// Adafactor with first-moment statistics (§5.2).
     Adafactor,
+    /// GaLore wrapping Adafactor: projector + compact first moment +
+    /// factored row/col second-moment statistics in the compact space.
+    GaLoreAdafactor { rank: usize },
 }
 
 impl Method {
@@ -44,6 +47,30 @@ impl Method {
             Method::ReLora { rank } => format!("ReLoRA (r={rank})"),
             Method::LowRank { rank } => format!("Low-Rank (r={rank})"),
             Method::Adafactor => "Adafactor".into(),
+            Method::GaLoreAdafactor { rank } => format!("GaLore-Adafactor (r={rank})"),
+        }
+    }
+
+    /// The *single* trainer-method → memory-model mapping: every consumer
+    /// (the `galore memory` subcommand, benches, examples) goes through
+    /// this so the estimator can never disagree with the trainer about
+    /// what a method string means. (The CLI used to re-implement
+    /// `MethodKind::parse` by hand and silently lacked the `adamw` /
+    /// `galore-adafactor` spellings.) `rank` feeds the low-rank variants
+    /// and is ignored by the full-rank ones. AdamW maps to `FullRank`:
+    /// decoupled weight decay changes the update, not the footprint.
+    pub fn for_kind(kind: crate::config::MethodKind, rank: usize) -> Method {
+        use crate::config::MethodKind as K;
+        match kind {
+            K::FullRank | K::AdamW => Method::FullRank,
+            K::Adam8bit => Method::Adam8bit,
+            K::Adafactor => Method::Adafactor,
+            K::GaLore => Method::GaLore { rank },
+            K::GaLore8bit => Method::GaLore8bit { rank },
+            K::GaLoreAdafactor => Method::GaLoreAdafactor { rank },
+            K::Lora => Method::Lora { rank },
+            K::ReLora => Method::ReLora { rank },
+            K::LowRank => Method::LowRank { rank },
         }
     }
 }
@@ -117,6 +144,16 @@ fn per_param(meta: &ParamMeta, method: Method) -> (u64, u64) {
         }
         Method::LowRank { .. } => (dense * BF16, 2 * dense * BF16),
         Method::Adafactor => (dense * BF16, (dense + m + n) * BF16),
+        Method::GaLoreAdafactor { rank } if target => {
+            // Projector on the short side + Adafactor state at the compact
+            // shape (r, long): first moment r·long plus factored r + long
+            // second-moment vectors (§5.2 "fair GaLore host").
+            let (short, long) = if m <= n { (m, n) } else { (n, m) };
+            let r = rank as u64;
+            let proj = short * r;
+            (dense * BF16, (proj + r * long + r + long) * BF16)
+        }
+        Method::GaLoreAdafactor { .. } => (dense * BF16, (dense + m + n) * BF16),
     }
 }
 
@@ -294,6 +331,44 @@ mod tests {
         let mixed = estimate_adaptive(c, opts, |idx, _| if idx % 2 == 0 { r } else { r / 4 });
         assert!(floor.optim_states < mixed.optim_states);
         assert!(mixed.optim_states < fixed.optim_states);
+    }
+
+    #[test]
+    fn for_kind_covers_every_trainer_method() {
+        use crate::config::MethodKind;
+        // One mapping, no drift: every spelling the trainer accepts yields
+        // a memory model (this drove the `galore memory` CLI rewrite —
+        // "adamw" and "galore-adafactor" used to be rejected there).
+        for (s, want) in [
+            ("adamw", Method::FullRank),
+            ("full-rank", Method::FullRank),
+            ("adam8bit", Method::Adam8bit),
+            ("adafactor", Method::Adafactor),
+            ("galore", Method::GaLore { rank: 16 }),
+            ("8bit-galore", Method::GaLore8bit { rank: 16 }),
+            ("galore-adafactor", Method::GaLoreAdafactor { rank: 16 }),
+            ("lora", Method::Lora { rank: 16 }),
+            ("relora", Method::ReLora { rank: 16 }),
+            ("low-rank", Method::LowRank { rank: 16 }),
+        ] {
+            let kind = MethodKind::parse(s).unwrap_or_else(|| panic!("'{s}' must parse"));
+            assert_eq!(Method::for_kind(kind, 16), want, "{s}");
+        }
+    }
+
+    #[test]
+    fn galore_adafactor_state_between_galore_and_adafactor() {
+        // Compact Adafactor stats are smaller than compact Adam's 2rn, so
+        // on projection targets: GaLore-Adafactor < GaLore(-Adam); both
+        // beat full-rank Adam. Sanity-pins the new estimator arm.
+        let c = cfg("350m");
+        let r = c.default_rank();
+        let ga = estimate(c, Method::GaLoreAdafactor { rank: r }, TrainOpts::default());
+        let g = estimate(c, Method::GaLore { rank: r }, TrainOpts::default());
+        let full = estimate(c, Method::FullRank, TrainOpts::default());
+        assert!(ga.optim_states < g.optim_states, "{} vs {}", ga.optim_states, g.optim_states);
+        assert!(g.optim_states < full.optim_states);
+        assert_eq!(ga.weights, g.weights);
     }
 
     #[test]

@@ -40,7 +40,8 @@ impl Default for Adafactor {
 }
 
 impl Optimizer for Adafactor {
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String> {
         let (rows, cols) = grad.shape();
         let state = self.states.entry(param).or_insert_with(|| State {
             m: Matrix::zeros(rows, cols),
@@ -86,6 +87,7 @@ impl Optimizer for Adafactor {
                 *w.at_mut(i, j) -= lr * upd;
             }
         }
+        Ok(())
     }
 
     fn state_bytes(&self) -> usize {
@@ -168,7 +170,7 @@ mod tests {
         let mut opt = Adafactor::new();
         let mut w = Matrix::zeros(32, 64);
         let g = Matrix::ones(32, 64);
-        opt.step(0, &mut w, &g, 0.01);
+        opt.step(0, &mut w, &g, 0.01).unwrap();
         assert_eq!(opt.state_bytes(), 4 * (32 * 64 + 32 + 64));
     }
 
@@ -183,8 +185,8 @@ mod tests {
         let g = Matrix::from_fn(4, 4, |i, j| ((i * 4 + j) as f32 - 7.5) * 0.1);
         let mut g_scaled = g.clone();
         g_scaled.scale(100.0);
-        a.step(0, &mut wa, &g, 0.01);
-        b.step(0, &mut wb, &g_scaled, 0.01);
+        a.step(0, &mut wa, &g, 0.01).unwrap();
+        b.step(0, &mut wb, &g_scaled, 0.01).unwrap();
         for (x, y) in wa.data.iter().zip(wb.data.iter()) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
         }

@@ -106,7 +106,8 @@ impl Adam {
 }
 
 impl Optimizer for Adam {
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String> {
         let state = self.states.entry(param).or_insert_with(|| State {
             m: Matrix::zeros(grad.rows, grad.cols),
             v: Matrix::zeros(grad.rows, grad.cols),
@@ -127,6 +128,37 @@ impl Optimizer for Adam {
             w.map_inplace(|x| x * (1.0 - lr * wd));
         }
         w.axpy(-lr, &state.upd);
+        Ok(())
+    }
+
+    /// The step-backend moment borrow (`optim::backend`): hand out this
+    /// parameter's M/V/t, creating them zeroed at `(rows, cols)` on first
+    /// touch — exactly what `step` would create. Restricted to the paper-
+    /// default configuration (β₁=0.9, β₂=0.999, ε=1e-8, no decoupled
+    /// decay), because that is what the fused `galore_step` artifacts are
+    /// lowered with; any other configuration opts out so a backend cannot
+    /// silently apply mismatched arithmetic.
+    fn moments_mut(
+        &mut self,
+        param: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Option<super::backend::MomentsMut<'_>> {
+        let d = AdamConfig::default();
+        if self.decoupled
+            || self.cfg.beta1 != d.beta1
+            || self.cfg.beta2 != d.beta2
+            || self.cfg.eps != d.eps
+        {
+            return None;
+        }
+        let state = self.states.entry(param).or_insert_with(|| State {
+            m: Matrix::zeros(rows, cols),
+            v: Matrix::zeros(rows, cols),
+            upd: Matrix::zeros(rows, cols),
+            t: 0,
+        });
+        Some(super::backend::MomentsMut { m: &mut state.m, v: &mut state.v, t: &mut state.t })
     }
 
     fn state_bytes(&self) -> usize {
@@ -208,7 +240,7 @@ mod tests {
         let mut adam = Adam::default_paper();
         let mut w = Matrix::zeros(2, 2);
         let g = Matrix::from_vec(2, 2, vec![0.5, -2.0, 1e-3, -1e-3]);
-        adam.step(0, &mut w, &g, 0.1);
+        adam.step(0, &mut w, &g, 0.1).unwrap();
         for (wv, gv) in w.data.iter().zip(g.data.iter()) {
             assert!((wv + 0.1 * gv.signum()).abs() < 1e-2, "{wv} vs {gv}");
         }
@@ -227,7 +259,7 @@ mod tests {
         let mut w = Matrix::ones(4, 4);
         let g = Matrix::zeros(4, 4);
         for _ in 0..10 {
-            adamw.step(0, &mut w, &g, 0.1);
+            adamw.step(0, &mut w, &g, 0.1).unwrap();
         }
         // Pure decay: w = (1 - 0.01)^10.
         for &wv in &w.data {
@@ -240,7 +272,7 @@ mod tests {
         let mut adam = Adam::default_paper();
         let mut w = Matrix::zeros(8, 16);
         let g = Matrix::ones(8, 16);
-        adam.step(0, &mut w, &g, 0.01);
+        adam.step(0, &mut w, &g, 0.01).unwrap();
         assert_eq!(adam.state_bytes(), 2 * 8 * 16 * 4);
     }
 
@@ -251,9 +283,9 @@ mod tests {
         let mut w1 = Matrix::zeros(3, 3);
         let g0 = Matrix::ones(2, 2);
         let g1 = Matrix::ones(3, 3);
-        adam.step(0, &mut w0, &g0, 0.1);
-        adam.step(1, &mut w1, &g1, 0.1);
-        adam.step(0, &mut w0, &g0, 0.1);
+        adam.step(0, &mut w0, &g0, 0.1).unwrap();
+        adam.step(1, &mut w1, &g1, 0.1).unwrap();
+        adam.step(0, &mut w0, &g0, 0.1).unwrap();
         assert_eq!(adam.state_bytes(), (2 * 4 + 2 * 9) * 4);
     }
 }

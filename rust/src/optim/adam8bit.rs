@@ -51,7 +51,8 @@ impl Default for Adam8bit {
 }
 
 impl Optimizer for Adam8bit {
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String> {
         let n = grad.len();
         let state = self.states.entry(param).or_insert_with(|| State {
             m: DynQuantBuf::zeros(n, true),
@@ -83,6 +84,7 @@ impl Optimizer for Adam8bit {
         }
         state.m.quantize_from(&self.scratch_m);
         state.v.quantize_from(&self.scratch_v);
+        Ok(())
     }
 
     fn state_bytes(&self) -> usize {
@@ -162,8 +164,8 @@ mod tests {
         let mut of = Adam::new(AdamConfig::default());
         for s in 0..20 {
             let g = Matrix::randn(16, 32, 1.0, &mut rng.child(s));
-            o8.step(0, &mut w8, &g, 0.01);
-            of.step(0, &mut wf, &g, 0.01);
+            o8.step(0, &mut w8, &g, 0.01).unwrap();
+            of.step(0, &mut wf, &g, 0.01).unwrap();
         }
         let mut d = w8.clone();
         d.sub_assign(&wf);
@@ -176,7 +178,7 @@ mod tests {
         let mut opt = Adam8bit::new();
         let mut w = Matrix::zeros(64, 64);
         let g = Matrix::ones(64, 64);
-        opt.step(0, &mut w, &g, 0.01);
+        opt.step(0, &mut w, &g, 0.01).unwrap();
         let f32_state = 2 * 64 * 64 * 4;
         assert!(opt.state_bytes() < f32_state / 3, "{}", opt.state_bytes());
     }
@@ -191,7 +193,7 @@ mod tests {
         for s in 0..100 {
             let mut g = Matrix::randn(8, 64, 0.01, &mut rng.child(s));
             g.data[0] = 10.0; // persistent outlier
-            opt.step(0, &mut w, &g, 0.001);
+            opt.step(0, &mut w, &g, 0.001).unwrap();
         }
         assert!(w.all_finite());
         assert!(w.max_abs() < 1.0, "blowup: {}", w.max_abs());

@@ -1,0 +1,463 @@
+//! Pluggable **step backends** for `GaLore<O>`: one optimizer object, two
+//! execution substrates for the projected update.
+//!
+//! The GaLore step factors into (a) *subspace management* — refresh
+//! cadence, randomized SVD, rank schedules, the lazy-refresh gate — and
+//! (b) the *compact update* — run Adam-style moments on `R = Pᵀ G` and
+//! apply `W ← W − lr·α·P N` (Algorithm 2). `GaLore<O>` owns (a) on both
+//! substrates; a [`StepBackend`] executes (b):
+//!
+//! * [`RustBackend`] — the pure-Rust compact-update tail: project into a
+//!   workspace, run the inner optimizer in the compact space, project back.
+//!   Works with every inner optimizer and stays allocation-free once warm.
+//! * [`ArtifactBackend`] — the `galore_step_{m}x{n}_r{r}` AOT artifacts
+//!   (the Pallas kernels of `python/compile/kernels/galore.py`), owning
+//!   its own PJRT [`Engine`] plus per-layer transpose staging. The
+//!   artifacts implement exactly the paper-default Adam arithmetic, so the
+//!   backend *borrows the inner optimizer's own moments* through
+//!   [`Optimizer::moments_mut`] instead of keeping a parallel state store.
+//!
+//! Shared moments are the load-bearing design decision: both backends read
+//! and write the same `M`/`V`/`t`, so checkpointing, rank-adaptation
+//! remaps, and the compact (`dp_compress`) data-parallel entry point all
+//! go through the one `Optimizer` surface with zero backend-specific
+//! state. The checkpoint *blob* is therefore backend-agnostic — there is
+//! no fused-specific section — but resume is pinned to the saving
+//! backend through the config fingerprint, because the two substrates
+//! round their f32 matmuls differently and a cross-backend resume would
+//! silently drift off the uninterrupted trajectory.
+//!
+//! Contract for implementors:
+//! * `step_into` consumes the **full** gradient of a projected parameter
+//!   whose projector is already current (refresh happened, basis cached).
+//! * `step_compact_into` consumes an **already-projected** (and, under
+//!   data parallelism, already-averaged) compact gradient. It must be
+//!   arithmetically interchangeable with `step_into` fed the matching full
+//!   gradient — the property `dp_compress` rests on.
+//! * Neither entry may panic on runtime faults (missing artifact, engine
+//!   failure): errors travel up through `Optimizer::step`'s `Result`
+//!   (PR 4's "no `.expect` mid-run" policy).
+//! * Steady-state calls perform no Rust-side heap allocations once warm
+//!   (staging buffers are reused; the PJRT literal marshalling inside
+//!   `Engine::execute` is the artifact backend's only remaining allocator
+//!   traffic, as before — EXPERIMENTS.md §Perf).
+
+use super::galore::Projector;
+use super::Optimizer;
+use crate::runtime::{Engine, Input};
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+/// Mutable borrow of one parameter's Adam-style moment state, exposed by
+/// optimizers that opt into [`Optimizer::moments_mut`]. `m`/`v` are the
+/// (compact-shaped, for GaLore inners) EMAs; `t` is the 1-based update
+/// count that drives bias correction.
+pub struct MomentsMut<'a> {
+    pub m: &'a mut Matrix,
+    pub v: &'a mut Matrix,
+    pub t: &'a mut u64,
+}
+
+/// Per-parameter scratch for one backend step, owned by `GaLore<O>`'s
+/// workspace (working memory, excluded from `state_bytes`): the projected
+/// gradient, the inner optimizer's zero-initialized compact weight, and
+/// the projected-back full update.
+pub struct StepScratch {
+    pub compact_grad: Matrix,
+    pub scratch: Matrix,
+    pub full_update: Matrix,
+}
+
+impl StepScratch {
+    pub fn new() -> StepScratch {
+        StepScratch {
+            compact_grad: Matrix::zeros(0, 0),
+            scratch: Matrix::zeros(0, 0),
+            full_update: Matrix::zeros(0, 0),
+        }
+    }
+}
+
+impl Default for StepScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything a backend needs to apply one projected parameter's update:
+/// the weight, the current projector (basis by borrow), the pre-scaled
+/// learning rate `lr·α`, the inner optimizer (moment owner), and the
+/// parameter's reusable scratch.
+pub struct StepCtx<'a> {
+    pub param: usize,
+    pub w: &'a mut Matrix,
+    pub proj: &'a Projector,
+    /// `lr * scale` — the factor on the projected-back update.
+    pub lr_scale: f32,
+    pub inner: &'a mut (dyn Optimizer + 'a),
+    pub scratch: &'a mut StepScratch,
+}
+
+/// An execution substrate for the projected GaLore update (see the module
+/// docs for the contract).
+pub trait StepBackend: Send {
+    /// Human-readable backend name (metrics, error messages).
+    fn name(&self) -> &'static str;
+
+    /// Apply one update from the full gradient of a projected parameter.
+    fn step_into(&mut self, ctx: StepCtx<'_>, grad: &Matrix) -> Result<(), String>;
+
+    /// Apply one update from an already-projected compact gradient (the
+    /// lazy-refresh-gate and `dp_compress` entry point).
+    fn step_compact_into(&mut self, ctx: StepCtx<'_>, compact: &Matrix) -> Result<(), String>;
+
+    /// Bytes of backend-owned *state* (not staging). Both built-in
+    /// backends keep all state in the inner optimizer and report 0.
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// The compact-update tail shared by both backends — one implementation,
+/// so every entry point stays bit-identical *by construction* (the
+/// property the compact data-parallel all-reduce rests on): run the inner
+/// optimizer in the compact space against a zero scratch weight with
+/// lr=1 — the scratch then holds `-N_t` regardless of which optimizer it
+/// is — project back, and apply with `W ← W − lr·α·P N_t` (Algorithm 2).
+pub(crate) fn compact_tail(
+    inner: &mut (dyn Optimizer + '_),
+    param: usize,
+    proj: &Projector,
+    compact: &Matrix,
+    w: &mut Matrix,
+    lr_scale: f32,
+    scr: &mut StepScratch,
+) -> Result<(), String> {
+    scr.scratch.resize(compact.rows, compact.cols);
+    scr.scratch.data.fill(0.0);
+    inner.step(param, &mut scr.scratch, compact, 1.0)?;
+    proj.project_back_into(&scr.scratch, &mut scr.full_update);
+    w.axpy(lr_scale, &scr.full_update);
+    Ok(())
+}
+
+/// The full Rust-substrate step: project the gradient into the compact
+/// space and run the shared tail. One implementation for both
+/// [`RustBackend::step_into`] and the artifact backend's rank-schedule
+/// fallback, so the detach-swap and the allocation-free invariant cannot
+/// drift between the two.
+fn project_compact_tail(ctx: StepCtx<'_>, grad: &Matrix) -> Result<(), String> {
+    ctx.proj.project_into(grad, &mut ctx.scratch.compact_grad);
+    // Detach the compact gradient (empty-matrix swap, no allocation) so
+    // the shared tail can borrow the scratch mutably.
+    let compact = std::mem::replace(&mut ctx.scratch.compact_grad, Matrix::zeros(0, 0));
+    let res = compact_tail(
+        ctx.inner,
+        ctx.param,
+        ctx.proj,
+        &compact,
+        ctx.w,
+        ctx.lr_scale,
+        ctx.scratch,
+    );
+    ctx.scratch.compact_grad = compact;
+    res
+}
+
+/// The pure-Rust backend: the default, works with any inner optimizer,
+/// zero allocations per steady-state step.
+pub struct RustBackend;
+
+impl StepBackend for RustBackend {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn step_into(&mut self, ctx: StepCtx<'_>, grad: &Matrix) -> Result<(), String> {
+        project_compact_tail(ctx, grad)
+    }
+
+    fn step_compact_into(&mut self, ctx: StepCtx<'_>, compact: &Matrix) -> Result<(), String> {
+        compact_tail(ctx.inner, ctx.param, ctx.proj, compact, ctx.w, ctx.lr_scale, ctx.scratch)
+    }
+}
+
+/// Per-layer transpose staging for tall parameters (the artifacts are
+/// lowered short-side-first, §4.2). Working memory, reused across steps.
+struct Staging {
+    g_t: Matrix,
+    w_t: Matrix,
+    m_t: Matrix,
+    v_t: Matrix,
+}
+
+impl Staging {
+    fn new() -> Staging {
+        Staging {
+            g_t: Matrix::zeros(0, 0),
+            w_t: Matrix::zeros(0, 0),
+            m_t: Matrix::zeros(0, 0),
+            v_t: Matrix::zeros(0, 0),
+        }
+    }
+}
+
+/// The AOT-artifact backend: executes the fused `galore_step_{m}x{n}_r{r}`
+/// kernels through its own PJRT engine, feeding them the projector basis
+/// computed by `GaLore<O>`'s (host-side) refresh machinery and the inner
+/// Adam's own moments. See the module docs for why the moments are
+/// borrowed rather than owned.
+///
+/// Rank schedules compose by *fallback*: a refresh that moves a layer's
+/// rank off the lowered artifact set routes that layer through the shared
+/// Rust compact tail — same moments, same trajectory class — and counts
+/// the event in `fallback_steps`.
+pub struct ArtifactBackend {
+    engine: Engine,
+    staging: HashMap<usize, Staging>,
+    /// Artifact name per (short, long, rank), resolved from the manifest
+    /// once and cached — `None` caches a known-missing combination (rank
+    /// schedules drifting off the lowered set). Keeps the steady-state
+    /// step free of Rust-side allocations and immune to drift between a
+    /// formatted name and the manifest's actual entry.
+    names: HashMap<(usize, usize, usize), Option<String>>,
+    /// Steps executed through an artifact.
+    pub artifact_steps: u64,
+    /// Steps routed through the Rust tail because the (shape, rank) pair
+    /// had no lowered artifact (adaptive schedules drifting off the
+    /// artifact set).
+    pub fallback_steps: u64,
+}
+
+impl ArtifactBackend {
+    /// Validate that every projected `(rows, cols)` target shape has a
+    /// `galore_step` artifact at `rank` (clamped to the short side) and
+    /// pre-compile them, failing fast at construction instead of mid-run.
+    pub fn new(
+        mut engine: Engine,
+        rank: usize,
+        shapes: &[(usize, usize)],
+    ) -> Result<ArtifactBackend, String> {
+        for &(rows, cols) in shapes {
+            let (gm, gn) = short_side_first(rows, cols);
+            let r = rank.min(gm);
+            let Some(art) = engine.manifest.galore_step_for(gm, gn, r) else {
+                return Err(format!(
+                    "no galore_step artifact for shape {gm}x{gn} rank {r} — \
+                     re-run `make artifacts` with matching ranks"
+                ));
+            };
+            let name = art.name.clone();
+            engine.prepare(&name).map_err(|e| format!("compiling {name}: {e}"))?;
+        }
+        Ok(ArtifactBackend {
+            engine,
+            staging: HashMap::new(),
+            names: HashMap::new(),
+            artifact_steps: 0,
+            fallback_steps: 0,
+        })
+    }
+}
+
+impl StepBackend for ArtifactBackend {
+    fn name(&self) -> &'static str {
+        "artifact"
+    }
+
+    fn step_into(&mut self, ctx: StepCtx<'_>, grad: &Matrix) -> Result<(), String> {
+        let (rows, cols) = grad.shape();
+        let (cm, cn) = ctx.proj.compact_shape(rows, cols);
+        let r = ctx.proj.rank;
+        let (gm, gn) = short_side_first(rows, cols);
+        // Resolve the artifact for this (shape, rank) from the manifest
+        // once and cache the outcome (including "missing" for rank-
+        // schedule fallbacks): the steady-state step allocates nothing.
+        let key = (gm, gn, r);
+        if !self.names.contains_key(&key) {
+            let resolved =
+                self.engine.manifest.galore_step_for(gm, gn, r).map(|a| a.name.clone());
+            self.names.insert(key, resolved);
+        }
+        let artifact = self.names[&key].as_deref();
+        let Some(artifact) = artifact else {
+            // A rank schedule moved this layer off the lowered shapes:
+            // take the Rust substrate on the same moments.
+            self.fallback_steps += 1;
+            return project_compact_tail(ctx, grad);
+        };
+        let inner_name = ctx.inner.name();
+        let Some(mom) = ctx.inner.moments_mut(ctx.param, cm, cn) else {
+            return Err(format!(
+                "the artifact backend drives the fused GaLore-Adam kernels and needs \
+                 paper-default Adam moments for parameter {}, but inner optimizer \
+                 '{inner_name}' does not expose them — run this method on the rust \
+                 backend",
+                ctx.param
+            ));
+        };
+        if mom.m.shape() != (cm, cn) || mom.v.shape() != (cm, cn) {
+            return Err(format!(
+                "parameter {}: moment shape {:?} does not match the compact shape \
+                 ({cm}, {cn}) of the current projector",
+                ctx.param,
+                mom.m.shape()
+            ));
+        }
+        // The artifact consumes the *post-increment* step count (Adam's
+        // 1-based bias correction); the counter is committed only after a
+        // successful execute so a failed step leaves the state untouched.
+        let t_new = *mom.t + 1;
+        let t_in = [t_new as f32];
+        let la_in = [ctx.lr_scale];
+        let basis = ctx.proj.basis();
+        if rows <= cols {
+            // Left projection: every buffer is already short-side-first.
+            let outputs = self
+                .engine
+                .execute(
+                    &artifact,
+                    &[
+                        Input::F32(&ctx.w.data),
+                        Input::F32(&mom.m.data),
+                        Input::F32(&mom.v.data),
+                        Input::F32(&grad.data),
+                        Input::F32(&basis.data),
+                        Input::F32(&t_in),
+                        Input::F32(&la_in),
+                    ],
+                )
+                .map_err(|e| {
+                    format!("artifact {artifact} failed on parameter {}: {e}", ctx.param)
+                })?;
+            ctx.w.data.copy_from_slice(&outputs[0].data);
+            mom.m.data.copy_from_slice(&outputs[1].data);
+            mom.v.data.copy_from_slice(&outputs[2].data);
+        } else {
+            // Tall parameter: the Rust projector is Right-sided (R = G Q,
+            // compact (rows, r)) while the artifact is lowered for the
+            // transposed problem (Gᵀ with the same basis Q, compact
+            // (r, rows)). Element-wise Adam commutes with transposition, so
+            // staging W/G/M/V through transposes and transposing back is
+            // exactly the Right-side update.
+            let st = self.staging.entry(ctx.param).or_insert_with(Staging::new);
+            grad.transpose_into(&mut st.g_t);
+            ctx.w.transpose_into(&mut st.w_t);
+            mom.m.transpose_into(&mut st.m_t);
+            mom.v.transpose_into(&mut st.v_t);
+            let outputs = self
+                .engine
+                .execute(
+                    &artifact,
+                    &[
+                        Input::F32(&st.w_t.data),
+                        Input::F32(&st.m_t.data),
+                        Input::F32(&st.v_t.data),
+                        Input::F32(&st.g_t.data),
+                        Input::F32(&basis.data),
+                        Input::F32(&t_in),
+                        Input::F32(&la_in),
+                    ],
+                )
+                .map_err(|e| {
+                    format!("artifact {artifact} failed on parameter {}: {e}", ctx.param)
+                })?;
+            st.w_t.data.copy_from_slice(&outputs[0].data);
+            st.w_t.transpose_into(ctx.w);
+            st.m_t.data.copy_from_slice(&outputs[1].data);
+            st.m_t.transpose_into(mom.m);
+            st.v_t.data.copy_from_slice(&outputs[2].data);
+            st.v_t.transpose_into(mom.v);
+        }
+        *mom.t = t_new;
+        self.artifact_steps += 1;
+        Ok(())
+    }
+
+    /// Compact gradients arrive pre-projected (gate skips, `dp_compress`
+    /// exchanges), and the artifacts take the *full* gradient — so the
+    /// compact entry runs the shared Rust tail against the very same
+    /// moments the artifact path updates. Mixing the two within a run is
+    /// sound because the substrates implement identical arithmetic up to
+    /// f32 matmul rounding (pinned by the backend-equivalence tests).
+    fn step_compact_into(&mut self, ctx: StepCtx<'_>, compact: &Matrix) -> Result<(), String> {
+        compact_tail(ctx.inner, ctx.param, ctx.proj, compact, ctx.w, ctx.lr_scale, ctx.scratch)
+    }
+}
+
+/// Short-side-first reordering of a gradient shape (§4.2: the artifacts
+/// are lowered only for `m ≤ n`; tall layers transpose on entry/exit).
+pub fn short_side_first(rows: usize, cols: usize) -> (usize, usize) {
+    if rows <= cols {
+        (rows, cols)
+    } else {
+        (cols, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Adam, AdamConfig, GaLore, GaLoreConfig};
+    use crate::rng::Rng;
+
+    #[test]
+    fn short_side_first_orders_dims() {
+        assert_eq!(short_side_first(3, 7), (3, 7));
+        assert_eq!(short_side_first(7, 3), (3, 7));
+        assert_eq!(short_side_first(5, 5), (5, 5));
+    }
+
+    #[test]
+    fn explicit_rust_backend_is_bit_exact_with_default() {
+        // `with_backend(RustBackend)` must be a no-op relative to the
+        // default construction: same buffers, same arithmetic.
+        let cfg = GaLoreConfig { rank: 4, update_freq: 3, scale: 0.25, ..Default::default() };
+        let mut a = GaLore::new(cfg, Adam::new(AdamConfig::default()));
+        let mut b = GaLore::new(cfg, Adam::new(AdamConfig::default()))
+            .with_backend(Box::new(RustBackend));
+        let mut rng = Rng::new(91);
+        let mut wa = Matrix::randn(12, 20, 1.0, &mut rng);
+        let mut wb = wa.clone();
+        for s in 0..8 {
+            let g = Matrix::randn(12, 20, 1.0, &mut rng.child(s));
+            a.step(0, &mut wa, &g, 0.01).unwrap();
+            b.step(0, &mut wb, &g, 0.01).unwrap();
+        }
+        assert_eq!(wa.data, wb.data);
+        assert_eq!(a.state_bytes(), b.state_bytes());
+    }
+
+    #[test]
+    fn adam_exposes_moments_and_they_are_the_step_state() {
+        // moments_mut must hand out the same M/V that step updates, so a
+        // backend writing through it cannot fork the state.
+        let mut adam = Adam::new(AdamConfig::default());
+        let mut w = Matrix::zeros(4, 6);
+        let g = Matrix::ones(4, 6);
+        adam.step(0, &mut w, &g, 0.1).unwrap();
+        let mom = adam.moments_mut(0, 4, 6).expect("paper-default Adam exposes moments");
+        assert_eq!(*mom.t, 1);
+        assert_eq!(mom.m.shape(), (4, 6));
+        // First step from zero state: m = (1-b1) * g = 0.1.
+        assert!((mom.m.data[0] - 0.1).abs() < 1e-6);
+        // Writing through the borrow is writing the optimizer's state.
+        *mom.t = 7;
+        let mom2 = adam.moments_mut(0, 4, 6).unwrap();
+        assert_eq!(*mom2.t, 7);
+    }
+
+    #[test]
+    fn non_default_adam_refuses_moment_borrow() {
+        // The artifacts are lowered with the paper's beta/eps and no
+        // decoupled decay; any other configuration must opt out.
+        let mut adamw = Adam::adamw(0.1);
+        let mut w = Matrix::zeros(4, 4);
+        let g = Matrix::ones(4, 4);
+        adamw.step(0, &mut w, &g, 0.1).unwrap();
+        assert!(adamw.moments_mut(0, 4, 4).is_none());
+        let mut odd = Adam::new(AdamConfig { beta1: 0.8, ..AdamConfig::default() });
+        odd.step(0, &mut w, &g, 0.1).unwrap();
+        assert!(odd.moments_mut(0, 4, 4).is_none());
+    }
+}

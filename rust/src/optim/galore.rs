@@ -14,16 +14,28 @@
 //! is projected back and applied with scale α. Untargeted parameters
 //! (embeddings, norms, lm_head — matching §5.1) pass through at full rank.
 //!
+//! **Step backends** (`optim::backend`): `GaLore<O>` owns every subspace
+//! decision — refresh cadence, randomized SVD, rank schedules, the
+//! lazy-refresh gate — and delegates the compact update itself to a
+//! pluggable [`StepBackend`]: the pure-Rust tail by default
+//! ([`RustBackend`]), or the fused Pallas/HLO AOT kernels
+//! ([`backend::ArtifactBackend`](super::backend::ArtifactBackend)) via
+//! [`GaLore::with_backend`]. Both substrates update the *same* inner
+//! moments, so the one `step`/`step_compact`/`save_state`/`remap_state`/
+//! `grad_reduce_mode` surface composes identically on either — there is
+//! no separate "fused optimizer" type.
+//!
 //! Hot-path contract (EXPERIMENTS.md §Perf): the steady-state `step` on a
 //! targeted parameter performs **zero heap allocations**. Every per-step
 //! matrix (`Pᵀ G`, the inner-optimizer scratch, `P N`) lives in a
-//! per-parameter [`Workspace`]; the basis is exposed by borrow (the Quant8
+//! per-parameter `Workspace`; the basis is exposed by borrow (the Quant8
 //! store keeps a dequantized cache that is invalidated only on subspace
 //! refresh); and the periodic refresh itself runs through a shared
 //! [`SvdWorkspace`] so even the every-`T`-steps path stops allocating once
 //! warm.
 
 use super::adaptive::{basis_transition_into, RankState, StateRemap};
+use super::backend::{RustBackend, StepBackend, StepCtx, StepScratch};
 use super::rank::{subspace_cosine, RankSchedule, RankScheduleKind, RefreshGate};
 use super::{GradReduceMode, Optimizer};
 use crate::linalg::{
@@ -526,15 +538,14 @@ impl GaLoreConfig {
     }
 }
 
-/// Per-parameter reusable buffers for the projected step: `Pᵀ G`, the
-/// inner-optimizer scratch weight, the projected-back update, (for tall
-/// parameters) the Gᵀ staging used by the refresh, and the rank-adaptation
-/// buffers (outgoing-basis copy, basis-transition matrices, moment-remap
-/// scratch). Working memory, not optimizer state.
+/// Per-parameter reusable buffers for the projected step: the backend's
+/// [`StepScratch`] (`Pᵀ G`, the inner-optimizer scratch weight, the
+/// projected-back update), (for tall parameters) the Gᵀ staging used by
+/// the refresh, and the rank-adaptation buffers (outgoing-basis copy,
+/// basis-transition matrices, moment-remap scratch). Working memory, not
+/// optimizer state.
 struct Workspace {
-    compact_grad: Matrix,
-    scratch: Matrix,
-    full_update: Matrix,
+    step: StepScratch,
     grad_t: Matrix,
     prev_basis: Matrix,
     trans: Matrix,
@@ -547,9 +558,7 @@ struct Workspace {
 impl Workspace {
     fn new() -> Self {
         Workspace {
-            compact_grad: Matrix::zeros(0, 0),
-            scratch: Matrix::zeros(0, 0),
-            full_update: Matrix::zeros(0, 0),
+            step: StepScratch::new(),
             grad_t: Matrix::zeros(0, 0),
             prev_basis: Matrix::zeros(0, 0),
             trans: Matrix::zeros(0, 0),
@@ -571,30 +580,6 @@ impl Workspace {
         self.remap_scratch.resize(max_rank, long);
         self.adaptive_warm = true;
     }
-
-    /// The compact-update tail shared by `GaLore::step` and
-    /// `GaLore::step_compact` — one implementation, so the two entry
-    /// points stay bit-identical *by construction* (the property the
-    /// compact data-parallel all-reduce rests on): run the inner
-    /// optimizer in the compact space against a zero scratch weight with
-    /// lr=1 — the scratch then holds -N_t regardless of which optimizer
-    /// it is — project back, and apply with `W <- W - lr·α·P N_t`
-    /// (Algorithm 2). `lr_scale` is `lr * α`.
-    fn apply_compact_update<O: Optimizer>(
-        &mut self,
-        inner: &mut O,
-        param: usize,
-        proj: &Projector,
-        compact: &Matrix,
-        w: &mut Matrix,
-        lr_scale: f32,
-    ) {
-        self.scratch.resize(compact.rows, compact.cols);
-        self.scratch.data.fill(0.0);
-        inner.step(param, &mut self.scratch, compact, 1.0);
-        proj.project_back_into(&self.scratch, &mut self.full_update);
-        w.axpy(lr_scale, &self.full_update);
-    }
 }
 
 /// GaLore wrapper around an arbitrary inner optimizer.
@@ -612,6 +597,11 @@ pub struct GaLore<O: Optimizer> {
     rank_states: HashMap<usize, RankState>,
     svd_ws: SvdWorkspace,
     rng: Rng,
+    /// Execution substrate for the compact update (`optim::backend`):
+    /// pure Rust by default, the AOT artifacts via [`GaLore::with_backend`].
+    /// Backends are stateless by contract (they write through the inner
+    /// optimizer's moments), so this field never appears in `save_state`.
+    backend: Box<dyn StepBackend>,
 }
 
 /// Default projector-RNG seed tag; mixed with the run seed in
@@ -643,7 +633,24 @@ impl<O: Optimizer> GaLore<O> {
             rank_states: HashMap::new(),
             svd_ws: SvdWorkspace::new(),
             rng: Rng::new(PROJECTOR_SEED_TAG),
+            backend: Box::new(RustBackend),
         }
+    }
+
+    /// Select the execution substrate for the compact update (the
+    /// [`StepBackend`] contract): `RustBackend` (the default) or
+    /// `ArtifactBackend` for the fused AOT kernels. Everything else —
+    /// targets, schedules, gating, checkpoints, the DP plan — is backend-
+    /// independent, so this is the *only* line that differs between a
+    /// "fused" and an unfused run.
+    pub fn with_backend(mut self, backend: Box<dyn StepBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// The active backend's name ("rust" / "artifact").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Restrict projection to these parameter ids (attention + FFN weights,
@@ -685,17 +692,17 @@ impl<O: Optimizer> GaLore<O> {
 }
 
 impl<O: Optimizer> Optimizer for GaLore<O> {
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String> {
         if !self.is_target(param, grad) {
             // Full-rank pass-through (embeddings, norms, scalars).
-            self.inner.step(param, w, grad, lr);
-            return;
+            return self.inner.step(param, w, grad, lr);
         }
         let t = self.steps.entry(param).or_insert(0);
         let needs_refresh = *t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&param);
         *t += 1;
         let ws = self.workspaces.entry(param).or_insert_with(Workspace::new);
-        // True when `ws.compact_grad` already holds Pᵀ G for the basis the
+        // True when the step scratch already holds Pᵀ G for the basis the
         // step will use (the gate computed it and kept the basis).
         let mut compact_ready = false;
         // Refresh the subspace every T steps (including step 0).
@@ -712,9 +719,9 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                     // SVD and keep projecting through the cached basis.
                     let mut skip = false;
                     if gate.enabled() {
-                        p.project_into(grad, &mut ws.compact_grad);
+                        p.project_into(grad, &mut ws.step.compact_grad);
                         let cos = subspace_cosine(
-                            ws.compact_grad.frobenius_norm(),
+                            ws.step.compact_grad.frobenius_norm(),
                             grad.frobenius_norm(),
                         );
                         rs.last_cosine = cos;
@@ -813,18 +820,65 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
             // the compact shape — changed.
         }
         let proj = self.projectors.get(&param).expect("projector exists after refresh");
-        if !compact_ready {
-            proj.project_into(grad, &mut ws.compact_grad);
+        let lr_scale = lr * self.cfg.scale;
+        let res = if compact_ready {
+            // The gate's cosine projection IS this step's compact gradient:
+            // detach it (empty-matrix swap, no allocation) and feed the
+            // backend's compact entry.
+            let compact = std::mem::replace(&mut ws.step.compact_grad, Matrix::zeros(0, 0));
+            let res = self.backend.step_compact_into(
+                StepCtx {
+                    param,
+                    w,
+                    proj,
+                    lr_scale,
+                    inner: &mut self.inner,
+                    scratch: &mut ws.step,
+                },
+                &compact,
+            );
+            ws.step.compact_grad = compact;
+            res
+        } else {
+            // Full-gradient entry: the Rust backend projects into the
+            // scratch; the artifact backend ships G to the fused kernel.
+            self.backend.step_into(
+                StepCtx {
+                    param,
+                    w,
+                    proj,
+                    lr_scale,
+                    inner: &mut self.inner,
+                    scratch: &mut ws.step,
+                },
+                grad,
+            )
+        };
+        if res.is_err() {
+            // Roll the step counter back: the refresh cadence and the DP
+            // communication plan are both functions of `t % T`, so a step
+            // whose update never applied must not advance them — a
+            // checkpoint taken after a failed step (the reason `step` is
+            // fallible at all) stays consistent with the applied state.
+            // Deliberately NOT rolled back: a refresh that already ran at
+            // this boundary (basis, rank decision, moment remap, RNG
+            // draw). It is a valid subspace decision on its own, and
+            // unwinding it would mean snapshotting basis + rank state +
+            // moments every boundary step just for the error path. The
+            // sole caller-visible effect is that retrying the failed step
+            // re-runs the refresh with a fresh sketch — current callers
+            // abort-and-resume from a checkpoint instead of retrying.
+            if let Some(t) = self.steps.get_mut(&param) {
+                *t -= 1;
+            }
         }
-        // Detach the compact gradient (empty-matrix swap, no allocation)
-        // so the shared tail can borrow the workspace mutably.
-        let compact = std::mem::replace(&mut ws.compact_grad, Matrix::zeros(0, 0));
-        ws.apply_compact_update(&mut self.inner, param, proj, &compact, w, lr * self.cfg.scale);
-        ws.compact_grad = compact;
+        res
     }
 
     fn state_bytes(&self) -> usize {
-        self.inner.state_bytes() + self.projectors.values().map(|p| p.nbytes()).sum::<usize>()
+        self.inner.state_bytes()
+            + self.projectors.values().map(|p| p.nbytes()).sum::<usize>()
+            + self.backend.state_bytes()
     }
 
     fn name(&self) -> &'static str {
@@ -882,26 +936,56 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
         true
     }
 
-    /// The non-refresh tail of [`GaLore::step`], fed an already-projected
-    /// compact gradient: identical arithmetic (same scratch, same inner
+    /// The non-refresh tail of `GaLore::step`, fed an already-projected
+    /// compact gradient through the active backend's compact entry:
+    /// identical arithmetic on the Rust backend (same scratch, same inner
     /// step, same project-back), so a data-parallel step that averaged
     /// compact gradients is bit-identical to one that averaged full
     /// gradients and projected — up to the all-reduce's own summation
-    /// order.
-    fn step_compact(&mut self, param: usize, w: &mut Matrix, compact: &Matrix, lr: f32) {
-        let t = self
-            .steps
-            .get_mut(&param)
-            .expect("step_compact before the parameter's first full step");
-        assert!(
-            *t % self.cfg.update_freq != 0,
-            "step_compact at a refresh boundary — the caller must reduce the full \
-             gradient there (grad_reduce_mode returns Full at boundaries)"
-        );
+    /// order. (The artifact backend's compact entry runs the same shared
+    /// tail against the same moments; see `optim::backend`.)
+    fn step_compact(
+        &mut self,
+        param: usize,
+        w: &mut Matrix,
+        compact: &Matrix,
+        lr: f32,
+    ) -> Result<(), String> {
+        let Some(t) = self.steps.get_mut(&param) else {
+            return Err(format!(
+                "step_compact on parameter {param} before its first full step — the \
+                 projector does not exist yet (grad_reduce_mode returns Full there)"
+            ));
+        };
+        if *t % self.cfg.update_freq == 0 {
+            return Err(
+                "step_compact at a refresh boundary — the caller must reduce the full \
+                 gradient there (grad_reduce_mode returns Full at boundaries)"
+                    .into(),
+            );
+        }
         *t += 1;
         let ws = self.workspaces.entry(param).or_insert_with(Workspace::new);
         let proj = self.projectors.get(&param).expect("projector exists between refreshes");
-        ws.apply_compact_update(&mut self.inner, param, proj, compact, w, lr * self.cfg.scale);
+        let res = self.backend.step_compact_into(
+            StepCtx {
+                param,
+                w,
+                proj,
+                lr_scale: lr * self.cfg.scale,
+                inner: &mut self.inner,
+                scratch: &mut ws.step,
+            },
+            compact,
+        );
+        if res.is_err() {
+            // Same counter rollback as `step`: a failed compact step must
+            // not shift the refresh cadence or the DP plan.
+            if let Some(t) = self.steps.get_mut(&param) {
+                *t -= 1;
+            }
+        }
+        res
     }
 
     /// Checkpoint v2: projector RNG, the inner optimizer's state (nested,
@@ -1048,8 +1132,8 @@ mod tests {
         let mut wp = wg.clone();
         for s in 0..25 {
             let g = Matrix::randn(8, 24, 1.0, &mut rng.child(s));
-            gal.step(0, &mut wg, &g, 0.01);
-            plain.step(0, &mut wp, &g, 0.01);
+            gal.step(0, &mut wg, &g, 0.01).unwrap();
+            plain.step(0, &mut wp, &g, 0.01).unwrap();
         }
         // P is an orthonormal 8x8 basis: updates agree up to rotation of
         // the Adam nonlinearity — for exact agreement the *element-wise*
@@ -1074,7 +1158,7 @@ mod tests {
         let w0 = w.clone();
         for s in 0..10 {
             let g = Matrix::randn(32, 48, 1.0, &mut rng.child(s));
-            gal.step(0, &mut w, &g, 0.01);
+            gal.step(0, &mut w, &g, 0.01).unwrap();
         }
         let p = gal.projector(0).unwrap().basis().clone();
         let mut dw = w.clone();
@@ -1094,16 +1178,16 @@ mod tests {
         let mut gal = GaLore::new(cfg, adam());
         let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
         let g0 = Matrix::randn(16, 24, 1.0, &mut rng);
-        gal.step(0, &mut w, &g0, 0.01);
+        gal.step(0, &mut w, &g0, 0.01).unwrap();
         let basis0 = gal.projector(0).unwrap().basis().clone();
         for s in 1..5 {
             let g = Matrix::randn(16, 24, 1.0, &mut rng.child(s));
-            gal.step(0, &mut w, &g, 0.01);
+            gal.step(0, &mut w, &g, 0.01).unwrap();
             // Unchanged within the window.
             assert_slice_close(&gal.projector(0).unwrap().basis().data, &basis0.data, 0.0, 0.0);
         }
         let g5 = Matrix::randn(16, 24, 1.0, &mut rng.child(99));
-        gal.step(0, &mut w, &g5, 0.01);
+        gal.step(0, &mut w, &g5, 0.01).unwrap();
         let basis1 = gal.projector(0).unwrap().basis().clone();
         let mut diff = basis1;
         diff.sub_assign(&basis0);
@@ -1118,7 +1202,7 @@ mod tests {
         let mut gal = GaLore::new(cfg, adam());
         let mut w = Matrix::zeros(m, n);
         let g = Matrix::ones(m, n);
-        gal.step(0, &mut w, &g, 0.01);
+        gal.step(0, &mut w, &g, 0.01).unwrap();
         let expect = 4 * (m * r + 2 * r * n); // P + (M, V) compact
         assert_eq!(gal.state_bytes(), expect);
     }
@@ -1129,7 +1213,7 @@ mod tests {
         let mut gal = GaLore::new(cfg, adam()).with_targets([1usize]);
         let mut w = Matrix::zeros(16, 16);
         let g = Matrix::ones(16, 16);
-        gal.step(0, &mut w, &g, 0.01); // param 0: not targeted
+        gal.step(0, &mut w, &g, 0.01).unwrap(); // param 0: not targeted
         assert!(gal.projector(0).is_none());
         // Full-rank Adam state: 2 * 16 * 16 floats.
         assert_eq!(gal.state_bytes(), 4 * 2 * 16 * 16);
@@ -1148,8 +1232,8 @@ mod tests {
         let mut w2 = w1.clone();
         for s in 0..30 {
             let g = Matrix::randn(32, 64, 1.0, &mut rng.child(s));
-            g_f32.step(0, &mut w1, &g, 0.01);
-            g_q8.step(0, &mut w2, &g, 0.01);
+            g_f32.step(0, &mut w1, &g, 0.01).unwrap();
+            g_q8.step(0, &mut w2, &g, 0.01).unwrap();
         }
         assert!(g_q8.projector(0).unwrap().is_quantized());
         let p_f32 = g_f32.projector(0).unwrap().nbytes();
@@ -1176,12 +1260,12 @@ mod tests {
         let mut gal = GaLore::new(cfg, adam());
         let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
         let probe = Matrix::randn(16, 24, 1.0, &mut rng);
-        gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(0)), 0.01);
+        gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(0)), 0.01).unwrap();
         assert!(gal.projector(0).unwrap().is_quantized());
         let cache0 = gal.projector(0).unwrap().basis().clone();
         let proj0 = gal.projector(0).unwrap().project(&probe);
         for s in 1..3 {
-            gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(s)), 0.01);
+            gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(s)), 0.01).unwrap();
             assert_eq!(
                 gal.projector(0).unwrap().basis().data,
                 cache0.data,
@@ -1189,7 +1273,7 @@ mod tests {
             );
         }
         // Step 3 (t % 3 == 0) refreshes the subspace and rebuilds the cache.
-        gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(99)), 0.01);
+        gal.step(0, &mut w, &Matrix::randn(16, 24, 1.0, &mut rng.child(99)), 0.01).unwrap();
         let cache1 = gal.projector(0).unwrap().basis().clone();
         let proj1 = gal.projector(0).unwrap().project(&probe);
         let mut diff = cache1;
@@ -1209,7 +1293,7 @@ mod tests {
             let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
             for s in 0..12 {
                 let g = Matrix::randn(16, 24, 1.0, &mut rng.child(s));
-                gal.step(0, &mut w, &g, 0.01);
+                gal.step(0, &mut w, &g, 0.01).unwrap();
             }
             w
         };
@@ -1262,7 +1346,7 @@ mod tests {
                     g.scale(2.0 / x.rows as f32);
                     g
                 };
-                opt.step(0, &mut w, &g, 0.02);
+                opt.step(0, &mut w, &g, 0.02).unwrap();
             }
             (first, last)
         };
@@ -1285,8 +1369,8 @@ mod tests {
         let mut w2 = w1.clone();
         for s in 0..30 {
             let g = Matrix::randn(32, 64, 1.0, &mut rng.child(s));
-            g_f32.step(0, &mut w1, &g, 0.01);
-            g_d8.step(0, &mut w2, &g, 0.01);
+            g_f32.step(0, &mut w1, &g, 0.01).unwrap();
+            g_d8.step(0, &mut w2, &g, 0.01).unwrap();
         }
         let p = g_d8.projector(0).unwrap();
         assert!(p.is_quantized());
@@ -1315,7 +1399,7 @@ mod tests {
         let mut bytes = Vec::new();
         for s in 0..14 {
             let g = Matrix::randn(24, 40, 1.0, &mut rng.child(s));
-            gal.step(0, &mut w, &g, 0.01);
+            gal.step(0, &mut w, &g, 0.01).unwrap();
             ranks.push(gal.projector(0).unwrap().rank);
             bytes.push(gal.state_bytes());
         }
@@ -1349,7 +1433,7 @@ mod tests {
         for s in 0..12 {
             let v = Matrix::randn(3, 36, 1.0, &mut rng.child(s));
             let g = matmul(&u, &v); // exact rank 3
-            gal.step(0, &mut w, &g, 0.01);
+            gal.step(0, &mut w, &g, 0.01).unwrap();
         }
         let r = gal.projector(0).unwrap().rank;
         assert!((2..=5).contains(&r), "spectral rank {r} far from planted 3");
@@ -1375,10 +1459,10 @@ mod tests {
         let u = Matrix::randn(16, 2, 1.0, &mut rng);
         let v = Matrix::randn(2, 24, 1.0, &mut rng);
         let g = matmul(&u, &v);
-        gal.step(0, &mut w, &g, 0.01);
+        gal.step(0, &mut w, &g, 0.01).unwrap();
         let basis0 = gal.projector(0).unwrap().basis().clone();
         for _ in 1..9 {
-            gal.step(0, &mut w, &g, 0.01);
+            gal.step(0, &mut w, &g, 0.01).unwrap();
         }
         let rs = gal.rank_state(0).unwrap();
         assert_eq!(rs.refreshes, 1, "SVD ran despite a stable subspace");
@@ -1404,13 +1488,13 @@ mod tests {
             };
             assert_eq!(gal.grad_reduce_mode(0, 16, 24), want, "step {s}");
             let g = Matrix::randn(16, 24, 1.0, &mut rng.child(s as u64));
-            gal.step(0, &mut w, &g, 0.01);
+            gal.step(0, &mut w, &g, 0.01).unwrap();
         }
         // Untargeted params always reduce full.
         let mut gal2 = GaLore::new(cfg, adam()).with_targets([9usize]);
         let mut w2 = Matrix::zeros(16, 16);
         let g = Matrix::ones(16, 16);
-        gal2.step(0, &mut w2, &g, 0.01);
+        gal2.step(0, &mut w2, &g, 0.01).unwrap();
         assert_eq!(gal2.grad_reduce_mode(0, 16, 16), GradReduceMode::Full);
     }
 
@@ -1429,13 +1513,13 @@ mod tests {
         let mut compact = Matrix::zeros(0, 0);
         for s in 0..11 {
             let g = Matrix::randn(12, 20, 1.0, &mut rng.child(s));
-            mono.step(0, &mut w_mono, &g, 0.01);
+            mono.step(0, &mut w_mono, &g, 0.01).unwrap();
             match split.grad_reduce_mode(0, 12, 20) {
-                GradReduceMode::Full => split.step(0, &mut w_split, &g, 0.01),
+                GradReduceMode::Full => split.step(0, &mut w_split, &g, 0.01).unwrap(),
                 GradReduceMode::Compact { rows, cols } => {
                     assert!(split.project_grad_into(0, &g, &mut compact));
                     assert_eq!(compact.shape(), (rows, cols));
-                    split.step_compact(0, &mut w_split, &compact, 0.01);
+                    split.step_compact(0, &mut w_split, &compact, 0.01).unwrap();
                 }
             }
             assert_eq!(w_mono.data, w_split.data, "diverged at step {s}");
@@ -1445,16 +1529,21 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "refresh boundary")]
     fn step_compact_rejected_at_refresh_boundary() {
+        // No `.expect` mid-run: misuse of the compact entry surfaces as a
+        // recoverable error, not a panic (the DP worker loop propagates it).
         let cfg = GaLoreConfig { rank: 4, update_freq: 2, scale: 0.25, ..Default::default() };
         let mut gal = GaLore::new(cfg, adam());
         let mut rng = Rng::new(55);
         let mut w = Matrix::randn(8, 12, 1.0, &mut rng);
         let g = Matrix::randn(8, 12, 1.0, &mut rng);
-        gal.step(0, &mut w, &g, 0.01); // t=1
+        let mut fresh = GaLore::new(cfg, adam());
+        let err = fresh.step_compact(0, &mut w, &g, 0.01).unwrap_err();
+        assert!(err.contains("before its first full step"), "{err}");
+        gal.step(0, &mut w, &g, 0.01).unwrap(); // t=1
         let compact = gal.projector(0).unwrap().project(&g);
-        gal.step_compact(0, &mut w, &compact, 0.01); // t=2: fine
-        gal.step_compact(0, &mut w, &compact, 0.01); // t=2 % 2 == 0: boundary
+        gal.step_compact(0, &mut w, &compact, 0.01).unwrap(); // t=2: fine
+        let err = gal.step_compact(0, &mut w, &compact, 0.01).unwrap_err();
+        assert!(err.contains("refresh boundary"), "{err}"); // t=2 % 2 == 0
     }
 }

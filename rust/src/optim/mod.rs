@@ -9,14 +9,32 @@
 //! project-back).
 //!
 //! All optimizers implement [`Optimizer`]: a per-parameter, shape-aware
-//! `step` that applies the update in-place on the weight and reports its
-//! state memory via `state_bytes` (the number the memory benches check
-//! against `memory::formulas`).
+//! fallible `step` that applies the update in-place on the weight and
+//! reports its state memory via `state_bytes` (the number the memory
+//! benches check against `memory::formulas`). The trait also carries the
+//! opt-in surfaces the coordinator composes through one object:
+//!
+//! * the **compact data-parallel plan** — `grad_reduce_mode` /
+//!   `project_grad_into` / `step_compact` (§5.5, `dp_compress`),
+//! * **full-state checkpointing** — `save_state` / `load_state`
+//!   (checkpoint v2, `coordinator::checkpoint`),
+//! * **rank adaptation** — `remap_state` (basis-change moment transport),
+//! * the **moment borrow** — `moments_mut`, through which a
+//!   [`StepBackend`](backend::StepBackend) executes the update on another
+//!   substrate (the AOT artifacts) against the optimizer's own state.
+//!
+//! Execution substrate is a *backend choice*, not a different optimizer:
+//! `GaLore<O>` runs its compact update through a pluggable
+//! [`backend::StepBackend`] (pure Rust by default, the fused Pallas/HLO
+//! artifacts via [`backend::ArtifactBackend`]), so data parallelism, rank
+//! schedules, quantized projectors, and checkpointing compose with either
+//! substrate through this one trait.
 
 mod adafactor;
 mod adam;
 mod adam8bit;
 pub mod adaptive;
+pub mod backend;
 pub mod galore;
 pub mod rank;
 mod sgd;
@@ -25,6 +43,7 @@ pub use adafactor::Adafactor;
 pub use adam::{Adam, AdamConfig};
 pub use adam8bit::Adam8bit;
 pub use adaptive::{basis_transition_into, RankState, StateRemap};
+pub use backend::{ArtifactBackend, MomentsMut, RustBackend, StepBackend, StepCtx, StepScratch};
 pub use galore::{GaLore, GaLoreConfig, ProjSide, Projector, ProjectorQuant};
 pub use rank::{subspace_cosine, RankSchedule, RankScheduleKind, RefreshGate};
 pub use sgd::Sgd;
@@ -61,7 +80,20 @@ impl GradReduceMode {
 pub trait Optimizer: Send {
     /// Apply one update: `w <- w - f(grad)` for this parameter.
     /// `lr` is the (already scheduled) learning rate for this step.
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32);
+    ///
+    /// Fallible: an optimizer whose step can fault at run time (the
+    /// artifact backend's engine call, a violated state invariant) reports
+    /// the fault instead of panicking mid-run, and must keep its state
+    /// *consistent* on error: the failed update itself is not applied
+    /// (weights and moments unmodified) and step accounting is rolled
+    /// back, so the trainer stays checkpointable and cadence-dependent
+    /// plans (`grad_reduce_mode`) are not shifted by a step that never
+    /// applied. A subspace refresh that preceded the failure may stay
+    /// committed — it is a valid basis decision independent of the failed
+    /// update (`GaLore` documents this at its rollback site). Pure-Rust
+    /// arithmetic paths simply return `Ok(())`.
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String>;
 
     /// Bytes of optimizer state currently held for all parameters.
     fn state_bytes(&self) -> usize;
@@ -115,17 +147,44 @@ pub trait Optimizer: Send {
     }
 
     /// Apply one update from an already-projected (and, under data
-    /// parallelism, already-averaged) compact gradient. Bit-identical to
-    /// `step` fed the corresponding full gradient, because `step` itself
-    /// computes exactly this projection first. Only callable when
-    /// `grad_reduce_mode` returned `Compact` for this parameter; the
-    /// default panics because plain optimizers have no compact space.
-    fn step_compact(&mut self, _param: usize, _w: &mut Matrix, _compact: &Matrix, _lr: f32) {
-        panic!(
+    /// parallelism, already-averaged) compact gradient. Arithmetically
+    /// interchangeable with `step` fed the corresponding full gradient
+    /// (bit-identical on the Rust backend, which computes exactly this
+    /// projection first). Only callable when `grad_reduce_mode` returned
+    /// `Compact` for this parameter; the default errs because plain
+    /// optimizers have no compact space (no `.expect` mid-run — the DP
+    /// worker loop propagates this instead of aborting the process).
+    fn step_compact(
+        &mut self,
+        _param: usize,
+        _w: &mut Matrix,
+        _compact: &Matrix,
+        _lr: f32,
+    ) -> Result<(), String> {
+        Err(format!(
             "optimizer '{}' cannot consume compact (pre-projected) gradients — \
              grad_reduce_mode never returns Compact for it",
             self.name()
-        );
+        ))
+    }
+
+    /// Opt-in surface for step backends that execute the update on another
+    /// substrate (the AOT-artifact backend): borrow this parameter's
+    /// Adam-style moment state — `M`, `V`, and the 1-based step counter —
+    /// creating it zeroed at `(rows, cols)` on first touch. `None` means
+    /// the optimizer holds no such state in the layout the fused kernels
+    /// were lowered for (different algorithm, quantized moments, decoupled
+    /// decay, or non-default hyperparameters) and the backend must not
+    /// bypass `step`. Whatever a backend writes through the borrow *is*
+    /// the optimizer's state: checkpoints, `remap_state`, and later
+    /// `step` calls all see it.
+    fn moments_mut(
+        &mut self,
+        _param: usize,
+        _rows: usize,
+        _cols: usize,
+    ) -> Option<backend::MomentsMut<'_>> {
+        None
     }
 
     /// Serialize the optimizer's *complete* state (moments, step counters,
@@ -168,7 +227,7 @@ pub(crate) mod testutil {
         for _ in 0..steps {
             let mut g = w.clone();
             g.sub_assign(&w_star);
-            opt.step(0, &mut w, &g, lr);
+            opt.step(0, &mut w, &g, lr).unwrap();
         }
         (d0, dist(&w, &w_star))
     }

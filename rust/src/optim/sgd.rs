@@ -22,10 +22,11 @@ impl Sgd {
 }
 
 impl Optimizer for Sgd {
-    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32) {
+    fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
+        -> Result<(), String> {
         if self.momentum == 0.0 {
             w.axpy(-lr, grad);
-            return;
+            return Ok(());
         }
         let v = self
             .velocity
@@ -34,6 +35,7 @@ impl Optimizer for Sgd {
         let mu = self.momentum;
         v.zip_inplace(grad, |vv, g| mu * vv + g);
         w.axpy(-lr, v);
+        Ok(())
     }
 
     fn state_bytes(&self) -> usize {
@@ -91,7 +93,7 @@ mod tests {
         // grad = w on a quadratic: w_t = (1 - lr)^t.
         for _ in 0..10 {
             let g = w.clone();
-            sgd.step(0, &mut w, &g, 0.1);
+            sgd.step(0, &mut w, &g, 0.1).unwrap();
         }
         assert!((w.at(0, 0) - 0.9f32.powi(10)).abs() < 1e-6);
         assert_eq!(sgd.state_bytes(), 0);

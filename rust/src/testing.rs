@@ -172,7 +172,7 @@ pub fn run_lsq(opt: &mut dyn Optimizer, wl: &LsqWorkload, steps: usize) -> Conve
             first = loss;
         }
         last = loss;
-        opt.step(0, &mut w, &g, wl.lr);
+        opt.step(0, &mut w, &g, wl.lr).expect("lsq workload step failed");
     }
     let n_eval = 4u64;
     let mut eval = 0.0f64;

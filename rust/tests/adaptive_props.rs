@@ -55,7 +55,7 @@ fn prop_rank_decay_never_increases_state_bytes() {
             let mut ok = true;
             for s in 0..13u64 {
                 let g = Matrix::randn(m, n, 1.0, &mut rng.child(s));
-                gal.step(0, &mut w, &g, 0.01);
+                gal.step(0, &mut w, &g, 0.01).unwrap();
                 let bytes = gal.state_bytes();
                 if s >= 1 && bytes > prev {
                     ok = false;
@@ -211,13 +211,13 @@ fn adaptive_steps_zero_alloc_across_rank_change_boundaries() {
     // adaptive refresh (t=4, 16→8) warm every workspace, including the
     // basis-transition and moment-remap buffers at their largest shapes.
     for g in grads.iter().cycle().take(6) {
-        gal.step(0, &mut w, g, 0.01);
+        gal.step(0, &mut w, g, 0.01).unwrap();
     }
     // Measured window t=6..13 spans boundaries t=8 (8→4) and t=12 (4→2):
     // genuine rank changes, both with Adam moment remaps.
     let s0 = thread_alloc_stats();
     for g in grads.iter() {
-        gal.step(0, &mut w, g, 0.01);
+        gal.step(0, &mut w, g, 0.01).unwrap();
     }
     let s1 = thread_alloc_stats();
     assert_eq!(
@@ -260,14 +260,14 @@ fn spectral_rank_growth_stays_zero_alloc() {
     let fullrank: Vec<Matrix> =
         (0..8).map(|i| Matrix::randn(m, n, 1.0, &mut rng.child(100 + i))).collect();
     for g in &lowrank {
-        gal.step(0, &mut w, g, 0.01);
+        gal.step(0, &mut w, g, 0.01).unwrap();
     }
     let shrunk = gal.projector(0).unwrap().rank;
     assert!(shrunk <= 3, "spectral did not shrink on rank-2 gradients: {shrunk}");
     // Measured window: refreshes at t=6,8,10,12 grow the rank back.
     let s0 = thread_alloc_stats();
     for g in &fullrank {
-        gal.step(0, &mut w, g, 0.01);
+        gal.step(0, &mut w, g, 0.01).unwrap();
     }
     let s1 = thread_alloc_stats();
     assert_eq!(
@@ -300,11 +300,11 @@ fn gated_steps_zero_alloc_when_refresh_skipped() {
     let v = Matrix::randn(2, 32, 1.0, &mut rng);
     let g = galore::tensor::matmul(&u, &v);
     for _ in 0..4 {
-        gal.step(0, &mut w, &g, 0.01);
+        gal.step(0, &mut w, &g, 0.01).unwrap();
     }
     let s0 = thread_alloc_stats();
     for _ in 0..6 {
-        gal.step(0, &mut w, &g, 0.01);
+        gal.step(0, &mut w, &g, 0.01).unwrap();
     }
     let s1 = thread_alloc_stats();
     assert_eq!(s1.allocs - s0.allocs, 0, "gated steady-state steps allocated");
@@ -335,7 +335,7 @@ fn gate_cannot_starve_adaptive_rank_shrink() {
     let v = Matrix::randn(1, 32, 1.0, &mut rng);
     let g = galore::tensor::matmul(&u, &v);
     for _ in 0..14 {
-        gal.step(0, &mut w, &g, 0.01);
+        gal.step(0, &mut w, &g, 0.01).unwrap();
     }
     let rs = *gal.rank_state(0).unwrap();
     assert!(rs.gate_skips > 0, "gate never fired despite cos ~ 1");

@@ -1,0 +1,394 @@
+//! Step-backend properties: the `StepBackend` redesign's acceptance bar.
+//!
+//! Pure-Rust tests (no artifacts) pin the *surface*: the fallible
+//! `step`/`step_compact` contract, the one-optimizer-object construction
+//! through `build_optimizer`, and the backend-independence of the compact
+//! (`dp_compress`) entry point.
+//!
+//! Artifact-gated tests (self-skip without `make artifacts`) pin the
+//! *equivalence*: the artifact backend must track the Rust backend
+//! per-step across plain / adaptive / gated / `dp_compress` variants,
+//! share its moments (identical state accounting), checkpoint through the
+//! unified `Optimizer::save_state`, and resume bit-exactly.
+
+use galore::config::{BackendKind, MethodKind, RunConfig};
+use galore::coordinator::{build_optimizer, checkpoint, train_data_parallel, Trainer};
+use galore::model::ModelConfig;
+use galore::optim::{
+    Adam, ArtifactBackend, GaLore, GaLoreConfig, GradReduceMode, Optimizer, RankScheduleKind,
+    StepBackend, StepCtx,
+};
+use galore::rng::Rng;
+use galore::runtime::{default_dir, Engine};
+use galore::tensor::Matrix;
+
+fn artifacts_ready() -> bool {
+    let ok = default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    ok
+}
+
+// ---------------------------------------------------------------------------
+// Pure-Rust surface tests.
+
+#[test]
+fn step_compact_default_is_an_error_not_a_panic() {
+    // PR 4's "no `.expect` mid-run" policy, now on the trait itself: a
+    // plain optimizer fed a compact gradient reports the contract
+    // violation as a recoverable error the DP worker loop can propagate.
+    let mut adam = Adam::default_paper();
+    let mut w = Matrix::zeros(4, 6);
+    let c = Matrix::ones(2, 6);
+    let err = adam.step_compact(0, &mut w, &c, 0.01).unwrap_err();
+    assert!(err.contains("cannot consume compact"), "{err}");
+    assert!(err.contains("adam"), "{err}");
+}
+
+#[test]
+fn build_optimizer_yields_one_object_per_method_and_rust_backend_needs_no_artifacts() {
+    // The redesign's construction story: `build_optimizer` is the single
+    // place a backend is chosen, and the default (rust) backend works on
+    // a bare checkout for every method.
+    let model = ModelConfig::by_name("nano").unwrap();
+    for method in [
+        MethodKind::FullRank,
+        MethodKind::GaLore,
+        MethodKind::GaLore8bit,
+        MethodKind::GaLoreAdafactor,
+        MethodKind::Lora,
+    ] {
+        let cfg = RunConfig::new(model, method);
+        let opt = build_optimizer(&cfg, &[0]).unwrap();
+        assert!(!opt.name().is_empty());
+    }
+}
+
+#[test]
+fn artifact_backend_is_rejected_for_non_galore_methods() {
+    // The kernels implement GaLore-Adam; both the config validator and
+    // `build_optimizer` (which benches call with hand-rolled configs)
+    // must refuse anything else *before* touching the artifact dir.
+    let model = ModelConfig::by_name("nano").unwrap();
+    for method in [MethodKind::GaLore8bit, MethodKind::GaLoreAdafactor, MethodKind::Lora] {
+        let mut cfg = RunConfig::new(model, method);
+        cfg.backend = BackendKind::Artifact;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("artifact"), "{method:?}: {err}");
+        let Err(err) = build_optimizer(&cfg, &[0]) else {
+            panic!("{method:?}: artifact backend must be rejected");
+        };
+        let err = err.to_string();
+        assert!(err.contains("rust backend"), "{method:?}: {err}");
+    }
+}
+
+/// A backend that always faults — stands in for a mid-run artifact/engine
+/// failure so the error contract is testable without artifacts.
+struct FailingBackend;
+
+impl StepBackend for FailingBackend {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+    fn step_into(&mut self, _ctx: StepCtx<'_>, _grad: &Matrix) -> Result<(), String> {
+        Err("injected backend fault".into())
+    }
+    fn step_compact_into(&mut self, _ctx: StepCtx<'_>, _compact: &Matrix) -> Result<(), String> {
+        Err("injected backend fault".into())
+    }
+}
+
+#[test]
+fn failed_backend_step_keeps_state_consistent() {
+    // The trait contract behind the fallible `step`: a faulted step leaves
+    // the weight unmodified and rolls the step counter back, so cadence-
+    // dependent surfaces (the DP plan) are not shifted by an update that
+    // never applied — a checkpoint after the error stays coherent.
+    let cfg = GaLoreConfig { rank: 4, update_freq: 3, scale: 0.25, ..Default::default() };
+    let mut gal = GaLore::new(cfg, Adam::default_paper())
+        .with_targets([0usize])
+        .with_backend(Box::new(FailingBackend));
+    let mut rng = Rng::new(5);
+    let mut w = Matrix::randn(8, 12, 1.0, &mut rng);
+    let g = Matrix::randn(8, 12, 1.0, &mut rng);
+    let w0 = w.clone();
+    let err = gal.step(0, &mut w, &g, 0.01).unwrap_err();
+    assert!(err.contains("injected"), "{err}");
+    assert_eq!(w.data, w0.data, "failed step must not touch the weight");
+    assert_eq!(gal.state_bytes(), gal.projector(0).unwrap().nbytes(), "no moments created");
+    // Cadence did not advance: the plan still reports Full (t stayed 0,
+    // a refresh boundary), exactly as before the failed call.
+    assert_eq!(gal.grad_reduce_mode(0, 8, 12), GradReduceMode::Full);
+}
+
+#[test]
+fn compact_plan_is_backend_independent_through_the_boxed_surface() {
+    // Drive a `Box<dyn Optimizer>` from `build_optimizer` through the
+    // same full/compact plan the DP loop executes: the compact entry must
+    // be bit-exact with the monolithic step on the rust backend — pinned
+    // at the *coordinator-facing* surface, not just on the concrete type.
+    let model = ModelConfig::by_name("nano").unwrap();
+    let mut cfg = RunConfig::new(model, MethodKind::GaLore);
+    cfg.galore.rank = 8;
+    cfg.galore.update_freq = 4;
+    let mut mono = build_optimizer(&cfg, &[0]).unwrap();
+    let mut split = build_optimizer(&cfg, &[0]).unwrap();
+    let mut rng = Rng::new(17);
+    let mut w_mono = Matrix::randn(16, 40, 1.0, &mut rng);
+    let mut w_split = w_mono.clone();
+    let mut compact = Matrix::zeros(0, 0);
+    for s in 0..9 {
+        let g = Matrix::randn(16, 40, 1.0, &mut rng.child(s));
+        mono.step(0, &mut w_mono, &g, 0.01).unwrap();
+        match split.grad_reduce_mode(0, 16, 40) {
+            GradReduceMode::Full => split.step(0, &mut w_split, &g, 0.01).unwrap(),
+            GradReduceMode::Compact { rows, cols } => {
+                assert!(split.project_grad_into(0, &g, &mut compact));
+                assert_eq!(compact.shape(), (rows, cols));
+                split.step_compact(0, &mut w_split, &compact, 0.01).unwrap();
+            }
+        }
+        assert_eq!(w_mono.data, w_split.data, "diverged at step {s}");
+    }
+    assert_eq!(mono.state_bytes(), split.state_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated equivalence tests.
+
+/// Optimizer-level harness: run the same synthetic gradient stream through
+/// a rust-backend and an artifact-backend `GaLore<Adam>` and return the
+/// per-step relative weight divergence. `shape` exercises Left (wide) or
+/// Right (tall, transpose-staged) projection; `cfg` picks the variant.
+fn run_both_backends(cfg: GaLoreConfig, shape: (usize, usize), steps: usize) -> Vec<f32> {
+    let engine = Engine::new(default_dir()).unwrap();
+    let backend = ArtifactBackend::new(engine, cfg.rank, &[shape]).unwrap();
+    let mut rust = GaLore::new(cfg, Adam::default_paper()).with_targets([0usize]).with_seed(3);
+    let mut art = GaLore::new(cfg, Adam::default_paper())
+        .with_targets([0usize])
+        .with_seed(3)
+        .with_backend(Box::new(backend));
+    let mut rng = Rng::new(23);
+    let (m, n) = shape;
+    let mut w_rust = Matrix::randn(m, n, 0.5, &mut rng);
+    let mut w_art = w_rust.clone();
+    let mut divergence = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let g = Matrix::randn(m, n, 0.5, &mut rng.child(s as u64));
+        rust.step(0, &mut w_rust, &g, 0.01).unwrap();
+        art.step(0, &mut w_art, &g, 0.01).unwrap();
+        let mut d = w_rust.clone();
+        d.sub_assign(&w_art);
+        divergence.push(d.frobenius_norm() / w_rust.frobenius_norm().max(1e-6));
+        // Same refresh machinery on both sides: the projector state must
+        // agree exactly (the backends differ only in update arithmetic).
+        assert_eq!(rust.rank_profile(), art.rank_profile(), "step {s}");
+    }
+    assert_eq!(rust.state_bytes(), art.state_bytes(), "moments must live in one place");
+    divergence
+}
+
+/// Rounding tolerance between the kernel matmuls and the Rust matmuls,
+/// accumulated over a short run. The backends implement identical
+/// arithmetic (same Adam formula, same basis), so anything beyond a few
+/// f32 rounding ulps per step is a real bug.
+const BACKEND_TOL: f32 = 5e-3;
+
+#[test]
+fn artifact_backend_tracks_rust_backend_wide_and_tall() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = GaLoreConfig { rank: 16, update_freq: 5, scale: 0.25, ..Default::default() };
+    // Wide (Left projection): buffers feed the kernel directly.
+    for &d in &run_both_backends(cfg, (64, 172), 12) {
+        assert!(d < BACKEND_TOL, "wide divergence {d}");
+    }
+    // Tall (Right projection): the transpose-staging path.
+    for &d in &run_both_backends(cfg, (172, 64), 12) {
+        assert!(d < BACKEND_TOL, "tall divergence {d}");
+    }
+}
+
+#[test]
+fn artifact_backend_tracks_rust_backend_gated_and_adaptive() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Gated: skipped boundaries take the shared compact tail on both
+    // backends; the run must still track.
+    let gated = GaLoreConfig {
+        rank: 16,
+        update_freq: 3,
+        scale: 0.25,
+        refresh_gate_cos: 0.3,
+        ..Default::default()
+    };
+    for &d in &run_both_backends(gated, (64, 172), 12) {
+        assert!(d < BACKEND_TOL, "gated divergence {d}");
+    }
+    // Adaptive: ranks that drift off the lowered artifact set route
+    // through the Rust fallback tail — same moments, so the trajectories
+    // stay in lockstep-within-rounding and the rank profiles (asserted
+    // per step inside the harness) stay identical.
+    let adaptive = GaLoreConfig {
+        rank: 16,
+        update_freq: 4,
+        scale: 0.25,
+        rank_schedule: RankScheduleKind::Decay,
+        rank_floor: 4,
+        rank_decay: 0.5,
+        ..Default::default()
+    };
+    for &d in &run_both_backends(adaptive, (64, 172), 12) {
+        assert!(d < BACKEND_TOL, "adaptive divergence {d}");
+    }
+}
+
+fn nano_cfg(steps: usize) -> RunConfig {
+    let model = ModelConfig::by_name("nano").unwrap();
+    let mut cfg = RunConfig::new(model, MethodKind::GaLore);
+    cfg.steps = steps;
+    cfg.galore.rank = 16;
+    cfg.lowrank_rank = 16;
+    cfg.galore.update_freq = 5;
+    cfg
+}
+
+#[test]
+fn fused_dp_compress_w4_matches_unfused_run() {
+    if !artifacts_ready() {
+        return;
+    }
+    // The acceptance criterion verbatim: `--fused --dp-workers 4
+    // --dp-compress` runs end-to-end, and its losses match the unfused
+    // run within the pinned backend tolerance. (The pre-backend design
+    // rejected this combination outright.)
+    let mut rust_cfg = nano_cfg(10);
+    rust_cfg.dp_workers = 4;
+    rust_cfg.dp_compress = true;
+    let mut fused_cfg = rust_cfg.clone();
+    fused_cfg.backend = BackendKind::Artifact;
+    let rust = train_data_parallel(&rust_cfg).unwrap();
+    let fused = train_data_parallel(&fused_cfg).unwrap();
+    assert!(
+        (rust.final_train_loss - fused.final_train_loss).abs() < 0.35,
+        "train loss diverged across backends: rust {} vs fused {}",
+        rust.final_train_loss,
+        fused.final_train_loss
+    );
+    assert!(
+        (rust.final_eval_loss - fused.final_eval_loss).abs() < 0.35,
+        "eval loss diverged across backends: rust {} vs fused {}",
+        rust.final_eval_loss,
+        fused.final_eval_loss
+    );
+    // Shared moments => identical state accounting, and the compact
+    // traffic cut is backend-independent.
+    assert_eq!(rust.final_state_bytes, fused.final_state_bytes);
+    assert_eq!(rust.comm_f32s_last_step, fused.comm_f32s_last_step);
+}
+
+#[test]
+fn fused_checkpoint_resume_through_unified_save_state_is_bit_exact() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Fused runs checkpoint through the one `Optimizer::save_state` — no
+    // FUSD section, no fused-specific restore call — and resume onto the
+    // same backend bit-exactly (the engine's arithmetic is deterministic,
+    // so the resume bar is the same as the Rust path's).
+    let mut cfg = nano_cfg(12);
+    cfg.backend = BackendKind::Artifact;
+    let mut full = Trainer::from_config(cfg.clone()).unwrap();
+    let mut full_losses = Vec::new();
+    for _ in 0..12 {
+        full_losses.push(full.train_step().unwrap());
+    }
+    let mut first = Trainer::from_config(cfg.clone()).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..7 {
+        losses.push(first.train_step().unwrap());
+    }
+    let path = std::env::temp_dir().join("galore_backend_props/fused_resume.ckpt");
+    first.save_checkpoint(&path).unwrap();
+    drop(first);
+    let mut resumed = Trainer::resume(cfg.clone(), &path).unwrap();
+    assert_eq!(resumed.step, 7);
+    for _ in 7..12 {
+        losses.push(resumed.train_step().unwrap());
+    }
+    assert_eq!(full_losses, losses, "fused resume diverged from uninterrupted run");
+    for (a, b) in full.params.tensors.iter().zip(resumed.params.tensors.iter()) {
+        assert_eq!(a.data, b.data, "weights diverged");
+    }
+    assert_eq!(full.optimizer_state_bytes(), resumed.optimizer_state_bytes());
+    // The fingerprint pins the backend: resuming a fused checkpoint on
+    // the rust backend is rejected up front instead of drifting silently.
+    let mut rust_cfg = cfg.clone();
+    rust_cfg.backend = BackendKind::Rust;
+    let Err(err) = Trainer::resume(rust_cfg, &path) else {
+        panic!("cross-backend resume must be rejected");
+    };
+    assert!(err.to_string().contains("config mismatch"), "{err}");
+}
+
+#[test]
+fn fused_state_accounting_matches_rust_backend() {
+    if !artifacts_ready() {
+        return;
+    }
+    // The artifact backend owns no state: a fused trainer reports exactly
+    // the optimizer-state bytes the rust-backend trainer does (the memory
+    // formulas' number), because the moments live in the inner Adam on
+    // both substrates.
+    let run = |backend: BackendKind| -> usize {
+        let mut cfg = nano_cfg(3);
+        cfg.backend = backend;
+        let mut t = Trainer::from_config(cfg).unwrap();
+        for _ in 0..3 {
+            t.train_step().unwrap();
+        }
+        t.optimizer_state_bytes()
+    };
+    assert_eq!(run(BackendKind::Rust), run(BackendKind::Artifact));
+}
+
+#[test]
+fn legacy_fused_checkpoint_section_is_rejected() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Files from before the redesign carried the fused moments in a FUSD
+    // section; their OPTS blob is incomplete, so restoring one must fail
+    // loudly instead of cold-starting the fused layers.
+    let cfg = nano_cfg(4);
+    let mut trainer = Trainer::from_config(cfg.clone()).unwrap();
+    for _ in 0..2 {
+        trainer.train_step().unwrap();
+    }
+    let mut opt_blob = Vec::new();
+    trainer.opt.save_state(&mut opt_blob).unwrap();
+    let mut loader_blob = Vec::new();
+    trainer.loader.save_state(&mut loader_blob);
+    let mut metrics_blob = Vec::new();
+    trainer.metrics.save_state(&mut metrics_blob);
+    let path = std::env::temp_dir().join("galore_backend_props/legacy_fusd.ckpt");
+    checkpoint::save_v2(
+        &path,
+        &trainer.params,
+        &cfg.fingerprint(),
+        2,
+        &[
+            (checkpoint::SEC_OPTIMIZER, opt_blob.as_slice()),
+            (checkpoint::SEC_LOADER, loader_blob.as_slice()),
+            (checkpoint::SEC_METRICS, metrics_blob.as_slice()),
+            (checkpoint::SEC_FUSED, &[0u8; 4]),
+        ],
+    )
+    .unwrap();
+    let err = trainer.restore_checkpoint(&path).unwrap_err();
+    assert!(err.to_string().contains("FUSD"), "{err}");
+}

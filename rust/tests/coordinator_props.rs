@@ -97,18 +97,18 @@ fn prop_optimizer_state_only_grows_with_touched_params() {
         let cfg = RunConfig::new(model, method);
         let store = ParamStore::zeros(model);
         let targets = store.projection_targets();
-        let mut opt = build_optimizer(&cfg, &targets);
+        let mut opt = build_optimizer(&cfg, &targets).unwrap();
         assert_eq!(opt.state_bytes(), 0, "{method:?} starts empty");
         let mut w = Matrix::zeros(16, 16);
         let g = Matrix::ones(16, 16);
-        opt.step(100, &mut w, &g, 0.01); // untargeted id
+        opt.step(100, &mut w, &g, 0.01).unwrap(); // untargeted id
         let after_one = opt.state_bytes();
         assert!(after_one > 0, "{method:?}");
-        opt.step(100, &mut w, &g, 0.01); // same id: no growth
+        opt.step(100, &mut w, &g, 0.01).unwrap(); // same id: no growth
         assert_eq!(opt.state_bytes(), after_one, "{method:?}");
         let mut w2 = Matrix::zeros(8, 8);
         let g2 = Matrix::ones(8, 8);
-        opt.step(101, &mut w2, &g2, 0.01); // new id: growth
+        opt.step(101, &mut w2, &g2, 0.01).unwrap(); // new id: growth
         assert!(opt.state_bytes() > after_one, "{method:?}");
     }
 }

@@ -127,11 +127,11 @@ fn run_dp(world: usize, steps: usize, compress: bool, make: MakeOpt) -> Vec<Mode
                         for idx in 0..grads.len() {
                             match plan[idx] {
                                 GradReduceMode::Full => {
-                                    opt.step(idx, &mut weights[idx], &grads[idx], 0.01)
+                                    opt.step(idx, &mut weights[idx], &grads[idx], 0.01).unwrap()
                                 }
-                                GradReduceMode::Compact { .. } => {
-                                    opt.step_compact(idx, &mut weights[idx], &compact[idx], 0.01)
-                                }
+                                GradReduceMode::Compact { .. } => opt
+                                    .step_compact(idx, &mut weights[idx], &compact[idx], 0.01)
+                                    .unwrap(),
                             }
                         }
                     }

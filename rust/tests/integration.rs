@@ -151,16 +151,16 @@ fn fused_galore_path_matches_rust_path_loosely() {
     if !artifacts_ready() {
         return;
     }
-    // Same seed, same data: the fused (HLO/Pallas) and Rust GaLore-Adam
-    // paths should produce closely tracking loss curves. They are not
-    // bit-identical (different SVD sketches), so compare final losses.
+    // Same seed, same data: the artifact (HLO/Pallas) and Rust step
+    // backends of the one GaLore optimizer should produce closely
+    // tracking loss curves. They are not bit-identical (the kernels round
+    // their matmuls differently), so compare final losses.
     let run = |fused: bool| -> f32 {
-        let cfg = nano_cfg(MethodKind::GaLore, 20);
-        let mut trainer = Trainer::from_config(cfg).unwrap();
+        let mut cfg = nano_cfg(MethodKind::GaLore, 20);
         if fused {
-            trainer.enable_fused_galore().unwrap();
-            assert!(trainer.is_fused());
+            cfg.backend = galore::config::BackendKind::Artifact;
         }
+        let mut trainer = Trainer::from_config(cfg).unwrap();
         for _ in 0..20 {
             trainer.train_step().unwrap();
         }
@@ -343,7 +343,9 @@ fn resume_rejects_mismatched_config() {
     trainer.save_checkpoint(&path).unwrap();
     let mut other = cfg.clone();
     other.lr *= 2.0;
-    let err = Trainer::resume(other, &path).unwrap_err();
+    let Err(err) = Trainer::resume(other, &path) else {
+        panic!("mismatched config must be rejected");
+    };
     assert!(err.to_string().contains("config mismatch"), "{err}");
     // The matching config still resumes.
     assert!(Trainer::resume(cfg, &path).is_ok());

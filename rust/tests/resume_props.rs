@@ -49,7 +49,7 @@ fn drive(opt: &mut dyn Optimizer, ws: &mut [Matrix], from: usize, to: usize) {
         let lr = 0.01 / (1.0 + t as f32 * 0.05);
         for p in 0..SHAPES.len() {
             let g = grad_for(p, t);
-            opt.step(p, &mut ws[p], &g, lr);
+            opt.step(p, &mut ws[p], &g, lr).unwrap();
         }
     }
 }
@@ -263,7 +263,7 @@ fn adaptive_lsq_losses(cut: Option<usize>, steps: usize) -> Vec<f32> {
             losses.push(err.frobenius_norm().powi(2) / 64.0);
             let mut g = matmul_at_b(&err, &x);
             g.scale(2.0 / 64.0);
-            opt.step(0, w, &g, 0.02);
+            opt.step(0, w, &g, 0.02).unwrap();
         }
     }
     let mut setup = Rng::new(77);
