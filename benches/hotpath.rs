@@ -6,10 +6,11 @@
 use galore::bench::{bench, report};
 use galore::coordinator::{thread_alloc_stats, Ring};
 use galore::linalg::{top_r_left_subspace, top_r_left_subspace_into, SvdWorkspace};
+use galore::model::{init_params, ModelConfig, WeightPrecision};
 use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer, Projector};
 use galore::quant::{dequantize, quantize, DynQuantBuf};
 use galore::rng::Rng;
-use galore::runtime::{default_dir, Engine, Input};
+use galore::runtime::{default_dir, pool, Engine, Input};
 use galore::tensor::{matmul, matmul_at_b, Matrix};
 
 /// Measure allocator traffic of `steps` repetitions of `f` on this thread
@@ -27,6 +28,32 @@ fn report_allocs(name: &str, steps: u64, mut f: impl FnMut()) {
         (s1.allocs - s0.allocs) / steps,
         (s1.bytes - s0.bytes) / steps,
     );
+}
+
+/// The retired spawn-per-call kernel shape: scoped threads over row
+/// bands, serial inner loops — what `tensor::ops` did before the
+/// persistent pool. Kept here only as the bench baseline.
+fn matmul_spawn_per_call(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    let band = m.div_ceil(threads.max(1));
+    std::thread::scope(|scope| {
+        for (band_i, out) in c.data.chunks_mut(band * n).enumerate() {
+            let r0 = band_i * band;
+            scope.spawn(move || {
+                for (ri, row) in out.chunks_mut(n).enumerate() {
+                    let ar = &a.data[(r0 + ri) * k..(r0 + ri + 1) * k];
+                    for (kk, &av) in ar.iter().enumerate() {
+                        let brow = &b.data[kk * n..(kk + 1) * n];
+                        for (cv, &bv) in row.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
 }
 
 fn main() -> anyhow::Result<()> {
@@ -117,6 +144,102 @@ fn main() -> anyhow::Result<()> {
         report_allocs("GaLore-Adam step allocs (128x344, 1 thread)", 200, || {
             gal_s.step(0, &mut w_s, &grad_s, 1e-4).unwrap();
         });
+    }
+
+    // Persistent-pool comparison (EXPERIMENTS.md §Perf iteration 5): the
+    // retired spawn-per-call kernel vs the pooled kernel, dispatch cost in
+    // isolation, cross-layer `step_many` vs the sequential sweep, and the
+    // bf16 weight-store commit.
+    println!("\n== worker pool (iteration 5) ==");
+    let threads = pool::num_threads();
+    println!("pool width: {threads} threads");
+    {
+        let (m, k, n) = (512usize, 512usize, 512usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let s = bench("matmul 512^3, spawn-per-call (old kernel)", || {
+            std::hint::black_box(matmul_spawn_per_call(&a, &b, threads));
+        });
+        report(&s);
+        println!("    -> {:.2} GFLOP/s", flops / s.median_secs() / 1e9);
+        let s = bench("matmul 512^3, persistent pool", || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        report(&s);
+        println!("    -> {:.2} GFLOP/s", flops / s.median_secs() / 1e9);
+    }
+    {
+        // Dispatch overhead in isolation: near-empty tasks, so the round
+        // trip (wake workers, claim tasks, quiesce) dominates.
+        let sink: Vec<std::sync::atomic::AtomicU64> =
+            (0..threads).map(|_| std::sync::atomic::AtomicU64::new(0)).collect();
+        report(&bench("dispatch only: scoped spawn, N tasks", || {
+            std::thread::scope(|scope| {
+                for s in &sink {
+                    scope.spawn(move || s.fetch_add(1, std::sync::atomic::Ordering::Relaxed));
+                }
+            });
+        }));
+        report(&bench("dispatch only: pool::run, N tasks", || {
+            pool::run(sink.len(), |i| {
+                sink[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+        }));
+        report_allocs("pool::run dispatch allocs (warm)", 200, || {
+            pool::run(sink.len(), |i| {
+                sink[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+        });
+    }
+    {
+        // Cross-layer stepping: 6 mid-size GaLore layers. The sequential
+        // sweep threads each layer's matmuls individually; `step_many`
+        // instead runs whole layers as pool tasks (nested matmuls inline).
+        let shapes = [(256usize, 688usize); 6];
+        let mk = || {
+            GaLore::new(
+                GaLoreConfig { rank: 64, update_freq: 10_000, scale: 0.25, ..Default::default() },
+                Adam::new(AdamConfig::default()),
+            )
+            .with_targets(0..shapes.len())
+            .with_seed(7)
+        };
+        let mut rng2 = Rng::new(17);
+        let mut ws: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.02, &mut rng2)).collect();
+        let gs: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.02, &mut rng2)).collect();
+        let mut seq = mk();
+        for (idx, (w, g)) in ws.iter_mut().zip(gs.iter()).enumerate() {
+            seq.step(idx, w, g, 1e-4).unwrap(); // first refresh outside timing
+        }
+        report(&bench("6-layer sweep: sequential step loop", || {
+            for (idx, (w, g)) in ws.iter_mut().zip(gs.iter()).enumerate() {
+                seq.step(idx, w, g, 1e-4).unwrap();
+            }
+        }));
+        let mut par = mk();
+        par.step_many(&mut ws, &gs, 1e-4).unwrap(); // first refresh outside timing
+        report(&bench("6-layer sweep: step_many (pool)", || {
+            par.step_many(&mut ws, &gs, 1e-4).unwrap();
+        }));
+        report_allocs("step_many allocs/step (warm, 6 layers)", 50, || {
+            par.step_many(&mut ws, &gs, 1e-4).unwrap();
+        });
+    }
+    {
+        let mut params = init_params(ModelConfig::by_name("nano").unwrap(), 0);
+        let f32_bytes = params.weight_store_bytes();
+        params.set_precision(WeightPrecision::Bf16);
+        println!(
+            "bf16 weight store (nano): {} -> {} bytes",
+            f32_bytes,
+            params.weight_store_bytes()
+        );
+        report(&bench("bf16 commit (nano, round through store)", || {
+            params.commit();
+        }));
     }
 
     println!("\n== ring all-reduce (4 workers, 1M f32) ==");

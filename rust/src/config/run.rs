@@ -1,7 +1,7 @@
 //! RunConfig: the full description of one training run.
 
 use super::TomlDoc;
-use crate::model::{schema, ModelConfig};
+use crate::model::{schema, ModelConfig, WeightPrecision};
 use crate::optim::{GaLoreConfig, ProjectorQuant, RankScheduleKind};
 
 /// Which training method drives the run (paper §5.1 roster).
@@ -136,6 +136,19 @@ pub struct RunConfig {
     pub checkpoint_keep_last: usize,
     /// Directory for periodic checkpoints.
     pub checkpoint_dir: String,
+    /// Weight-store precision (`weight_precision` / `--weight-precision`):
+    /// `bf16` keeps the master copy of every parameter rounded to
+    /// bfloat16 (2 bytes/element on an accelerator; Q-GaLore-style) while
+    /// the gradient/update arithmetic runs in f32 working tensors.
+    /// Trajectory-shaping (each step rounds the weights), so it is part
+    /// of the resume fingerprint.
+    pub weight_precision: WeightPrecision,
+    /// Worker-pool width for the threaded kernels and the cross-layer
+    /// parallel optimizer step (`threads` / `--threads`). 0 = auto
+    /// (`GALORE_THREADS` env var, else `available_parallelism`, capped at
+    /// 16). Deliberately *not* in the fingerprint: results are
+    /// bit-identical at any thread count.
+    pub threads: usize,
 }
 
 impl RunConfig {
@@ -169,6 +182,8 @@ impl RunConfig {
             checkpoint_every: 0,
             checkpoint_keep_last: 3,
             checkpoint_dir: "checkpoints".into(),
+            weight_precision: WeightPrecision::F32,
+            threads: 0,
         }
     }
 
@@ -183,7 +198,7 @@ impl RunConfig {
         format!(
             "model={} method={} backend={} steps={} batch={} lr={} warmup={} final_lr={} wd={} \
              seed={} layerwise={} dp={} dp_compress={} rank={} T={} scale={} quant={} \
-             schedule={} floor={} decay={} energy={} gate={} lowrank_rank={} merge={}",
+             schedule={} floor={} decay={} energy={} gate={} lowrank_rank={} merge={} wprec={}",
             self.model.name,
             self.method.label(),
             // The backend shapes the trajectory: the artifact kernels round
@@ -212,6 +227,10 @@ impl RunConfig {
             g.refresh_gate_cos,
             self.lowrank_rank,
             self.relora_merge_every,
+            // Each step rounds the weights through the store, so the
+            // precision shapes the trajectory. `threads` stays out: the
+            // parallel step is bit-identical at any width.
+            self.weight_precision.label(),
         )
     }
 
@@ -316,6 +335,13 @@ impl RunConfig {
         }
         if let Some(v) = doc.get_parse("", "dp_compress") {
             cfg.dp_compress = v;
+        }
+        if let Some(v) = doc.get("", "weight_precision") {
+            cfg.weight_precision = WeightPrecision::parse(v)
+                .ok_or_else(|| format!("unknown weight_precision '{v}' (f32|bf16)"))?;
+        }
+        if let Some(v) = doc.get_parse("", "threads") {
+            cfg.threads = v;
         }
         if let Some(v) = doc.get_parse("galore", "rank") {
             cfg.galore.rank = v;
@@ -617,6 +643,35 @@ mod tests {
         )
         .unwrap();
         assert!(RunConfig::from_toml(&both).is_ok());
+    }
+
+    #[test]
+    fn weight_precision_and_threads_parse() {
+        let doc =
+            TomlDoc::parse("model = \"nano\"\nweight_precision = \"bf16\"\nthreads = 3\n").unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.weight_precision, WeightPrecision::Bf16);
+        assert_eq!(cfg.threads, 3);
+        // Defaults: f32 store, auto-sized pool.
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        assert_eq!(base.weight_precision, WeightPrecision::F32);
+        assert_eq!(base.threads, 0);
+        let bad = TomlDoc::parse("model = \"nano\"\nweight_precision = \"fp8\"\n").unwrap();
+        assert!(RunConfig::from_toml(&bad).unwrap_err().contains("weight_precision"));
+    }
+
+    #[test]
+    fn weight_precision_fingerprints_threads_do_not() {
+        // bf16 rounds the weights every step (trajectory-shaping); the
+        // pool width is bit-exact by design and must NOT pin a resume.
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        let fp = base.fingerprint();
+        let mut bf16 = base.clone();
+        bf16.weight_precision = WeightPrecision::Bf16;
+        assert_ne!(fp, bf16.fingerprint());
+        let mut threaded = base.clone();
+        threaded.threads = 4;
+        assert_eq!(fp, threaded.fingerprint());
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::data::{Batch, DataLoader, SyntheticCorpus};
 use crate::lowrank::{Factorized, Lora, LoraConfig, ReLora};
 use crate::model::{init_params, ParamMeta, ParamStore};
 use crate::optim::{Adafactor, Adam, Adam8bit, GaLore, Optimizer};
-use crate::runtime::{default_dir, Engine, Input, Output};
+use crate::runtime::{default_dir, pool, Engine, Input, InputStage, Output};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -141,13 +141,22 @@ pub struct Trainer {
     pub(crate) grad_bufs: Vec<Matrix>,
     /// Staging buffers for gradient accumulation (microbatch > 1 only).
     mb_bufs: Vec<Matrix>,
+    /// Persistent artifact-input staging (the `Vec<Input>` the train and
+    /// eval paths used to rebuild every call). Working memory.
+    input_stage: InputStage,
 }
 
 impl Trainer {
     /// Assemble a trainer from a run config, a ready Engine and a loader.
     pub fn new(cfg: RunConfig, engine: Engine, loader: DataLoader) -> Result<Trainer> {
         cfg.validate().map_err(|e| anyhow!(e))?;
-        let params = init_params(cfg.model, cfg.seed);
+        // `threads = 0` means auto: leave the pool at its
+        // `GALORE_THREADS`/`available_parallelism` default.
+        if cfg.threads > 0 {
+            pool::configure(cfg.threads);
+        }
+        let mut params = init_params(cfg.model, cfg.seed);
+        params.set_precision(cfg.weight_precision);
         let targets = params.projection_targets();
         let opt = build_optimizer(&cfg, &targets)?;
         let schedule = LrSchedule::cosine(cfg.lr, cfg.steps, cfg.warmup_frac, cfg.final_lr_frac);
@@ -163,6 +172,7 @@ impl Trainer {
             peak_grad_bytes: 0,
             grad_bufs: Vec::new(),
             mb_bufs: Vec::new(),
+            input_stage: InputStage::new(),
         })
     }
 
@@ -185,7 +195,7 @@ impl Trainer {
 
     fn compute_grads_to(&mut self, batch: &Batch, staging: bool) -> Result<f32> {
         let artifact = self.cfg.train_artifact();
-        let mut inputs: Vec<Input> = Vec::with_capacity(self.params.len() + 2);
+        let inputs = self.input_stage.begin();
         for t in &self.params.tensors {
             inputs.push(Input::F32(&t.data));
         }
@@ -194,8 +204,10 @@ impl Trainer {
         let t0 = std::time::Instant::now();
         let outputs = self
             .engine
-            .execute(&artifact, &inputs)
-            .with_context(|| format!("executing {artifact}"))?;
+            .execute(&artifact, inputs)
+            .with_context(|| format!("executing {artifact}"));
+        self.input_stage.finish();
+        let outputs = outputs?;
         self.metrics.exec_time += t0.elapsed();
         let loss = outputs[0].scalar();
         let bufs = if staging { &mut self.mb_bufs } else { &mut self.grad_bufs };
@@ -282,18 +294,33 @@ impl Trainer {
         let total_bytes: usize = grads.iter().map(|g| 4 * g.len()).sum();
         if self.cfg.layerwise {
             let mut peak_single = 0usize;
-            // Reverse schema order ≈ backprop arrival order.
+            // Reverse schema order ≈ backprop arrival order (and the
+            // one-layer-at-a-time semantics §4.3 models — inherently
+            // sequential, so no cross-layer dispatch here).
             for idx in (0..grads.len()).rev() {
                 peak_single = peak_single.max(4 * grads[idx].len());
                 one(self, idx)?;
             }
             self.peak_grad_bytes = self.peak_grad_bytes.max(peak_single);
-        } else {
+        } else if planned.is_some() {
             for idx in 0..grads.len() {
                 one(self, idx)?;
             }
             self.peak_grad_bytes = self.peak_grad_bytes.max(total_bytes);
+        } else {
+            // Dense path: step whole layers in parallel across the worker
+            // pool (`Optimizer::step_many` — bit-identical to this loop
+            // run sequentially; optimizers without a parallel plan keep
+            // the sequential default).
+            self.opt
+                .step_many(&mut self.params.tensors, grads, lr)
+                .map_err(|e| anyhow!("optimizer step failed: {e}"))?;
+            self.peak_grad_bytes = self.peak_grad_bytes.max(total_bytes);
         }
+        // bf16 weight store: round every updated tensor through the
+        // master store (no-op at f32 precision). Allocation-free once
+        // warm; keeps `working == dequant(store)` as the step invariant.
+        self.params.commit();
         Ok(())
     }
 
@@ -369,14 +396,15 @@ impl Trainer {
         let mut total = 0.0f64;
         for i in 0..n_batches {
             let batch = self.loader.eval_batch(i as u64);
-            let mut inputs: Vec<Input> = Vec::with_capacity(self.params.len() + 2);
+            let inputs = self.input_stage.begin();
             for t in &self.params.tensors {
                 inputs.push(Input::F32(&t.data));
             }
             inputs.push(Input::I32(&batch.tokens));
             inputs.push(Input::I32(&batch.targets));
-            let outputs = self.engine.execute(&artifact, &inputs)?;
-            total += outputs[0].scalar() as f64;
+            let outputs = self.engine.execute(&artifact, inputs);
+            self.input_stage.finish();
+            total += outputs?[0].scalar() as f64;
         }
         Ok((total / n_batches as f64) as f32)
     }
@@ -474,6 +502,7 @@ impl Trainer {
                      train --checkpoint-every N` to get full-state (v2) checkpoints."
                 );
                 self.params = params;
+                self.params.set_precision(self.cfg.weight_precision);
                 self.step = step as usize;
                 self.opt.reset_state();
                 Ok(())
@@ -519,7 +548,12 @@ impl Trainer {
                 let mut r = crate::ser::Reader::new(metrics_bytes);
                 self.metrics.load_state(&mut r).map_err(|e| anyhow!("metrics state: {e}"))?;
                 r.expect_end().map_err(|e| anyhow!("metrics state: {e}"))?;
+                // Re-establish the weight store at the configured
+                // precision. Exact for a checkpoint written by a bf16 run:
+                // its weights are bf16-valued f32s, so the rounding
+                // round-trips losslessly and resume stays bit-exact.
                 self.params = d.params;
+                self.params.set_precision(self.cfg.weight_precision);
                 self.step = d.step as usize;
                 Ok(())
             }

@@ -71,11 +71,7 @@ pub fn finetune(
     let loader = DataLoader::fixed(data, cfg.batch, model.seq, task.seed);
     let mut trainer = Trainer::new(cfg, engine, loader)?;
     // Start from the pre-trained weights, not fresh init.
-    trainer.params = ParamStore {
-        cfg: model,
-        metas: base.metas.clone(),
-        tensors: base.tensors.clone(),
-    };
+    trainer.params = ParamStore::from_tensors(model, base.metas.clone(), base.tensors.clone());
     trainer.run()?;
     let eval = trainer.metrics.final_eval_loss().unwrap_or(f32::NAN);
     Ok((eval, trainer.optimizer_state_bytes()))

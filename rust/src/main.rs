@@ -15,7 +15,7 @@ use anyhow::{anyhow, bail, Result};
 use galore::config::{BackendKind, Cli, MethodKind, RunConfig, TomlDoc};
 use galore::coordinator::{train_data_parallel_resumable, Trainer};
 use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
-use galore::model::ModelConfig;
+use galore::model::{ModelConfig, WeightPrecision};
 use galore::optim::{ProjectorQuant, RankScheduleKind};
 use galore::runtime::{default_dir, Manifest};
 
@@ -54,6 +54,7 @@ USAGE:
                 [--projector-quant f32|block8|dyn8]
                 [--seed N] [--eval-every N] [--eval-batches N]
                 [--dp-workers N] [--dp-compress] [--layerwise]
+                [--weight-precision f32|bf16] [--threads N]
                 [--backend rust|artifact] [--fused] [--csv PATH]
                 [--checkpoint PATH] [--checkpoint-every N]
                 [--checkpoint-dir DIR] [--keep-last N] [--resume PATH]
@@ -76,6 +77,13 @@ all-reduce; --dp-compress (GaLore methods) exchanges the projected r x n
 gradient between subspace refreshes instead of the full m x n one — a
 min(m,n)/r traffic cut per targeted layer. See EXPERIMENTS.md
 section 'DP communication'.
+
+Precision/threads: --weight-precision bf16 keeps the master weight store
+rounded to bfloat16 (f32 working tensors and accumulation, Q-GaLore-style
+— halves accelerator weight bytes; part of the resume fingerprint);
+--threads N sizes the worker pool behind the threaded kernels and the
+cross-layer parallel optimizer step (default: GALORE_THREADS env var,
+else all cores, capped at 16; results are bit-identical at any width).
 
 Step backend: --backend artifact (alias --fused) runs the GaLore compact
 update through the fused Pallas/HLO AOT kernels instead of the Rust tail
@@ -164,6 +172,13 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     if cli.has("layerwise") {
         cfg.layerwise = true;
     }
+    if let Some(v) = cli.get("weight-precision") {
+        cfg.weight_precision = WeightPrecision::parse(v)
+            .ok_or_else(|| anyhow!("unknown --weight-precision '{v}' (f32|bf16)"))?;
+    }
+    if let Some(v) = cli.get_parse::<usize>("threads").map_err(|e| anyhow!("{e}"))? {
+        cfg.threads = v;
+    }
     if let Some(v) = cli.get_parse::<usize>("checkpoint-every").map_err(|e| anyhow!("{e}"))? {
         cfg.checkpoint_every = v;
     }
@@ -196,7 +211,7 @@ fn train(cli: &Cli) -> Result<()> {
     let cfg = build_run_config(cli)?;
     println!(
         "train: model={} method={} backend={} steps={} batch={} lr={} rank={} T={} alpha={} \
-         schedule={} quant={} gate={} layerwise={} dp={} dp_compress={}",
+         schedule={} quant={} gate={} layerwise={} dp={} dp_compress={} wprec={} threads={}",
         cfg.model.name,
         cfg.method.label(),
         cfg.backend.label(),
@@ -211,7 +226,9 @@ fn train(cli: &Cli) -> Result<()> {
         cfg.galore.refresh_gate_cos,
         cfg.layerwise,
         cfg.dp_workers,
-        cfg.dp_compress
+        cfg.dp_compress,
+        cfg.weight_precision.label(),
+        if cfg.threads > 0 { cfg.threads } else { galore::runtime::pool::default_threads() }
     );
     let resume = cli.get("resume").map(std::path::PathBuf::from);
     if cfg.dp_workers > 1 {

@@ -25,7 +25,7 @@ pub fn init_params(cfg: &'static ModelConfig, seed: u64) -> ParamStore {
             }
         })
         .collect();
-    ParamStore { cfg, metas, tensors }
+    ParamStore::from_tensors(cfg, metas, tensors)
 }
 
 #[cfg(test)]

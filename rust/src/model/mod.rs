@@ -13,4 +13,4 @@ mod params;
 
 pub use config::{ModelConfig, ALL_CONFIGS, PAPER_CONFIGS, PROXY_CONFIGS};
 pub use init::init_params;
-pub use params::{schema, ParamKind, ParamMeta, ParamStore};
+pub use params::{schema, ParamKind, ParamMeta, ParamStore, WeightPrecision};

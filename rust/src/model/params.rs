@@ -5,8 +5,49 @@
 //! same order. 1-D tensors (norm gains) are stored as (1, n) matrices.
 
 use super::ModelConfig;
+use crate::quant::Bf16Buf;
 use crate::rng::Rng;
 use crate::tensor::Matrix;
+
+/// Master-store precision of the model weights (`weight_precision` run
+/// knob). `Bf16` keeps the persistent weight copy in bf16 (2 bytes/el —
+/// the paper's §5 storage format, Q-GaLore's recipe) while every
+/// consumer — forward/backward artifacts, projector matmuls, optimizer
+/// updates — still reads the f32 working tensors; updates accumulate in
+/// f32 and are rounded through the store once per step
+/// ([`ParamStore::commit`]). Trajectory-shaping: part of the config
+/// fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WeightPrecision {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl WeightPrecision {
+    pub fn parse(s: &str) -> Option<WeightPrecision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(WeightPrecision::F32),
+            "bf16" | "bfloat16" => Some(WeightPrecision::Bf16),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WeightPrecision::F32 => "f32",
+            WeightPrecision::Bf16 => "bf16",
+        }
+    }
+
+    /// Bytes per element of the weight *master store* at this precision.
+    pub fn bytes_per_el(&self) -> usize {
+        match self {
+            WeightPrecision::F32 => 4,
+            WeightPrecision::Bf16 => 2,
+        }
+    }
+}
 
 /// What role a parameter plays — drives GaLore/LoRA targeting (§5.1: only
 /// attention and FFN projections are low-rank-projected).
@@ -67,18 +108,82 @@ pub fn schema(cfg: &ModelConfig) -> Vec<ParamMeta> {
 }
 
 /// All model parameters, in schema order.
+///
+/// `tensors` are the f32 *working* copies every consumer reads. Under
+/// `WeightPrecision::Bf16` the store additionally keeps the bf16 master
+/// copy per tensor, with the invariant that each working tensor equals
+/// the dequantized master store (established by [`ParamStore::set_precision`],
+/// re-established after every update by [`ParamStore::commit`]). Code that
+/// mutates `tensors` directly outside the trainer's update path (e.g.
+/// `perturb`, test fixtures) must call `commit` afterwards if it cares
+/// about the bf16 invariant.
 pub struct ParamStore {
     pub cfg: &'static ModelConfig,
     pub metas: Vec<ParamMeta>,
     pub tensors: Vec<Matrix>,
+    precision: WeightPrecision,
+    /// bf16 master copies (schema order); non-empty iff `precision == Bf16`.
+    store: Vec<Bf16Buf>,
 }
 
 impl ParamStore {
+    /// Wrap existing tensors (schema order) into a store at f32 precision.
+    pub fn from_tensors(
+        cfg: &'static ModelConfig,
+        metas: Vec<ParamMeta>,
+        tensors: Vec<Matrix>,
+    ) -> Self {
+        ParamStore { cfg, metas, tensors, precision: WeightPrecision::F32, store: Vec::new() }
+    }
+
     /// Zero-initialized store (callers usually want `init_params`).
     pub fn zeros(cfg: &'static ModelConfig) -> Self {
         let metas = schema(cfg);
         let tensors = metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
-        ParamStore { cfg, metas, tensors }
+        ParamStore::from_tensors(cfg, metas, tensors)
+    }
+
+    /// Switch the weight master store to `precision`. Entering `Bf16`
+    /// builds the master copies and rounds the working tensors through
+    /// them (the weights *become* bf16-valued — this is the lossy moment;
+    /// re-applying it to already-bf16-valued weights, e.g. after a
+    /// checkpoint restore of a bf16 run, is exact). `F32` drops the
+    /// master copies and keeps the working tensors as they are.
+    pub fn set_precision(&mut self, precision: WeightPrecision) {
+        self.precision = precision;
+        match precision {
+            WeightPrecision::F32 => self.store.clear(),
+            WeightPrecision::Bf16 => {
+                self.store.resize_with(self.tensors.len(), || Bf16Buf::zeros(0));
+                self.commit();
+            }
+        }
+    }
+
+    pub fn precision(&self) -> WeightPrecision {
+        self.precision
+    }
+
+    /// Re-establish the master-store invariant after the working tensors
+    /// changed (one optimizer step's worth of f32-accumulated updates):
+    /// round every working tensor through its bf16 master copy in place.
+    /// No-op at f32 precision; allocation-free once warm; deterministic
+    /// per element, so it composes with the bit-exactness guarantees of
+    /// the parallel step path.
+    pub fn commit(&mut self) {
+        if self.precision == WeightPrecision::Bf16 {
+            for (buf, t) in self.store.iter_mut().zip(self.tensors.iter_mut()) {
+                buf.store_round(&mut t.data);
+            }
+        }
+    }
+
+    /// Bytes held by the weight *master store* at the active precision
+    /// (the Fig. 1 "weight memory" quantity: 2 bytes/el under bf16). The
+    /// f32 working tensors are working memory on this substrate — like
+    /// the projector dequant caches — and are accounted separately.
+    pub fn weight_store_bytes(&self) -> usize {
+        self.numel() * self.precision.bytes_per_el()
     }
 
     pub fn len(&self) -> usize {
@@ -170,6 +275,35 @@ mod tests {
         // Embedding and head excluded.
         assert!(!targets.contains(&0));
         assert!(!targets.contains(&(store.len() - 1)));
+    }
+
+    #[test]
+    fn bf16_store_halves_bytes_and_pins_working_tensors() {
+        let cfg = &PROXY_CONFIGS[0];
+        let mut store = crate::model::init_params(cfg, 7);
+        assert_eq!(store.weight_store_bytes(), store.numel() * 4);
+        store.set_precision(WeightPrecision::Bf16);
+        assert_eq!(store.weight_store_bytes(), store.numel() * 2);
+        // Invariant: every working value is exactly its bf16 round-trip.
+        for t in &store.tensors {
+            for &v in &t.data {
+                assert_eq!(v, crate::quant::bf16_to_f32(crate::quant::f32_to_bf16(v)));
+            }
+        }
+        // Re-entering bf16 on bf16-valued weights is exact (the restore
+        // path relies on this).
+        let snapshot: Vec<Vec<f32>> = store.tensors.iter().map(|t| t.data.clone()).collect();
+        store.set_precision(WeightPrecision::Bf16);
+        for (t, s) in store.tensors.iter().zip(snapshot.iter()) {
+            assert_eq!(&t.data, s);
+        }
+        // commit() rounds a drifted working tensor back through the store.
+        store.tensors[1].data[0] = 1.0 + 2f32.powi(-12);
+        store.commit();
+        assert_eq!(store.tensors[1].data[0], 1.0);
+        // Back to f32: master copies dropped, accounting follows.
+        store.set_precision(WeightPrecision::F32);
+        assert_eq!(store.weight_store_bytes(), store.numel() * 4);
     }
 
     #[test]

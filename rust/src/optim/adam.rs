@@ -158,7 +158,12 @@ impl Optimizer for Adam {
             upd: Matrix::zeros(rows, cols),
             t: 0,
         });
-        Some(super::backend::MomentsMut { m: &mut state.m, v: &mut state.v, t: &mut state.t })
+        Some(super::backend::MomentsMut {
+            m: &mut state.m,
+            v: &mut state.v,
+            t: &mut state.t,
+            upd: &mut state.upd,
+        })
     }
 
     fn state_bytes(&self) -> usize {

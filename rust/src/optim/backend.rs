@@ -51,11 +51,18 @@ use std::collections::HashMap;
 /// Mutable borrow of one parameter's Adam-style moment state, exposed by
 /// optimizers that opt into [`Optimizer::moments_mut`]. `m`/`v` are the
 /// (compact-shaped, for GaLore inners) EMAs; `t` is the 1-based update
-/// count that drives bias correction.
+/// count that drives bias correction; `upd` is the optimizer's reusable
+/// normalized-update buffer (working memory — a substrate that computes
+/// the update out-of-band writes through it so the host-side arithmetic
+/// stays allocation-free). An optimizer returning `Some` asserts its
+/// `step` is exactly paper-default Adam on this state — the contract both
+/// the fused artifacts and GaLore's cross-layer parallel step rely on to
+/// replicate the update away from `&mut self`.
 pub struct MomentsMut<'a> {
     pub m: &'a mut Matrix,
     pub v: &'a mut Matrix,
     pub t: &'a mut u64,
+    pub upd: &'a mut Matrix,
 }
 
 /// Per-parameter scratch for one backend step, owned by `GaLore<O>`'s
@@ -115,6 +122,17 @@ pub trait StepBackend: Send {
     /// backends keep all state in the inner optimizer and report 0.
     fn state_bytes(&self) -> usize {
         0
+    }
+
+    /// Whether `GaLore::step_many` may bypass this backend and run the
+    /// steady-state compact update for many layers concurrently on the
+    /// worker pool. Only sound for a backend whose step entries are
+    /// exactly the shared Rust compact tail — pure per-parameter
+    /// arithmetic on disjoint state. The artifact backend keeps the
+    /// default `false`: its steps serialize through one PJRT engine, and
+    /// bypassing it would silently swap the execution substrate mid-run.
+    fn supports_parallel_step(&self) -> bool {
+        false
     }
 }
 
@@ -179,6 +197,10 @@ impl StepBackend for RustBackend {
 
     fn step_compact_into(&mut self, ctx: StepCtx<'_>, compact: &Matrix) -> Result<(), String> {
         compact_tail(ctx.inner, ctx.param, ctx.proj, compact, ctx.w, ctx.lr_scale, ctx.scratch)
+    }
+
+    fn supports_parallel_step(&self) -> bool {
+        true
     }
 }
 

@@ -37,13 +37,14 @@
 use super::adaptive::{basis_transition_into, RankState, StateRemap};
 use super::backend::{RustBackend, StepBackend, StepCtx, StepScratch};
 use super::rank::{subspace_cosine, RankSchedule, RankScheduleKind, RefreshGate};
-use super::{GradReduceMode, Optimizer};
+use super::{Adam, AdamConfig, GradReduceMode, Optimizer};
 use crate::linalg::{
     extract_left_subspace_into, randomized_svd, sketch_left_subspace_into,
     top_r_left_subspace_into, SvdWorkspace, SKETCH_OVERSAMPLE,
 };
 use crate::quant::DynQuantBuf;
 use crate::rng::Rng;
+use crate::runtime::pool;
 use crate::ser;
 use crate::tensor::{matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix};
 use std::collections::{HashMap, HashSet};
@@ -582,6 +583,79 @@ impl Workspace {
     }
 }
 
+/// One queued parameter update for the cross-layer parallel step
+/// ([`GaLore::step_many`]): raw pointers into state that the caller's
+/// `&mut self` / `&mut [Matrix]` borrows keep exclusively owned for the
+/// whole pool barrier. Every queued task touches a distinct parameter
+/// index, so all pointees are pairwise disjoint; the pool's join barrier
+/// provides the happens-before edge back to the submitter.
+struct ParTask {
+    w: *mut Matrix,
+    grad: *const Matrix,
+    /// Null for an untargeted (full-rank pass-through) parameter.
+    proj: *const Projector,
+    /// Null exactly when `proj` is null.
+    scratch: *mut StepScratch,
+    m: *mut Matrix,
+    v: *mut Matrix,
+    upd: *mut Matrix,
+    t: *mut u64,
+    /// Signed factor on the update applied to `w`: `lr * scale` for a
+    /// targeted parameter (the scratch holds `-N_t`), `-lr` full-rank.
+    lr_apply: f32,
+}
+
+// SAFETY: the pointers are captured from `&mut` borrows the submitter
+// holds across the barrier, tasks are per-parameter disjoint, and nothing
+// is dereferenced after `run` returns (`par_tasks` is cleared next call).
+unsafe impl Send for ParTask {}
+unsafe impl Sync for ParTask {}
+
+impl ParTask {
+    /// Apply this parameter's update — the paper-default-Adam replication
+    /// of the shared `optim::backend::compact_tail` (targeted) or of
+    /// `Adam::step` (full-rank), call-for-call so the result is
+    /// bit-identical to the sequential path. Only sound to call while the
+    /// submitting `step_many` is parked on the pool barrier.
+    fn run(&self) {
+        // SAFETY: see the struct docs — exclusive, disjoint, live for the
+        // duration of the barrier this runs under.
+        unsafe {
+            let w = &mut *self.w;
+            let grad = &*self.grad;
+            let (m, v, upd) = (&mut *self.m, &mut *self.v, &mut *self.upd);
+            let t = &mut *self.t;
+            *t += 1;
+            if self.proj.is_null() {
+                // Full-rank pass-through: exactly `Adam::step` (the
+                // moments borrow asserts paper defaults, no decay).
+                Adam::normalized_update_into(m, v, grad, *t, &AdamConfig::default(), upd);
+                w.axpy(self.lr_apply, upd);
+            } else {
+                let proj = &*self.proj;
+                let scr = &mut *self.scratch;
+                // `compact_tail` with `inner.step(…, lr=1)` inlined: the
+                // zeroed scratch then holds -N_t, projected back and
+                // applied with +lr·α — the same axpy call sequence.
+                proj.project_into(grad, &mut scr.compact_grad);
+                Adam::normalized_update_into(
+                    m,
+                    v,
+                    &scr.compact_grad,
+                    *t,
+                    &AdamConfig::default(),
+                    upd,
+                );
+                scr.scratch.resize(scr.compact_grad.rows, scr.compact_grad.cols);
+                scr.scratch.data.fill(0.0);
+                scr.scratch.axpy(-1.0, upd);
+                proj.project_back_into(&scr.scratch, &mut scr.full_update);
+                w.axpy(self.lr_apply, &scr.full_update);
+            }
+        }
+    }
+}
+
 /// GaLore wrapper around an arbitrary inner optimizer.
 pub struct GaLore<O: Optimizer> {
     pub cfg: GaLoreConfig,
@@ -602,6 +676,14 @@ pub struct GaLore<O: Optimizer> {
     /// Backends are stateless by contract (they write through the inner
     /// optimizer's moments), so this field never appears in `save_state`.
     backend: Box<dyn StepBackend>,
+    /// Cross-layer parallel-step bookkeeping ([`GaLore::step_many`]):
+    /// queued `(param, targeted)` indices and the raw-pointer task records
+    /// handed to the worker pool. Working memory — cleared every call,
+    /// capacity persists, so the parallel step allocates nothing once
+    /// warm. Never serialized (the pointers are only live inside one
+    /// `step_many` call).
+    par_plan: Vec<(usize, bool)>,
+    par_tasks: Vec<ParTask>,
 }
 
 /// Default projector-RNG seed tag; mixed with the run seed in
@@ -634,6 +716,8 @@ impl<O: Optimizer> GaLore<O> {
             svd_ws: SvdWorkspace::new(),
             rng: Rng::new(PROJECTOR_SEED_TAG),
             backend: Box::new(RustBackend),
+            par_plan: Vec::new(),
+            par_tasks: Vec::new(),
         }
     }
 
@@ -873,6 +957,159 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
             }
         }
         res
+    }
+
+    /// Cross-layer parallel stepping: whole layers step concurrently on
+    /// the worker pool (`runtime::pool`), bit-identical to the sequential
+    /// sweep at any thread count (pinned by `tests/hotpath_props.rs`).
+    ///
+    /// A parameter is *queued* for the pool when its step is pure
+    /// per-parameter arithmetic on disjoint state: a targeted parameter
+    /// between refresh boundaries, or an untargeted pass-through — in both
+    /// cases only when the inner optimizer exposes paper-default Adam
+    /// moments ([`Optimizer::moments_mut`]) at the expected shape, which
+    /// is the same contract the fused artifacts rely on to replicate the
+    /// update away from `&mut self`. Everything else — refresh-boundary
+    /// steps (RNG sketch draws, rank decisions, moment remaps, the lazy-
+    /// refresh gate) and non-Adam inners — runs inline in ascending
+    /// parameter order, exactly as the sequential loop would, so the RNG
+    /// stream is untouched by the restructuring. Queued tasks replicate
+    /// the shared compact tail call-for-call (see [`ParTask::run`]);
+    /// nested threaded matmuls inside a task execute inline on that
+    /// worker (the pool's re-entrancy rule), and every output row keeps
+    /// one fixed FMA order, so results are bit-exact at 1, 2, or N
+    /// threads.
+    ///
+    /// On an inline-step error the already-queued (strictly earlier)
+    /// parameters still execute before the error is returned, preserving
+    /// the sequential loop's partial-progress semantics. Gated on
+    /// [`StepBackend::supports_parallel_step`]: the artifact backend
+    /// serializes through one PJRT engine and keeps the sequential sweep.
+    fn step_many(
+        &mut self,
+        weights: &mut [Matrix],
+        grads: &[Matrix],
+        lr: f32,
+    ) -> Result<(), String> {
+        if weights.len() != grads.len() {
+            return Err(format!(
+                "step_many: {} weights vs {} gradients",
+                weights.len(),
+                grads.len()
+            ));
+        }
+        if !self.backend.supports_parallel_step() {
+            for (idx, (w, g)) in weights.iter_mut().zip(grads.iter()).enumerate() {
+                self.step(idx, w, g, lr)?;
+            }
+            return Ok(());
+        }
+        // Pass A: classify in ascending order. Queueable steps only mark
+        // the plan (plus the step-counter bump the sequential path would
+        // do); boundary/fallback steps run inline *now* so refresh RNG
+        // draws happen in exactly the sequential order. Every map entry a
+        // queued task needs (workspace, moments) is created here, before
+        // pass B captures pointers — later insertions may rehash the maps
+        // and move earlier values.
+        self.par_plan.clear();
+        let mut first_err = None;
+        for idx in 0..weights.len() {
+            let grad = &grads[idx];
+            if self.is_target(idx, grad) {
+                let t = self.steps.get(&idx).copied().unwrap_or(0);
+                let boundary =
+                    t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&idx);
+                if !boundary {
+                    let (rows, cols) = grad.shape();
+                    let (cm, cn) = self
+                        .projectors
+                        .get(&idx)
+                        .map(|p| p.compact_shape(rows, cols))
+                        .expect("steady target has a projector");
+                    let queued = matches!(
+                        self.inner.moments_mut(idx, cm, cn),
+                        Some(mom) if mom.m.shape() == (cm, cn) && mom.v.shape() == (cm, cn)
+                    );
+                    if queued {
+                        *self.steps.get_mut(&idx).expect("steady target has a step count") += 1;
+                        self.workspaces.entry(idx).or_insert_with(Workspace::new);
+                        self.par_plan.push((idx, true));
+                        continue;
+                    }
+                }
+            } else {
+                let (rows, cols) = grad.shape();
+                let queued = matches!(
+                    self.inner.moments_mut(idx, rows, cols),
+                    Some(mom) if mom.m.shape() == (rows, cols) && mom.v.shape() == (rows, cols)
+                );
+                if queued {
+                    self.par_plan.push((idx, false));
+                    continue;
+                }
+            }
+            if let Err(e) = self.step(idx, &mut weights[idx], grad, lr) {
+                first_err = Some(e);
+                break;
+            }
+        }
+        // Pass B: capture pointers. All entries exist; nothing below
+        // inserts into any map, so the addresses stay stable until the
+        // barrier completes.
+        self.par_tasks.clear();
+        for &(idx, targeted) in &self.par_plan {
+            let grad = &grads[idx];
+            let (rows, cols) = grad.shape();
+            if targeted {
+                let proj = self.projectors.get(&idx).expect("queued target has a projector");
+                let (cm, cn) = proj.compact_shape(rows, cols);
+                let proj: *const Projector = proj;
+                let scratch: *mut StepScratch = {
+                    let ws = self.workspaces.get_mut(&idx).expect("queued target has a workspace");
+                    &mut ws.step
+                };
+                let mom =
+                    self.inner.moments_mut(idx, cm, cn).expect("queued target exposes moments");
+                self.par_tasks.push(ParTask {
+                    w: &mut weights[idx],
+                    grad,
+                    proj,
+                    scratch,
+                    m: mom.m,
+                    v: mom.v,
+                    upd: mom.upd,
+                    t: mom.t,
+                    lr_apply: lr * self.cfg.scale,
+                });
+            } else {
+                let mom = self
+                    .inner
+                    .moments_mut(idx, rows, cols)
+                    .expect("queued parameter exposes moments");
+                self.par_tasks.push(ParTask {
+                    w: &mut weights[idx],
+                    grad,
+                    proj: std::ptr::null(),
+                    scratch: std::ptr::null_mut(),
+                    m: mom.m,
+                    v: mom.v,
+                    upd: mom.upd,
+                    t: mom.t,
+                    lr_apply: -lr,
+                });
+            }
+        }
+        // Detach the task list so the pool closure borrows no part of
+        // `self` (`mem::take` moves the buffer, no allocation).
+        let tasks = std::mem::take(&mut self.par_tasks);
+        if !tasks.is_empty() {
+            pool::run(tasks.len(), |i| tasks[i].run());
+        }
+        self.par_tasks = tasks;
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     fn state_bytes(&self) -> usize {

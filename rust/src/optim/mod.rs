@@ -95,6 +95,41 @@ pub trait Optimizer: Send {
     fn step(&mut self, param: usize, w: &mut Matrix, grad: &Matrix, lr: f32)
         -> Result<(), String>;
 
+    /// Apply one update to *every* parameter at once (`weights[i]` and
+    /// `grads[i]` are parameter `i` in schema order — the whole roster,
+    /// exactly as the trainer's dense update walk hands it over).
+    ///
+    /// Contract: **bit-identical** to the sequential loop
+    /// `for i { self.step(i, &mut weights[i], &grads[i], lr) }` — the
+    /// default *is* that loop. Implementations may reorder or parallelize
+    /// *across* parameters (per-parameter state is independent), but every
+    /// shared-state interaction (RNG draws at subspace refreshes, shared
+    /// SVD scratch) must happen in ascending parameter order, and each
+    /// parameter's own arithmetic must be unchanged. `GaLore<O>` overrides
+    /// this to step independent layers in parallel across the worker pool
+    /// between refreshes (pinned by the parity tests in
+    /// `rust/tests/hotpath_props.rs`). On error, parameters before the
+    /// failing one may already be stepped — the same partial-progress
+    /// semantics the sequential trainer loop always had.
+    fn step_many(
+        &mut self,
+        weights: &mut [Matrix],
+        grads: &[Matrix],
+        lr: f32,
+    ) -> Result<(), String> {
+        if weights.len() != grads.len() {
+            return Err(format!(
+                "step_many: {} weights vs {} gradients",
+                weights.len(),
+                grads.len()
+            ));
+        }
+        for (idx, (w, g)) in weights.iter_mut().zip(grads.iter()).enumerate() {
+            self.step(idx, w, g, lr)?;
+        }
+        Ok(())
+    }
+
     /// Bytes of optimizer state currently held for all parameters.
     fn state_bytes(&self) -> usize;
 

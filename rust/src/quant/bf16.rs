@@ -59,6 +59,18 @@ impl Bf16Buf {
         }
     }
 
+    /// Commit `xs` into the store and round it through bf16 in one pass:
+    /// afterwards `xs[i] == bf16_to_f32(self.bits[i])` — the master-store
+    /// invariant of the bf16 weight store (`weight_precision = bf16`).
+    /// Resizes the store to `xs` on first use; allocation-free once warm.
+    pub fn store_round(&mut self, xs: &mut [f32]) {
+        self.bits.resize(xs.len(), 0);
+        for (b, x) in self.bits.iter_mut().zip(xs.iter_mut()) {
+            *b = f32_to_bf16(*x);
+            *x = bf16_to_f32(*b);
+        }
+    }
+
     pub fn nbytes(&self) -> usize {
         2 * self.bits.len()
     }
@@ -107,6 +119,21 @@ mod tests {
         assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
         assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
         assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn store_round_establishes_the_master_store_invariant() {
+        let mut rng = Rng::new(3);
+        let mut xs: Vec<f32> = (0..513).map(|_| rng.normal_f32()).collect();
+        let mut buf = Bf16Buf::zeros(0);
+        buf.store_round(&mut xs);
+        for (&x, &b) in xs.iter().zip(buf.bits.iter()) {
+            assert_eq!(x, bf16_to_f32(b));
+        }
+        // Idempotent: bf16-valued f32s commit losslessly.
+        let snapshot = xs.clone();
+        buf.store_round(&mut xs);
+        assert_eq!(xs, snapshot);
     }
 
     #[test]

@@ -20,6 +20,51 @@ pub enum Input<'a> {
     I32(&'a [i32]),
 }
 
+/// Persistent staging for an artifact's input list, so the hot path stops
+/// rebuilding a `Vec<Input>` every call (the last per-step allocation the
+/// training loop made — the counterpart of the trainer's `grad_bufs`).
+/// Usage per call: `begin()` hands out the cleared buffer to push this
+/// call's borrows into; `finish()` clears it again immediately after the
+/// engine call, while the borrowed data is still alive, so no dangling
+/// value ever persists in the warm buffer.
+#[derive(Default)]
+pub struct InputStage {
+    /// Always empty between `finish` and the next `begin`; the `'static`
+    /// here is a placeholder lifetime for the empty buffer, never the
+    /// lifetime of any stored value.
+    bufs: Vec<Input<'static>>,
+}
+
+impl InputStage {
+    pub fn new() -> InputStage {
+        InputStage { bufs: Vec::new() }
+    }
+
+    /// Clear and hand out the staging buffer at the caller's borrow
+    /// lifetime. The returned borrow keeps the stage locked until the
+    /// inputs' last use; call [`InputStage::finish`] right after the
+    /// engine call to drop the stored borrows.
+    pub fn begin<'a>(&'a mut self) -> &'a mut Vec<Input<'a>> {
+        self.bufs.clear();
+        // SAFETY: the Vec is empty, so no existing value is reinterpreted;
+        // `Vec<Input<'static>>` and `Vec<Input<'a>>` have identical layout
+        // (lifetimes are erased at runtime). Values pushed through the
+        // returned reference borrow data for `'a`, and the `&'a mut self`
+        // receiver keeps the stage inaccessible until those borrows end —
+        // after which `finish` clears them before they can dangle.
+        unsafe {
+            std::mem::transmute::<&mut Vec<Input<'static>>, &mut Vec<Input<'a>>>(&mut self.bufs)
+        }
+    }
+
+    /// Drop this call's borrows (keeps capacity). Must be called after
+    /// every `begin` once the engine call returns, while the borrowed
+    /// data is still live.
+    pub fn finish(&mut self) {
+        self.bufs.clear();
+    }
+}
+
 /// A host-side output tensor (always f32 — every artifact returns floats).
 #[derive(Clone, Debug)]
 pub struct Output {

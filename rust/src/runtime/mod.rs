@@ -4,12 +4,14 @@
 //! * [`json`] — minimal JSON parser (offline substitute for serde).
 //! * [`manifest`] — the artifact manifest contract with aot.py.
 //! * [`engine`] — PJRT CPU client, executable cache, literal marshalling.
+//! * [`pool`] — persistent worker pool behind the threaded kernels.
 //!
 //! Integration tests live in `rust/tests/` (they need `make artifacts`).
 
 pub mod engine;
 pub mod json;
 pub mod manifest;
+pub mod pool;
 
-pub use engine::{Engine, Input, Output};
+pub use engine::{Engine, Input, InputStage, Output};
 pub use manifest::{default_dir, ArtifactMeta, DType, Manifest};

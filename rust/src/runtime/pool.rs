@@ -1,0 +1,401 @@
+//! Persistent worker pool for the threaded hot-path kernels.
+//!
+//! The seed code spawned scoped threads per above-threshold matmul
+//! (`std::thread::scope` in `tensor/ops.rs`), paying a clone/spawn/join
+//! round trip of tens of microseconds per call — EXPERIMENTS.md §Perf
+//! iteration 3 names it as the dominant remaining per-step cost. This
+//! module replaces those spawns with a process-wide pool of long-lived
+//! workers and a `run(n_tasks, f)` barrier with the same semantics as a
+//! scope: when `run` returns, every task has finished and all writes made
+//! by the tasks are visible to the caller (the mutex hand-offs provide
+//! the happens-before edges).
+//!
+//! Design constraints, in order:
+//!
+//! * **Allocation-free dispatch.** The optimizer step must stay at zero
+//!   heap allocations once warm (the CI alloc gate counts the calling
+//!   thread). A job is published as a raw `(*const (), unsafe fn)` pair
+//!   pointing at the caller's stack-held closure — no boxing, no channel
+//!   nodes. Lock/wait/notify on Linux are futex-based and do not
+//!   allocate.
+//! * **No dangling-job races.** Workers claim task indices *under the
+//!   job mutex* and only touch the closure pointer for a claim they made
+//!   while the job was the active one; the submitting thread cannot
+//!   return (and pop its closure off the stack) before `done == n_tasks`.
+//! * **Caller participation.** The submitter claims tasks like any
+//!   worker, so `run` completes even on a pool of size 1 (no workers at
+//!   all) and the pool never deadlocks on its own barrier.
+//! * **No nested oversubscription.** A thread-local flag marks pool
+//!   threads and threads already inside `run`; a nested `run` (e.g. a
+//!   threaded matmul issued from inside a cross-layer parallel optimizer
+//!   step) executes inline on that thread instead of re-entering the
+//!   pool. Per-task arithmetic is chunking-independent (each output row
+//!   is computed with one fixed FMA order), so inlining changes nothing
+//!   bit-wise — only the parallel grain.
+//!
+//! Sizing: `GALORE_THREADS` (env var, ≥ 1) overrides the default of
+//! `available_parallelism().min(16)`; `configure()` resizes at runtime
+//! (used by the `threads` RunConfig knob and the parity tests, which
+//! sweep 1/2/N threads in one process). One job runs at a time —
+//! concurrent submitters queue on the job slot, which is exactly the
+//! serialization the scoped-thread version had.
+
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// The single job slot plus pool lifecycle flags, all under one mutex.
+struct JobState {
+    /// Borrowed pointer to the submitter's closure; valid exactly while
+    /// `active` (the submitter blocks in `run` for that whole window).
+    data: *const (),
+    /// Monomorphized trampoline that calls `data` as its concrete `Fn`.
+    call: unsafe fn(*const (), usize),
+    n_tasks: usize,
+    /// Next unclaimed task index (claims happen under the mutex).
+    next: usize,
+    /// Completed task count; `done == n_tasks` releases the submitter.
+    done: usize,
+    active: bool,
+    shutdown: bool,
+}
+
+// SAFETY: `data` is only dereferenced by `call` for task claims made
+// while the job is active, and the closure it points to is `Sync` (bound
+// enforced by `run`) and outlives the job (the submitter blocks in `run`
+// until `done == n_tasks`).
+unsafe impl Send for JobState {}
+
+struct Inner {
+    state: Mutex<JobState>,
+    /// Workers wait here for a job (or shutdown).
+    work_cv: Condvar,
+    /// Submitters wait here for task completion / the job slot.
+    done_cv: Condvar,
+}
+
+/// A pool of `threads - 1` long-lived workers; the submitting thread is
+/// the remaining participant. `threads <= 1` means no workers — `run`
+/// executes inline.
+pub struct Pool {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+thread_local! {
+    /// True on pool workers (always) and on any thread currently inside
+    /// `Pool::run`'s parallel branch — a nested `run` sees it and
+    /// executes inline instead of deadlocking on the busy job slot.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// SAFETY: calls `data` as `&F`. Only instantiated and published by
+/// `run<F>`, which keeps `F` alive and `Sync` for the job's lifetime.
+unsafe fn call_as<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    unsafe { (*(data as *const F))(i) }
+}
+
+unsafe fn call_never(_: *const (), _: usize) {
+    unreachable!("pool job invoked with no active closure")
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    IN_POOL.with(|f| f.set(true));
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.active && st.next < st.n_tasks {
+            let i = st.next;
+            st.next += 1;
+            let (data, call) = (st.data, st.call);
+            drop(st);
+            // SAFETY: claimed under the lock while the job was active, so
+            // the submitter is still parked in `run` and `data` is live.
+            unsafe { call(data, i) };
+            st = inner.state.lock().unwrap();
+            st.done += 1;
+            if st.done == st.n_tasks {
+                inner.done_cv.notify_all();
+            }
+        } else if st.shutdown {
+            // An active job's tasks were drained above before this arm
+            // can be reached, so shutdown never strands a submitter.
+            return;
+        } else {
+            st = inner.work_cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Pool {
+    /// Build a pool that computes with `threads` total threads (the
+    /// submitter plus `threads - 1` spawned workers).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(JobState {
+                data: std::ptr::null(),
+                call: call_never,
+                n_tasks: 0,
+                next: 0,
+                done: 0,
+                active: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("galore-pool-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { inner, workers, threads }
+    }
+
+    /// Total computing threads (submitter included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(n_tasks - 1)` across the pool and wait for
+    /// all of them — a scope-style join barrier. Tasks must write to
+    /// disjoint data (same contract as the scoped-thread chunking this
+    /// replaces). Dispatch performs no heap allocation.
+    pub fn run<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
+        if n_tasks <= 1 || self.threads <= 1 || IN_POOL.with(|g| g.get()) {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+        IN_POOL.with(|g| g.set(true));
+        let inner = &*self.inner;
+        let mut st = inner.state.lock().unwrap();
+        // One job at a time: queue for the slot like the scoped version
+        // serialized on spawn/join.
+        while st.active {
+            st = inner.done_cv.wait(st).unwrap();
+        }
+        st.data = &f as *const F as *const ();
+        st.call = call_as::<F>;
+        st.n_tasks = n_tasks;
+        st.next = 0;
+        st.done = 0;
+        st.active = true;
+        inner.work_cv.notify_all();
+        // Participate: claim tasks alongside the workers.
+        loop {
+            if st.next < st.n_tasks {
+                let i = st.next;
+                st.next += 1;
+                drop(st);
+                f(i);
+                st = inner.state.lock().unwrap();
+                st.done += 1;
+            } else {
+                break;
+            }
+        }
+        while st.done < st.n_tasks {
+            st = inner.done_cv.wait(st).unwrap();
+        }
+        st.active = false;
+        st.data = std::ptr::null();
+        st.call = call_never;
+        drop(st);
+        // Hand the job slot to any queued submitter.
+        inner.done_cv.notify_all();
+        IN_POOL.with(|g| g.set(false));
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// -- process-wide pool -----------------------------------------------------
+
+static GLOBAL: OnceLock<Mutex<Arc<Pool>>> = OnceLock::new();
+
+fn env_threads() -> Option<usize> {
+    let v = std::env::var("GALORE_THREADS").ok()?;
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n),
+        _ => {
+            eprintln!("WARNING: ignoring GALORE_THREADS={v:?} (want an integer >= 1)");
+            None
+        }
+    }
+}
+
+/// Pool width used when nothing overrides it: `GALORE_THREADS` if set
+/// (and >= 1), else `available_parallelism()` capped at 16 (the seed's
+/// cap — beyond that the bandwidth-bound kernels stop scaling).
+pub fn default_threads() -> usize {
+    env_threads()
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+        .min(16)
+        .max(1)
+}
+
+fn global() -> &'static Mutex<Arc<Pool>> {
+    GLOBAL.get_or_init(|| Mutex::new(Arc::new(Pool::new(default_threads()))))
+}
+
+/// Resize the process-wide pool (no-op if already `threads` wide). Jobs
+/// already submitted to the old pool finish on it; its workers drain and
+/// exit once the last reference drops. Used by the `threads` run-config
+/// knob and the thread-count parity tests.
+pub fn configure(threads: usize) {
+    let threads = threads.max(1);
+    let mut g = global().lock().unwrap();
+    if g.threads() != threads {
+        *g = Arc::new(Pool::new(threads));
+    }
+}
+
+/// Width of the process-wide pool — what the kernels in `tensor/ops.rs`
+/// split their row ranges by.
+pub fn num_threads() -> usize {
+    global().lock().unwrap().threads()
+}
+
+/// Run `n_tasks` tasks on the process-wide pool (see [`Pool::run`]).
+/// Allocation-free on the calling thread once the pool exists.
+pub fn run<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
+    let pool = global().lock().unwrap().clone();
+    pool.run(n_tasks, f);
+}
+
+/// A `Send + Sync` raw-pointer wrapper for handing a mutable base pointer
+/// to pool tasks that write disjoint regions (the row-chunked kernels).
+/// The caller asserts disjointness; the pool's join barrier provides the
+/// synchronization.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: SendPtr is a plain address; the tasks sharing it write disjoint
+// ranges and the submitter only reads the data after `run` returns.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = Pool::new(4);
+        for n in [0usize, 1, 2, 3, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn writes_are_visible_after_join() {
+        let pool = Pool::new(3);
+        let mut out = vec![0u64; 257];
+        let base = SendPtr(out.as_mut_ptr());
+        let chunk = 13usize;
+        let n_chunks = out.len().div_ceil(chunk);
+        let len = out.len();
+        pool.run(n_chunks, move |t| {
+            let i0 = t * chunk;
+            let i1 = (i0 + chunk).min(len);
+            // SAFETY: chunks are disjoint; `out` outlives the barrier.
+            let dst = unsafe { std::slice::from_raw_parts_mut(base.0.add(i0), i1 - i0) };
+            for (off, v) in dst.iter_mut().enumerate() {
+                *v = (i0 + off) as u64 * 3 + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            // Nested: must not deadlock on the busy job slot.
+            pool.run(4, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = Pool::new(1);
+        let mut hits = vec![false; 9];
+        let base = SendPtr(hits.as_mut_ptr());
+        pool.run(9, move |i| {
+            // SAFETY: one writer per index.
+            unsafe { *base.0.add(i) = true };
+        });
+        assert!(hits.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn back_to_back_jobs_reuse_the_slot() {
+        let pool = Pool::new(4);
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(8, |i| {
+                total.fetch_add(i + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 100 * 36);
+    }
+
+    #[test]
+    fn configure_resizes_global_pool() {
+        configure(2);
+        assert_eq!(num_threads(), 2);
+        let total = AtomicUsize::new(0);
+        run(10, |i| {
+            total.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 45);
+        configure(3);
+        assert_eq!(num_threads(), 3);
+        configure(default_threads());
+    }
+
+    #[test]
+    fn warm_dispatch_is_allocation_free() {
+        let pool = Pool::new(4);
+        let sink = AtomicUsize::new(0);
+        pool.run(8, |i| {
+            sink.fetch_add(i, Ordering::Relaxed);
+        });
+        let s0 = crate::coordinator::thread_alloc_stats();
+        for _ in 0..10 {
+            pool.run(8, |i| {
+                sink.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        let s1 = crate::coordinator::thread_alloc_stats();
+        assert_eq!(s1.allocs - s0.allocs, 0, "pool dispatch allocated");
+    }
+}

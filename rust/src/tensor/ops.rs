@@ -3,8 +3,14 @@
 //! The hot caller is the GaLore projector path on the Rust side
 //! (`P^T G`, `P N`, and the subspace-iteration refresh `G (G^T Y)`), so
 //! these are written as cache-blocked i-k-j loops with a threaded outer
-//! split for large shapes. Perf iterations on this file are logged in
-//! EXPERIMENTS.md §Perf.
+//! split for large shapes. Above-threshold shapes dispatch row chunks to
+//! the persistent worker pool (`runtime::pool` — sized by
+//! `GALORE_THREADS` / the `threads` run knob) instead of spawning scoped
+//! threads per call; each output row keeps one fixed FMA order, so
+//! results are bit-identical at any thread count. Perf iterations on
+//! this file are logged in EXPERIMENTS.md §Perf.
+
+use crate::runtime::pool::{self, SendPtr};
 
 use super::Matrix;
 
@@ -12,7 +18,7 @@ use super::Matrix;
 const PAR_THRESHOLD: usize = 1 << 21;
 
 fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+    pool::num_threads()
 }
 
 /// C = A @ B. (m,k) x (k,n) -> (m,n). Thin allocating wrapper over
@@ -72,19 +78,21 @@ fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, i1: usize, k: usi
     }
 }
 
-/// Split C's rows across threads; each thread writes a disjoint row range.
+/// Split C's rows into per-thread chunks dispatched on the worker pool;
+/// each task writes a disjoint row range of `c` (rebuilt from the base
+/// pointer — no per-call chunk `Vec`, no allocation).
 fn par_rows(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     let nt = num_threads().min(m).max(1);
     let chunk = m.div_ceil(nt);
-    let chunks: Vec<&mut [f32]> = c.chunks_mut(chunk * n).collect();
-    std::thread::scope(|scope| {
-        for (t, cchunk) in chunks.into_iter().enumerate() {
-            let i0 = t * chunk;
-            let i1 = ((t + 1) * chunk).min(m);
-            scope.spawn(move || {
-                matmul_rows(a, b, cchunk, i0, i1, k, n);
-            });
-        }
+    let n_chunks = m.div_ceil(chunk);
+    let base = SendPtr(c.as_mut_ptr());
+    pool::run(n_chunks, move |t| {
+        let i0 = t * chunk;
+        let i1 = ((t + 1) * chunk).min(m);
+        // SAFETY: row ranges are disjoint across tasks and `c` outlives
+        // the pool's join barrier.
+        let cchunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), (i1 - i0) * n) };
+        matmul_rows(a, b, cchunk, i0, i1, k, n);
     });
 }
 
@@ -107,34 +115,41 @@ pub fn matmul_at_b_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     // Parallelize over output rows (columns of A) when large.
     let work = m * k * n;
     if work < PAR_THRESHOLD {
-        at_b_rows(&a.data, &b.data, &mut c.data, 0, m, k, n);
+        at_b_rows(&a.data, &b.data, &mut c.data, 0, m, k, n, m);
     } else {
         let nt = num_threads().min(m).max(1);
         let chunk = m.div_ceil(nt);
-        let chunks: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
-        std::thread::scope(|scope| {
-            for (t, cchunk) in chunks.into_iter().enumerate() {
-                let j0 = t * chunk;
-                let j1 = ((t + 1) * chunk).min(m);
-                let (ad, bd) = (&a.data, &b.data);
-                scope.spawn(move || {
-                    at_b_rows(ad, bd, cchunk, j0, j1, k, n);
-                });
-            }
+        let n_chunks = m.div_ceil(chunk);
+        let base = SendPtr(c.data.as_mut_ptr());
+        let (ad, bd) = (&a.data, &b.data);
+        pool::run(n_chunks, move |t| {
+            let j0 = t * chunk;
+            let j1 = ((t + 1) * chunk).min(m);
+            // SAFETY: disjoint row ranges; `c` outlives the join barrier.
+            let cchunk =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(j0 * n), (j1 - j0) * n) };
+            at_b_rows(ad, bd, cchunk, j0, j1, k, n, m);
         });
     }
 }
 
-fn at_b_rows(a: &[f32], b: &[f32], c: &mut [f32], j0: usize, j1: usize, k: usize, n: usize) {
-    // c[j - j0, :] = sum_k a[k, j] * b[k, :]
-    let m = j1; // a has `m`+ columns; we only touch j0..j1
-    let acols = {
-        // a is (k, m_total); stride is m_total. We can't know m_total from
-        // slice len alone unless k divides; compute it.
-        debug_assert!(k > 0);
-        a.len() / k
-    };
-    let _ = m;
+/// c[j - j0, :] = Σ_k a[k, j] * b[k, :] for j in j0..j1. `a_stride` is
+/// A's full column count (its row stride) — the chunked callers hand in
+/// the whole A alongside a row-range window of C.
+#[allow(clippy::too_many_arguments)]
+fn at_b_rows(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+    a_stride: usize,
+) {
+    debug_assert_eq!(a.len(), k * a_stride, "A is (k, a_stride) row-major");
+    debug_assert!(j1 <= a_stride && j0 <= j1);
+    let acols = a_stride;
     // 4-way unroll over the k (reduction) axis: each C row is loaded and
     // stored once per 4 B rows instead of once per B row (§Perf iteration 2).
     let mut kk = 0;
@@ -204,14 +219,16 @@ pub fn matmul_a_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     } else {
         let nt = num_threads().min(m).max(1);
         let chunk = m.div_ceil(nt);
-        let chunks: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
-        std::thread::scope(|scope| {
-            for (t, cchunk) in chunks.into_iter().enumerate() {
-                let i0 = t * chunk;
-                let i1 = ((t + 1) * chunk).min(m);
-                let kernel = &kernel;
-                scope.spawn(move || kernel(cchunk, i0, i1));
-            }
+        let n_chunks = m.div_ceil(chunk);
+        let base = SendPtr(c.data.as_mut_ptr());
+        let kernel = &kernel;
+        pool::run(n_chunks, move |t| {
+            let i0 = t * chunk;
+            let i1 = ((t + 1) * chunk).min(m);
+            // SAFETY: disjoint row ranges; `c` outlives the join barrier.
+            let cchunk =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), (i1 - i0) * n) };
+            kernel(cchunk, i0, i1);
         });
     }
 }

@@ -6,8 +6,11 @@
 use galore::coordinator::thread_alloc_stats;
 use galore::linalg::{qr, qr_with, QrScratch};
 use galore::lowrank::{Factorized, Lora, LoraConfig};
-use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer, ProjectorQuant};
+use galore::optim::{
+    Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer, ProjectorQuant, RankScheduleKind,
+};
 use galore::rng::Rng;
+use galore::runtime::pool;
 use galore::tensor::{
     matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into, Matrix,
 };
@@ -197,6 +200,147 @@ fn lowrank_steps_are_allocation_free_after_warmup() {
         0,
         "Factorized steady-state step allocated"
     );
+}
+
+// -- cross-layer parallel stepping is bit-identical to sequential ----------
+
+/// Multi-layer roster exercising every `step_many` code path: a wide
+/// target (Left projection), a tall target (Right), a square target,
+/// a norm-like row vector, and a small square kept out of the explicit
+/// target set (both step full-rank through the inner Adam).
+const PARITY_SHAPES: [(usize, usize); 5] = [(48, 64), (64, 48), (32, 32), (1, 64), (16, 16)];
+
+fn parity_weights(seed: u64) -> Vec<Matrix> {
+    let mut rng = Rng::new(seed);
+    PARITY_SHAPES.iter().map(|&(m, n)| Matrix::randn(m, n, 1.0, &mut rng)).collect()
+}
+
+/// Per-step gradient rosters, identical across every run of a test.
+fn parity_grads(steps: usize, seed: u64) -> Vec<Vec<Matrix>> {
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|s| {
+            PARITY_SHAPES
+                .iter()
+                .enumerate()
+                .map(|(i, &(m, n))| {
+                    Matrix::randn(m, n, 1.0, &mut rng.child((s * PARITY_SHAPES.len() + i) as u64))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// GaLore<Adam> with a decaying rank schedule and a short refresh period,
+/// so an 8-step run crosses two refresh boundaries (t=3: rank 8 -> 4,
+/// t=6: rank 4 -> 2) and the moment-remap path runs between parallel
+/// steady-state steps.
+fn parity_opt() -> GaLore<Adam> {
+    let cfg = GaLoreConfig {
+        rank: 8,
+        update_freq: 3,
+        scale: 0.25,
+        rank_schedule: RankScheduleKind::Decay,
+        rank_floor: 2,
+        rank_decay: 0.5,
+        ..Default::default()
+    };
+    GaLore::new(cfg, Adam::new(AdamConfig::default())).with_targets([0, 1, 2]).with_seed(77)
+}
+
+#[test]
+fn step_many_is_bit_identical_to_sequential_at_any_thread_count() {
+    // The tentpole contract: stepping whole layers in parallel across the
+    // worker pool must reproduce the sequential per-parameter sweep
+    // bit-for-bit — at 1, 2, and N threads, across refresh boundaries and
+    // rank changes (Decay schedule: 8 -> 4 -> 2 over 8 steps).
+    let steps = 8;
+    let grads = parity_grads(steps, 0x9A71);
+
+    // Reference: the sequential sweep the trainer always performed.
+    let mut seq_w = parity_weights(0x5EED);
+    let mut seq = parity_opt();
+    for gs in &grads {
+        for (idx, g) in gs.iter().enumerate() {
+            seq.step(idx, &mut seq_w[idx], g, 0.01).unwrap();
+        }
+    }
+
+    for threads in [1, 2, pool::default_threads()] {
+        pool::configure(threads);
+        let mut par_w = parity_weights(0x5EED);
+        let mut par = parity_opt();
+        for gs in &grads {
+            par.step_many(&mut par_w, gs, 0.01).unwrap();
+        }
+        for (idx, (s, p)) in seq_w.iter().zip(par_w.iter()).enumerate() {
+            assert_eq!(
+                s.data, p.data,
+                "param {idx} diverged from sequential at {threads} threads"
+            );
+        }
+        assert_eq!(
+            seq.state_bytes(),
+            par.state_bytes(),
+            "optimizer state bytes diverged at {threads} threads"
+        );
+    }
+    pool::configure(pool::default_threads());
+}
+
+#[test]
+fn step_many_falls_back_sequentially_without_moment_borrow() {
+    // AdamW (decoupled decay) refuses `moments_mut`, so `step_many` must
+    // route every parameter through the inline sequential path — and still
+    // match the per-parameter sweep exactly.
+    let steps = 6;
+    let grads = parity_grads(steps, 0xFA11);
+    let mk = || {
+        let cfg = GaLoreConfig { rank: 8, update_freq: 3, scale: 0.25, ..Default::default() };
+        GaLore::new(cfg, Adam::new(AdamConfig::adamw(0.1))).with_targets([0, 1, 2]).with_seed(21)
+    };
+
+    let mut seq_w = parity_weights(0xB0B);
+    let mut seq = mk();
+    for gs in &grads {
+        for (idx, g) in gs.iter().enumerate() {
+            seq.step(idx, &mut seq_w[idx], g, 0.01).unwrap();
+        }
+    }
+
+    let mut par_w = parity_weights(0xB0B);
+    let mut par = mk();
+    for gs in &grads {
+        par.step_many(&mut par_w, gs, 0.01).unwrap();
+    }
+    for (idx, (s, p)) in seq_w.iter().zip(par_w.iter()).enumerate() {
+        assert_eq!(s.data, p.data, "param {idx} diverged under the fallback path");
+    }
+    assert_eq!(seq.state_bytes(), par.state_bytes());
+}
+
+#[test]
+fn step_many_is_allocation_free_after_warmup() {
+    // Pool dispatch plus the queued per-parameter tasks must be
+    // allocation-free on the calling thread once workspaces are warm
+    // (update_freq is large so the measured window is pure steady state;
+    // a Fixed schedule keeps compact shapes constant).
+    pool::configure(2);
+    let cfg = GaLoreConfig { rank: 8, update_freq: 1000, scale: 0.25, ..Default::default() };
+    let mut gal =
+        GaLore::new(cfg, Adam::new(AdamConfig::default())).with_targets([0, 1, 2]).with_seed(13);
+    let mut ws = parity_weights(0xA110);
+    let grads = parity_grads(9, 0xC0DE);
+    for gs in grads.iter().take(3) {
+        gal.step_many(&mut ws, gs, 0.01).unwrap();
+    }
+    let s0 = thread_alloc_stats();
+    for gs in grads.iter().skip(3) {
+        gal.step_many(&mut ws, gs, 0.01).unwrap();
+    }
+    let s1 = thread_alloc_stats();
+    pool::configure(pool::default_threads());
+    assert_eq!(s1.allocs - s0.allocs, 0, "warm step_many allocated on the calling thread");
 }
 
 #[test]
