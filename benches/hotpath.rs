@@ -246,7 +246,7 @@ fn main() -> anyhow::Result<()> {
     report(&bench("ring all_reduce 4x1M", || {
         let handles = Ring::new(4).into_handles();
         std::thread::scope(|scope| {
-            for h in handles {
+            for mut h in handles {
                 scope.spawn(move || {
                     let mut data = vec![1.0f32; 1 << 20];
                     h.all_reduce_sum(&mut data).expect("ring healthy");

@@ -89,6 +89,41 @@ impl BackendKind {
     }
 }
 
+/// Which transport carries the data-parallel ring all-reduce
+/// (`coordinator::transport`). A deployment knob, not a trajectory knob:
+/// both transports run the identical collective arithmetic, so results
+/// are bit-identical across them (and the field stays out of the resume
+/// fingerprint, like `threads`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DpTransport {
+    /// In-process channel ring: every replica is a thread of this
+    /// process (the default; what every DP run before the socket
+    /// transport used).
+    #[default]
+    Thread,
+    /// Multi-process ring over Unix-domain sockets: rank 0 (this
+    /// process) binds a rendezvous socket, spawns one worker process per
+    /// extra rank, and wires the ring in join order.
+    Process,
+}
+
+impl DpTransport {
+    pub fn parse(s: &str) -> Option<DpTransport> {
+        match s.to_ascii_lowercase().as_str() {
+            "thread" | "threads" | "channel" => Some(DpTransport::Thread),
+            "process" | "socket" => Some(DpTransport::Process),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DpTransport::Thread => "thread",
+            DpTransport::Process => "process",
+        }
+    }
+}
+
 /// Full run description. Defaults reproduce the paper's §5.1 settings
 /// scaled to the proxy configs.
 #[derive(Clone, Debug)]
@@ -129,6 +164,20 @@ pub struct RunConfig {
     /// refresh boundaries and for non-target parameters). Exact in real
     /// arithmetic; requires a GaLore method.
     pub dp_compress: bool,
+    /// Ring transport for the DP gradient exchange (`dp_transport` /
+    /// `--dp-transport`): in-process channels (default) or worker
+    /// processes over Unix-domain sockets. Bit-identical results either
+    /// way, so — like `threads` — it is NOT part of the fingerprint.
+    pub dp_transport: DpTransport,
+    /// Bucket capacity in MiB for the overlapped all-reduce
+    /// (`dp_bucket_mb` / `--dp-bucket-mb`): each replica's compact
+    /// gradients are split into ≤ this many MiB per bucket and each
+    /// bucket's reduce launches as soon as its parameters finish the
+    /// backward sweep, overlapping communication with the remaining
+    /// update compute. `0` = the stop-the-world barrier exchange. The
+    /// collective *sequence* is identical at any bucket size, so results
+    /// are bit-identical and the knob stays out of the fingerprint.
+    pub dp_bucket_mb: usize,
     /// Write a full-state (v2) checkpoint every N steps (0 = off). Under
     /// data parallelism rank 0 writes; replicas are bit-identical.
     pub checkpoint_every: usize,
@@ -179,6 +228,8 @@ impl RunConfig {
             eval_batches: 4,
             dp_workers: 1,
             dp_compress: false,
+            dp_transport: DpTransport::Thread,
+            dp_bucket_mb: 4,
             checkpoint_every: 0,
             checkpoint_keep_last: 3,
             checkpoint_dir: "checkpoints".into(),
@@ -229,7 +280,11 @@ impl RunConfig {
             self.relora_merge_every,
             // Each step rounds the weights through the store, so the
             // precision shapes the trajectory. `threads` stays out: the
-            // parallel step is bit-identical at any width.
+            // parallel step is bit-identical at any width. `dp_transport`
+            // and `dp_bucket_mb` stay out for the same reason — both
+            // transports and every bucket size run the identical
+            // collective sequence, so the trajectory is bit-identical
+            // across them (pinned by the DP equivalence tests).
             self.weight_precision.label(),
         )
     }
@@ -284,6 +339,13 @@ impl RunConfig {
                     .into(),
             );
         }
+        if self.dp_transport == DpTransport::Process && self.dp_workers < 2 {
+            return Err(
+                "dp_transport = 'process' requires dp_workers >= 2: a single replica \
+                 has no ring to carry over sockets (drop the flag for solo runs)"
+                    .into(),
+            );
+        }
         if self.eval_batches == 0 {
             return Err("eval_batches must be >= 1 (the held-out eval window)".into());
         }
@@ -335,6 +397,13 @@ impl RunConfig {
         }
         if let Some(v) = doc.get_parse("", "dp_compress") {
             cfg.dp_compress = v;
+        }
+        if let Some(v) = doc.get("", "dp_transport") {
+            cfg.dp_transport = DpTransport::parse(v)
+                .ok_or_else(|| format!("unknown dp_transport '{v}' (thread|process)"))?;
+        }
+        if let Some(v) = doc.get_parse("", "dp_bucket_mb") {
+            cfg.dp_bucket_mb = v;
         }
         if let Some(v) = doc.get("", "weight_precision") {
             cfg.weight_precision = WeightPrecision::parse(v)
@@ -571,6 +640,57 @@ mod tests {
             TomlDoc::parse("model = \"nano\"\nmethod = \"galore\"\ndp_compress = true\n").unwrap();
         let err = RunConfig::from_toml(&solo).unwrap_err();
         assert!(err.contains("dp_workers >= 2"), "{err}");
+    }
+
+    #[test]
+    fn dp_transport_parses_and_requires_workers() {
+        let doc = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"galore\"\ndp_workers = 2\n\
+             dp_transport = \"process\"\ndp_bucket_mb = 8\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.dp_transport, DpTransport::Process);
+        assert_eq!(cfg.dp_bucket_mb, 8);
+        // Defaults: thread transport, 4 MiB buckets.
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        assert_eq!(base.dp_transport, DpTransport::Thread);
+        assert_eq!(base.dp_bucket_mb, 4);
+        // "socket" is an accepted spelling; junk is not.
+        assert_eq!(DpTransport::parse("socket"), Some(DpTransport::Process));
+        assert_eq!(DpTransport::parse("thread"), Some(DpTransport::Thread));
+        assert_eq!(DpTransport::parse("tcp"), None);
+        // A process ring needs at least two ranks.
+        let solo = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"galore\"\ndp_transport = \"process\"\n",
+        )
+        .unwrap();
+        let err = RunConfig::from_toml(&solo).unwrap_err();
+        assert!(err.contains("dp_workers >= 2"), "{err}");
+        // dp_bucket_mb = 0 selects the barrier exchange: valid anywhere.
+        let barrier = TomlDoc::parse("model = \"nano\"\ndp_bucket_mb = 0\n").unwrap();
+        assert_eq!(RunConfig::from_toml(&barrier).unwrap().dp_bucket_mb, 0);
+    }
+
+    #[test]
+    fn dp_transport_and_bucket_stay_out_of_fingerprint() {
+        // Both knobs are bit-exactness-preserving deployment choices: a
+        // checkpoint written by a thread-transport run must resume under
+        // the socket transport (and any bucket size) without a mismatch.
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        let fp = base.fingerprint();
+        let mut proc = base.clone();
+        proc.dp_workers = 2;
+        proc.dp_transport = DpTransport::Process;
+        let mut threaded = base.clone();
+        threaded.dp_workers = 2;
+        assert_eq!(threaded.fingerprint(), proc.fingerprint());
+        let mut bucketed = base.clone();
+        bucketed.dp_bucket_mb = 64;
+        assert_eq!(fp, bucketed.fingerprint());
+        let mut barrier = base.clone();
+        barrier.dp_bucket_mb = 0;
+        assert_eq!(fp, barrier.fingerprint());
     }
 
     #[test]

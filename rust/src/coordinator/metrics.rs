@@ -110,6 +110,15 @@ pub struct Metrics {
     total_comm_f32s: u64,
     /// Reduced payload of the most recent step (f32 elements).
     pub last_step_comm_f32s: u64,
+    /// Wall time this worker spent inside all-reduce collectives (on the
+    /// comm thread for the bucketed/overlapped path). Observational like
+    /// `exec_time`: restarts at resume, never checkpointed.
+    pub comm_time: std::time::Duration,
+    /// Wall time the *compute* thread spent blocked waiting on reduced
+    /// buckets. For the barrier path this equals `comm_time`; the gap
+    /// `comm_time - comm_wait_time` is the communication hidden behind
+    /// compute (the overlap-efficiency numerator in `benches/dp_comm.rs`).
+    pub comm_wait_time: std::time::Duration,
 }
 
 impl Default for Metrics {
@@ -131,6 +140,8 @@ impl Metrics {
             last_step_alloc_bytes: 0,
             total_comm_f32s: 0,
             last_step_comm_f32s: 0,
+            comm_time: std::time::Duration::ZERO,
+            comm_wait_time: std::time::Duration::ZERO,
         }
     }
 

@@ -8,7 +8,11 @@
 //! * [`fused`] — thin artifact-discovery/validation glue for the fused
 //!   backend (shape gathering + engine construction).
 //! * [`parallel`] — synchronous data-parallel workers with a chunked ring
-//!   all-reduce over channels.
+//!   all-reduce (barrier or bucketed/overlapped), generic over the ring
+//!   transport.
+//! * [`transport`] — the ring transports: in-process channels and
+//!   multi-process Unix-domain sockets (rank-0 rendezvous, worker
+//!   processes spawned by `--dp-transport process`).
 //! * [`schedule`] — warmup + cosine LR (Appendix C.1).
 //! * [`metrics`] — loss/ppl/throughput tracking, CSV sinks for figures.
 //! * [`checkpoint`] — versioned full-training-state checkpoints (v2:
@@ -21,11 +25,16 @@ pub mod metrics;
 pub mod parallel;
 pub mod schedule;
 pub mod trainer;
+pub mod transport;
 
 pub use metrics::{thread_alloc_stats, AllocStats, Metrics};
 pub use parallel::{
-    collect_worker_results, exchange_grads, train_data_parallel,
-    train_data_parallel_resumable, DpResult, Ring, RingClosed, RingHandle, RING_ABORT_MSG,
+    collect_worker_results, exchange_grads, exchange_grads_overlapped, plan_grads,
+    train_data_parallel, train_data_parallel_resumable, train_dp_over, DpResult, OverlapTimes,
+};
+pub use transport::{
+    all_reduce_mean, all_reduce_sum, local_socket_ring, Ring, RingClosed, RingHandle, SocketRing,
+    Transport, RING_ABORT_MSG,
 };
 pub use schedule::LrSchedule;
 pub use trainer::{build_optimizer, Trainer};

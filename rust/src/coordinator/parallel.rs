@@ -1,7 +1,6 @@
-//! Data-parallel training: worker threads with a chunked **ring
-//! all-reduce** over channels (the §5.5 scaling story: GaLore's small
-//! states make data parallelism the cheap axis — gradients are the only
-//! cross-worker traffic).
+//! Data-parallel training: replicas over a chunked **ring all-reduce**
+//! (the §5.5 scaling story: GaLore's small states make data parallelism
+//! the cheap axis — gradients are the only cross-worker traffic).
 //!
 //! Topology: W workers, each owning a full model replica, its own PJRT
 //! engine and a disjoint shard stream. Per step each worker computes
@@ -9,6 +8,15 @@
 //! hops each), and every worker applies the identical optimizer update —
 //! replicas stay bit-identical without weight broadcasts, exactly like
 //! synchronous DDP.
+//!
+//! **Transports** ([`coordinator::transport`](crate::coordinator::transport)):
+//! the worker loop is generic over [`Transport`], so the same code drives
+//! the in-process channel ring (`dp_transport = thread`, workers are
+//! threads of this process) and the multi-process Unix-domain-socket ring
+//! (`dp_transport = process`: rank 0 is this process, ranks 1..W are
+//! spawned `galore` child processes wired through a rendezvous socket).
+//! The collectives' chunk arithmetic lives in the transport module once,
+//! so switching transports never changes a single reduced bit.
 //!
 //! **Compact-gradient exchange** (`cfg.dp_compress`): between subspace
 //! refreshes a GaLore-targeted layer's update consumes only the projected
@@ -22,12 +30,14 @@
 //! is the optimizer's ([`Optimizer::grad_reduce_mode`]); this module just
 //! executes the plan and accounts the traffic.
 //!
-//! **Step backends** compose with all of this: each worker's
-//! `build_optimizer` plugs the configured `optim::backend::StepBackend`
-//! into its replica (the artifact backend brings its own PJRT engine per
-//! worker), and the compact entry point is backend-agnostic — so
-//! `--backend artifact` (né `--fused`) now runs under `dp_workers > 1`
-//! *and* `dp_compress`, a combination the pre-backend design rejected.
+//! **Bucketed overlap** (`cfg.dp_bucket_mb`): instead of one
+//! stop-the-world exchange per step, [`exchange_grads_overlapped`] splits
+//! the planned payload into fixed-size buckets and reduces them on a
+//! dedicated comm thread while the update path applies already-reduced
+//! buckets — comm hides behind compute. The collective *sequence* is
+//! identical to the barrier path (same parameters, same order, loss
+//! last), so replicas and loss curves stay bit-identical; only wall-clock
+//! changes. [`OverlapTimes`] reports how much comm was hidden.
 //!
 //! Adaptive-rank runs (`galore.rank_schedule`) need no extra coordination:
 //! rank decisions and lazy-refresh gating are deterministic functions of
@@ -38,197 +48,258 @@
 //! gradient is reduced, so compact exchange composes with every schedule.
 //!
 //! Failure handling: collectives are fallible. A worker that errors (or
-//! panics) drops its channel handles; neighbours observe [`RingClosed`]
-//! on their next hop, shut down in turn, and the aggregator surfaces the
-//! *first root-cause* worker error instead of a process-wide recv panic.
+//! panics, or — process transport — dies) drops its ring endpoints;
+//! neighbours observe [`RingClosed`] on their next hop, shut down in
+//! turn, and the aggregator surfaces the *first root-cause* worker error
+//! instead of a process-wide recv panic or a hang.
 
-use crate::config::RunConfig;
+use crate::config::{DpTransport, RunConfig};
+use crate::coordinator::transport::{
+    all_reduce_mean, join_rendezvous, read_frame, write_frame, Rendezvous, Ring, RingClosed,
+    SocketRing, Transport, RENDEZVOUS_ENV, RING_ABORT_MSG,
+};
 use crate::coordinator::Trainer;
 use crate::data::{DataLoader, SyntheticCorpus};
 use crate::optim::{GradReduceMode, Optimizer};
 use crate::runtime::{default_dir, Engine};
 use crate::tensor::Matrix;
-use anyhow::{anyhow, Result};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use anyhow::{anyhow, bail, Result};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
-/// Marker text shared by every ring-shutdown error. The aggregator uses
-/// it to demote these secondary failures below the root-cause worker
-/// error (a `RingClosed` is a symptom of *another* worker dying).
-pub const RING_ABORT_MSG: &str =
-    "ring all-reduce aborted: a peer worker shut down mid-collective";
-
-/// The ring collective could not complete because a peer dropped its
-/// handles — it returned an error or panicked. Not a data error: the
-/// observing worker should abort its replica and let the aggregator
-/// surface the peer's failure.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct RingClosed;
-
-impl std::fmt::Display for RingClosed {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(RING_ABORT_MSG)
-    }
-}
-
-impl std::error::Error for RingClosed {}
-
-/// Channel mesh for a ring of `n` participants exchanging f32 chunks.
-pub struct Ring {
-    /// senders[i] sends to worker (i+1) % n.
-    senders: Vec<Sender<Vec<f32>>>,
-    receivers: Vec<Receiver<Vec<f32>>>,
-}
-
-impl Ring {
-    pub fn new(n: usize) -> Ring {
-        let mut senders = Vec::with_capacity(n);
-        let mut receivers = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        Ring { senders, receivers }
-    }
-
-    /// Split into per-worker handles (must be called once).
-    pub fn into_handles(self) -> Vec<RingHandle> {
-        let n = self.senders.len();
-        let mut senders: Vec<Option<Sender<Vec<f32>>>> =
-            self.senders.into_iter().map(Some).collect();
-        let mut receivers: Vec<Option<Receiver<Vec<f32>>>> =
-            self.receivers.into_iter().map(Some).collect();
-        (0..n)
-            .map(|i| RingHandle {
-                rank: i,
-                world: n,
-                // worker i sends on channel i (to i+1), receives on channel
-                // (i-1+n)%n (from i-1).
-                to_next: senders[i].take().unwrap(),
-                from_prev: receivers[(i + n - 1) % n].take().unwrap(),
-            })
-            .collect()
-    }
-}
-
-pub struct RingHandle {
-    pub rank: usize,
-    pub world: usize,
-    to_next: Sender<Vec<f32>>,
-    from_prev: Receiver<Vec<f32>>,
-}
-
-impl RingHandle {
-    /// In-place ring all-reduce (sum) over `data`, chunked into `world`
-    /// segments: W−1 reduce-scatter hops then W−1 all-gather hops.
-    /// Errors with [`RingClosed`] when a peer has dropped its handles —
-    /// the collective cannot complete and the caller should shut down.
-    pub fn all_reduce_sum(&self, data: &mut [f32]) -> Result<(), RingClosed> {
-        let w = self.world;
-        if w == 1 {
-            return Ok(());
-        }
-        let n = data.len();
-        let chunk = n.div_ceil(w);
-        let bounds =
-            |c: usize| -> (usize, usize) { ((c * chunk).min(n), ((c + 1) * chunk).min(n)) };
-        // Reduce-scatter: after step s, worker owns the fully-reduced chunk
-        // (rank - s) mod w at the end.
-        for s in 0..w - 1 {
-            let send_c = (self.rank + w - s) % w;
-            let (a, b) = bounds(send_c);
-            self.to_next.send(data[a..b].to_vec()).map_err(|_| RingClosed)?;
-            let recv = self.from_prev.recv().map_err(|_| RingClosed)?;
-            let recv_c = (self.rank + w - s - 1) % w;
-            let (a, b) = bounds(recv_c);
-            for (d, r) in data[a..b].iter_mut().zip(recv.iter()) {
-                *d += r;
-            }
-        }
-        // All-gather the reduced chunks around the ring.
-        for s in 0..w - 1 {
-            let send_c = (self.rank + 1 + w - s) % w;
-            let (a, b) = bounds(send_c);
-            self.to_next.send(data[a..b].to_vec()).map_err(|_| RingClosed)?;
-            let recv = self.from_prev.recv().map_err(|_| RingClosed)?;
-            let recv_c = (self.rank + w - s) % w;
-            let (a, b) = bounds(recv_c);
-            data[a..b].copy_from_slice(&recv);
-        }
-        Ok(())
-    }
-
-    /// Average instead of sum.
-    pub fn all_reduce_mean(&self, data: &mut [f32]) -> Result<(), RingClosed> {
-        self.all_reduce_sum(data)?;
-        let inv = 1.0 / self.world as f32;
-        for v in data.iter_mut() {
-            *v *= inv;
-        }
-        Ok(())
-    }
-}
-
-/// Execute one step's gradient exchange according to the per-parameter
-/// communication plan (written into `plan`, schema order): a full ring
-/// average for [`GradReduceMode::Full`] entries, project-then-average
-/// into `compact[idx]` for [`GradReduceMode::Compact`] ones. With
-/// `compress` off every parameter reduces full (the plan is still
-/// recorded, all-`Full`). Returns the logical reduced payload in f32
+/// Build one step's per-parameter communication plan (written into
+/// `plan`, schema order) and project compact-reduced gradients into
+/// `compact`. With `compress` off every parameter is planned `Full` (the
+/// plan is still recorded). Returns the logical reduced payload in f32
 /// elements — the per-step communication the metrics account; ring wire
 /// traffic per worker is `2·(W−1)/W` of it.
 ///
 /// `compact` and `plan` are caller-owned workspaces reused across steps:
-/// zero steady-state allocations once warm, matching the hot-path
-/// contract of the single-process loop.
-pub fn exchange_grads(
-    handle: &RingHandle,
+/// zero steady-state allocations once warm.
+pub fn plan_grads(
+    opt: &dyn Optimizer,
+    grads: &[Matrix],
+    compact: &mut Vec<Matrix>,
+    plan: &mut Vec<GradReduceMode>,
+    compress: bool,
+) -> u64 {
+    if compact.len() < grads.len() {
+        compact.resize_with(grads.len(), || Matrix::zeros(0, 0));
+    }
+    plan.clear();
+    let mut payload = 0u64;
+    for (idx, g) in grads.iter().enumerate() {
+        let mode = if compress {
+            opt.grad_reduce_mode(idx, g.rows, g.cols)
+        } else {
+            GradReduceMode::Full
+        };
+        if let GradReduceMode::Compact { .. } = mode {
+            // The plan and the projection come from the same optimizer
+            // state, so a refusal here is a contract violation — fail
+            // loudly rather than reduce a stale buffer.
+            assert!(
+                opt.project_grad_into(idx, g, &mut compact[idx]),
+                "optimizer planned a compact reduce for param {idx} but refused \
+                 to project its gradient"
+            );
+        }
+        payload += mode.payload_f32s(g.rows, g.cols) as u64;
+        plan.push(mode);
+    }
+    payload
+}
+
+/// Execute one step's gradient exchange according to the per-parameter
+/// communication plan ([`plan_grads`], which this calls first): a full
+/// ring average for [`GradReduceMode::Full`] entries, project-then-average
+/// into `compact[idx]` for [`GradReduceMode::Compact`] ones. Barrier
+/// semantics: returns only when every parameter has been reduced. Returns
+/// the logical reduced payload in f32 elements.
+pub fn exchange_grads<T: Transport + ?Sized>(
+    tp: &mut T,
     opt: &dyn Optimizer,
     grads: &mut [Matrix],
     compact: &mut Vec<Matrix>,
     plan: &mut Vec<GradReduceMode>,
     compress: bool,
 ) -> Result<u64, RingClosed> {
-    if compact.len() < grads.len() {
-        compact.resize_with(grads.len(), || Matrix::zeros(0, 0));
-    }
-    plan.clear();
-    let mut payload = 0u64;
+    let payload = plan_grads(opt, grads, compact, plan, compress);
     for (idx, g) in grads.iter_mut().enumerate() {
-        let mode = if compress {
-            opt.grad_reduce_mode(idx, g.rows, g.cols)
-        } else {
-            GradReduceMode::Full
-        };
-        match mode {
-            GradReduceMode::Full => {
-                handle.all_reduce_mean(&mut g.data)?;
-            }
-            GradReduceMode::Compact { .. } => {
-                // The plan and the projection come from the same optimizer
-                // state, so a refusal here is a contract violation — fail
-                // loudly rather than reduce a stale buffer.
-                assert!(
-                    opt.project_grad_into(idx, g, &mut compact[idx]),
-                    "optimizer planned a compact reduce for param {idx} but refused \
-                     to project its gradient"
-                );
-                handle.all_reduce_mean(&mut compact[idx].data)?;
-            }
+        match plan[idx] {
+            GradReduceMode::Full => all_reduce_mean(tp, &mut g.data)?,
+            GradReduceMode::Compact { .. } => all_reduce_mean(tp, &mut compact[idx].data)?,
         }
-        payload += mode.payload_f32s(g.rows, g.cols) as u64;
-        plan.push(mode);
     }
     Ok(payload)
 }
 
+/// Greedy bucket plan over the payload sizes in `plan`: ascending
+/// end-indices into the parameter list, closing a bucket when adding the
+/// next parameter would exceed `cap_f32s` (a parameter larger than the
+/// cap gets a bucket of its own). The last entry is always `plan.len()`.
+fn plan_buckets(plan: &[GradReduceMode], grads: &[Matrix], cap_f32s: usize) -> Vec<usize> {
+    let mut ends = Vec::new();
+    let mut cur = 0usize;
+    let mut count = 0usize;
+    for (i, mode) in plan.iter().enumerate() {
+        let p = mode.payload_f32s(grads[i].rows, grads[i].cols);
+        if count > 0 && cur + p > cap_f32s {
+            ends.push(i);
+            cur = 0;
+            count = 0;
+        }
+        cur += p;
+        count += 1;
+    }
+    ends.push(plan.len());
+    ends
+}
+
+/// Wall-clock split of one overlapped exchange (rank-local).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapTimes {
+    /// Time the comm thread spent inside ring collectives.
+    pub comm: Duration,
+    /// Time the update thread actually stalled waiting for a reduced
+    /// bucket. `comm − wait` is the comm hidden behind compute.
+    pub wait: Duration,
+}
+
+impl OverlapTimes {
+    /// Comm time hidden behind compute.
+    pub fn hidden(&self) -> Duration {
+        self.comm.saturating_sub(self.wait)
+    }
+
+    /// Overlap efficiency: `hidden / comm` in `[0, 1]`; `0.0` when there
+    /// was no communication at all.
+    pub fn efficiency(&self) -> f64 {
+        if self.comm.is_zero() {
+            0.0
+        } else {
+            self.hidden().as_secs_f64() / self.comm.as_secs_f64()
+        }
+    }
+}
+
+/// Bucketed, overlapped gradient exchange: split the planned payload into
+/// buckets of at most `bucket_cap_f32s` elements ([`plan_buckets`]),
+/// reduce them on a dedicated comm thread in plan order, and invoke
+/// `apply(start, grads, compact)` on each bucket's parameter range
+/// `[start, start + grads.len())` as soon as its reduction lands — the
+/// update work overlaps the remaining buckets' communication. The loss
+/// scalar is reduced last; the mean is returned with the measured
+/// [`OverlapTimes`].
+///
+/// `plan` and `compact` must already be populated by [`plan_grads`]
+/// (`compact` sliced to `grads.len()`). The collective *sequence* is
+/// identical on every rank and identical to [`exchange_grads`] + a loss
+/// reduce, so bucketing never changes a reduced bit — replicas running
+/// different bucket caps (or none) stay in lockstep.
+///
+/// On an `apply` error the remaining buckets are still drained and
+/// reduced — peers need this rank's hops to complete their own step —
+/// and the apply error takes precedence over any subsequent ring error.
+pub fn exchange_grads_overlapped<T: Transport + ?Sized>(
+    tp: &mut T,
+    grads: &mut [Matrix],
+    compact: &mut [Matrix],
+    plan: &[GradReduceMode],
+    bucket_cap_f32s: usize,
+    loss: f32,
+    apply: &mut dyn FnMut(usize, &[Matrix], &[Matrix]) -> Result<()>,
+) -> Result<(f32, OverlapTimes)> {
+    if plan.len() != grads.len() || compact.len() != grads.len() {
+        bail!(
+            "overlapped exchange: plan covers {} of {} parameters ({} compact buffers)",
+            plan.len(),
+            grads.len(),
+            compact.len()
+        );
+    }
+    let ends = plan_buckets(plan, grads, bucket_cap_f32s.max(1));
+    // Slice grads/compact into disjoint per-bucket chunks the comm thread
+    // can own mutably while the update thread applies finished buckets.
+    let mut chunks: Vec<(usize, &mut [Matrix], &mut [Matrix])> = Vec::with_capacity(ends.len());
+    {
+        let mut g_rest: &mut [Matrix] = grads;
+        let mut c_rest: &mut [Matrix] = compact;
+        let mut start = 0usize;
+        for &end in &ends {
+            let (g_head, g_tail) = g_rest.split_at_mut(end - start);
+            let (c_head, c_tail) = c_rest.split_at_mut(end - start);
+            chunks.push((start, g_head, c_head));
+            g_rest = g_tail;
+            c_rest = c_tail;
+            start = end;
+        }
+    }
+    let n_buckets = chunks.len();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut wait = Duration::ZERO;
+    let mut apply_err: Option<anyhow::Error> = None;
+    let comm_res: Result<(f32, Duration), RingClosed> = std::thread::scope(|scope| {
+        let tp = &mut *tp;
+        let comm = scope.spawn(move || -> Result<(f32, Duration), RingClosed> {
+            let mut comm_time = Duration::ZERO;
+            for (start, gs, cs) in chunks {
+                let t = Instant::now();
+                for i in 0..gs.len() {
+                    match plan[start + i] {
+                        GradReduceMode::Full => all_reduce_mean(tp, &mut gs[i].data)?,
+                        GradReduceMode::Compact { .. } => {
+                            all_reduce_mean(tp, &mut cs[i].data)?
+                        }
+                    }
+                }
+                comm_time += t.elapsed();
+                // The update thread may have stopped applying (apply
+                // error); never let that stall the ring — peers still
+                // need this rank's hops.
+                let _ = tx.send((start, gs, cs));
+            }
+            let t = Instant::now();
+            let mut loss_buf = [loss];
+            all_reduce_mean(tp, &mut loss_buf)?;
+            comm_time += t.elapsed();
+            Ok((loss_buf[0], comm_time))
+        });
+        for _ in 0..n_buckets {
+            let t = Instant::now();
+            match rx.recv() {
+                Ok((start, gs, cs)) => {
+                    wait += t.elapsed();
+                    if apply_err.is_none() {
+                        if let Err(e) = apply(start, gs, cs) {
+                            apply_err = Some(e);
+                        }
+                    }
+                }
+                // Comm thread bailed early; its join result carries why.
+                Err(_) => break,
+            }
+        }
+        comm.join().unwrap_or_else(|p| std::panic::resume_unwind(p))
+    });
+    if let Some(e) = apply_err {
+        return Err(e);
+    }
+    let (mean_loss, comm) = comm_res?;
+    Ok((mean_loss, OverlapTimes { comm, wait }))
+}
+
 /// Result of a data-parallel run.
 pub struct DpResult {
+    /// Rank-0 mean training loss over the last 10 steps.
     pub final_train_loss: f32,
+    /// Rank-0 held-out eval loss after the final step.
     pub final_eval_loss: f32,
     /// Global tokens consumed across all replicas over the whole training
     /// run, including any segment before a checkpoint restore.
     pub total_tokens: u64,
+    /// Wall-clock of the whole run (spawn to aggregate).
     pub elapsed: std::time::Duration,
     /// Rank-0 optimizer-state bytes at the end of the run (per replica;
     /// shrinks over time under adaptive rank schedules).
@@ -242,9 +313,24 @@ pub struct DpResult {
     /// Rank-0's reduced payload on the final step (the steady-state
     /// per-step figure when the run does not end on a refresh boundary).
     pub comm_f32s_last_step: u64,
+    /// Rank-0's cumulative wall-clock inside ring collectives.
+    pub comm_time: Duration,
+    /// Rank-0's cumulative wall-clock the update path actually stalled on
+    /// communication. Equals `comm_time` on the barrier path; smaller
+    /// under bucketed overlap (`dp_bucket_mb > 0`), where
+    /// `comm_time − comm_wait_time` was hidden behind compute.
+    pub comm_wait_time: Duration,
 }
 
-/// What one worker thread reports back on success.
+impl DpResult {
+    /// Overlap efficiency over the whole run:
+    /// `(comm_time − comm_wait_time) / comm_time` in `[0, 1]`.
+    pub fn overlap_efficiency(&self) -> f64 {
+        OverlapTimes { comm: self.comm_time, wait: self.comm_wait_time }.efficiency()
+    }
+}
+
+/// What one worker reports back on success.
 struct WorkerOutcome {
     train_loss: f32,
     eval_loss: f32,
@@ -253,6 +339,34 @@ struct WorkerOutcome {
     state_bytes: usize,
     comm_f32s_total: u64,
     comm_f32s_last_step: u64,
+    comm_nanos: u64,
+    wait_nanos: u64,
+}
+
+fn save_outcome(out: &mut Vec<u8>, o: &WorkerOutcome) {
+    crate::ser::put_f32(out, o.train_loss);
+    crate::ser::put_f32(out, o.eval_loss);
+    crate::ser::put_u64(out, o.session_tokens);
+    crate::ser::put_u64(out, o.resumed_tokens);
+    crate::ser::put_usize(out, o.state_bytes);
+    crate::ser::put_u64(out, o.comm_f32s_total);
+    crate::ser::put_u64(out, o.comm_f32s_last_step);
+    crate::ser::put_u64(out, o.comm_nanos);
+    crate::ser::put_u64(out, o.wait_nanos);
+}
+
+fn load_outcome(r: &mut crate::ser::Reader) -> Result<WorkerOutcome, String> {
+    Ok(WorkerOutcome {
+        train_loss: r.f32()?,
+        eval_loss: r.f32()?,
+        session_tokens: r.u64()?,
+        resumed_tokens: r.u64()?,
+        state_bytes: r.usize()?,
+        comm_f32s_total: r.u64()?,
+        comm_f32s_last_step: r.u64()?,
+        comm_nanos: r.u64()?,
+        wait_nanos: r.u64()?,
+    })
 }
 
 /// Synchronous data-parallel training of `cfg` over `cfg.dp_workers`
@@ -270,90 +384,52 @@ pub fn train_data_parallel(cfg: &RunConfig) -> Result<DpResult> {
 /// (`cfg.checkpoint_every`) and **every replica restores** from the same
 /// file on resume — the loader position it carries (the shard counter)
 /// applies to each worker's own seed-offset corpus.
+///
+/// `cfg.dp_transport` picks the substrate: `thread` runs the workers as
+/// threads of this process over the channel ring; `process` spawns
+/// `dp_workers − 1` child processes of the current executable and wires
+/// them (plus this process as rank 0) over the Unix-socket ring.
 pub fn train_data_parallel_resumable(
     cfg: &RunConfig,
     resume: Option<&std::path::Path>,
 ) -> Result<DpResult> {
     let world = cfg.dp_workers.max(1);
-    let handles = Ring::new(world).into_handles();
-    let t0 = std::time::Instant::now();
+    match cfg.dp_transport {
+        DpTransport::Thread => train_dp_over(cfg, Ring::new(world).into_handles(), resume),
+        DpTransport::Process => train_dp_process(cfg, world, resume),
+    }
+}
+
+/// Run the full data-parallel training loop over caller-provided ring
+/// transports, one worker thread per transport (rank order). This is the
+/// transport seam: production paths hand it channel handles or let
+/// [`train_data_parallel_resumable`] drive the process transport, tests
+/// hand it `local_socket_ring` ends to exercise the socket protocol
+/// in-process.
+pub fn train_dp_over<T: Transport>(
+    cfg: &RunConfig,
+    transports: Vec<T>,
+    resume: Option<&Path>,
+) -> Result<DpResult> {
+    let world = transports.len();
+    let t0 = Instant::now();
     let results: Vec<Result<WorkerOutcome>> = std::thread::scope(|scope| {
         let mut joins = Vec::new();
-        for handle in handles {
+        for mut tp in transports {
             let cfg = cfg.clone();
             let resume = resume.map(|p| p.to_path_buf());
-            joins.push(scope.spawn(move || -> Result<WorkerOutcome> {
-                let engine = Engine::new(default_dir())?;
-                // Disjoint shard streams per worker: offset the corpus seed.
-                let corpus =
-                    SyntheticCorpus::new(cfg.model.vocab, cfg.seed ^ 0xDA7A ^ (handle.rank as u64) << 32);
-                let loader = DataLoader::synthetic(corpus, cfg.batch, cfg.model.seq);
-                let mut trainer = Trainer::new(cfg.clone(), engine, loader)?;
-                if let Some(path) = &resume {
-                    trainer.restore_checkpoint(path)?;
-                }
-                let mut compact_bufs: Vec<Matrix> = Vec::new();
-                let mut plan: Vec<GradReduceMode> = Vec::new();
-                while trainer.step < cfg.steps {
-                    let step = trainer.step;
-                    let batch = trainer.loader.next_batch();
-                    // Gradients land in the trainer's persistent buffers
-                    // and are ring-reduced in place — no per-step clones.
-                    let loss = trainer.compute_grads_into(&batch)?;
-                    // `mem::take` detaches the buffers (no allocation) so
-                    // the optimizer can plan/project against them while the
-                    // trainer is mutably borrowed below.
-                    let mut bufs = std::mem::take(&mut trainer.grad_bufs);
-                    let comm = exchange_grads(
-                        &handle,
-                        trainer.opt.as_ref(),
-                        &mut bufs,
-                        &mut compact_bufs,
-                        &mut plan,
-                        cfg.dp_compress,
-                    )?;
-                    let mut loss_buf = [loss];
-                    handle.all_reduce_mean(&mut loss_buf)?;
-                    let lr = trainer.schedule.at(step);
-                    let a0 = crate::coordinator::metrics::thread_alloc_stats();
-                    let applied = trainer.apply_updates_planned(&bufs, &plan, &compact_bufs, lr);
-                    trainer.grad_bufs = bufs;
-                    applied?;
-                    let a1 = crate::coordinator::metrics::thread_alloc_stats();
-                    trainer
-                        .metrics
-                        .log_step_allocs(a1.allocs - a0.allocs, a1.bytes - a0.bytes);
-                    trainer.metrics.log_step_comm(comm);
-                    trainer.metrics.log_step(step, loss_buf[0], lr, batch.n_tokens());
-                    trainer.step += 1;
-                    if handle.rank == 0
-                        && cfg.checkpoint_every > 0
-                        && trainer.step % cfg.checkpoint_every == 0
-                    {
-                        trainer.save_periodic_checkpoint()?;
-                    }
-                }
-                let eval = trainer.eval(cfg.eval_batches)?;
-                Ok(WorkerOutcome {
-                    train_loss: trainer.metrics.tail_loss(10).unwrap_or(f32::NAN),
-                    eval_loss: eval,
-                    session_tokens: trainer.metrics.session_tokens(),
-                    resumed_tokens: trainer.metrics.resumed_tokens(),
-                    state_bytes: trainer.optimizer_state_bytes(),
-                    comm_f32s_total: trainer.metrics.comm_f32s_total(),
-                    comm_f32s_last_step: trainer.metrics.last_step_comm_f32s,
-                })
-            }));
+            joins.push(scope.spawn(move || dp_worker_loop(&cfg, &mut tp, resume.as_deref())));
         }
         joins
             .into_iter()
             .enumerate()
             .map(|(rank, j)| match j.join() {
                 Ok(r) => r,
-                // A panicking worker drops its ring handles like an erroring
-                // one; convert the payload into an error so neighbours'
-                // RingClosed shutdowns and this root cause aggregate the
-                // same way instead of poisoning the whole process.
+                // A panicking worker drops its ring endpoints like an
+                // erroring one; convert the payload into an error so
+                // neighbours' RingClosed shutdowns and this root cause
+                // aggregate the same way instead of poisoning the whole
+                // process.
                 Err(payload) => Err(anyhow!(
                     "worker {rank} panicked: {}",
                     panic_message(payload.as_ref())
@@ -361,7 +437,144 @@ pub fn train_data_parallel_resumable(
             })
             .collect()
     });
-    let elapsed = t0.elapsed();
+    aggregate_outcomes(results, world, t0.elapsed())
+}
+
+/// One replica's full training run over its ring transport. Shared by the
+/// thread workers, the process-mode host (rank 0) and the process-mode
+/// children.
+fn dp_worker_loop<T: Transport + ?Sized>(
+    cfg: &RunConfig,
+    tp: &mut T,
+    resume: Option<&Path>,
+) -> Result<WorkerOutcome> {
+    let engine = Engine::new(default_dir())?;
+    // Disjoint shard streams per worker: offset the corpus seed.
+    let corpus =
+        SyntheticCorpus::new(cfg.model.vocab, cfg.seed ^ 0xDA7A ^ (tp.rank() as u64) << 32);
+    let loader = DataLoader::synthetic(corpus, cfg.batch, cfg.model.seq);
+    let mut trainer = Trainer::new(cfg.clone(), engine, loader)?;
+    if let Some(path) = resume {
+        trainer.restore_checkpoint(path)?;
+    }
+    let mut compact_bufs: Vec<Matrix> = Vec::new();
+    let mut plan: Vec<GradReduceMode> = Vec::new();
+    // Layerwise mode models strictly sequential per-layer consumption —
+    // its reverse walk is incompatible with bucket-order application, so
+    // it keeps the barrier exchange.
+    let bucketed = cfg.dp_bucket_mb > 0 && !cfg.layerwise && tp.world() > 1;
+    let bucket_cap_f32s = cfg.dp_bucket_mb.saturating_mul(1 << 20) / 4;
+    while trainer.step < cfg.steps {
+        let step = trainer.step;
+        let batch = trainer.loader.next_batch();
+        // Gradients land in the trainer's persistent buffers and are
+        // ring-reduced in place — no per-step clones.
+        let loss = trainer.compute_grads_into(&batch)?;
+        let lr = trainer.schedule.at(step);
+        // `mem::take` detaches the buffers (no allocation) so the
+        // optimizer can plan/project against them while the trainer is
+        // mutably borrowed below.
+        let mut bufs = std::mem::take(&mut trainer.grad_bufs);
+        let comm;
+        let mean_loss;
+        let a0;
+        if bucketed {
+            comm = plan_grads(
+                trainer.opt.as_ref(),
+                &bufs,
+                &mut compact_bufs,
+                &mut plan,
+                cfg.dp_compress,
+            );
+            let n = bufs.len();
+            let total_bytes: usize = bufs.iter().map(|g| 4 * g.len()).sum();
+            // Allocation accounting brackets the whole overlapped
+            // exchange: the per-bucket updates run interleaved with it on
+            // this thread (comm-thread hop buffers land on its own
+            // counter, not here).
+            a0 = crate::coordinator::metrics::thread_alloc_stats();
+            let exchanged = {
+                let trainer = &mut trainer;
+                let plan_ref = &plan;
+                let mut apply = |start: usize, gs: &[Matrix], cs: &[Matrix]| {
+                    trainer.apply_bucket(start, gs, &plan_ref[start..start + gs.len()], cs, lr)
+                };
+                exchange_grads_overlapped(
+                    tp,
+                    &mut bufs,
+                    &mut compact_bufs[..n],
+                    &plan,
+                    bucket_cap_f32s,
+                    loss,
+                    &mut apply,
+                )
+            };
+            trainer.grad_bufs = bufs;
+            let (ml, times) = exchanged?;
+            // Buckets stepped the weights; round them through the bf16
+            // master store once per applied step, like the barrier walk.
+            trainer.params.commit();
+            trainer.peak_grad_bytes = trainer.peak_grad_bytes.max(total_bytes);
+            trainer.metrics.comm_time += times.comm;
+            trainer.metrics.comm_wait_time += times.wait;
+            mean_loss = ml;
+        } else {
+            let t = Instant::now();
+            comm = exchange_grads(
+                tp,
+                trainer.opt.as_ref(),
+                &mut bufs,
+                &mut compact_bufs,
+                &mut plan,
+                cfg.dp_compress,
+            )?;
+            let mut loss_buf = [loss];
+            all_reduce_mean(tp, &mut loss_buf)?;
+            let d = t.elapsed();
+            a0 = crate::coordinator::metrics::thread_alloc_stats();
+            let applied = trainer.apply_updates_planned(&bufs, &plan, &compact_bufs, lr);
+            trainer.grad_bufs = bufs;
+            applied?;
+            // Barrier semantics: every comm nanosecond is waited on.
+            trainer.metrics.comm_time += d;
+            trainer.metrics.comm_wait_time += d;
+            mean_loss = loss_buf[0];
+        }
+        let a1 = crate::coordinator::metrics::thread_alloc_stats();
+        trainer
+            .metrics
+            .log_step_allocs(a1.allocs - a0.allocs, a1.bytes - a0.bytes);
+        trainer.metrics.log_step_comm(comm);
+        trainer.metrics.log_step(step, mean_loss, lr, batch.n_tokens());
+        trainer.step += 1;
+        if tp.rank() == 0
+            && cfg.checkpoint_every > 0
+            && trainer.step % cfg.checkpoint_every == 0
+        {
+            trainer.save_periodic_checkpoint()?;
+        }
+    }
+    let eval = trainer.eval(cfg.eval_batches)?;
+    Ok(WorkerOutcome {
+        train_loss: trainer.metrics.tail_loss(10).unwrap_or(f32::NAN),
+        eval_loss: eval,
+        session_tokens: trainer.metrics.session_tokens(),
+        resumed_tokens: trainer.metrics.resumed_tokens(),
+        state_bytes: trainer.optimizer_state_bytes(),
+        comm_f32s_total: trainer.metrics.comm_f32s_total(),
+        comm_f32s_last_step: trainer.metrics.last_step_comm_f32s,
+        comm_nanos: trainer.metrics.comm_time.as_nanos() as u64,
+        wait_nanos: trainer.metrics.comm_wait_time.as_nanos() as u64,
+    })
+}
+
+/// Fold per-rank outcomes into the run result (rank-0 metrics + global
+/// token attribution).
+fn aggregate_outcomes(
+    results: Vec<Result<WorkerOutcome>>,
+    world: usize,
+    elapsed: Duration,
+) -> Result<DpResult> {
     let outcomes = collect_worker_results(results)?;
     // Global token accounting: every replica consumed `session_tokens`
     // in this process, plus — by the lockstep-replica invariant — the
@@ -372,8 +585,8 @@ pub fn train_data_parallel_resumable(
     // restored counter into every worker implicitly, which is only
     // correct while every replica's per-step token count stays equal.
     let resumed = outcomes[0].resumed_tokens;
-    let total_tokens = outcomes.iter().map(|o| o.session_tokens).sum::<u64>()
-        + world as u64 * resumed;
+    let total_tokens =
+        outcomes.iter().map(|o| o.session_tokens).sum::<u64>() + world as u64 * resumed;
     let r0 = &outcomes[0];
     Ok(DpResult {
         final_train_loss: r0.train_loss,
@@ -383,12 +596,239 @@ pub fn train_data_parallel_resumable(
         final_state_bytes: r0.state_bytes,
         comm_f32s_total: r0.comm_f32s_total,
         comm_f32s_last_step: r0.comm_f32s_last_step,
+        comm_time: Duration::from_nanos(r0.comm_nanos),
+        comm_wait_time: Duration::from_nanos(r0.wait_nanos),
     })
+}
+
+// -- process transport -------------------------------------------------------
+
+/// Spawn `world − 1` copies of the current executable (same argv, plus
+/// [`RENDEZVOUS_ENV`]) and rendezvous them into a socket ring with this
+/// process as rank 0. Returns the host's ring end, the per-child control
+/// sockets (index `i` ↔ rank `i + 1`), the child handles, and the temp
+/// rendezvous dir (caller removes it when done).
+#[allow(clippy::type_complexity)]
+fn spawn_process_ring(
+    world: usize,
+) -> Result<(SocketRing, Vec<UnixStream>, Vec<std::process::Child>, PathBuf)> {
+    let dir = std::env::temp_dir().join(format!("galore-dp-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let rdv = Rendezvous::bind(&dir, world)
+        .map_err(|e| anyhow!("binding DP rendezvous in {}: {e}", dir.display()))?;
+    let exe = std::env::current_exe()?;
+    let args: Vec<std::ffi::OsString> = std::env::args_os().skip(1).collect();
+    let mut children: Vec<std::process::Child> = Vec::new();
+    for _ in 1..world {
+        match std::process::Command::new(&exe)
+            .args(&args)
+            .env(RENDEZVOUS_ENV, rdv.path())
+            .spawn()
+        {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                kill_children(&mut children);
+                let _ = std::fs::remove_dir_all(&dir);
+                bail!("failed to spawn DP worker process: {e}");
+            }
+        }
+    }
+    match rdv.establish(Duration::from_secs(30)) {
+        Ok((ring, ctrls)) => Ok((ring, ctrls, children, dir)),
+        Err(e) => {
+            kill_children(&mut children);
+            let _ = std::fs::remove_dir_all(&dir);
+            bail!("DP rendezvous failed: {e}");
+        }
+    }
+}
+
+fn kill_children(children: &mut [std::process::Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Multi-process data-parallel training: this process is rank 0.
+fn train_dp_process(cfg: &RunConfig, world: usize, resume: Option<&Path>) -> Result<DpResult> {
+    if world < 2 {
+        bail!("dp_transport = process needs dp_workers >= 2 (got {world})");
+    }
+    let (mut ring, ctrls, mut children, dir) = spawn_process_ring(world)?;
+    let t0 = Instant::now();
+    let host = dp_worker_loop(cfg, &mut ring, resume);
+    // Close the host's ring endpoints *before* collecting reports: if the
+    // host failed mid-collective, children would otherwise block on their
+    // next hop forever instead of erroring out and reporting.
+    drop(ring);
+    let mut results: Vec<Result<WorkerOutcome>> = vec![host];
+    for (i, mut ctrl) in ctrls.into_iter().enumerate() {
+        let rank = i + 1;
+        results.push(read_report(&mut ctrl, load_outcome).unwrap_or_else(|e| {
+            Err(anyhow!(
+                "worker process (rank {rank}) exited without reporting a result: {e}"
+            ))
+        }));
+    }
+    for c in children.iter_mut() {
+        let _ = c.wait();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    aggregate_outcomes(results, world, t0.elapsed())
+}
+
+/// Entry point for a spawned DP worker process (rank ≥ 1): join the
+/// host's rendezvous, run the replica loop, and report the outcome (or
+/// error) on the control socket. `cfg` is rebuilt from the child's argv
+/// by `main` — identical to the host's by construction.
+pub fn dp_process_child(cfg: &RunConfig, rendezvous: &Path, resume: Option<&Path>) -> Result<()> {
+    let (mut ring, mut ctrl) = join_rendezvous(rendezvous)
+        .map_err(|e| anyhow!("joining DP rendezvous at {}: {e}", rendezvous.display()))?;
+    let outcome = dp_worker_loop(cfg, &mut ring, resume);
+    drop(ring);
+    send_report(&mut ctrl, outcome, save_outcome).map(|_| ())
+}
+
+/// Serialize a worker result (tag 0 + payload on success, tag 1 + message
+/// on error) and frame it onto the control socket. Returns the original
+/// error, if any, so the child process can exit nonzero.
+fn send_report<O>(
+    ctrl: &mut UnixStream,
+    outcome: Result<O>,
+    save: fn(&mut Vec<u8>, &O),
+) -> Result<O> {
+    let mut frame = Vec::new();
+    match &outcome {
+        Ok(o) => {
+            crate::ser::put_u8(&mut frame, 0);
+            save(&mut frame, o);
+        }
+        Err(e) => {
+            crate::ser::put_u8(&mut frame, 1);
+            crate::ser::put_str(&mut frame, &e.to_string());
+        }
+    }
+    // Best-effort on the error path: the report is a courtesy, the exit
+    // code carries the failure regardless.
+    let sent = write_frame(ctrl, &frame);
+    if outcome.is_ok() {
+        sent.map_err(|e| anyhow!("reporting DP worker result: {e}"))?;
+    }
+    outcome
+}
+
+/// Read one worker report frame and decode it with `load`. An `Err` from
+/// this function means the *transport* failed (worker died before
+/// reporting); an inner `Err` is the worker's own reported failure.
+fn read_report<O>(
+    ctrl: &mut UnixStream,
+    load: fn(&mut crate::ser::Reader) -> Result<O, String>,
+) -> std::io::Result<Result<O>> {
+    let frame = read_frame(ctrl)?;
+    let mut r = crate::ser::Reader::new(&frame);
+    let parse = |e: String| std::io::Error::other(format!("malformed worker report: {e}"));
+    match r.u8().map_err(parse)? {
+        0 => Ok(Ok(load(&mut r).map_err(parse)?)),
+        1 => {
+            let msg = r.str().map_err(parse)?;
+            Ok(Err(anyhow!("{msg}")))
+        }
+        t => Err(std::io::Error::other(format!("unknown worker report tag {t}"))),
+    }
+}
+
+// -- dp-smoke (process-transport harness) ------------------------------------
+
+/// Per-step element count of the dp-smoke workload.
+const SMOKE_LEN: usize = 8192;
+
+/// Deterministic per-rank smoke data for one step.
+fn smoke_data(rank: usize, step: usize) -> Vec<f32> {
+    (0..SMOKE_LEN).map(|i| ((rank * SMOKE_LEN + i + step * 31) % 97) as f32).collect()
+}
+
+/// The dp-smoke per-rank loop: `steps` all-reduce-mean rounds over
+/// deterministic data, folding the reduced values into an f64 checksum
+/// (bit-identical on every rank — the ring reduces every chunk in a fixed
+/// order). `die_at` makes this rank exit(1) before the given step — the
+/// dropout fault injection.
+fn smoke_loop<T: Transport + ?Sized>(
+    tp: &mut T,
+    steps: usize,
+    die_at: Option<usize>,
+) -> Result<f64, RingClosed> {
+    let mut checksum = 0f64;
+    for step in 0..steps {
+        if die_at == Some(step) {
+            std::process::exit(1);
+        }
+        let mut data = smoke_data(tp.rank(), step);
+        all_reduce_mean(tp, &mut data)?;
+        checksum += data.iter().map(|&v| v as f64).sum::<f64>();
+    }
+    Ok(checksum)
+}
+
+fn save_checksum(out: &mut Vec<u8>, sum: &f64) {
+    crate::ser::put_f64(out, *sum);
+}
+
+fn load_checksum(r: &mut crate::ser::Reader) -> Result<f64, String> {
+    r.f64()
+}
+
+/// Host side of `galore dp-smoke`: spawn `world − 1` worker processes
+/// (argv pass-through, so `--die-rank`/`--die-step` reach them), run the
+/// smoke loop as rank 0, and verify every rank reported the bit-identical
+/// checksum. A worker that dies mid-run surfaces as a root-cause error
+/// naming its rank — never a hang.
+pub fn dp_smoke_host(world: usize, steps: usize) -> Result<()> {
+    if world < 2 {
+        bail!("dp-smoke needs --world >= 2 (got {world})");
+    }
+    let (mut ring, ctrls, mut children, dir) = spawn_process_ring(world)?;
+    let host = smoke_loop(&mut ring, steps, None).map_err(anyhow::Error::from);
+    drop(ring);
+    let mut results: Vec<Result<f64>> = vec![host];
+    for (i, mut ctrl) in ctrls.into_iter().enumerate() {
+        let rank = i + 1;
+        results.push(read_report(&mut ctrl, load_checksum).unwrap_or_else(|e| {
+            Err(anyhow!(
+                "dp-smoke worker process (rank {rank}) exited without reporting a result: {e}"
+            ))
+        }));
+    }
+    for c in children.iter_mut() {
+        let _ = c.wait();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    let sums = collect_worker_results(results)?;
+    let first = sums[0];
+    for (rank, s) in sums.iter().enumerate() {
+        if s.to_bits() != first.to_bits() {
+            bail!("dp-smoke checksum mismatch: rank 0 got {first}, rank {rank} got {s}");
+        }
+    }
+    println!("dp-smoke ok: world={world} steps={steps} checksum={first}");
+    Ok(())
+}
+
+/// Worker side of `galore dp-smoke` (invoked when [`RENDEZVOUS_ENV`] is
+/// set): join, run the smoke loop — exiting at `--die-step` if this
+/// worker was assigned `--die-rank` — and report the checksum.
+pub fn dp_smoke_child(rendezvous: &Path, steps: usize, die: Option<(usize, usize)>) -> Result<()> {
+    let (mut ring, mut ctrl) = join_rendezvous(rendezvous)
+        .map_err(|e| anyhow!("joining dp-smoke rendezvous at {}: {e}", rendezvous.display()))?;
+    let die_at = die.and_then(|(rank, step)| (ring.rank() == rank).then_some(step));
+    let outcome = smoke_loop(&mut ring, steps, die_at).map_err(anyhow::Error::from);
+    drop(ring);
+    send_report(&mut ctrl, outcome, save_checksum).map(|_| ())
 }
 
 /// Fold per-rank worker results into their outcomes, or the run's error.
 /// When workers failed, surface the first **root cause**: a failing
-/// worker drops its ring handles, which makes every neighbour's next
+/// worker drops its ring endpoints, which makes every neighbour's next
 /// collective fail with a [`RingClosed`]-derived error — those shutdown
 /// echoes are demoted below the first error that is *not* one, so the
 /// run reports "rank 0: checkpoint save failed", not "rank 1: ring
@@ -436,96 +876,6 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 mod tests {
     use super::*;
 
-    fn run_ring(world: usize, len: usize) {
-        let handles = Ring::new(world).into_handles();
-        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
-            let joins: Vec<_> = handles
-                .into_iter()
-                .map(|h| {
-                    scope.spawn(move || {
-                        let mut data: Vec<f32> =
-                            (0..len).map(|i| (h.rank * len + i) as f32).collect();
-                        h.all_reduce_sum(&mut data).unwrap();
-                        data
-                    })
-                })
-                .collect();
-            joins.into_iter().map(|j| j.join().unwrap()).collect()
-        });
-        // Expected: elementwise sum over workers.
-        for i in 0..len {
-            let want: f32 = (0..world).map(|r| (r * len + i) as f32).sum();
-            for (r, res) in results.iter().enumerate() {
-                assert!((res[i] - want).abs() < 1e-4, "w{world} len{len} rank{r} idx{i}");
-            }
-        }
-    }
-
-    #[test]
-    fn ring_all_reduce_correct_various_sizes() {
-        for world in [1, 2, 3, 4, 7] {
-            for len in [1, 5, 16, 103] {
-                run_ring(world, len);
-            }
-        }
-    }
-
-    #[test]
-    fn mean_divides_by_world() {
-        let handles = Ring::new(4).into_handles();
-        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
-            let joins: Vec<_> = handles
-                .into_iter()
-                .map(|h| {
-                    scope.spawn(move || {
-                        let mut data = vec![(h.rank + 1) as f32; 8];
-                        h.all_reduce_mean(&mut data).unwrap();
-                        data
-                    })
-                })
-                .collect();
-            joins.into_iter().map(|j| j.join().unwrap()).collect()
-        });
-        for res in results {
-            for v in res {
-                assert!((v - 2.5).abs() < 1e-5);
-            }
-        }
-    }
-
-    #[test]
-    fn dead_peer_yields_ring_closed_not_panic() {
-        // Worker 1 "fails" before its first collective (drops its handle);
-        // the survivors' all-reduce must come back as RingClosed, not hang
-        // or panic.
-        let handles = Ring::new(3).into_handles();
-        let results: Vec<Result<(), RingClosed>> = std::thread::scope(|scope| {
-            let joins: Vec<_> = handles
-                .into_iter()
-                .map(|h| {
-                    scope.spawn(move || {
-                        if h.rank == 1 {
-                            return Err(RingClosed); // simulate an early worker error
-                        }
-                        let mut data = vec![1.0f32; 64];
-                        // Loop: the first collective may partially succeed
-                        // on buffered sends; shutdown must surface within a
-                        // bounded number of rounds.
-                        for _ in 0..4 {
-                            h.all_reduce_sum(&mut data)?;
-                        }
-                        Ok(())
-                    })
-                })
-                .collect();
-            joins.into_iter().map(|j| j.join().unwrap()).collect()
-        });
-        assert!(
-            results.iter().filter(|r| r.is_err()).count() >= 2,
-            "survivors did not observe the shutdown: {results:?}"
-        );
-    }
-
     #[test]
     fn panic_payloads_render() {
         let p: Box<dyn std::any::Any + Send> = Box::new("boom");
@@ -534,5 +884,132 @@ mod tests {
         assert_eq!(panic_message(p.as_ref()), "kaboom");
         let p: Box<dyn std::any::Any + Send> = Box::new(42usize);
         assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
+    }
+
+    #[test]
+    fn bucket_plan_closes_on_capacity_and_covers_all_params() {
+        let grads: Vec<Matrix> =
+            [(2, 3), (2, 3), (4, 4), (1, 2), (1, 2), (1, 2)] // payloads 6,6,16,2,2,2
+                .iter()
+                .map(|&(r, c)| Matrix::zeros(r, c))
+                .collect();
+        let plan = vec![GradReduceMode::Full; grads.len()];
+        // cap 12: [0,1], [2] (oversized alone), [3,4,5]
+        assert_eq!(plan_buckets(&plan, &grads, 12), vec![2, 3, 6]);
+        // huge cap: one bucket
+        assert_eq!(plan_buckets(&plan, &grads, 1 << 20), vec![6]);
+        // tiny cap: every param alone
+        assert_eq!(plan_buckets(&plan, &grads, 1), vec![1, 2, 3, 4, 5, 6]);
+        // compact payloads count, not full shapes
+        let cplan = vec![
+            GradReduceMode::Compact { rows: 1, cols: 2 }, // payload 2
+            GradReduceMode::Full,                         // payload 6
+            GradReduceMode::Compact { rows: 1, cols: 2 },
+        ];
+        assert_eq!(plan_buckets(&cplan, &grads[..3], 8), vec![2, 3]);
+    }
+
+    #[test]
+    fn overlapped_exchange_means_match_and_buckets_apply_in_order() {
+        let world = 2;
+        let n_params = 5;
+        let handles = Ring::new(world).into_handles();
+        let results: Vec<(Vec<Matrix>, f32, Vec<(usize, usize)>)> =
+            std::thread::scope(|scope| {
+                let joins: Vec<_> = handles
+                    .into_iter()
+                    .map(|mut h| {
+                        scope.spawn(move || {
+                            let rank = h.rank;
+                            let mut grads: Vec<Matrix> = (0..n_params)
+                                .map(|i| {
+                                    let mut m = Matrix::zeros(3, 4);
+                                    for (j, v) in m.data.iter_mut().enumerate() {
+                                        *v = (rank * 100 + i * 10 + j) as f32;
+                                    }
+                                    m
+                                })
+                                .collect();
+                            let mut compact: Vec<Matrix> =
+                                (0..n_params).map(|_| Matrix::zeros(0, 0)).collect();
+                            let plan = vec![GradReduceMode::Full; n_params];
+                            let mut applied: Vec<(usize, usize)> = Vec::new();
+                            let mut apply =
+                                |start: usize, gs: &[Matrix], _cs: &[Matrix]| -> Result<()> {
+                                    applied.push((start, gs.len()));
+                                    Ok(())
+                                };
+                            // cap 24 f32s over 12-f32 params → buckets of 2.
+                            let (loss, _times) = exchange_grads_overlapped(
+                                &mut h,
+                                &mut grads,
+                                &mut compact,
+                                &plan,
+                                24,
+                                rank as f32,
+                                &mut apply,
+                            )
+                            .unwrap();
+                            (grads, loss, applied)
+                        })
+                    })
+                    .collect();
+                joins.into_iter().map(|j| j.join().unwrap()).collect()
+            });
+        for (grads, loss, applied) in &results {
+            assert_eq!(*loss, 0.5, "loss mean over ranks 0 and 1");
+            assert_eq!(applied, &vec![(0, 2), (2, 2), (4, 1)]);
+            for (i, g) in grads.iter().enumerate() {
+                for (j, v) in g.data.iter().enumerate() {
+                    let want = 50.0 + (i * 10 + j) as f32; // mean of rank 0/1 values
+                    assert_eq!(*v, want, "param {i} elem {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_exchange_apply_error_wins_and_ring_stays_drained() {
+        let world = 2;
+        let handles = Ring::new(world).into_handles();
+        let errs: Vec<String> = std::thread::scope(|scope| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|mut h| {
+                    scope.spawn(move || {
+                        let mut grads: Vec<Matrix> =
+                            (0..4).map(|_| Matrix::zeros(2, 2)).collect();
+                        let mut compact: Vec<Matrix> =
+                            (0..4).map(|_| Matrix::zeros(0, 0)).collect();
+                        let plan = vec![GradReduceMode::Full; 4];
+                        let mut apply =
+                            |start: usize, _gs: &[Matrix], _cs: &[Matrix]| -> Result<()> {
+                                if start == 0 {
+                                    bail!("synthetic apply failure");
+                                }
+                                Ok(())
+                            };
+                        exchange_grads_overlapped(
+                            &mut h,
+                            &mut grads,
+                            &mut compact,
+                            &plan,
+                            4, // one param per bucket
+                            0.0,
+                            &mut apply,
+                        )
+                        .unwrap_err()
+                        .to_string()
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        // Both ranks fail on the *first* bucket's apply, yet neither hangs:
+        // the comm thread keeps reducing the remaining buckets so the peer's
+        // collectives complete, and the apply error is what surfaces.
+        for e in errs {
+            assert!(e.contains("synthetic apply failure"), "{e}");
+        }
     }
 }

@@ -195,7 +195,7 @@ impl Trainer {
 
     fn compute_grads_to(&mut self, batch: &Batch, staging: bool) -> Result<f32> {
         let artifact = self.cfg.train_artifact();
-        let inputs = self.input_stage.begin();
+        let mut inputs = self.input_stage.begin();
         for t in &self.params.tensors {
             inputs.push(Input::F32(&t.data));
         }
@@ -204,9 +204,11 @@ impl Trainer {
         let t0 = std::time::Instant::now();
         let outputs = self
             .engine
-            .execute(&artifact, inputs)
+            .execute(&artifact, &inputs)
             .with_context(|| format!("executing {artifact}"));
-        self.input_stage.finish();
+        // The guard clears the stage on drop — including when `outputs`
+        // is an error and the `?` below returns early.
+        drop(inputs);
         let outputs = outputs?;
         self.metrics.exec_time += t0.elapsed();
         let loss = outputs[0].scalar();
@@ -263,6 +265,34 @@ impl Trainer {
             );
         }
         self.apply_updates_inner(grads, Some((plan, compact)), lr)
+    }
+
+    /// Apply one reduced bucket of a data-parallel overlapped exchange:
+    /// step parameters `[start, start + grads.len())` under the bucket's
+    /// slice of the communication plan, via [`Optimizer::step_planned`]
+    /// (bit-identical to the sequential planned walk; GaLore steps the
+    /// bucket's layers in parallel on the worker pool). Does **not**
+    /// `commit()` the bf16 weight store — the caller commits once after
+    /// the step's last bucket, like the barrier walk.
+    pub(crate) fn apply_bucket(
+        &mut self,
+        start: usize,
+        grads: &[Matrix],
+        plan: &[crate::optim::GradReduceMode],
+        compact: &[Matrix],
+        lr: f32,
+    ) -> Result<()> {
+        let end = start + grads.len();
+        if end > self.params.tensors.len() {
+            bail!(
+                "bucket [{start}..{end}) exceeds the {}-parameter schema",
+                self.params.tensors.len()
+            );
+        }
+        let weights = &mut self.params.tensors[start..end];
+        self.opt
+            .step_planned(start, weights, grads, plan, compact, lr)
+            .map_err(|e| anyhow!("optimizer step failed in bucket [{start}..{end}): {e}"))
     }
 
     /// Shared update walk: §4.3 layerwise / dense ordering and the
@@ -396,14 +426,14 @@ impl Trainer {
         let mut total = 0.0f64;
         for i in 0..n_batches {
             let batch = self.loader.eval_batch(i as u64);
-            let inputs = self.input_stage.begin();
+            let mut inputs = self.input_stage.begin();
             for t in &self.params.tensors {
                 inputs.push(Input::F32(&t.data));
             }
             inputs.push(Input::I32(&batch.tokens));
             inputs.push(Input::I32(&batch.targets));
-            let outputs = self.engine.execute(&artifact, inputs);
-            self.input_stage.finish();
+            let outputs = self.engine.execute(&artifact, &inputs);
+            drop(inputs);
             total += outputs?[0].scalar() as f64;
         }
         Ok((total / n_batches as f64) as f32)

@@ -1,0 +1,691 @@
+//! Ring transports for data-parallel training.
+//!
+//! The DP worker loop (`coordinator::parallel`) speaks to its peers
+//! through the [`Transport`] trait — one neighbour-exchange primitive on
+//! a ring — and the chunked all-reduce collectives ([`all_reduce_sum`] /
+//! [`all_reduce_mean`]) are generic over it. Two implementations:
+//!
+//! * [`RingHandle`] — the in-process channel ring (one handle per worker
+//!   thread, wired by [`Ring::into_handles`]). This is the original
+//!   transport; the generic collectives reproduce its chunk arithmetic
+//!   *exactly*, so swapping transports never changes a single bit of the
+//!   reduced values.
+//! * [`SocketRing`] — a multi-process ring over Unix domain sockets.
+//!   Either wired in-process from socketpairs ([`local_socket_ring`], the
+//!   test/bench seam) or across OS processes via a rank-0 **rendezvous**
+//!   ([`Rendezvous`] / [`join_rendezvous`]): workers connect to a
+//!   well-known socket, rank 0 assigns ranks in join order and tells each
+//!   worker its ring successor, and the control connections stay open for
+//!   end-of-run result frames.
+//!
+//! Failure model: a peer that exits (error, panic, or death) closes its
+//! sockets/channels; neighbours observe the closure on their next hop and
+//! get [`RingClosed`] instead of hanging. The aggregator demotes these
+//! shutdown echoes below the root cause (see
+//! `parallel::collect_worker_results`).
+//!
+//! Elastic membership (join/leave mid-run) is out of scope here; the
+//! rendezvous/control-socket seam is the attachment point it will use.
+
+use std::io::{Read, Write};
+use std::os::unix::ffi::OsStrExt;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// Marker text shared by every ring-shutdown error. The aggregator uses
+/// it to demote these secondary failures below the root-cause worker
+/// error (a `RingClosed` is a symptom of *another* worker dying).
+pub const RING_ABORT_MSG: &str =
+    "ring all-reduce aborted: a peer worker shut down mid-collective";
+
+/// The ring collective could not complete because a peer dropped its
+/// end — it returned an error, panicked, or (process transport) died.
+/// Not a data error: the observing worker should abort its replica and
+/// let the aggregator surface the peer's failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RingClosed;
+
+impl std::fmt::Display for RingClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(RING_ABORT_MSG)
+    }
+}
+
+impl std::error::Error for RingClosed {}
+
+/// One ring participant: the neighbour-exchange primitive the chunked
+/// collectives are built on. `exchange` sends a chunk to the successor
+/// `(rank + 1) % world` and receives the predecessor's chunk — every
+/// ring hop is one such simultaneous send/receive on all ranks.
+pub trait Transport: Send {
+    /// This participant's rank in `0..world`.
+    fn rank(&self) -> usize;
+    /// Number of ring participants.
+    fn world(&self) -> usize;
+    /// Send `send` to the ring successor and receive the predecessor's
+    /// chunk into `recv` (cleared and resized; capacity reused across
+    /// hops). Errors with [`RingClosed`] when a peer is gone.
+    fn exchange(&mut self, send: &[f32], recv: &mut Vec<f32>) -> Result<(), RingClosed>;
+}
+
+/// In-place chunked ring all-reduce (sum) over `data`: W−1 reduce-scatter
+/// hops then W−1 all-gather hops, `data` split into `world` chunks of
+/// `ceil(n/world)`. Bit-identical across [`Transport`] implementations —
+/// the arithmetic (chunk bounds, hop order, elementwise add) lives here
+/// once; transports only move bytes.
+pub fn all_reduce_sum<T: Transport + ?Sized>(
+    tp: &mut T,
+    data: &mut [f32],
+) -> Result<(), RingClosed> {
+    let w = tp.world();
+    if w == 1 {
+        return Ok(());
+    }
+    let rank = tp.rank();
+    let n = data.len();
+    let chunk = n.div_ceil(w);
+    let bounds = |c: usize| -> (usize, usize) { ((c * chunk).min(n), ((c + 1) * chunk).min(n)) };
+    let mut recv = Vec::new();
+    // Reduce-scatter: after step s, worker owns the fully-reduced chunk
+    // (rank - s) mod w at the end.
+    for s in 0..w - 1 {
+        let send_c = (rank + w - s) % w;
+        let (a, b) = bounds(send_c);
+        // Split the borrow: the sent chunk is read-only, the received
+        // chunk is accumulated into a different range afterwards.
+        tp.exchange(&data[a..b], &mut recv)?;
+        let recv_c = (rank + w - s - 1) % w;
+        let (a, b) = bounds(recv_c);
+        for (d, r) in data[a..b].iter_mut().zip(recv.iter()) {
+            *d += r;
+        }
+    }
+    // All-gather the reduced chunks around the ring.
+    for s in 0..w - 1 {
+        let send_c = (rank + 1 + w - s) % w;
+        let (a, b) = bounds(send_c);
+        tp.exchange(&data[a..b], &mut recv)?;
+        let recv_c = (rank + w - s) % w;
+        let (a, b) = bounds(recv_c);
+        data[a..b].copy_from_slice(&recv);
+    }
+    Ok(())
+}
+
+/// Average instead of sum (sum, then scale by `1/world` — the exact
+/// arithmetic the channel ring always used).
+pub fn all_reduce_mean<T: Transport + ?Sized>(
+    tp: &mut T,
+    data: &mut [f32],
+) -> Result<(), RingClosed> {
+    all_reduce_sum(tp, data)?;
+    let inv = 1.0 / tp.world() as f32;
+    for v in data.iter_mut() {
+        *v *= inv;
+    }
+    Ok(())
+}
+
+// -- in-process channel ring -------------------------------------------------
+
+/// Channel mesh for a ring of `n` in-process participants exchanging f32
+/// chunks (the thread transport).
+pub struct Ring {
+    /// senders[i] sends to worker (i+1) % n.
+    senders: Vec<Sender<Vec<f32>>>,
+    receivers: Vec<Receiver<Vec<f32>>>,
+}
+
+impl Ring {
+    /// Build the channel mesh for `n` participants.
+    pub fn new(n: usize) -> Ring {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        Ring { senders, receivers }
+    }
+
+    /// Split into per-worker handles (must be called once).
+    pub fn into_handles(self) -> Vec<RingHandle> {
+        let n = self.senders.len();
+        let mut senders: Vec<Option<Sender<Vec<f32>>>> =
+            self.senders.into_iter().map(Some).collect();
+        let mut receivers: Vec<Option<Receiver<Vec<f32>>>> =
+            self.receivers.into_iter().map(Some).collect();
+        (0..n)
+            .map(|i| RingHandle {
+                rank: i,
+                world: n,
+                // worker i sends on channel i (to i+1), receives on channel
+                // (i-1+n)%n (from i-1).
+                to_next: senders[i].take().unwrap(),
+                from_prev: receivers[(i + n - 1) % n].take().unwrap(),
+            })
+            .collect()
+    }
+}
+
+/// One worker's end of the in-process channel ring.
+pub struct RingHandle {
+    /// This worker's rank in `0..world`.
+    pub rank: usize,
+    /// Ring size.
+    pub world: usize,
+    to_next: Sender<Vec<f32>>,
+    from_prev: Receiver<Vec<f32>>,
+}
+
+impl RingHandle {
+    /// In-place ring all-reduce (sum) — see [`all_reduce_sum`].
+    pub fn all_reduce_sum(&mut self, data: &mut [f32]) -> Result<(), RingClosed> {
+        all_reduce_sum(self, data)
+    }
+
+    /// Average instead of sum — see [`all_reduce_mean`].
+    pub fn all_reduce_mean(&mut self, data: &mut [f32]) -> Result<(), RingClosed> {
+        all_reduce_mean(self, data)
+    }
+}
+
+impl Transport for RingHandle {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn exchange(&mut self, send: &[f32], recv: &mut Vec<f32>) -> Result<(), RingClosed> {
+        self.to_next.send(send.to_vec()).map_err(|_| RingClosed)?;
+        let got = self.from_prev.recv().map_err(|_| RingClosed)?;
+        recv.clear();
+        recv.extend_from_slice(&got);
+        Ok(())
+    }
+}
+
+// -- Unix-domain-socket ring -------------------------------------------------
+
+/// Body segment size for the interleaved socket exchange, in bytes. Must
+/// stay comfortably below the kernel's default socket buffer (~208 KiB on
+/// Linux for AF_UNIX): each hop interleaves write-one-segment /
+/// read-one-segment, and with segments this small the ring provably
+/// cannot fill every buffer at once, so a cycle of blocked writers is
+/// impossible (a naive "write the whole chunk, then read" deadlocks as
+/// soon as chunks exceed the buffer).
+const SEG_BYTES: usize = 32 * 1024;
+
+/// One worker's end of a Unix-domain-socket ring (same-host processes or
+/// threads). `next` carries this rank's sends; `prev` carries the
+/// predecessor's. Dropping it closes both streams, which is how peers
+/// learn this worker is gone ([`RingClosed`] on their next hop).
+pub struct SocketRing {
+    rank: usize,
+    world: usize,
+    next: UnixStream,
+    prev: UnixStream,
+}
+
+/// Reinterpret an f32 slice as native-endian bytes for the wire.
+///
+/// SAFETY: f32 has no invalid bit patterns and u8 has alignment 1, so
+/// viewing the f32 buffer's bytes is always valid. Same-host only — both
+/// ends share endianness, documented on [`SocketRing`].
+fn f32s_as_bytes(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+/// Mutable byte view of an f32 buffer (see [`f32s_as_bytes`]).
+///
+/// SAFETY: as above; every byte pattern written is a valid f32.
+fn f32s_as_bytes_mut(xs: &mut [f32]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u8, xs.len() * 4) }
+}
+
+impl SocketRing {
+    /// This worker's rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Ring size.
+    pub fn world(&self) -> usize {
+        self.world
+    }
+}
+
+impl Transport for SocketRing {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn exchange(&mut self, send: &[f32], recv: &mut Vec<f32>) -> Result<(), RingClosed> {
+        // Length header first (4 bytes always fit the socket buffer, which
+        // is drained between hops), then bodies in interleaved segments so
+        // neither direction can back up a full chunk. Send and receive
+        // lengths may differ: the last ring chunk is smaller.
+        let send_bytes = f32s_as_bytes(send);
+        self.next
+            .write_all(&(send.len() as u32).to_le_bytes())
+            .map_err(|_| RingClosed)?;
+        let mut hdr = [0u8; 4];
+        self.prev.read_exact(&mut hdr).map_err(|_| RingClosed)?;
+        let recv_len = u32::from_le_bytes(hdr) as usize;
+        recv.clear();
+        recv.resize(recv_len, 0.0);
+        let recv_bytes = f32s_as_bytes_mut(recv);
+        let (mut so, mut ro) = (0usize, 0usize);
+        while so < send_bytes.len() || ro < recv_bytes.len() {
+            if so < send_bytes.len() {
+                let e = (so + SEG_BYTES).min(send_bytes.len());
+                self.next.write_all(&send_bytes[so..e]).map_err(|_| RingClosed)?;
+                so = e;
+            }
+            if ro < recv_bytes.len() {
+                let e = (ro + SEG_BYTES).min(recv_bytes.len());
+                self.prev.read_exact(&mut recv_bytes[ro..e]).map_err(|_| RingClosed)?;
+                ro = e;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Wire a socket ring entirely in-process from socketpairs: pair `k`
+/// connects rank `k`'s `next` to rank `(k+1) % world`'s `prev`. The
+/// test/bench seam for exercising the socket transport without processes
+/// or rendezvous — hand each returned end to its own thread.
+pub fn local_socket_ring(world: usize) -> std::io::Result<Vec<SocketRing>> {
+    let mut nexts: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
+    let mut prevs: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
+    for k in 0..world {
+        let (a, b) = UnixStream::pair()?;
+        nexts[k] = Some(a);
+        prevs[(k + 1) % world] = Some(b);
+    }
+    Ok((0..world)
+        .map(|r| SocketRing {
+            rank: r,
+            world,
+            next: nexts[r].take().unwrap(),
+            prev: prevs[r].take().unwrap(),
+        })
+        .collect())
+}
+
+// -- control-socket frames ---------------------------------------------------
+
+/// Write one length-prefixed frame (u32 LE header + payload) to a control
+/// socket.
+pub fn write_frame(s: &mut UnixStream, bytes: &[u8]) -> std::io::Result<()> {
+    s.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    s.write_all(bytes)
+}
+
+/// Read one length-prefixed frame. An EOF here means the peer process is
+/// gone — callers turn that into their "worker died" root cause.
+pub fn read_frame(s: &mut UnixStream) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    s.read_exact(&mut hdr)?;
+    let n = u32::from_le_bytes(hdr) as usize;
+    let mut buf = vec![0u8; n];
+    s.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// -- multi-process rendezvous ------------------------------------------------
+
+/// Environment variable through which a spawned worker process finds the
+/// host's rendezvous socket. Set by the process-transport host on its
+/// children; its presence is how a re-exec'd `galore` binary knows it is
+/// a DP worker, not a fresh run.
+pub const RENDEZVOUS_ENV: &str = "GALORE_DP_RENDEZVOUS";
+
+/// Rank-0 side of the multi-process rendezvous: binds the well-known
+/// socket (so it exists before any child is spawned), collects joiners,
+/// assigns ranks in join order, and wires the socket ring.
+pub struct Rendezvous {
+    listener: UnixListener,
+    path: PathBuf,
+    ring_listener: UnixListener,
+    ring_path: PathBuf,
+    world: usize,
+}
+
+fn io_err(msg: String) -> std::io::Error {
+    std::io::Error::other(msg)
+}
+
+impl Rendezvous {
+    /// Bind the rendezvous socket at `dir/rendezvous.sock` (and rank 0's
+    /// own ring listener). Call this *before* spawning workers so their
+    /// immediate connect cannot race the bind.
+    pub fn bind(dir: &Path, world: usize) -> std::io::Result<Rendezvous> {
+        let path = dir.join("rendezvous.sock");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)?;
+        let ring_path = dir.join("ring-0.sock");
+        let _ = std::fs::remove_file(&ring_path);
+        let ring_listener = UnixListener::bind(&ring_path)?;
+        Ok(Rendezvous { listener, path, ring_listener, ring_path, world })
+    }
+
+    /// Path workers must connect to (export as [`RENDEZVOUS_ENV`]).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Wait (up to `timeout`) for `world - 1` workers to join, assign
+    /// ranks in join order, wire the ring, and return rank 0's ring end
+    /// plus the per-worker control sockets (index `i` is rank `i + 1`),
+    /// kept open for end-of-run report frames. Times out with an error —
+    /// never hangs — if a spawned worker dies before joining.
+    pub fn establish(self, timeout: Duration) -> std::io::Result<(SocketRing, Vec<UnixStream>)> {
+        let deadline = Instant::now() + timeout;
+        self.listener.set_nonblocking(true)?;
+        let mut ctrls: Vec<UnixStream> = Vec::new();
+        let mut ring_paths: Vec<PathBuf> = Vec::new();
+        while ctrls.len() + 1 < self.world {
+            match self.listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false)?;
+                    let frame = read_frame(&mut s)?;
+                    ring_paths.push(PathBuf::from(os_string_from_bytes(frame)));
+                    ctrls.push(s);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        return Err(io_err(format!(
+                            "rendezvous timed out with {}/{} workers joined — \
+                             did a spawned worker die before connecting?",
+                            ctrls.len() + 1,
+                            self.world
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Reply (rank, world, successor's ring-listener path) to each
+        // worker. Every listener is already bound, so the connects that
+        // follow can only land in a live backlog — no lost-connection
+        // races.
+        for (i, ctrl) in ctrls.iter_mut().enumerate() {
+            let rank = i + 1;
+            let next_path =
+                if rank + 1 == self.world { &self.ring_path } else { &ring_paths[rank] };
+            let mut frame = Vec::new();
+            crate::ser::put_u32(&mut frame, rank as u32);
+            crate::ser::put_u32(&mut frame, self.world as u32);
+            crate::ser::put_bytes(&mut frame, next_path.as_os_str().as_bytes());
+            write_frame(ctrl, &frame)?;
+        }
+        // Rank 0 wires itself like any worker: connect to rank 1's
+        // listener, accept from rank world-1.
+        let next = UnixStream::connect(&ring_paths[0])?;
+        self.ring_listener.set_nonblocking(true)?;
+        let prev = loop {
+            match self.ring_listener.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    break s;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        return Err(io_err(
+                            "rendezvous timed out waiting for the ring predecessor".into(),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        let _ = std::fs::remove_file(&self.ring_path);
+        let _ = std::fs::remove_file(&self.path);
+        Ok((SocketRing { rank: 0, world: self.world, next, prev }, ctrls))
+    }
+}
+
+/// Path bytes → `OsString` (Unix-only crate: the bytes *are* the path
+/// encoding).
+fn os_string_from_bytes(v: Vec<u8>) -> std::ffi::OsString {
+    use std::os::unix::ffi::OsStringExt;
+    std::ffi::OsString::from_vec(v)
+}
+
+/// Worker side of the multi-process rendezvous: bind an own ring
+/// listener, join the host at `rendezvous`, learn (rank, world,
+/// successor), and wire this worker's ring end. Returns the ring plus the
+/// control socket (keep it open; send the end-of-run report frame on it).
+pub fn join_rendezvous(rendezvous: &Path) -> std::io::Result<(SocketRing, UnixStream)> {
+    // pid + process-local counter keeps listener paths unique even when
+    // several joiners share one process (thread-hosted tests).
+    static JOIN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = JOIN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let dir = rendezvous.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+    let my_path = dir.join(format!("ring-{}-{}.sock", std::process::id(), seq));
+    let _ = std::fs::remove_file(&my_path);
+    let listener = UnixListener::bind(&my_path)?;
+    let mut ctrl = UnixStream::connect(rendezvous)?;
+    write_frame(&mut ctrl, my_path.as_os_str().as_bytes())?;
+    let reply = read_frame(&mut ctrl)?;
+    let mut r = crate::ser::Reader::new(&reply);
+    let parse = |e: String| io_err(format!("malformed rendezvous reply: {e}"));
+    let rank = r.u32().map_err(parse)? as usize;
+    let world = r.u32().map_err(parse)? as usize;
+    let next_path = PathBuf::from(os_string_from_bytes(r.bytes().map_err(parse)?.to_vec()));
+    let next = UnixStream::connect(&next_path)?;
+    let (prev, _) = listener.accept()?;
+    let _ = std::fs::remove_file(&my_path);
+    Ok((SocketRing { rank, world, next, prev }, ctrl))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_ring(world: usize, len: usize) {
+        let handles = Ring::new(world).into_handles();
+        let results = reduce_all(handles, len);
+        check_sum(&results, world, len);
+    }
+
+    /// Drive `all_reduce_sum` on every transport end, one thread each,
+    /// with rank-dependent data `data[i] = rank * len + i`.
+    fn reduce_all<T: Transport + Send>(ends: Vec<T>, len: usize) -> Vec<Vec<f32>> {
+        std::thread::scope(|scope| {
+            let joins: Vec<_> = ends
+                .into_iter()
+                .map(|mut t| {
+                    scope.spawn(move || {
+                        let mut data: Vec<f32> =
+                            (0..len).map(|i| (t.rank() * len + i) as f32).collect();
+                        all_reduce_sum(&mut t, &mut data).unwrap();
+                        data
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        })
+    }
+
+    fn check_sum(results: &[Vec<f32>], world: usize, len: usize) {
+        for i in 0..len {
+            let want: f32 = (0..world).map(|r| (r * len + i) as f32).sum();
+            for (r, res) in results.iter().enumerate() {
+                assert!((res[i] - want).abs() < 1e-4, "w{world} len{len} rank{r} idx{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_correct_various_sizes() {
+        for world in [1, 2, 3, 4, 7] {
+            for len in [1, 5, 16, 103] {
+                run_ring(world, len);
+            }
+        }
+    }
+
+    #[test]
+    fn socket_ring_matches_channel_ring_bit_exactly() {
+        // Same data, both transports: the reduced values must agree to the
+        // bit — the collectives' arithmetic is transport-independent.
+        for world in [2, 3, 4] {
+            for len in [1, 7, 64, 1003] {
+                let chan = reduce_all(Ring::new(world).into_handles(), len);
+                let sock = reduce_all(local_socket_ring(world).unwrap(), len);
+                for (c, s) in chan.iter().zip(sock.iter()) {
+                    assert_eq!(c, s, "world {world} len {len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn socket_exchange_survives_chunks_larger_than_socket_buffers() {
+        // 1 MiB per rank chunk — far beyond the kernel's AF_UNIX buffer.
+        // The interleaved segment protocol must complete (a naive
+        // write-all-then-read deadlocks here and the test would time out).
+        run_large(3, 786_432); // 3 MiB total, 1 MiB chunks
+        fn run_large(world: usize, len: usize) {
+            let ends = local_socket_ring(world).unwrap();
+            let results = reduce_all(ends, len);
+            check_sum(&results, world, len);
+        }
+    }
+
+    #[test]
+    fn mean_divides_by_world() {
+        let handles = Ring::new(4).into_handles();
+        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|mut h| {
+                    scope.spawn(move || {
+                        let mut data = vec![(h.rank + 1) as f32; 8];
+                        h.all_reduce_mean(&mut data).unwrap();
+                        data
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        for res in results {
+            for v in res {
+                assert!((v - 2.5).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_peer_yields_ring_closed_not_panic() {
+        // Worker 1 "fails" before its first collective (drops its handle);
+        // the survivors' all-reduce must come back as RingClosed, not hang
+        // or panic.
+        let handles = Ring::new(3).into_handles();
+        assert!(count_survivor_errors(handles) >= 2);
+    }
+
+    #[test]
+    fn dead_socket_peer_yields_ring_closed_not_hang() {
+        // Same failure mode over the socket transport: the dropped end
+        // closes its streams, survivors read EOF / write EPIPE.
+        let ends = local_socket_ring(3).unwrap();
+        assert!(count_survivor_errors(ends) >= 2);
+    }
+
+    fn count_survivor_errors<T: Transport + Send>(ends: Vec<T>) -> usize {
+        let results: Vec<Result<(), RingClosed>> = std::thread::scope(|scope| {
+            let joins: Vec<_> = ends
+                .into_iter()
+                .map(|mut t| {
+                    scope.spawn(move || {
+                        if t.rank() == 1 {
+                            return Err(RingClosed); // simulate an early worker error
+                        }
+                        let mut data = vec![1.0f32; 64];
+                        // Loop: the first collective may partially succeed
+                        // on buffered sends; shutdown must surface within a
+                        // bounded number of rounds.
+                        for _ in 0..4 {
+                            all_reduce_sum(&mut t, &mut data)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        results.iter().filter(|r| r.is_err()).count()
+    }
+
+    #[test]
+    fn frames_roundtrip_and_eof_is_an_error() {
+        let (mut a, mut b) = UnixStream::pair().unwrap();
+        write_frame(&mut a, b"hello frames").unwrap();
+        assert_eq!(read_frame(&mut b).unwrap(), b"hello frames");
+        write_frame(&mut a, &[]).unwrap();
+        assert_eq!(read_frame(&mut b).unwrap(), Vec::<u8>::new());
+        drop(a);
+        assert!(read_frame(&mut b).is_err(), "EOF must surface as an error");
+    }
+
+    #[test]
+    fn rendezvous_assigns_ranks_and_wires_a_working_ring() {
+        let dir = std::env::temp_dir().join(format!("galore-rdv-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let world = 3;
+        let rdv = Rendezvous::bind(&dir, world).unwrap();
+        let path = rdv.path().to_path_buf();
+        // "Workers" are threads here; process mode drives the same code.
+        let results = std::thread::scope(|scope| {
+            let joiners: Vec<_> = (1..world)
+                .map(|_| {
+                    let path = path.clone();
+                    scope.spawn(move || {
+                        let (mut ring, mut ctrl) = join_rendezvous(&path).unwrap();
+                        let mut data = vec![ring.rank() as f32; 16];
+                        all_reduce_sum(&mut ring, &mut data).unwrap();
+                        write_frame(&mut ctrl, &ring.rank().to_le_bytes()).unwrap();
+                        data
+                    })
+                })
+                .collect();
+            let (mut ring, mut ctrls) =
+                rdv.establish(Duration::from_secs(30)).unwrap();
+            assert_eq!(ring.rank(), 0);
+            assert_eq!(ring.world(), world);
+            let mut data = vec![0.0f32; 16];
+            all_reduce_sum(&mut ring, &mut data).unwrap();
+            // Control sockets stay open for report frames, rank order.
+            for (i, c) in ctrls.iter_mut().enumerate() {
+                let frame = read_frame(c).unwrap();
+                let rank = usize::from_le_bytes(frame.try_into().unwrap());
+                assert_eq!(rank, i + 1);
+            }
+            let mut all = vec![data];
+            all.extend(joiners.into_iter().map(|j| j.join().unwrap()));
+            all
+        });
+        // Sum of ranks 0..world in every slot, on every participant.
+        let want = (0..world).sum::<usize>() as f32;
+        for res in &results {
+            assert!(res.iter().all(|&v| (v - want).abs() < 1e-6), "{res:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,9 +1,15 @@
 //! `galore` — the training launcher.
 //!
 //! Subcommands:
-//!   train   — run one training job (flags or --config file)
-//!   memory  — print the Fig. 1-style memory breakdown for a model/method
-//!   info    — list model configs and available artifacts
+//!   train    — run one training job (flags or --config file)
+//!   memory   — print the Fig. 1-style memory breakdown for a model/method
+//!   info     — list model configs and available artifacts
+//!   dp-smoke — exercise the multi-process DP socket ring without a trainer
+//!
+//! `train --dp-transport process` and `dp-smoke` respawn this binary for
+//! worker ranks; a spawned worker is recognized by the rendezvous
+//! environment variable and joins the host's ring instead of printing
+//! banners.
 //!
 //! Examples:
 //!   galore train --model micro --method galore --steps 200 --layerwise
@@ -12,7 +18,7 @@
 //!   galore info
 
 use anyhow::{anyhow, bail, Result};
-use galore::config::{BackendKind, Cli, MethodKind, RunConfig, TomlDoc};
+use galore::config::{BackendKind, Cli, DpTransport, MethodKind, RunConfig, TomlDoc};
 use galore::coordinator::{train_data_parallel_resumable, Trainer};
 use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
 use galore::model::{ModelConfig, WeightPrecision};
@@ -38,6 +44,7 @@ fn run() -> Result<()> {
         "train" => train(&cli),
         "memory" => memory(&cli),
         "info" => info(),
+        "dp-smoke" => dp_smoke(&cli),
         other => bail!("unknown subcommand '{other}' (try --help)"),
     }
 }
@@ -53,7 +60,8 @@ USAGE:
                 [--rank-decay F] [--rank-energy F] [--refresh-gate-cos F]
                 [--projector-quant f32|block8|dyn8]
                 [--seed N] [--eval-every N] [--eval-batches N]
-                [--dp-workers N] [--dp-compress] [--layerwise]
+                [--dp-workers N] [--dp-compress] [--dp-transport thread|process]
+                [--dp-bucket-mb N] [--layerwise]
                 [--weight-precision f32|bf16] [--threads N]
                 [--backend rust|artifact] [--fused] [--csv PATH]
                 [--checkpoint PATH] [--checkpoint-every N]
@@ -61,6 +69,7 @@ USAGE:
   galore memory --model NAME [--method NAME] [--rank N] [--layerwise]
                 [--token-batch N]
   galore info
+  galore dp-smoke [--world N] [--steps N] [--die-rank R --die-step S]
 
 METHODS: full-rank adamw adam8bit adafactor galore galore8bit
          galore-adafactor lora relora low-rank
@@ -75,7 +84,13 @@ the cached subspace still captures cosine >= T of the gradient.
 Data parallelism: --dp-workers W trains W lockstep replicas with a ring
 all-reduce; --dp-compress (GaLore methods) exchanges the projected r x n
 gradient between subspace refreshes instead of the full m x n one — a
-min(m,n)/r traffic cut per targeted layer. See EXPERIMENTS.md
+min(m,n)/r traffic cut per targeted layer. --dp-transport process runs
+each replica in its own spawned worker process over a Unix-socket ring
+(default: threads over in-memory channels); --dp-bucket-mb N overlaps
+the all-reduce with backprop by reducing N-MiB gradient buckets as
+layers finish (0 = reduce everything at the step barrier). Both knobs
+leave the loss curve bit-identical. `galore dp-smoke` exercises the
+multi-process ring without a trainer. See EXPERIMENTS.md
 section 'DP communication'.
 
 Precision/threads: --weight-precision bf16 keeps the master weight store
@@ -169,6 +184,13 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     if cli.has("dp-compress") {
         cfg.dp_compress = true;
     }
+    if let Some(v) = cli.get("dp-transport") {
+        cfg.dp_transport = DpTransport::parse(v)
+            .ok_or_else(|| anyhow!("unknown --dp-transport '{v}' (thread|process)"))?;
+    }
+    if let Some(v) = cli.get_parse::<usize>("dp-bucket-mb").map_err(|e| anyhow!("{e}"))? {
+        cfg.dp_bucket_mb = v;
+    }
     if cli.has("layerwise") {
         cfg.layerwise = true;
     }
@@ -209,9 +231,21 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
 
 fn train(cli: &Cli) -> Result<()> {
     let cfg = build_run_config(cli)?;
+    let resume = cli.get("resume").map(std::path::PathBuf::from);
+    // A spawned DP worker process (rank >= 1): the host re-executed this
+    // binary with its own argv, so `cfg` is identical by construction.
+    // Join the host's ring and run quietly — the host owns the console.
+    if let Some(path) = std::env::var_os(galore::coordinator::transport::RENDEZVOUS_ENV) {
+        return galore::coordinator::parallel::dp_process_child(
+            &cfg,
+            std::path::Path::new(&path),
+            resume.as_deref(),
+        );
+    }
     println!(
         "train: model={} method={} backend={} steps={} batch={} lr={} rank={} T={} alpha={} \
-         schedule={} quant={} gate={} layerwise={} dp={} dp_compress={} wprec={} threads={}",
+         schedule={} quant={} gate={} layerwise={} dp={} dp_compress={} dp_transport={} \
+         dp_bucket_mb={} wprec={} threads={}",
         cfg.model.name,
         cfg.method.label(),
         cfg.backend.label(),
@@ -227,10 +261,11 @@ fn train(cli: &Cli) -> Result<()> {
         cfg.layerwise,
         cfg.dp_workers,
         cfg.dp_compress,
+        cfg.dp_transport.label(),
+        cfg.dp_bucket_mb,
         cfg.weight_precision.label(),
         if cfg.threads > 0 { cfg.threads } else { galore::runtime::pool::default_threads() }
     );
-    let resume = cli.get("resume").map(std::path::PathBuf::from);
     if cfg.dp_workers > 1 {
         // Backends compose with data parallelism: each worker's
         // `build_optimizer` stands up its own artifact engine when
@@ -318,6 +353,46 @@ fn train(cli: &Cli) -> Result<()> {
         println!("wrote full-state checkpoint {ckpt}");
     }
     Ok(())
+}
+
+/// `dp-smoke`: a trainer-free exercise of the multi-process socket ring.
+/// The host spawns `--world - 1` worker processes of this binary, runs
+/// `--steps` all-reduce rounds over a deterministic payload, and
+/// bit-compares the checksums every rank reports. `--die-rank R
+/// --die-step S` makes rank R exit(1) at step S — the dropout drill the
+/// integration tests use to check that survivors error out (no hang) and
+/// rank 0 names the failed worker.
+fn dp_smoke(cli: &Cli) -> Result<()> {
+    let steps =
+        cli.get_parse::<usize>("steps").map_err(|e| anyhow!("{e}"))?.unwrap_or(5);
+    // Spawned worker: argv is the host's argv, so the kill schedule
+    // arrives through the same flags.
+    if let Some(path) = std::env::var_os(galore::coordinator::transport::RENDEZVOUS_ENV) {
+        let die_rank = cli.get_parse::<usize>("die-rank").map_err(|e| anyhow!("{e}"))?;
+        let die_step = cli.get_parse::<usize>("die-step").map_err(|e| anyhow!("{e}"))?;
+        let die = match (die_rank, die_step) {
+            (Some(r), Some(s)) => Some((r, s)),
+            (None, None) => None,
+            _ => bail!("--die-rank and --die-step must be given together"),
+        };
+        return galore::coordinator::parallel::dp_smoke_child(
+            std::path::Path::new(&path),
+            steps,
+            die,
+        );
+    }
+    if let Some(r) = cli.get_parse::<usize>("die-rank").map_err(|e| anyhow!("{e}"))? {
+        if r == 0 {
+            bail!("--die-rank must be >= 1 (rank 0 is the reporting host)");
+        }
+        if cli.get("die-step").is_none() {
+            bail!("--die-rank and --die-step must be given together");
+        }
+    } else if cli.get("die-step").is_some() {
+        bail!("--die-rank and --die-step must be given together");
+    }
+    let world = cli.get_parse::<usize>("world").map_err(|e| anyhow!("{e}"))?.unwrap_or(2);
+    galore::coordinator::parallel::dp_smoke_host(world, steps)
 }
 
 fn memory(cli: &Cli) -> Result<()> {

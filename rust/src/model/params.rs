@@ -222,13 +222,44 @@ impl ParamStore {
     }
 
     /// Fisher-style parameter perturbation (used by fine-tune experiments
-    /// to model a "pre-trained" checkpoint drift).
+    /// to model a "pre-trained" checkpoint drift). Commits at the end so
+    /// a bf16 store never keeps stale pre-perturbation masters (the drift
+    /// used to survive only until the first optimizer commit rounded the
+    /// working tensors back through the old store).
     pub fn perturb(&mut self, std: f32, rng: &mut Rng) {
         for t in self.tensors.iter_mut() {
             for v in t.data.iter_mut() {
                 *v += rng.normal_f32() * std;
             }
         }
+        self.commit();
+    }
+
+    /// Guarded whole-tensor setter for non-optimizer weight writers
+    /// (weight import, surgery tools): shape-checked copy into the
+    /// working tensor, then an immediate single-tensor commit so the
+    /// bf16 master-store invariant holds on every exit path — unlike a
+    /// raw `tensors[idx]` write, which silently leaves a stale master.
+    pub fn write_weights(&mut self, idx: usize, data: &[f32]) -> Result<(), String> {
+        let Some(t) = self.tensors.get_mut(idx) else {
+            return Err(format!(
+                "write_weights: parameter {idx} out of range ({} tensors)",
+                self.metas.len()
+            ));
+        };
+        if data.len() != t.data.len() {
+            return Err(format!(
+                "write_weights: parameter {idx} ({}) has {} elements, got {}",
+                self.metas[idx].name,
+                t.data.len(),
+                data.len()
+            ));
+        }
+        t.data.copy_from_slice(data);
+        if self.precision == WeightPrecision::Bf16 {
+            self.store[idx].store_round(&mut t.data);
+        }
+        Ok(())
     }
 }
 
@@ -304,6 +335,56 @@ mod tests {
         // Back to f32: master copies dropped, accounting follows.
         store.set_precision(WeightPrecision::F32);
         assert_eq!(store.weight_store_bytes(), store.numel() * 4);
+    }
+
+    #[test]
+    fn perturb_commits_bf16_masters() {
+        let cfg = &PROXY_CONFIGS[0];
+        let mut store = crate::model::init_params(cfg, 7);
+        store.set_precision(WeightPrecision::Bf16);
+        let mut rng = crate::rng::Rng::new(11);
+        store.perturb(0.05, &mut rng);
+        // The perturbed working tensors must already be bf16-valued: a
+        // later commit() (what every optimizer step does) must be a
+        // bit-exact no-op, not a silent rollback to the pre-perturbation
+        // masters.
+        let after_perturb: Vec<Vec<f32>> = store.tensors.iter().map(|t| t.data.clone()).collect();
+        for t in &store.tensors {
+            for &v in &t.data {
+                assert_eq!(v, crate::quant::bf16_to_f32(crate::quant::f32_to_bf16(v)));
+            }
+        }
+        store.commit();
+        for (t, snap) in store.tensors.iter().zip(after_perturb.iter()) {
+            assert_eq!(&t.data, snap, "commit after perturb must be a no-op");
+        }
+    }
+
+    #[test]
+    fn write_weights_guards_shape_and_commits() {
+        let cfg = &PROXY_CONFIGS[0];
+        let mut store = crate::model::init_params(cfg, 7);
+        store.set_precision(WeightPrecision::Bf16);
+        let n = store.tensors[1].data.len();
+        // Values chosen to NOT be bf16-representable: the setter must
+        // round them through the master store immediately.
+        let raw: Vec<f32> = (0..n).map(|i| 1.0 + (i as f32 + 1.0) * 2f32.powi(-12)).collect();
+        store.write_weights(1, &raw).unwrap();
+        for (&v, &r) in store.tensors[1].data.iter().zip(raw.iter()) {
+            assert_eq!(v, crate::quant::bf16_to_f32(crate::quant::f32_to_bf16(r)));
+        }
+        let snap = store.tensors[1].data.clone();
+        store.commit();
+        assert_eq!(store.tensors[1].data, snap);
+        // Guards: bad index, bad length.
+        let err = store.write_weights(usize::MAX, &raw).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        let err = store.write_weights(1, &raw[..n - 1]).unwrap_err();
+        assert!(err.contains("elements"), "{err}");
+        // At f32 precision the setter is a plain copy.
+        store.set_precision(WeightPrecision::F32);
+        store.write_weights(1, &raw).unwrap();
+        assert_eq!(store.tensors[1].data, raw);
     }
 
     #[test]

@@ -583,6 +583,20 @@ impl Workspace {
     }
 }
 
+/// How a queued parallel-step entry executes ([`GaLore::step_many`] /
+/// `step_planned` pass A → pass B).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ParKind {
+    /// Steady-state target: project the full gradient inside the task.
+    Targeted,
+    /// Untargeted parameter: full-rank `Adam::step` replication.
+    FullRank,
+    /// Steady-state target whose gradient arrives *already projected*
+    /// (the DP compact-reduce path through `step_planned`): the task
+    /// skips the projection and runs the `step_compact` tail.
+    PreProjected,
+}
+
 /// One queued parameter update for the cross-layer parallel step
 /// ([`GaLore::step_many`]): raw pointers into state that the caller's
 /// `&mut self` / `&mut [Matrix]` borrows keep exclusively owned for the
@@ -603,6 +617,9 @@ struct ParTask {
     /// Signed factor on the update applied to `w`: `lr * scale` for a
     /// targeted parameter (the scratch holds `-N_t`), `-lr` full-rank.
     lr_apply: f32,
+    /// `grad` already holds the compact (projected, DP-averaged)
+    /// gradient; skip the projection ([`ParKind::PreProjected`]).
+    pre_projected: bool,
 }
 
 // SAFETY: the pointers are captured from `&mut` borrows the submitter
@@ -631,6 +648,19 @@ impl ParTask {
                 // moments borrow asserts paper defaults, no decay).
                 Adam::normalized_update_into(m, v, grad, *t, &AdamConfig::default(), upd);
                 w.axpy(self.lr_apply, upd);
+            } else if self.pre_projected {
+                // DP compact path (`step_planned`): `grad` *is* the
+                // already-averaged compact gradient, so skip the
+                // projection and run the same tail `step_compact`
+                // reaches through the Rust backend — call-for-call.
+                let proj = &*self.proj;
+                let scr = &mut *self.scratch;
+                Adam::normalized_update_into(m, v, grad, *t, &AdamConfig::default(), upd);
+                scr.scratch.resize(grad.rows, grad.cols);
+                scr.scratch.data.fill(0.0);
+                scr.scratch.axpy(-1.0, upd);
+                proj.project_back_into(&scr.scratch, &mut scr.full_update);
+                w.axpy(self.lr_apply, &scr.full_update);
             } else {
                 let proj = &*self.proj;
                 let scr = &mut *self.scratch;
@@ -676,13 +706,13 @@ pub struct GaLore<O: Optimizer> {
     /// Backends are stateless by contract (they write through the inner
     /// optimizer's moments), so this field never appears in `save_state`.
     backend: Box<dyn StepBackend>,
-    /// Cross-layer parallel-step bookkeeping ([`GaLore::step_many`]):
-    /// queued `(param, targeted)` indices and the raw-pointer task records
-    /// handed to the worker pool. Working memory — cleared every call,
-    /// capacity persists, so the parallel step allocates nothing once
-    /// warm. Never serialized (the pointers are only live inside one
-    /// `step_many` call).
-    par_plan: Vec<(usize, bool)>,
+    /// Cross-layer parallel-step bookkeeping ([`GaLore::step_many`] and
+    /// the `step_planned` bucket path): queued `(index, kind)` entries
+    /// and the raw-pointer task records handed to the worker pool.
+    /// Working memory — cleared every call, capacity persists, so the
+    /// parallel step allocates nothing once warm. Never serialized (the
+    /// pointers are only live inside one call).
+    par_plan: Vec<(usize, ParKind)>,
     par_tasks: Vec<ParTask>,
 }
 
@@ -1033,7 +1063,7 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                     if queued {
                         *self.steps.get_mut(&idx).expect("steady target has a step count") += 1;
                         self.workspaces.entry(idx).or_insert_with(Workspace::new);
-                        self.par_plan.push((idx, true));
+                        self.par_plan.push((idx, ParKind::Targeted));
                         continue;
                     }
                 }
@@ -1044,7 +1074,7 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                     Some(mom) if mom.m.shape() == (rows, cols) && mom.v.shape() == (rows, cols)
                 );
                 if queued {
-                    self.par_plan.push((idx, false));
+                    self.par_plan.push((idx, ParKind::FullRank));
                     continue;
                 }
             }
@@ -1057,10 +1087,10 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
         // inserts into any map, so the addresses stay stable until the
         // barrier completes.
         self.par_tasks.clear();
-        for &(idx, targeted) in &self.par_plan {
+        for &(idx, kind) in &self.par_plan {
             let grad = &grads[idx];
             let (rows, cols) = grad.shape();
-            if targeted {
+            if kind == ParKind::Targeted {
                 let proj = self.projectors.get(&idx).expect("queued target has a projector");
                 let (cm, cn) = proj.compact_shape(rows, cols);
                 let proj: *const Projector = proj;
@@ -1080,6 +1110,7 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                     upd: mom.upd,
                     t: mom.t,
                     lr_apply: lr * self.cfg.scale,
+                    pre_projected: false,
                 });
             } else {
                 let mom = self
@@ -1096,6 +1127,7 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                     upd: mom.upd,
                     t: mom.t,
                     lr_apply: -lr,
+                    pre_projected: false,
                 });
             }
         }
@@ -1223,6 +1255,236 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
             }
         }
         res
+    }
+
+    /// Plan-driven bucket step, parallelized like [`GaLore::step_many`]:
+    /// steady-state entries — `Compact`-planned targets (already-averaged
+    /// compact gradients, applied through the `step_compact` tail) and
+    /// full-rank pass-throughs — fan out across the worker pool, while
+    /// refresh boundaries and anything the fast path cannot prove safe
+    /// run inline in ascending order, preserving the sequential walk's
+    /// RNG draws and partial-progress semantics. Bit-identical to the
+    /// default sequential walk by the same argument as `step_many`:
+    /// every queued task replicates its sequential counterpart
+    /// call-for-call.
+    fn step_planned(
+        &mut self,
+        base: usize,
+        weights: &mut [Matrix],
+        grads: &[Matrix],
+        plan: &[GradReduceMode],
+        compact: &[Matrix],
+        lr: f32,
+    ) -> Result<(), String> {
+        if weights.len() != grads.len()
+            || plan.len() != grads.len()
+            || compact.len() != grads.len()
+        {
+            return Err(format!(
+                "step_planned: {} weights vs {} gradients ({} plan entries, {} compact buffers)",
+                weights.len(),
+                grads.len(),
+                plan.len(),
+                compact.len()
+            ));
+        }
+        if !self.backend.supports_parallel_step() {
+            for i in 0..weights.len() {
+                match plan[i] {
+                    GradReduceMode::Full => self.step(base + i, &mut weights[i], &grads[i], lr)?,
+                    GradReduceMode::Compact { .. } => {
+                        self.step_compact(base + i, &mut weights[i], &compact[i], lr)?
+                    }
+                }
+            }
+            return Ok(());
+        }
+        // Pass A (see `step_many`): classify in ascending order, queueing
+        // steady entries and running everything else inline *now*.
+        self.par_plan.clear();
+        let mut first_err = None;
+        for i in 0..weights.len() {
+            let param = base + i;
+            match plan[i] {
+                GradReduceMode::Compact { .. } => {
+                    // Queue iff the inline `step_compact` would reach the
+                    // backend tail: off-boundary step count, projector
+                    // present, paper-default moments at the compact
+                    // shape. Anything else falls through to the inline
+                    // call (which is also where the contract-violation
+                    // errors come from).
+                    let steady = matches!(
+                        self.steps.get(&param).copied(),
+                        Some(t) if t % self.cfg.update_freq != 0
+                    ) && self.projectors.contains_key(&param);
+                    if steady {
+                        let (cm, cn) = compact[i].shape();
+                        let queued = matches!(
+                            self.inner.moments_mut(param, cm, cn),
+                            Some(mom) if mom.m.shape() == (cm, cn) && mom.v.shape() == (cm, cn)
+                        );
+                        if queued {
+                            *self
+                                .steps
+                                .get_mut(&param)
+                                .expect("steady target has a step count") += 1;
+                            self.workspaces.entry(param).or_insert_with(Workspace::new);
+                            self.par_plan.push((i, ParKind::PreProjected));
+                            continue;
+                        }
+                    }
+                    if let Err(e) = self.step_compact(param, &mut weights[i], &compact[i], lr) {
+                        first_err = Some(e);
+                        break;
+                    }
+                }
+                GradReduceMode::Full => {
+                    let grad = &grads[i];
+                    if self.is_target(param, grad) {
+                        // A Full plan entry for a target is a refresh
+                        // boundary or a `dp_compress`-off run: boundaries
+                        // run inline (sequential RNG order); steady
+                        // targets queue with the projection inside the
+                        // task, exactly as in `step_many`.
+                        let t = self.steps.get(&param).copied().unwrap_or(0);
+                        let boundary =
+                            t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&param);
+                        if !boundary {
+                            let (rows, cols) = grad.shape();
+                            let (cm, cn) = self
+                                .projectors
+                                .get(&param)
+                                .map(|p| p.compact_shape(rows, cols))
+                                .expect("steady target has a projector");
+                            let queued = matches!(
+                                self.inner.moments_mut(param, cm, cn),
+                                Some(mom) if mom.m.shape() == (cm, cn) && mom.v.shape() == (cm, cn)
+                            );
+                            if queued {
+                                *self
+                                    .steps
+                                    .get_mut(&param)
+                                    .expect("steady target has a step count") += 1;
+                                self.workspaces.entry(param).or_insert_with(Workspace::new);
+                                self.par_plan.push((i, ParKind::Targeted));
+                                continue;
+                            }
+                        }
+                    } else {
+                        let (rows, cols) = grad.shape();
+                        let queued = matches!(
+                            self.inner.moments_mut(param, rows, cols),
+                            Some(mom) if mom.m.shape() == (rows, cols) && mom.v.shape() == (rows, cols)
+                        );
+                        if queued {
+                            self.par_plan.push((i, ParKind::FullRank));
+                            continue;
+                        }
+                    }
+                    if let Err(e) = self.step(param, &mut weights[i], grad, lr) {
+                        first_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        // Pass B: capture pointers. All map entries exist; nothing below
+        // inserts, so the addresses stay stable until the barrier.
+        self.par_tasks.clear();
+        for &(i, kind) in &self.par_plan {
+            let param = base + i;
+            match kind {
+                ParKind::PreProjected => {
+                    let proj: *const Projector =
+                        self.projectors.get(&param).expect("queued target has a projector");
+                    let scratch: *mut StepScratch = {
+                        let ws = self
+                            .workspaces
+                            .get_mut(&param)
+                            .expect("queued target has a workspace");
+                        &mut ws.step
+                    };
+                    let c = &compact[i];
+                    let (cm, cn) = c.shape();
+                    let mom = self
+                        .inner
+                        .moments_mut(param, cm, cn)
+                        .expect("queued target exposes moments");
+                    self.par_tasks.push(ParTask {
+                        w: &mut weights[i],
+                        grad: c,
+                        proj,
+                        scratch,
+                        m: mom.m,
+                        v: mom.v,
+                        upd: mom.upd,
+                        t: mom.t,
+                        lr_apply: lr * self.cfg.scale,
+                        pre_projected: true,
+                    });
+                }
+                ParKind::Targeted => {
+                    let grad = &grads[i];
+                    let (rows, cols) = grad.shape();
+                    let proj =
+                        self.projectors.get(&param).expect("queued target has a projector");
+                    let (cm, cn) = proj.compact_shape(rows, cols);
+                    let proj: *const Projector = proj;
+                    let scratch: *mut StepScratch = {
+                        let ws = self
+                            .workspaces
+                            .get_mut(&param)
+                            .expect("queued target has a workspace");
+                        &mut ws.step
+                    };
+                    let mom = self
+                        .inner
+                        .moments_mut(param, cm, cn)
+                        .expect("queued target exposes moments");
+                    self.par_tasks.push(ParTask {
+                        w: &mut weights[i],
+                        grad,
+                        proj,
+                        scratch,
+                        m: mom.m,
+                        v: mom.v,
+                        upd: mom.upd,
+                        t: mom.t,
+                        lr_apply: lr * self.cfg.scale,
+                        pre_projected: false,
+                    });
+                }
+                ParKind::FullRank => {
+                    let grad = &grads[i];
+                    let (rows, cols) = grad.shape();
+                    let mom = self
+                        .inner
+                        .moments_mut(param, rows, cols)
+                        .expect("queued parameter exposes moments");
+                    self.par_tasks.push(ParTask {
+                        w: &mut weights[i],
+                        grad,
+                        proj: std::ptr::null(),
+                        scratch: std::ptr::null_mut(),
+                        m: mom.m,
+                        v: mom.v,
+                        upd: mom.upd,
+                        t: mom.t,
+                        lr_apply: -lr,
+                        pre_projected: false,
+                    });
+                }
+            }
+        }
+        let tasks = std::mem::take(&mut self.par_tasks);
+        if !tasks.is_empty() {
+            pool::run(tasks.len(), |i| tasks[i].run());
+        }
+        self.par_tasks = tasks;
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Checkpoint v2: projector RNG, the inner optimizer's state (nested,
@@ -1782,5 +2044,55 @@ mod tests {
         gal.step_compact(0, &mut w, &compact, 0.01).unwrap(); // t=2: fine
         let err = gal.step_compact(0, &mut w, &compact, 0.01).unwrap_err();
         assert!(err.contains("refresh boundary"), "{err}"); // t=2 % 2 == 0
+    }
+
+    #[test]
+    fn step_planned_matches_sequential_walk() {
+        // The parallel `step_planned` override (pool fan-out, pre-projected
+        // compact tasks) must be bit-identical to the sequential
+        // step/step_compact walk the trait default performs — the invariant
+        // the DP bucketed-overlap path rests on.
+        let cfg = || GaLoreConfig { rank: 4, update_freq: 4, scale: 0.25, ..Default::default() };
+        let mut par = GaLore::new(cfg(), adam());
+        let mut seq = GaLore::new(cfg(), adam());
+        let mut rng = Rng::new(7);
+        // Two targets plus a small untargeted parameter (min dim <= rank),
+        // so all three ParKind arms get exercised across refresh cycles.
+        let shapes = [(16usize, 24usize), (12, 20), (3, 4)];
+        let mut wp: Vec<Matrix> =
+            shapes.iter().map(|&(r, c)| Matrix::randn(r, c, 1.0, &mut rng)).collect();
+        let mut ws: Vec<Matrix> = wp.clone();
+        for step in 0..10u64 {
+            let grads: Vec<Matrix> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, &(r, c))| Matrix::randn(r, c, 1.0, &mut rng.child(step * 10 + i as u64)))
+                .collect();
+            // Build the DP plan + compact buffers the way `plan_grads` does.
+            let mut plan = Vec::new();
+            let mut compact = Vec::new();
+            for (i, g) in grads.iter().enumerate() {
+                let mode = seq.grad_reduce_mode(i, g.rows, g.cols);
+                assert_eq!(mode, par.grad_reduce_mode(i, g.rows, g.cols));
+                let mut c = Matrix::zeros(0, 0);
+                if let GradReduceMode::Compact { .. } = mode {
+                    assert!(seq.project_grad_into(i, g, &mut c));
+                }
+                plan.push(mode);
+                compact.push(c);
+            }
+            par.step_planned(0, &mut wp, &grads, &plan, &compact, 0.01).unwrap();
+            for i in 0..grads.len() {
+                match plan[i] {
+                    GradReduceMode::Full => seq.step(i, &mut ws[i], &grads[i], 0.01).unwrap(),
+                    GradReduceMode::Compact { .. } => {
+                        seq.step_compact(i, &mut ws[i], &compact[i], 0.01).unwrap()
+                    }
+                }
+            }
+            for (a, b) in wp.iter().zip(ws.iter()) {
+                assert_slice_close(&a.data, &b.data, 0.0, 0.0);
+            }
+        }
     }
 }

@@ -203,6 +203,47 @@ pub trait Optimizer: Send {
         ))
     }
 
+    /// Step a contiguous parameter range `[base, base + weights.len())`
+    /// under a data-parallel communication plan: parameters the plan
+    /// reduced in full consume `grads[i]` via `step`, compact-reduced
+    /// ones consume the averaged `Pᵀ G` in `compact[i]` via
+    /// `step_compact`. Contract: **bit-identical** to walking the range
+    /// sequentially in ascending order with those calls — overrides may
+    /// parallelize (GaLore steps disjoint layers across the worker pool)
+    /// but never reorder observable state updates. The bucketed DP
+    /// exchange applies each reduced bucket through this entry point.
+    fn step_planned(
+        &mut self,
+        base: usize,
+        weights: &mut [Matrix],
+        grads: &[Matrix],
+        plan: &[GradReduceMode],
+        compact: &[Matrix],
+        lr: f32,
+    ) -> Result<(), String> {
+        if weights.len() != grads.len()
+            || plan.len() != grads.len()
+            || compact.len() != grads.len()
+        {
+            return Err(format!(
+                "step_planned: {} weights vs {} gradients ({} plan entries, {} compact buffers)",
+                weights.len(),
+                grads.len(),
+                plan.len(),
+                compact.len()
+            ));
+        }
+        for (i, w) in weights.iter_mut().enumerate() {
+            match plan[i] {
+                GradReduceMode::Full => self.step(base + i, w, &grads[i], lr)?,
+                GradReduceMode::Compact { .. } => {
+                    self.step_compact(base + i, w, &compact[i], lr)?
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Opt-in surface for step backends that execute the update on another
     /// substrate (the AOT-artifact backend): borrow this parameter's
     /// Adam-style moment state — `M`, `V`, and the 1-based step counter —

@@ -23,44 +23,74 @@ pub enum Input<'a> {
 /// Persistent staging for an artifact's input list, so the hot path stops
 /// rebuilding a `Vec<Input>` every call (the last per-step allocation the
 /// training loop made — the counterpart of the trainer's `grad_bufs`).
-/// Usage per call: `begin()` hands out the cleared buffer to push this
-/// call's borrows into; `finish()` clears it again immediately after the
-/// engine call, while the borrowed data is still alive, so no dangling
-/// value ever persists in the warm buffer.
+/// Usage per call: `begin()` hands out a [`StagedInputs`] guard over the
+/// cleared buffer; the caller pushes this call's borrows and passes the
+/// guard to the engine. The guard's `Drop` clears the buffer again while
+/// the borrowed data is still alive — on the success path, on early `?`
+/// returns, and on unwinds alike — so no dangling value ever persists in
+/// the warm buffer (staging used to leak across steps when an engine call
+/// failed between `begin` and the manual clear).
 #[derive(Default)]
 pub struct InputStage {
-    /// Always empty between `finish` and the next `begin`; the `'static`
-    /// here is a placeholder lifetime for the empty buffer, never the
-    /// lifetime of any stored value.
+    /// Always empty between guard drops and the next `begin`; the
+    /// `'static` here is a placeholder lifetime for the empty buffer,
+    /// never the lifetime of any stored value.
     bufs: Vec<Input<'static>>,
 }
 
 impl InputStage {
+    /// Fresh stage with an empty (but growable, persistent) buffer.
     pub fn new() -> InputStage {
         InputStage { bufs: Vec::new() }
     }
 
     /// Clear and hand out the staging buffer at the caller's borrow
-    /// lifetime. The returned borrow keeps the stage locked until the
-    /// inputs' last use; call [`InputStage::finish`] right after the
-    /// engine call to drop the stored borrows.
-    pub fn begin<'a>(&'a mut self) -> &'a mut Vec<Input<'a>> {
+    /// lifetime, wrapped in an RAII guard. The guard keeps the stage
+    /// locked until it is dropped, and its drop clears the staged borrows
+    /// on every exit path.
+    pub fn begin<'a>(&'a mut self) -> StagedInputs<'a> {
         self.bufs.clear();
         // SAFETY: the Vec is empty, so no existing value is reinterpreted;
         // `Vec<Input<'static>>` and `Vec<Input<'a>>` have identical layout
         // (lifetimes are erased at runtime). Values pushed through the
-        // returned reference borrow data for `'a`, and the `&'a mut self`
-        // receiver keeps the stage inaccessible until those borrows end —
-        // after which `finish` clears them before they can dangle.
-        unsafe {
+        // guard borrow data for `'a`, and the `&'a mut self` receiver
+        // keeps the stage inaccessible until the guard ends — whose
+        // `Drop` clears the stored borrows before they can dangle, even
+        // when the call between `begin` and the drop errors or unwinds.
+        let bufs = unsafe {
             std::mem::transmute::<&mut Vec<Input<'static>>, &mut Vec<Input<'a>>>(&mut self.bufs)
-        }
+        };
+        StagedInputs { bufs }
     }
+}
 
-    /// Drop this call's borrows (keeps capacity). Must be called after
-    /// every `begin` once the engine call returns, while the borrowed
-    /// data is still live.
-    pub fn finish(&mut self) {
+/// RAII guard over one engine call's staged inputs
+/// ([`InputStage::begin`]). Derefs to the underlying `Vec<Input>` for
+/// pushing borrows and passing to [`Engine::execute`]; dropping it clears
+/// the stage (keeping capacity), so a failed engine call can never leave
+/// stale staged buffers behind for the next step.
+pub struct StagedInputs<'a> {
+    bufs: &'a mut Vec<Input<'a>>,
+}
+
+impl<'a> std::ops::Deref for StagedInputs<'a> {
+    type Target = Vec<Input<'a>>;
+
+    fn deref(&self) -> &Vec<Input<'a>> {
+        self.bufs
+    }
+}
+
+impl<'a> std::ops::DerefMut for StagedInputs<'a> {
+    fn deref_mut(&mut self) -> &mut Vec<Input<'a>> {
+        self.bufs
+    }
+}
+
+impl Drop for StagedInputs<'_> {
+    fn drop(&mut self) {
+        // `Input` holds only shared borrows (no drop glue): clearing just
+        // resets the length, it never touches the borrowed data.
         self.bufs.clear();
     }
 }
@@ -172,5 +202,44 @@ impl Engine {
     /// Number of distinct compiled executables resident.
     pub fn compiled_count(&self) -> usize {
         self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staged_inputs_clear_on_early_error_return() {
+        let mut stage = InputStage::new();
+        let data = vec![1.0f32; 4];
+        // Model a trainer step whose engine call fails after staging: the
+        // `?`-style early return drops the guard mid-function.
+        let r: Result<()> = (|| {
+            let mut inputs = stage.begin();
+            inputs.push(Input::F32(&data));
+            bail!("engine call failed");
+        })();
+        assert!(r.is_err());
+        assert_eq!(stage.bufs.len(), 0, "error path must leave the stage cleared");
+        // The stage stays usable for the next step.
+        let mut inputs = stage.begin();
+        inputs.push(Input::F32(&data));
+        assert_eq!(inputs.len(), 1);
+        drop(inputs);
+        assert_eq!(stage.bufs.len(), 0);
+    }
+
+    #[test]
+    fn staged_inputs_clear_on_unwind() {
+        let mut stage = InputStage::new();
+        let data = vec![2.0f32; 4];
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut inputs = stage.begin();
+            inputs.push(Input::F32(&data));
+            panic!("mid-call panic");
+        }));
+        assert!(unwound.is_err());
+        assert_eq!(stage.bufs.len(), 0, "unwind must leave the stage cleared");
     }
 }

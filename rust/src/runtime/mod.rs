@@ -13,5 +13,5 @@ pub mod json;
 pub mod manifest;
 pub mod pool;
 
-pub use engine::{Engine, Input, InputStage, Output};
+pub use engine::{Engine, Input, InputStage, Output, StagedInputs};
 pub use manifest::{default_dir, ArtifactMeta, DType, Manifest};

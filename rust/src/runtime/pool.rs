@@ -32,6 +32,17 @@
 //!   pool. Per-task arithmetic is chunking-independent (each output row
 //!   is computed with one fixed FMA order), so inlining changes nothing
 //!   bit-wise — only the parallel grain.
+//! * **Panic containment.** A panicking task must not wedge the pool:
+//!   the job mutex is process-wide state, and a panic that unwound
+//!   through a locked section would poison it, turning every later
+//!   kernel call's `lock().unwrap()` into a panic cascade. Task calls
+//!   run under `catch_unwind` on workers and submitter alike; the first
+//!   payload cancels the job's unclaimed tasks, the barrier drains the
+//!   in-flight ones, and the panic is rethrown on the submitting thread
+//!   once the slot is reset — the same observable behavior as a
+//!   scoped-thread join. Every lock/wait site additionally recovers from
+//!   poisoning (the critical sections only do counter bookkeeping, so
+//!   the state is consistent even after an unexpected unwind).
 //!
 //! Sizing: `GALORE_THREADS` (env var, ≥ 1) overrides the default of
 //! `available_parallelism().min(16)`; `configure()` resizes at runtime
@@ -57,6 +68,10 @@ struct JobState {
     done: usize,
     active: bool,
     shutdown: bool,
+    /// First panic payload caught from a task of the current job. Set
+    /// under the lock (first panic wins, later ones are dropped), taken
+    /// by the submitter after the barrier and rethrown on its thread.
+    panic: Option<Box<dyn std::any::Any + Send>>,
 }
 
 // SAFETY: `data` is only dereferenced by `call` for task claims made
@@ -99,9 +114,36 @@ unsafe fn call_never(_: *const (), _: usize) {
     unreachable!("pool job invoked with no active closure")
 }
 
+/// Lock the job state, recovering from poisoning. Poisoning can only
+/// happen if a thread unwinds while holding the lock; every critical
+/// section in this module does plain counter/pointer bookkeeping, so the
+/// state is consistent regardless — recovery keeps one panicking task
+/// from turning the process-wide pool into a panic cascade.
+fn lock_recover(m: &Mutex<JobState>) -> std::sync::MutexGuard<'_, JobState> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Condvar wait with the same poisoning recovery as [`lock_recover`].
+fn wait_recover<'a>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, JobState>,
+) -> std::sync::MutexGuard<'a, JobState> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Record a task panic under the lock: keep the first payload, cancel
+/// every unclaimed task (the in-flight claims still drain through the
+/// barrier, which is what keeps the submitter's closure borrow sound).
+fn record_panic(st: &mut JobState, payload: Box<dyn std::any::Any + Send>) {
+    if st.panic.is_none() {
+        st.panic = Some(payload);
+    }
+    st.n_tasks = st.next;
+}
+
 fn worker_loop(inner: Arc<Inner>) {
     IN_POOL.with(|f| f.set(true));
-    let mut st = inner.state.lock().unwrap();
+    let mut st = lock_recover(&inner.state);
     loop {
         if st.active && st.next < st.n_tasks {
             let i = st.next;
@@ -110,10 +152,16 @@ fn worker_loop(inner: Arc<Inner>) {
             drop(st);
             // SAFETY: claimed under the lock while the job was active, so
             // the submitter is still parked in `run` and `data` is live.
-            unsafe { call(data, i) };
-            st = inner.state.lock().unwrap();
+            // The catch_unwind keeps a panicking task from killing this
+            // worker (and from unwinding past the borrowed closure).
+            let res =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe { call(data, i) }));
+            st = lock_recover(&inner.state);
+            if let Err(payload) = res {
+                record_panic(&mut st, payload);
+            }
             st.done += 1;
-            if st.done == st.n_tasks {
+            if st.done >= st.n_tasks {
                 inner.done_cv.notify_all();
             }
         } else if st.shutdown {
@@ -121,7 +169,7 @@ fn worker_loop(inner: Arc<Inner>) {
             // can be reached, so shutdown never strands a submitter.
             return;
         } else {
-            st = inner.work_cv.wait(st).unwrap();
+            st = wait_recover(&inner.work_cv, st);
         }
     }
 }
@@ -140,6 +188,7 @@ impl Pool {
                 done: 0,
                 active: false,
                 shutdown: false,
+                panic: None,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
@@ -165,6 +214,11 @@ impl Pool {
     /// all of them — a scope-style join barrier. Tasks must write to
     /// disjoint data (same contract as the scoped-thread chunking this
     /// replaces). Dispatch performs no heap allocation.
+    ///
+    /// If a task panics, the job's unclaimed tasks are cancelled, the
+    /// in-flight ones drain, and the first panic payload is rethrown on
+    /// this thread after the slot is reset — the pool itself stays
+    /// usable, exactly like a scoped-thread join.
     pub fn run<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
         if n_tasks <= 1 || self.threads <= 1 || IN_POOL.with(|g| g.get()) {
             for i in 0..n_tasks {
@@ -174,35 +228,43 @@ impl Pool {
         }
         IN_POOL.with(|g| g.set(true));
         let inner = &*self.inner;
-        let mut st = inner.state.lock().unwrap();
+        let mut st = lock_recover(&inner.state);
         // One job at a time: queue for the slot like the scoped version
         // serialized on spawn/join.
         while st.active {
-            st = inner.done_cv.wait(st).unwrap();
+            st = wait_recover(&inner.done_cv, st);
         }
         st.data = &f as *const F as *const ();
         st.call = call_as::<F>;
         st.n_tasks = n_tasks;
         st.next = 0;
         st.done = 0;
+        st.panic = None;
         st.active = true;
         inner.work_cv.notify_all();
-        // Participate: claim tasks alongside the workers.
+        // Participate: claim tasks alongside the workers. The submitter's
+        // own task calls are caught too — unwinding out of `run` while
+        // workers hold claims into `f` would pop the closure from under
+        // them; instead the panic is re-raised after the barrier.
         loop {
             if st.next < st.n_tasks {
                 let i = st.next;
                 st.next += 1;
                 drop(st);
-                f(i);
-                st = inner.state.lock().unwrap();
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+                st = lock_recover(&inner.state);
+                if let Err(payload) = res {
+                    record_panic(&mut st, payload);
+                }
                 st.done += 1;
             } else {
                 break;
             }
         }
         while st.done < st.n_tasks {
-            st = inner.done_cv.wait(st).unwrap();
+            st = wait_recover(&inner.done_cv, st);
         }
+        let panicked = st.panic.take();
         st.active = false;
         st.data = std::ptr::null();
         st.call = call_never;
@@ -210,15 +272,19 @@ impl Pool {
         // Hand the job slot to any queued submitter.
         inner.done_cv.notify_all();
         IN_POOL.with(|g| g.set(false));
+        if let Some(payload) = panicked {
+            std::panic::resume_unwind(payload);
+        }
     }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
         {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = lock_recover(&self.inner.state);
             st.shutdown = true;
             self.inner.work_cv.notify_all();
+            drop(st);
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -261,7 +327,7 @@ fn global() -> &'static Mutex<Arc<Pool>> {
 /// knob and the thread-count parity tests.
 pub fn configure(threads: usize) {
     let threads = threads.max(1);
-    let mut g = global().lock().unwrap();
+    let mut g = global().lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     if g.threads() != threads {
         *g = Arc::new(Pool::new(threads));
     }
@@ -270,13 +336,13 @@ pub fn configure(threads: usize) {
 /// Width of the process-wide pool — what the kernels in `tensor/ops.rs`
 /// split their row ranges by.
 pub fn num_threads() -> usize {
-    global().lock().unwrap().threads()
+    global().lock().unwrap_or_else(std::sync::PoisonError::into_inner).threads()
 }
 
 /// Run `n_tasks` tasks on the process-wide pool (see [`Pool::run`]).
 /// Allocation-free on the calling thread once the pool exists.
 pub fn run<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
-    let pool = global().lock().unwrap().clone();
+    let pool = global().lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone();
     pool.run(n_tasks, f);
 }
 
@@ -380,6 +446,46 @@ mod tests {
         configure(3);
         assert_eq!(num_threads(), 3);
         configure(default_threads());
+    }
+
+    #[test]
+    fn panicking_task_propagates_and_pool_stays_usable() {
+        let pool = Pool::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 3 {
+                    panic!("task 3 exploded");
+                }
+            });
+        }));
+        let payload = r.expect_err("the task panic must reach the submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "task 3 exploded", "original payload must survive the relay");
+        // The pool — and its job mutex — must stay fully usable: no
+        // poisoning, no stranded workers, no stale panic payload.
+        let total = AtomicUsize::new(0);
+        pool.run(8, |i| {
+            total.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 36);
+    }
+
+    #[test]
+    fn repeated_panics_do_not_wedge_the_pool() {
+        // Several jobs in a row where *every* task panics: each run must
+        // rethrow exactly once and leave the slot clean for the next.
+        let pool = Pool::new(3);
+        for round in 0..5 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(6, |_| panic!("round {round}"));
+            }));
+            assert!(r.is_err(), "round {round} must surface a panic");
+        }
+        let total = AtomicUsize::new(0);
+        pool.run(10, |i| {
+            total.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 45);
     }
 
     #[test]

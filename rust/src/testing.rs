@@ -105,6 +105,33 @@ pub fn assert_slice_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
     }
 }
 
+/// Run `f` on a fresh thread and panic if it has not finished within
+/// `dur` — the hard per-test timeout for anything that coordinates
+/// multiple threads or processes (DP rings, rendezvous), where the
+/// failure mode of a bug is a silent hang rather than an assert. On
+/// timeout the worker thread is leaked (it is stuck by hypothesis); a
+/// panic inside `f` is relayed to the caller unchanged.
+pub fn with_timeout<T: Send + 'static>(
+    dur: std::time::Duration,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)));
+    });
+    match rx.recv_timeout(dur) {
+        Ok(Ok(v)) => {
+            let _ = handle.join();
+            v
+        }
+        Ok(Err(payload)) => {
+            let _ = handle.join();
+            std::panic::resume_unwind(payload)
+        }
+        Err(_) => panic!("test timed out after {dur:?} (worker thread leaked)"),
+    }
+}
+
 // -- convergence-regression harness -----------------------------------------
 
 /// Seeded synthetic low-rank regression (the Lemma 3.3 setting): inputs

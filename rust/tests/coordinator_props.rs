@@ -144,7 +144,7 @@ fn prop_ring_allreduce_equals_serial_sum() {
         let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
             let joins: Vec<_> = handles
                 .into_iter()
-                .map(|h| {
+                .map(|mut h| {
                     scope.spawn(move || {
                         let mut rng = Rng::new(h.rank as u64);
                         let mut data: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();

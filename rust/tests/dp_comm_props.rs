@@ -18,8 +18,9 @@
 
 use galore::config::{MethodKind, RunConfig};
 use galore::coordinator::{
-    checkpoint, collect_worker_results, exchange_grads, train_data_parallel,
-    train_data_parallel_resumable, Ring, RingClosed, Trainer, RING_ABORT_MSG,
+    checkpoint, collect_worker_results, exchange_grads, exchange_grads_overlapped,
+    local_socket_ring, plan_grads, train_data_parallel, train_data_parallel_resumable,
+    train_dp_over, Ring, RingClosed, Trainer, Transport, RING_ABORT_MSG,
 };
 use galore::model::{schema, ModelConfig};
 use galore::optim::{
@@ -29,6 +30,12 @@ use galore::optim::{
 use galore::rng::Rng;
 use galore::runtime::default_dir;
 use galore::tensor::Matrix;
+use galore::testing::with_timeout;
+use std::time::Duration;
+
+/// Hard cap on anything that coordinates a ring of workers: a transport
+/// bug shows up as a hang, and a hang must fail the suite, not stall it.
+const RING_TEST_TIMEOUT: Duration = Duration::from_secs(120);
 
 // ---------------------------------------------------------------------------
 // Optimizer-level DP harness (no artifacts): a ring of threads, one GaLore
@@ -76,46 +83,55 @@ struct ModeOutcome {
     payloads: Vec<u64>,
 }
 
-/// Run `steps` synchronous DP steps over `world` replicas, exchanging
-/// gradients full or compact per the optimizer's plan. Replicas start
-/// bit-identical (shared init seed) and see *different* per-worker
-/// gradient streams, like real data-parallel shards.
-fn run_dp(world: usize, steps: usize, compress: bool, make: MakeOpt) -> Vec<ModeOutcome> {
-    let handles = Ring::new(world).into_handles();
+/// Fresh replica state shared by every runner: bit-identical weights
+/// (shared init seed) and zeroed gradient buffers.
+fn fresh_replica(init_seed: u64) -> (Vec<Matrix>, Vec<Matrix>) {
+    let mut init = Rng::new(init_seed);
+    let weights = vec![
+        Matrix::randn(TARGET_SHAPE.0, TARGET_SHAPE.1, 1.0, &mut init),
+        Matrix::randn(OTHER_SHAPE.0, OTHER_SHAPE.1, 1.0, &mut init),
+    ];
+    let grads = vec![
+        Matrix::zeros(TARGET_SHAPE.0, TARGET_SHAPE.1),
+        Matrix::zeros(OTHER_SHAPE.0, OTHER_SHAPE.1),
+    ];
+    (weights, grads)
+}
+
+/// Per-worker synthetic gradient shard for step `s` — replicas see
+/// *different* streams, like real data-parallel shards.
+fn fill_grads(grads: &mut [Matrix], stream: &mut Rng, s: usize) {
+    grads[0] =
+        Matrix::randn(TARGET_SHAPE.0, TARGET_SHAPE.1, 1.0, &mut stream.child(2 * s as u64));
+    grads[1] =
+        Matrix::randn(OTHER_SHAPE.0, OTHER_SHAPE.1, 1.0, &mut stream.child(2 * s as u64 + 1));
+}
+
+/// Run `steps` synchronous DP steps, one replica per transport, exchanging
+/// gradients full or compact per the optimizer's plan with barrier
+/// semantics. Generic over the ring transport — the channel ring and the
+/// socket ring must drive it to bit-identical outcomes.
+fn run_dp_over_transports<Tp: Transport>(
+    transports: Vec<Tp>,
+    steps: usize,
+    compress: bool,
+    make: MakeOpt,
+) -> Vec<ModeOutcome> {
     std::thread::scope(|scope| {
-        let joins: Vec<_> = handles
+        let joins: Vec<_> = transports
             .into_iter()
-            .map(|h| {
+            .map(|mut tp| {
                 scope.spawn(move || {
                     let mut opt = make();
-                    let mut init = Rng::new(7);
-                    let mut weights = vec![
-                        Matrix::randn(TARGET_SHAPE.0, TARGET_SHAPE.1, 1.0, &mut init),
-                        Matrix::randn(OTHER_SHAPE.0, OTHER_SHAPE.1, 1.0, &mut init),
-                    ];
-                    let mut grads = vec![
-                        Matrix::zeros(TARGET_SHAPE.0, TARGET_SHAPE.1),
-                        Matrix::zeros(OTHER_SHAPE.0, OTHER_SHAPE.1),
-                    ];
+                    let (mut weights, mut grads) = fresh_replica(7);
                     let mut compact = Vec::new();
                     let mut plan = Vec::new();
                     let mut payloads = Vec::new();
-                    let mut stream = Rng::new(0xBEEF ^ h.rank as u64);
+                    let mut stream = Rng::new(0xBEEF ^ tp.rank() as u64);
                     for s in 0..steps {
-                        grads[0] = Matrix::randn(
-                            TARGET_SHAPE.0,
-                            TARGET_SHAPE.1,
-                            1.0,
-                            &mut stream.child(2 * s as u64),
-                        );
-                        grads[1] = Matrix::randn(
-                            OTHER_SHAPE.0,
-                            OTHER_SHAPE.1,
-                            1.0,
-                            &mut stream.child(2 * s as u64 + 1),
-                        );
+                        fill_grads(&mut grads, &mut stream, s);
                         let p = exchange_grads(
-                            &h,
+                            &mut tp,
                             opt.as_ref(),
                             &mut grads,
                             &mut compact,
@@ -136,6 +152,77 @@ fn run_dp(world: usize, steps: usize, compress: bool, make: MakeOpt) -> Vec<Mode
                         }
                     }
                     ModeOutcome { weights, payloads }
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    })
+}
+
+fn run_dp(world: usize, steps: usize, compress: bool, make: MakeOpt) -> Vec<ModeOutcome> {
+    run_dp_over_transports(Ring::new(world).into_handles(), steps, compress, make)
+}
+
+/// Same workload through [`exchange_grads_overlapped`]: plan, then reduce
+/// `cap_f32s`-element buckets on the comm thread while the update thread
+/// applies finished buckets. Must be bit-identical to the barrier runner.
+fn run_dp_bucketed(
+    world: usize,
+    steps: usize,
+    cap_f32s: usize,
+    make: MakeOpt,
+) -> Vec<(ModeOutcome, f32)> {
+    let handles = Ring::new(world).into_handles();
+    std::thread::scope(|scope| {
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                scope.spawn(move || {
+                    let mut opt = make();
+                    let (mut weights, mut grads) = fresh_replica(7);
+                    let mut compact = Vec::new();
+                    let mut plan = Vec::new();
+                    let mut payloads = Vec::new();
+                    let mut last_loss = 0.0f32;
+                    let mut stream = Rng::new(0xBEEF ^ h.rank as u64);
+                    for s in 0..steps {
+                        fill_grads(&mut grads, &mut stream, s);
+                        let p =
+                            plan_grads(opt.as_ref(), &grads, &mut compact, &mut plan, true);
+                        payloads.push(p);
+                        let n = grads.len();
+                        let local_loss = (1 + h.rank) as f32 * (s + 1) as f32;
+                        let opt = &mut opt;
+                        let weights = &mut weights;
+                        let plan_ref = &plan;
+                        let mut apply =
+                            |start: usize, gs: &[Matrix], cs: &[Matrix]| -> anyhow::Result<()> {
+                                for i in 0..gs.len() {
+                                    let idx = start + i;
+                                    match plan_ref[idx] {
+                                        GradReduceMode::Full => opt
+                                            .step(idx, &mut weights[idx], &gs[i], 0.01)
+                                            .map_err(|e| anyhow::anyhow!(e))?,
+                                        GradReduceMode::Compact { .. } => opt
+                                            .step_compact(idx, &mut weights[idx], &cs[i], 0.01)
+                                            .map_err(|e| anyhow::anyhow!(e))?,
+                                    }
+                                }
+                                Ok(())
+                            };
+                        let (mean_loss, _times) = exchange_grads_overlapped(
+                            &mut h,
+                            &mut grads,
+                            &mut compact[..n],
+                            plan_ref,
+                            cap_f32s,
+                            local_loss,
+                            &mut apply,
+                        )
+                        .unwrap();
+                        last_loss = mean_loss;
+                    }
+                    (ModeOutcome { weights, payloads }, last_loss)
                 })
             })
             .collect();
@@ -233,6 +320,90 @@ fn single_worker_compact_plan_is_bit_exact_with_full_plan() {
 }
 
 #[test]
+fn socket_ring_matches_channel_ring_bit_exactly() {
+    // The transport abstraction's contract: `all_reduce_mean` over Unix
+    // sockets performs the *same* chunk arithmetic in the *same* order as
+    // the in-process channel ring, so the whole DP run — weights and
+    // per-step payloads — is bit-identical across transports.
+    with_timeout(RING_TEST_TIMEOUT, || {
+        for (name, make) in [
+            ("galore-adam", make_adam as MakeOpt),
+            ("galore-adaptive-gated", make_adaptive_gated as MakeOpt),
+        ] {
+            for compress in [false, true] {
+                let chan = run_dp(3, 9, compress, make);
+                let sock = run_dp_over_transports(
+                    local_socket_ring(3).expect("socketpair ring"),
+                    9,
+                    compress,
+                    make,
+                );
+                for r in 0..3 {
+                    assert_eq!(
+                        chan[r].payloads, sock[r].payloads,
+                        "{name}/compress={compress}: payloads diverged at rank {r}"
+                    );
+                    for (a, b) in chan[r].weights.iter().zip(sock[r].weights.iter()) {
+                        assert_eq!(
+                            a.data, b.data,
+                            "{name}/compress={compress}: socket transport changed \
+                             the arithmetic at rank {r}"
+                        );
+                    }
+                }
+            }
+        }
+    })
+}
+
+#[test]
+fn bucketed_overlapped_exchange_is_bit_exact_with_barrier() {
+    // The PR's overlap invariant: bucketing only reorders *local* work
+    // (updates run while later buckets reduce); the collective sequence is
+    // unchanged, so every weight bit and every payload matches the
+    // barrier exchange — at any bucket cap, including caps that force one
+    // parameter per bucket and caps that fit everything in one.
+    with_timeout(RING_TEST_TIMEOUT, || {
+        for (name, make) in [
+            ("galore-adam", make_adam as MakeOpt),
+            ("galore-adafactor", make_adafactor as MakeOpt),
+        ] {
+            let barrier = run_dp(3, 9, true, make);
+            for cap in [1usize, 160, 1 << 20] {
+                let bucketed = run_dp_bucketed(3, 9, cap, make);
+                for r in 0..3 {
+                    assert_eq!(
+                        barrier[r].payloads, bucketed[r].0.payloads,
+                        "{name}/cap={cap}: payloads diverged at rank {r}"
+                    );
+                    for (a, b) in
+                        barrier[r].weights.iter().zip(bucketed[r].0.weights.iter())
+                    {
+                        assert_eq!(
+                            a.data, b.data,
+                            "{name}/cap={cap}: bucketing changed the arithmetic \
+                             at rank {r}"
+                        );
+                    }
+                }
+                // The loss reduce rides the same overlapped exchange:
+                // every rank must see the *identical* reduced mean of the
+                // per-rank local losses (1 + rank) * steps at step 9.
+                let want: f32 = (0..3).map(|r| (1 + r) as f32 * 9.0).sum::<f32>() / 3.0;
+                let first = bucketed[0].1;
+                assert!(
+                    (first - want).abs() < 1e-4,
+                    "{name}/cap={cap}: loss mean {first} != {want}"
+                );
+                for (r, (_, loss)) in bucketed.iter().enumerate() {
+                    assert_eq!(*loss, first, "{name}/cap={cap}: loss diverged at rank {r}");
+                }
+            }
+        }
+    })
+}
+
+#[test]
 fn worker_error_surfacing_prefers_root_cause_over_ring_echo() {
     // Rank 1 hits a real error; its neighbours observe ring shutdowns.
     // The aggregate error must name rank 1's failure, not the echoes.
@@ -267,7 +438,7 @@ fn dead_peer_mid_run_degrades_to_error_for_all_survivors() {
     let results: Vec<Result<(), RingClosed>> = std::thread::scope(|scope| {
         let joins: Vec<_> = handles
             .into_iter()
-            .map(|h| {
+            .map(|mut h| {
                 scope.spawn(move || {
                     let mut data = vec![1.0f32; 128];
                     for s in 0..6 {
@@ -360,6 +531,78 @@ fn dp_compress_w4_matches_full_gradient_run() {
         comp.comm_f32s_total,
         full.comm_f32s_total
     );
+}
+
+#[test]
+fn dp_socket_transport_w2_matches_thread_ring_bit_exactly() {
+    if !artifacts_ready() {
+        return;
+    }
+    // The PR 7 acceptance bar: the same W=2 dp_compress training driven
+    // over the Unix-socket ring must reproduce the in-process channel
+    // ring's loss curve *bit-exactly* — the transport moves bytes, the
+    // arithmetic never changes.
+    with_timeout(RING_TEST_TIMEOUT, || {
+        let mut cfg = nano_dp_cfg(8, 2);
+        cfg.dp_compress = true;
+        let thread = train_data_parallel(&cfg).unwrap();
+        let socket =
+            train_dp_over(&cfg, local_socket_ring(2).expect("socketpair ring"), None).unwrap();
+        assert_eq!(
+            thread.final_train_loss.to_bits(),
+            socket.final_train_loss.to_bits(),
+            "train loss: thread {} vs socket {}",
+            thread.final_train_loss,
+            socket.final_train_loss
+        );
+        assert_eq!(
+            thread.final_eval_loss.to_bits(),
+            socket.final_eval_loss.to_bits(),
+            "eval loss: thread {} vs socket {}",
+            thread.final_eval_loss,
+            socket.final_eval_loss
+        );
+        assert_eq!(thread.total_tokens, socket.total_tokens);
+        assert_eq!(thread.comm_f32s_last_step, socket.comm_f32s_last_step);
+    })
+}
+
+#[test]
+fn dp_bucketed_trainer_matches_barrier_trainer_bit_exactly() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Bucketed/overlapped all-reduce in the full trainer: identical bits
+    // to the step-barrier exchange (same collective sequence), with the
+    // comm-time split measured on the overlapped path.
+    with_timeout(RING_TEST_TIMEOUT, || {
+        let mut bucketed_cfg = nano_dp_cfg(8, 2);
+        bucketed_cfg.dp_compress = true;
+        bucketed_cfg.dp_bucket_mb = 1; // small cap: force several buckets
+        let mut barrier_cfg = bucketed_cfg.clone();
+        barrier_cfg.dp_bucket_mb = 0;
+        let bucketed = train_data_parallel(&bucketed_cfg).unwrap();
+        let barrier = train_data_parallel(&barrier_cfg).unwrap();
+        assert_eq!(
+            bucketed.final_train_loss.to_bits(),
+            barrier.final_train_loss.to_bits(),
+            "train loss: bucketed {} vs barrier {}",
+            bucketed.final_train_loss,
+            barrier.final_train_loss
+        );
+        assert_eq!(
+            bucketed.final_eval_loss.to_bits(),
+            barrier.final_eval_loss.to_bits(),
+            "eval loss: bucketed {} vs barrier {}",
+            bucketed.final_eval_loss,
+            barrier.final_eval_loss
+        );
+        assert_eq!(bucketed.comm_f32s_last_step, barrier.comm_f32s_last_step);
+        assert!(
+            bucketed.comm_time > Duration::ZERO,
+            "overlapped path must measure its collective time"
+        );
+    })
 }
 
 #[test]

@@ -1,0 +1,146 @@
+//! Multi-process data-parallel integration tests: spawn the real `galore`
+//! binary and drive the Unix-socket ring across OS processes.
+//!
+//! `dp-smoke` (a trainer-free all-reduce drill, so no artifacts needed)
+//! pins the happy path — every rank reports a bit-identical checksum —
+//! and the dropout drill: a worker killed mid-run must turn into a
+//! prompt, named error on rank 0, never a hang. The artifact-gated test
+//! runs a real `train --dp-transport process` and requires its result
+//! line to match the in-process thread ring character-for-character.
+//!
+//! Every child process here is bounded by a hard deadline: the failure
+//! mode of a ring bug is a silent stall, and a stall must fail the suite.
+
+use std::io::Read;
+use std::process::{Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+/// Run the `galore` binary with `args`, enforcing a wall-clock deadline.
+/// On timeout the child is killed and the test panics — a hung ring is a
+/// bug, not a slow test.
+fn run_galore(args: &[&str], timeout: Duration) -> (ExitStatus, String, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_galore"))
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn galore binary");
+    // Drain the pipes on their own threads so a chatty child can never
+    // deadlock against a full pipe buffer while we poll for exit.
+    let mut out_pipe = child.stdout.take().expect("stdout piped");
+    let mut err_pipe = child.stderr.take().expect("stderr piped");
+    let out_thread = std::thread::spawn(move || {
+        let mut s = String::new();
+        let _ = out_pipe.read_to_string(&mut s);
+        s
+    });
+    let err_thread = std::thread::spawn(move || {
+        let mut s = String::new();
+        let _ = err_pipe.read_to_string(&mut s);
+        s
+    });
+    let deadline = Instant::now() + timeout;
+    let status = loop {
+        match child.try_wait().expect("poll galore child") {
+            Some(st) => break st,
+            None if Instant::now() >= deadline => {
+                let _ = child.kill();
+                let _ = child.wait();
+                let out = out_thread.join().unwrap_or_default();
+                let err = err_thread.join().unwrap_or_default();
+                panic!(
+                    "galore {args:?} still running after {timeout:?} — ring hang.\n\
+                     stdout:\n{out}\nstderr:\n{err}"
+                );
+            }
+            None => std::thread::sleep(Duration::from_millis(20)),
+        }
+    };
+    (status, out_thread.join().unwrap(), err_thread.join().unwrap())
+}
+
+#[test]
+fn dp_smoke_three_processes_reduce_bit_identically() {
+    let (status, out, err) = run_galore(
+        &["dp-smoke", "--world", "3", "--steps", "5"],
+        Duration::from_secs(60),
+    );
+    assert!(status.success(), "dp-smoke failed.\nstdout:\n{out}\nstderr:\n{err}");
+    assert!(
+        out.contains("dp-smoke ok: world=3 steps=5"),
+        "missing success line.\nstdout:\n{out}\nstderr:\n{err}"
+    );
+}
+
+#[test]
+fn dp_smoke_worker_dropout_fails_fast_and_names_the_worker() {
+    // Rank 1 exits(1) at step 3 of 200. Survivors must observe the dead
+    // peer as a closed ring (EOF), rank 0 must surface the root cause —
+    // which worker, and that it died without reporting — and the whole
+    // run must end promptly instead of stalling at step 3's barrier.
+    let (status, out, err) = run_galore(
+        &[
+            "dp-smoke", "--world", "3", "--steps", "200", "--die-rank", "1", "--die-step", "3",
+        ],
+        Duration::from_secs(60),
+    );
+    assert!(
+        !status.success(),
+        "a killed worker must fail the run.\nstdout:\n{out}\nstderr:\n{err}"
+    );
+    assert!(
+        err.contains("worker 1"),
+        "rank 0 must name the failed worker.\nstdout:\n{out}\nstderr:\n{err}"
+    );
+    assert!(
+        err.contains("exited without reporting"),
+        "rank 0 must report the root cause, not a ring echo.\n\
+         stdout:\n{out}\nstderr:\n{err}"
+    );
+}
+
+#[test]
+fn dp_smoke_rejects_a_dead_host_rank() {
+    let (status, _out, err) =
+        run_galore(&["dp-smoke", "--die-rank", "0", "--die-step", "1"], Duration::from_secs(30));
+    assert!(!status.success());
+    assert!(err.contains("--die-rank must be >= 1"), "stderr:\n{err}");
+}
+
+#[test]
+fn train_over_process_transport_matches_thread_transport() {
+    // Needs `make artifacts` (real trainer); self-skip on a bare checkout
+    // like the other artifact-gated DP tests.
+    if !galore::runtime::default_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return;
+    }
+    let args_common = [
+        "train", "--model", "nano", "--method", "galore", "--steps", "4", "--rank", "16",
+        "--update-freq", "5", "--dp-workers", "2", "--dp-compress",
+    ];
+    let mut thread_args = args_common.to_vec();
+    thread_args.extend(["--dp-transport", "thread"]);
+    let mut process_args = args_common.to_vec();
+    process_args.extend(["--dp-transport", "process"]);
+    let (st_t, out_t, err_t) = run_galore(&thread_args, Duration::from_secs(300));
+    assert!(st_t.success(), "thread run failed.\nstdout:\n{out_t}\nstderr:\n{err_t}");
+    let (st_p, out_p, err_p) = run_galore(&process_args, Duration::from_secs(300));
+    assert!(st_p.success(), "process run failed.\nstdout:\n{out_p}\nstderr:\n{err_p}");
+    // The `done:` line carries train/eval loss, tokens, state and comm
+    // figures; everything before the wall-clock field must match
+    // character-for-character across transports.
+    let done = |out: &str| -> String {
+        let line = out
+            .lines()
+            .find(|l| l.starts_with("done:"))
+            .unwrap_or_else(|| panic!("no done: line in\n{out}"))
+            .to_string();
+        line.split(" elapsed=").next().unwrap().to_string()
+    };
+    assert_eq!(
+        done(&out_t),
+        done(&out_p),
+        "process transport changed the result.\nthread:\n{out_t}\nprocess:\n{out_p}"
+    );
+}
