@@ -10,5 +10,5 @@ mod run;
 mod toml;
 
 pub use cli::{Cli, CliError};
-pub use run::{BackendKind, DpTransport, MethodKind, RunConfig};
+pub use run::{BackendKind, DpTransport, MethodKind, RunConfig, ServeConfig};
 pub use toml::TomlDoc;

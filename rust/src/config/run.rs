@@ -198,6 +198,14 @@ pub struct RunConfig {
     /// 16). Deliberately *not* in the fingerprint: results are
     /// bit-identical at any thread count.
     pub threads: usize,
+    /// AOT artifact directory (`artifact_dir` / `--artifact-dir`). Empty =
+    /// use [`crate::runtime::default_dir`] (`$GALORE_ARTIFACTS`, then
+    /// `$GALORE_ARTIFACT_DIR`, then `./artifacts`). A deployment knob like
+    /// `threads` — where the HLO files live cannot shape the trajectory —
+    /// so it stays out of the fingerprint; it exists so the serve daemon
+    /// and tests can point a run at a private manifest without env-var
+    /// games.
+    pub artifact_dir: String,
 }
 
 impl RunConfig {
@@ -235,6 +243,18 @@ impl RunConfig {
             checkpoint_dir: "checkpoints".into(),
             weight_precision: WeightPrecision::F32,
             threads: 0,
+            artifact_dir: String::new(),
+        }
+    }
+
+    /// The artifact directory this run reads: `artifact_dir` if set, else
+    /// the process default (`$GALORE_ARTIFACTS` / `$GALORE_ARTIFACT_DIR` /
+    /// `./artifacts`).
+    pub fn artifacts_dir(&self) -> std::path::PathBuf {
+        if self.artifact_dir.is_empty() {
+            crate::runtime::default_dir()
+        } else {
+            std::path::PathBuf::from(&self.artifact_dir)
         }
     }
 
@@ -466,6 +486,9 @@ impl RunConfig {
         if let Some(v) = doc.get("checkpoint", "dir") {
             cfg.checkpoint_dir = v.to_string();
         }
+        if let Some(v) = doc.get("", "artifact_dir") {
+            cfg.artifact_dir = v.to_string();
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -477,6 +500,99 @@ impl RunConfig {
 
     pub fn eval_artifact(&self) -> String {
         format!("eval_{}_b{}", self.model.name, self.batch)
+    }
+}
+
+/// Configuration of the resident multi-job daemon (`galore serve`):
+/// the `[serve]` TOML section plus CLI overrides.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Unix-domain socket the daemon listens on (and `galore client`
+    /// connects to).
+    pub socket_path: String,
+    /// Maximum jobs resident (admitted/running) at once; further
+    /// submissions queue.
+    pub max_jobs: usize,
+    /// Global memory budget in MiB for admission control (0 = unlimited).
+    /// A job is admitted only while the `memory::breakdown` estimates of
+    /// every resident job plus its own fit under this budget; otherwise it
+    /// stays `Queued` until capacity frees.
+    pub mem_budget_mb: usize,
+    /// Steps each resident job runs per scheduler turn (round-robin
+    /// slicing; smaller = fairer interleaving, larger = less switching).
+    pub slice_steps: usize,
+    /// Directory for evicted-job checkpoints and the JSONL step log.
+    pub job_dir: String,
+    /// Write per-step JSONL rows (job id, name, step, loss, lr, tokens)
+    /// to `<job_dir>/steps.jsonl`.
+    pub step_log: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            socket_path: "galore-serve.sock".into(),
+            max_jobs: 4,
+            mem_budget_mb: 0,
+            slice_steps: 25,
+            job_dir: "serve-jobs".into(),
+            step_log: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse the `[serve]` section of a config document (missing keys keep
+    /// their defaults; a document without the section is the default
+    /// config).
+    pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig, String> {
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = doc.get("serve", "socket_path") {
+            cfg.socket_path = v.to_string();
+        }
+        if let Some(v) = doc.get_parse("serve", "max_jobs") {
+            cfg.max_jobs = v;
+        }
+        if let Some(v) = doc.get_parse("serve", "mem_budget_mb") {
+            cfg.mem_budget_mb = v;
+        }
+        if let Some(v) = doc.get_parse("serve", "slice_steps") {
+            cfg.slice_steps = v;
+        }
+        if let Some(v) = doc.get("serve", "job_dir") {
+            cfg.job_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_parse("serve", "step_log") {
+            cfg.step_log = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.socket_path.is_empty() {
+            return Err("serve.socket_path must not be empty".into());
+        }
+        if self.max_jobs == 0 {
+            return Err("serve.max_jobs must be >= 1 (0 jobs would never run anything)".into());
+        }
+        if self.slice_steps == 0 {
+            return Err(
+                "serve.slice_steps must be >= 1 (a zero-step slice makes no progress)".into()
+            );
+        }
+        if self.job_dir.is_empty() {
+            return Err(
+                "serve.job_dir must not be empty — paused jobs evict their checkpoints there"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
+    /// The admission budget in bytes (0 = unlimited).
+    pub fn budget_bytes(&self) -> u64 {
+        self.mem_budget_mb as u64 * (1 << 20)
     }
 }
 
@@ -792,6 +908,53 @@ mod tests {
         let mut threaded = base.clone();
         threaded.threads = 4;
         assert_eq!(fp, threaded.fingerprint());
+    }
+
+    #[test]
+    fn artifact_dir_parses_and_stays_out_of_fingerprint() {
+        let doc = TomlDoc::parse("model = \"nano\"\nartifact_dir = \"/tmp/private\"\n").unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.artifact_dir, "/tmp/private");
+        assert_eq!(cfg.artifacts_dir(), std::path::PathBuf::from("/tmp/private"));
+        // Where the HLO files live cannot shape the trajectory.
+        let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        let mut moved = base.clone();
+        moved.artifact_dir = "elsewhere".into();
+        assert_eq!(base.fingerprint(), moved.fingerprint());
+    }
+
+    #[test]
+    fn serve_config_defaults_parse_and_validate() {
+        let d = ServeConfig::default();
+        assert!(d.validate().is_ok());
+        assert_eq!(d.max_jobs, 4);
+        assert_eq!(d.mem_budget_mb, 0);
+        let doc = TomlDoc::parse(
+            "[serve]\nsocket_path = \"/tmp/g.sock\"\nmax_jobs = 2\nmem_budget_mb = 512\n\
+             slice_steps = 10\njob_dir = \"jd\"\nstep_log = false\n",
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.socket_path, "/tmp/g.sock");
+        assert_eq!(cfg.max_jobs, 2);
+        assert_eq!(cfg.mem_budget_mb, 512);
+        assert_eq!(cfg.budget_bytes(), 512 << 20);
+        assert_eq!(cfg.slice_steps, 10);
+        assert_eq!(cfg.job_dir, "jd");
+        assert!(!cfg.step_log);
+        // A document without a [serve] section is the default config.
+        let none = TomlDoc::parse("model = \"nano\"\n").unwrap();
+        assert_eq!(ServeConfig::from_toml(&none).unwrap().max_jobs, 4);
+        // Degenerate knobs are rejected up front.
+        for bad in [
+            "[serve]\nmax_jobs = 0\n",
+            "[serve]\nslice_steps = 0\n",
+            "[serve]\nsocket_path = \"\"\n",
+            "[serve]\njob_dir = \"\"\n",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ServeConfig::from_toml(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

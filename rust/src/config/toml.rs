@@ -2,6 +2,26 @@
 //! string / integer / float / bool values, `#` comments. Exactly what the
 //! run configs under `configs/` use — nested tables and arrays are out of
 //! scope on purpose.
+//!
+//! Recognized sections (consumed by `RunConfig::from_toml` and friends):
+//!
+//! * top level — `model`, `method`, `backend`, `steps`, `batch`, `lr`,
+//!   `seed`, `layerwise`, `eval_every`, `eval_batches`, `dp_workers`,
+//!   `dp_compress`, `dp_transport`, `dp_bucket_mb`, `weight_precision`,
+//!   `threads`, `artifact_dir`.
+//! * `[galore]` — `rank`, `update_freq`, `scale`, `projector_quant`,
+//!   `rank_schedule`, `rank_floor`, `rank_decay`, `rank_energy`,
+//!   `refresh_gate_cos`.
+//! * `[lowrank]` — `rank`, `merge_every` (LoRA/ReLoRA/low-rank baselines).
+//! * `[checkpoint]` — `every`, `keep_last`, `dir`.
+//! * `[serve]` — the `galore serve` daemon knobs (`ServeConfig::from_toml`):
+//!   `socket_path` (Unix-domain socket the daemon binds), `max_jobs`
+//!   (resident-job cap), `mem_budget_mb` (admission-control byte budget,
+//!   0 = unlimited), `slice_steps` (round-robin steps per scheduler turn),
+//!   `job_dir` (evicted checkpoints + JSONL step log), `step_log` (bool).
+//! * `[job]` — submit-payload metadata read by the serve API, not by
+//!   `RunConfig`: `name`, `workload` (`synthetic`|`artifact`|`finetune`),
+//!   `p_bigram` (finetune corpus knob).
 
 use std::collections::BTreeMap;
 

@@ -275,7 +275,17 @@ pub fn prune(dir: impl AsRef<Path>, prefix: &str, keep_last: usize) -> std::io::
 /// File name for a periodic checkpoint at `step` (zero-padded so
 /// lexicographic order is step order — the contract `prune` relies on).
 pub fn periodic_name(step: usize) -> String {
-    format!("step_{step:08}.ckpt")
+    periodic_name_with("step_", step)
+}
+
+/// Periodic-checkpoint file name under a caller-chosen prefix. Jobs that
+/// share one `checkpoint_dir` (the `galore serve` scheduler) write under
+/// distinct prefixes (`job{id}_step_…`) and prune with the same prefix,
+/// so one job's retention sweep can never delete another job's files —
+/// with the bare `step_` prefix, two jobs pruning the same directory used
+/// to collect each other's checkpoints.
+pub fn periodic_name_with(prefix: &str, step: usize) -> String {
+    format!("{prefix}{step:08}.ckpt")
 }
 
 #[cfg(test)]
@@ -416,5 +426,27 @@ mod tests {
         assert!(dir.join(periodic_name(40)).exists());
         assert!(dir.join("other.txt").exists(), "prune must only touch its own files");
         assert_eq!(prune(&dir, "step_", 0).unwrap(), 0, "keep_last=0 keeps everything");
+    }
+
+    #[test]
+    fn prefixed_prunes_are_isolated_per_job() {
+        // Two jobs retaining in one directory: each prune sweep must only
+        // ever see its own prefix's files.
+        let dir = std::env::temp_dir().join("galore_test_prune_prefix");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in [10usize, 20, 30] {
+            std::fs::write(dir.join(periodic_name_with("job1_step_", step)), b"x").unwrap();
+            std::fs::write(dir.join(periodic_name_with("job2_step_", step)), b"x").unwrap();
+        }
+        let removed = prune(&dir, "job1_step_", 1).unwrap();
+        assert_eq!(removed, 2);
+        assert!(dir.join(periodic_name_with("job1_step_", 30)).exists());
+        for step in [10usize, 20, 30] {
+            assert!(
+                dir.join(periodic_name_with("job2_step_", step)).exists(),
+                "job1's prune deleted job2's step-{step} checkpoint"
+            );
+        }
     }
 }

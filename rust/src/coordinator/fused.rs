@@ -16,7 +16,7 @@
 use crate::config::RunConfig;
 use crate::model::schema;
 use crate::optim::ArtifactBackend;
-use crate::runtime::{default_dir, Engine};
+use crate::runtime::Engine;
 use anyhow::{anyhow, Result};
 
 /// The short-side-first shapes of a run's projection targets — the shapes
@@ -30,13 +30,21 @@ pub fn target_shapes(cfg: &RunConfig) -> Vec<(usize, usize)> {
         .collect()
 }
 
-/// Build the artifact step backend for a run: its own engine on the
-/// default artifact directory (`GALORE_ARTIFACTS`/./artifacts), validated
-/// against every projection-target shape at the configured rank. Fails
-/// fast — a missing artifact or a broken manifest surfaces here, at
-/// construction, not mid-run.
+/// Build the artifact step backend for a run: its own engine on the run's
+/// artifact directory (`cfg.artifact_dir`, falling back to
+/// `GALORE_ARTIFACTS`/./artifacts), validated against every
+/// projection-target shape at the configured rank. Fails fast — a missing
+/// artifact or a broken manifest surfaces here, at construction, not
+/// mid-run.
 pub fn build_artifact_backend(cfg: &RunConfig) -> Result<ArtifactBackend> {
-    let engine = Engine::new(default_dir())?;
+    build_artifact_backend_with(cfg, Engine::new(cfg.artifacts_dir())?)
+}
+
+/// [`build_artifact_backend`] on a caller-supplied engine handle — pass
+/// `engine.share()` to have the backend reuse an existing compiled-
+/// executable cache (the trainer shares its engine this way; the serve
+/// scheduler shares one cache across every job on the same artifact dir).
+pub fn build_artifact_backend_with(cfg: &RunConfig, engine: Engine) -> Result<ArtifactBackend> {
     let shapes = target_shapes(cfg);
     ArtifactBackend::new(engine, cfg.galore.rank, &shapes).map_err(|e| anyhow!(e))
 }

@@ -1,0 +1,742 @@
+//! Job lifecycle for the resident multi-job service (`galore serve`).
+//!
+//! A [`Job`] is one training run managed by the serve scheduler:
+//!
+//! ```text
+//! Queued ──admit──▶ Admitted ──run_slice──▶ Running ──▶ Done
+//!    ▲                                        │  │
+//!    └────────────resume──── Paused ◀──pause──┘  └──▶ Failed
+//! ```
+//!
+//! Residency is the point of the state machine: a job holds weights,
+//! optimizer moments and projector bases in RAM only while `Admitted`/
+//! `Running`. `pause_evict` serializes the *entire* training state into a
+//! v2 checkpoint and drops the runner — a paused job costs disk, not
+//! memory — and `admit` restores it bit-exactly, so interleaving,
+//! pausing and resuming never changes a loss curve (pinned by
+//! `tests/serve_props.rs`).
+//!
+//! Three workloads share the lifecycle:
+//!
+//! * [`WorkloadKind::Artifact`] — the ordinary pre-training loop
+//!   ([`Trainer`] on the AOT artifact engine, synthetic corpus).
+//! * [`WorkloadKind::Finetune`] — `exp/finetune`-style fixed-shard
+//!   fine-tuning (same [`Trainer`], `DataLoader::fixed` over a
+//!   bigram-knobbed corpus).
+//! * [`WorkloadKind::Synthetic`] — a pure-Rust quadratic pull toward a
+//!   planted parameter set, driven by the *real* optimizer stack
+//!   (`build_optimizer`, LR schedule, bf16 store, checkpoint v2). It
+//!   exists so the serve scheduler, admission control and evict/restore
+//!   paths are exercisable — and CI-testable — on hosts with no compiled
+//!   artifact set, where `Engine::new` cannot succeed.
+
+use super::checkpoint;
+use super::metrics::{Metrics, StepRecord};
+use super::schedule::LrSchedule;
+use super::trainer::{build_optimizer, Trainer};
+use crate::config::{BackendKind, RunConfig};
+use crate::data::{DataLoader, SyntheticCorpus};
+use crate::memory::{estimate, estimate_adaptive, Method, TrainOpts};
+use crate::model::{init_params, ParamStore};
+use crate::optim::Optimizer;
+use crate::runtime::Engine;
+use crate::tensor::Matrix;
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Lifecycle states. `Queued` and `Paused` jobs are non-resident (no
+/// runner, no tensors in RAM); `Admitted`/`Running` jobs hold full
+/// training state; `Done`/`Failed` are terminal and non-resident.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Admitted,
+    Running,
+    Paused,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Admitted => "admitted",
+            JobState::Running => "running",
+            JobState::Paused => "paused",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobState, String> {
+        Ok(match s {
+            "queued" => JobState::Queued,
+            "admitted" => JobState::Admitted,
+            "running" => JobState::Running,
+            "paused" => JobState::Paused,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            other => return Err(format!("unknown job state '{other}'")),
+        })
+    }
+
+    /// Terminal states never leave via the scheduler.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
+}
+
+/// What a job trains on. Selected by the submit payload's
+/// `[job] workload` key.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadKind {
+    /// Pre-training on the AOT artifact engine (synthetic corpus).
+    Artifact,
+    /// Fixed-shard fine-tuning on the artifact engine; `p_bigram` is the
+    /// task's corpus structure knob (`exp::finetune`'s roster).
+    Finetune { p_bigram: f64 },
+    /// Pure-Rust quadratic workload on the real optimizer stack — no
+    /// artifact set required.
+    Synthetic,
+}
+
+impl WorkloadKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadKind::Artifact => "artifact",
+            WorkloadKind::Finetune { .. } => "finetune",
+            WorkloadKind::Synthetic => "synthetic",
+        }
+    }
+
+    /// Parse the submit payload's `workload` value; `p_bigram` only
+    /// applies to `finetune` (defaulting to 0.7).
+    pub fn parse(s: &str, p_bigram: Option<f64>) -> Result<WorkloadKind, String> {
+        Ok(match s {
+            "artifact" => WorkloadKind::Artifact,
+            "finetune" => WorkloadKind::Finetune { p_bigram: p_bigram.unwrap_or(0.7) },
+            "synthetic" => WorkloadKind::Synthetic,
+            other => {
+                return Err(format!(
+                    "unknown workload '{other}' (expected synthetic|artifact|finetune)"
+                ))
+            }
+        })
+    }
+}
+
+/// Everything needed to (re)build a job's runner from scratch.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    pub workload: WorkloadKind,
+    pub cfg: RunConfig,
+}
+
+/// The resident half of a job: something that can advance by a step
+/// slice and round-trip its full state through a v2 checkpoint.
+/// [`Trainer`] jobs and the pure-Rust synthetic workload implement it.
+pub trait JobRunner {
+    /// Run at most `n` steps; returns the number actually run.
+    fn run_steps(&mut self, n: usize) -> Result<usize>;
+    fn step(&self) -> usize;
+    fn metrics(&self) -> &Metrics;
+    fn metrics_mut(&mut self) -> &mut Metrics;
+    fn save_checkpoint(&self, path: &Path) -> Result<()>;
+    fn restore_checkpoint(&mut self, path: &Path) -> Result<()>;
+}
+
+/// [`Trainer`]-backed runner (artifact + finetune workloads).
+struct TrainerRunner {
+    t: Trainer,
+}
+
+impl JobRunner for TrainerRunner {
+    fn run_steps(&mut self, n: usize) -> Result<usize> {
+        self.t.run_steps(n)
+    }
+
+    fn step(&self) -> usize {
+        self.t.step
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.t.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.t.metrics
+    }
+
+    fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        self.t.save_checkpoint(path)
+    }
+
+    fn restore_checkpoint(&mut self, path: &Path) -> Result<()> {
+        self.t.restore_checkpoint(path)
+    }
+}
+
+/// Pure-Rust workload: minimize `0.5·Σ‖W − W*‖² / numel` toward a planted
+/// parameter set `W*` seeded from the run config. The gradient is simply
+/// `W − W*`, so no accelerator artifacts are needed — but the update path
+/// is the genuine one: `build_optimizer` (GaLore projectors, adaptive
+/// rank schedules, 8-bit moments, …), the cosine LR schedule, the bf16
+/// weight store, and checkpoint v2 through `Optimizer::save_state`.
+/// Fully deterministic, hence bit-exact across evict/restore.
+pub struct SyntheticRunner {
+    cfg: RunConfig,
+    params: ParamStore,
+    target: ParamStore,
+    opt: Box<dyn Optimizer>,
+    schedule: LrSchedule,
+    metrics: Metrics,
+    step: usize,
+    /// Persistent gradient workspace (schema order).
+    grads: Vec<Matrix>,
+}
+
+impl SyntheticRunner {
+    pub fn new(cfg: RunConfig) -> Result<SyntheticRunner> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        if cfg.backend == BackendKind::Artifact {
+            bail!(
+                "the synthetic workload computes gradients in pure Rust; \
+                 backend 'artifact' has no artifacts to run (use backend 'rust')"
+            );
+        }
+        let mut params = init_params(cfg.model, cfg.seed);
+        params.set_precision(cfg.weight_precision);
+        let target = init_params(cfg.model, cfg.seed ^ 0x5EED_7A26);
+        let targets = params.projection_targets();
+        let opt = build_optimizer(&cfg, &targets)?;
+        let schedule = LrSchedule::cosine(cfg.lr, cfg.steps, cfg.warmup_frac, cfg.final_lr_frac);
+        Ok(SyntheticRunner {
+            cfg,
+            params,
+            target,
+            opt,
+            schedule,
+            metrics: Metrics::new(),
+            step: 0,
+            grads: Vec::new(),
+        })
+    }
+
+    /// Current objective value (also the "eval" metric — the objective is
+    /// deterministic, so there is no held-out set to sample).
+    fn loss(&self) -> f32 {
+        let mut sum = 0.0f64;
+        for (w, t) in self.params.tensors.iter().zip(self.target.tensors.iter()) {
+            for (a, b) in w.data.iter().zip(t.data.iter()) {
+                let d = (a - b) as f64;
+                sum += d * d;
+            }
+        }
+        (0.5 * sum / self.params.numel() as f64) as f32
+    }
+
+    fn train_step(&mut self) -> Result<f32> {
+        if self.grads.is_empty() {
+            self.grads =
+                self.params.metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        }
+        let mut sum = 0.0f64;
+        for ((g, w), t) in
+            self.grads.iter_mut().zip(self.params.tensors.iter()).zip(self.target.tensors.iter())
+        {
+            for ((gd, a), b) in g.data.iter_mut().zip(w.data.iter()).zip(t.data.iter()) {
+                let d = a - b;
+                *gd = d;
+                sum += (d as f64) * (d as f64);
+            }
+        }
+        let loss = (0.5 * sum / self.params.numel() as f64) as f32;
+        let lr = self.schedule.at(self.step);
+        // Detach the workspace for the `&mut self` optimizer dispatch;
+        // restore it even when the step errors (same pattern as the
+        // trainer) so the runner stays checkpointable.
+        let bufs = std::mem::take(&mut self.grads);
+        let applied = self.opt.step_many(&mut self.params.tensors, &bufs, lr);
+        self.grads = bufs;
+        applied.map_err(|e| anyhow!("optimizer step failed: {e}"))?;
+        self.params.commit();
+        self.metrics.log_step(self.step, loss, lr, self.cfg.batch * self.cfg.model.seq);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    fn fingerprint(&self) -> String {
+        // Namespaced so a synthetic checkpoint can never restore into a
+        // real artifact run of the same config (different gradients).
+        format!("synthetic {}", self.cfg.fingerprint())
+    }
+}
+
+impl JobRunner for SyntheticRunner {
+    fn run_steps(&mut self, n: usize) -> Result<usize> {
+        let mut ran = 0;
+        while self.step < self.cfg.steps && ran < n {
+            self.train_step()?;
+            ran += 1;
+        }
+        // Log the end-of-run objective exactly once (mirrors the
+        // trainer's final-eval contract).
+        let done = self.step >= self.cfg.steps;
+        let logged =
+            self.metrics.eval_records.last().map(|&(s, _)| s >= self.cfg.steps).unwrap_or(false);
+        if done && !logged {
+            let l = self.loss();
+            self.metrics.log_eval(self.step, l);
+        }
+        Ok(ran)
+    }
+
+    fn step(&self) -> usize {
+        self.step
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut opt_blob = Vec::new();
+        self.opt
+            .save_state(&mut opt_blob)
+            .map_err(|e| anyhow!("cannot checkpoint optimizer state: {e}"))?;
+        let mut metrics_blob = Vec::new();
+        self.metrics.save_state(&mut metrics_blob);
+        let sections: Vec<(&[u8; 4], &[u8])> = vec![
+            (checkpoint::SEC_OPTIMIZER, opt_blob.as_slice()),
+            (checkpoint::SEC_METRICS, metrics_blob.as_slice()),
+        ];
+        checkpoint::save_v2(path, &self.params, &self.fingerprint(), self.step as u64, &sections)?;
+        Ok(())
+    }
+
+    fn restore_checkpoint(&mut self, path: &Path) -> Result<()> {
+        match checkpoint::read(path, self.cfg.model)? {
+            checkpoint::Checkpoint::V1 { .. } => {
+                bail!("synthetic jobs write full-state (v2) checkpoints; {path:?} is v1")
+            }
+            checkpoint::Checkpoint::V2(d) => {
+                let want = self.fingerprint();
+                if d.fingerprint != want {
+                    bail!(
+                        "checkpoint config mismatch — restoring would diverge.\n  \
+                         checkpoint: {}\n  this job:   {want}",
+                        d.fingerprint
+                    );
+                }
+                let opt_bytes = d
+                    .section(checkpoint::SEC_OPTIMIZER)
+                    .ok_or_else(|| anyhow!("checkpoint is missing its optimizer section"))?;
+                let mut r = crate::ser::Reader::new(opt_bytes);
+                self.opt.load_state(&mut r).map_err(|e| anyhow!("optimizer state: {e}"))?;
+                r.expect_end().map_err(|e| anyhow!("optimizer state: {e}"))?;
+                let metrics_bytes = d
+                    .section(checkpoint::SEC_METRICS)
+                    .ok_or_else(|| anyhow!("checkpoint is missing its metrics section"))?;
+                let mut r = crate::ser::Reader::new(metrics_bytes);
+                self.metrics.load_state(&mut r).map_err(|e| anyhow!("metrics state: {e}"))?;
+                r.expect_end().map_err(|e| anyhow!("metrics state: {e}"))?;
+                self.params = d.params;
+                self.params.set_precision(self.cfg.weight_precision);
+                self.step = d.step as usize;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Point-in-time progress snapshot kept on the job itself, so `status`
+/// answers for evicted (Paused/Done) jobs without touching the runner.
+#[derive(Clone, Copy, Debug, Default)]
+struct Progress {
+    step: usize,
+    tail_loss: Option<f32>,
+    tokens: u64,
+}
+
+/// What the serve API reports for one job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobInfo {
+    pub id: u64,
+    pub name: String,
+    pub state: JobState,
+    pub step: usize,
+    pub steps_total: usize,
+    /// Mean loss over the last 10 logged steps; `None` before any step.
+    pub tail_loss: Option<f32>,
+    pub tokens: u64,
+    /// Admission-control footprint estimate (`memory::breakdown`).
+    pub est_bytes: u64,
+    /// Whether the job currently holds training state in RAM.
+    pub resident: bool,
+    pub error: Option<String>,
+}
+
+/// One managed training run. See the module docs for the state machine.
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub error: Option<String>,
+    runner: Option<Box<dyn JobRunner>>,
+    /// Where this job's suspend/final checkpoint lives.
+    pub ckpt_path: PathBuf,
+    progress: Progress,
+    /// Step records kept past terminal eviction: completion/failure drops
+    /// the runner inside `run_slice`, before the scheduler's JSONL sink
+    /// gets to flush the final slice's rows.
+    retired_records: Vec<StepRecord>,
+}
+
+impl Job {
+    /// A new job enters the queue; its runner is built at admission.
+    pub fn new(id: u64, spec: JobSpec, job_dir: &Path) -> Job {
+        Job {
+            id,
+            spec,
+            state: JobState::Queued,
+            error: None,
+            runner: None,
+            ckpt_path: job_dir.join(format!("job{id:04}.ckpt")),
+            progress: Progress::default(),
+            retired_records: Vec::new(),
+        }
+    }
+
+    /// Admission-control footprint: the `memory::breakdown` estimate of
+    /// this job's resident training state (weights + optimizer states +
+    /// gradients + activations). Adaptive-rank runs are budgeted at their
+    /// configured maximum rank — admission must hold at the envelope, not
+    /// the decayed steady state.
+    pub fn estimated_bytes(&self) -> u64 {
+        let cfg = &self.spec.cfg;
+        let opts = TrainOpts {
+            layerwise_updates: cfg.layerwise,
+            activation_checkpoint: false,
+            token_batch: cfg.batch * cfg.model.seq,
+        };
+        if cfg.method.is_galore() && cfg.galore.is_adaptive() {
+            estimate_adaptive(cfg.model, opts, |_, _| cfg.galore.rank).total()
+        } else {
+            let rank =
+                if cfg.method.is_galore() { cfg.galore.rank } else { cfg.lowrank_rank };
+            estimate(cfg.model, Method::for_kind(cfg.method, rank), opts).total()
+        }
+    }
+
+    /// Whether the job currently holds training state in RAM.
+    pub fn is_resident(&self) -> bool {
+        self.runner.is_some()
+    }
+
+    /// Build (or rebuild) the runner and bring the job resident. Pass the
+    /// scheduler's shared engine handle so artifact-backed jobs with
+    /// identical layer shapes reuse one compiled-executable cache. A
+    /// suspend checkpoint on disk — from `pause_evict`, or from a daemon
+    /// restart — is restored, making re-admission bit-exact.
+    pub fn admit(&mut self, shared_engine: Option<&Engine>) -> Result<()> {
+        if !matches!(self.state, JobState::Queued) {
+            bail!("job {} is {}, not queued", self.id, self.state.label());
+        }
+        let cfg = self.spec.cfg.clone();
+        let mut runner: Box<dyn JobRunner> = match self.spec.workload {
+            WorkloadKind::Synthetic => Box::new(SyntheticRunner::new(cfg)?),
+            WorkloadKind::Artifact | WorkloadKind::Finetune { .. } => {
+                let engine = match shared_engine {
+                    Some(e) => e.share(),
+                    None => Engine::new(cfg.artifacts_dir())?,
+                };
+                let loader = match self.spec.workload {
+                    WorkloadKind::Finetune { p_bigram } => {
+                        let corpus = SyntheticCorpus::with_params(
+                            cfg.model.vocab,
+                            cfg.seed,
+                            4,
+                            p_bigram,
+                            1.05,
+                        );
+                        DataLoader::fixed(corpus.shard(0, 20_000), cfg.batch, cfg.model.seq, cfg.seed)
+                    }
+                    _ => DataLoader::synthetic(
+                        SyntheticCorpus::new(cfg.model.vocab, cfg.seed ^ 0xDA7A),
+                        cfg.batch,
+                        cfg.model.seq,
+                    ),
+                };
+                let mut t = Trainer::new(cfg, engine, loader)?;
+                // Namespace this job's periodic checkpoints so jobs
+                // sharing a checkpoint_dir prune independently.
+                t.checkpoint_prefix = format!("job{}_step_", self.id);
+                Box::new(TrainerRunner { t })
+            }
+        };
+        if self.ckpt_path.exists() {
+            runner.restore_checkpoint(&self.ckpt_path)?;
+        }
+        runner.metrics_mut().job_id = Some(self.id);
+        self.retired_records.clear();
+        self.runner = Some(runner);
+        self.record_progress();
+        self.state = JobState::Admitted;
+        Ok(())
+    }
+
+    fn record_progress(&mut self) {
+        if let Some(r) = &self.runner {
+            self.progress = Progress {
+                step: r.step(),
+                tail_loss: r.metrics().tail_loss(10),
+                tokens: r.metrics().total_tokens(),
+            };
+        }
+    }
+
+    /// Advance the job by at most `n` steps (the scheduler's round-robin
+    /// quantum). Completion writes the final-state checkpoint and evicts;
+    /// a step error moves the job to `Failed` (state dropped, error kept).
+    /// Returns the number of steps actually run.
+    pub fn run_slice(&mut self, n: usize) -> usize {
+        let Some(runner) = self.runner.as_mut() else {
+            return 0;
+        };
+        self.state = JobState::Running;
+        match runner.run_steps(n) {
+            Err(e) => {
+                self.record_progress();
+                self.error = Some(format!("{e:#}"));
+                self.retire_runner();
+                self.state = JobState::Failed;
+                0
+            }
+            Ok(ran) => {
+                self.record_progress();
+                if self.progress.step >= self.spec.cfg.steps {
+                    // Final checkpoint, then release the memory.
+                    if let Err(e) = self.save_to_ckpt() {
+                        self.error = Some(format!("{e:#}"));
+                        self.state = JobState::Failed;
+                    } else {
+                        self.state = JobState::Done;
+                    }
+                    self.retire_runner();
+                }
+                ran
+            }
+        }
+    }
+
+    /// Drop the runner but keep its step records, so the scheduler's log
+    /// sink can still flush the rows produced by the terminal slice.
+    fn retire_runner(&mut self) {
+        if let Some(mut r) = self.runner.take() {
+            self.retired_records = std::mem::take(&mut r.metrics_mut().records);
+        }
+    }
+
+    fn save_to_ckpt(&self) -> Result<()> {
+        if let Some(dir) = self.ckpt_path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let runner = self.runner.as_ref().ok_or_else(|| anyhow!("job is not resident"))?;
+        runner.save_checkpoint(&self.ckpt_path)
+    }
+
+    /// Suspend: serialize full training state to the job's checkpoint and
+    /// drop the runner. The job now costs disk, not RAM; `admit` after
+    /// `resume_to_queue` restores it bit-exactly.
+    pub fn pause_evict(&mut self) -> Result<()> {
+        if !self.is_resident() {
+            bail!("job {} is {}, nothing to pause", self.id, self.state.label());
+        }
+        self.record_progress();
+        self.save_to_ckpt()?;
+        self.runner = None;
+        self.state = JobState::Paused;
+        Ok(())
+    }
+
+    /// Re-enter the admission queue from `Paused`.
+    pub fn resume_to_queue(&mut self) -> Result<()> {
+        if self.state != JobState::Paused {
+            bail!("job {} is {}, not paused", self.id, self.state.label());
+        }
+        self.state = JobState::Queued;
+        Ok(())
+    }
+
+    /// Abort: drop any resident state and the suspend checkpoint.
+    /// Terminal jobs keep their state (cancelling a `Done` job is a
+    /// no-op error, not a retroactive failure).
+    pub fn cancel(&mut self) -> Result<()> {
+        if self.state.is_terminal() {
+            bail!("job {} is already {}", self.id, self.state.label());
+        }
+        self.runner = None;
+        self.error = Some("cancelled".into());
+        self.state = JobState::Failed;
+        let _ = std::fs::remove_file(&self.ckpt_path);
+        Ok(())
+    }
+
+    /// Step records for the scheduler's JSONL sink: the resident runner's
+    /// history, or the retired copy for a job that just reached a terminal
+    /// state (so its final slice still gets flushed). `None` for a job
+    /// evicted by `pause_evict` — everything was flushed slice-by-slice
+    /// before the pause landed.
+    pub fn records(&self) -> Option<&[StepRecord]> {
+        match &self.runner {
+            Some(r) => Some(r.metrics().records.as_slice()),
+            None if !self.retired_records.is_empty() => Some(self.retired_records.as_slice()),
+            None => None,
+        }
+    }
+
+    pub fn info(&self) -> JobInfo {
+        JobInfo {
+            id: self.id,
+            name: self.spec.name.clone(),
+            state: self.state,
+            step: self.progress.step,
+            steps_total: self.spec.cfg.steps,
+            tail_loss: self.progress.tail_loss,
+            tokens: self.progress.tokens,
+            est_bytes: self.estimated_bytes(),
+            resident: self.is_resident(),
+            error: self.error.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MethodKind;
+    use crate::model::ModelConfig;
+
+    fn spec(steps: usize) -> JobSpec {
+        let mut cfg = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
+        cfg.steps = steps;
+        cfg.galore.update_freq = 4;
+        JobSpec { name: "t".into(), workload: WorkloadKind::Synthetic, cfg }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("galore_test_job_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn lifecycle_queued_admitted_running_done() {
+        let dir = tmp_dir("lifecycle");
+        let mut job = Job::new(1, spec(6), &dir);
+        assert_eq!(job.state, JobState::Queued);
+        assert!(!job.is_resident());
+        assert!(job.run_slice(4) == 0, "non-resident job cannot run");
+        job.admit(None).unwrap();
+        assert_eq!(job.state, JobState::Admitted);
+        assert!(job.is_resident());
+        assert!(job.admit(None).is_err(), "double admission must be rejected");
+        assert_eq!(job.run_slice(4), 4);
+        assert_eq!(job.state, JobState::Running);
+        assert_eq!(job.run_slice(4), 2);
+        assert_eq!(job.state, JobState::Done);
+        assert!(!job.is_resident(), "completion evicts");
+        assert!(job.ckpt_path.exists(), "completion writes the final checkpoint");
+        let info = job.info();
+        assert_eq!(info.step, 6);
+        assert_eq!(info.steps_total, 6);
+        assert!(info.tail_loss.is_some());
+        assert!(info.tokens > 0);
+        assert!(job.cancel().is_err(), "terminal jobs cannot be cancelled");
+    }
+
+    #[test]
+    fn pause_evict_resume_is_bit_exact() {
+        let dir = tmp_dir("bitexact");
+        // Uninterrupted reference.
+        let mut a = Job::new(1, spec(10), &dir);
+        a.admit(None).unwrap();
+        a.run_slice(10);
+        assert_eq!(a.state, JobState::Done);
+
+        // Same config: run 4 steps, evict, restore, finish. `update_freq
+        // = 4` puts the pause right at a projector-refresh boundary and
+        // step 4 of 10 mid-schedule.
+        let dir2 = tmp_dir("bitexact2");
+        let mut b = Job::new(1, spec(10), &dir2);
+        b.admit(None).unwrap();
+        b.run_slice(4);
+        b.pause_evict().unwrap();
+        assert!(!b.is_resident());
+        assert!(b.ckpt_path.exists());
+        b.resume_to_queue().unwrap();
+        b.admit(None).unwrap();
+        b.run_slice(10);
+        assert_eq!(b.state, JobState::Done);
+
+        let (ra, rb) = (&a.progress, &b.progress);
+        assert_eq!(ra.step, rb.step);
+        assert_eq!(ra.tokens, rb.tokens);
+        assert_eq!(
+            ra.tail_loss.unwrap().to_bits(),
+            rb.tail_loss.unwrap().to_bits(),
+            "evict/restore must be bit-exact"
+        );
+    }
+
+    #[test]
+    fn cancel_discards_state_and_checkpoint() {
+        let dir = tmp_dir("cancel");
+        let mut job = Job::new(2, spec(10), &dir);
+        job.admit(None).unwrap();
+        job.run_slice(2);
+        job.pause_evict().unwrap();
+        assert!(job.ckpt_path.exists());
+        job.cancel().unwrap();
+        assert_eq!(job.state, JobState::Failed);
+        assert_eq!(job.error.as_deref(), Some("cancelled"));
+        assert!(!job.ckpt_path.exists(), "cancel removes the suspend checkpoint");
+    }
+
+    #[test]
+    fn estimated_bytes_tracks_method_and_rank() {
+        let dir = tmp_dir("estimate");
+        let mut s = spec(10);
+        let galore = Job::new(1, s.clone(), &dir).estimated_bytes();
+        s.cfg.method = MethodKind::FullRank;
+        let full = Job::new(2, s, &dir).estimated_bytes();
+        assert!(
+            galore < full,
+            "GaLore admission estimate ({galore}) must undercut full-rank ({full})"
+        );
+    }
+
+    #[test]
+    fn state_labels_roundtrip() {
+        for s in [
+            JobState::Queued,
+            JobState::Admitted,
+            JobState::Running,
+            JobState::Paused,
+            JobState::Done,
+            JobState::Failed,
+        ] {
+            assert_eq!(JobState::parse(s.label()), Ok(s));
+        }
+        assert!(JobState::parse("nope").is_err());
+        assert_eq!(WorkloadKind::parse("finetune", Some(0.8)).unwrap().label(), "finetune");
+        assert!(WorkloadKind::parse("x", None).is_err());
+    }
+}

@@ -85,6 +85,12 @@ pub struct StepRecord {
 }
 
 pub struct Metrics {
+    /// Owning job's id when this run executes under `galore serve` —
+    /// `None` for plain CLI runs. Namespaces the CSV/JSONL sinks (a `job`
+    /// column is prepended when set) so K concurrent jobs' rows stay
+    /// attributable. Identity, not training state: the scheduler assigns
+    /// it at admission, so it is not checkpointed.
+    pub job_id: Option<u64>,
     pub records: Vec<StepRecord>,
     pub eval_records: Vec<(usize, f32)>, // (step, eval loss)
     started: Instant,
@@ -130,6 +136,7 @@ impl Default for Metrics {
 impl Metrics {
     pub fn new() -> Self {
         Metrics {
+            job_id: None,
             records: Vec::new(),
             eval_records: Vec::new(),
             started: Instant::now(),
@@ -279,20 +286,36 @@ impl Metrics {
         Ok(())
     }
 
-    /// Write `step,loss,lr,tokens` CSV (plus eval rows) for figure benches.
+    /// Write `step,loss,lr,tokens` CSV (plus eval rows) for figure
+    /// benches. Under a serve job (`job_id` set) every row — header
+    /// included — gains a leading `job` column.
     pub fn write_csv(&self, path: impl Into<PathBuf>) -> std::io::Result<PathBuf> {
         let path = path.into();
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(&path)?;
-        writeln!(f, "step,loss,lr,tokens")?;
-        for r in &self.records {
-            writeln!(f, "{},{},{},{}", r.step, r.loss, r.lr, r.tokens)?;
-        }
-        writeln!(f, "# eval")?;
-        for (s, l) in &self.eval_records {
-            writeln!(f, "{s},{l},,")?;
+        match self.job_id {
+            Some(id) => {
+                writeln!(f, "job,step,loss,lr,tokens")?;
+                for r in &self.records {
+                    writeln!(f, "{},{},{},{},{}", id, r.step, r.loss, r.lr, r.tokens)?;
+                }
+                writeln!(f, "# eval")?;
+                for (s, l) in &self.eval_records {
+                    writeln!(f, "{id},{s},{l},,")?;
+                }
+            }
+            None => {
+                writeln!(f, "step,loss,lr,tokens")?;
+                for r in &self.records {
+                    writeln!(f, "{},{},{},{}", r.step, r.loss, r.lr, r.tokens)?;
+                }
+                writeln!(f, "# eval")?;
+                for (s, l) in &self.eval_records {
+                    writeln!(f, "{s},{l},,")?;
+                }
+            }
         }
         Ok(path)
     }
@@ -410,5 +433,19 @@ mod tests {
         assert!(text.contains("step,loss,lr,tokens"));
         assert!(text.contains("0,5.5,0.01,64"));
         assert!(text.contains("0,5.4"));
+    }
+
+    #[test]
+    fn csv_gains_job_column_under_serve() {
+        let mut m = Metrics::new();
+        m.job_id = Some(7);
+        m.log_step(0, 5.5, 0.01, 64);
+        m.log_eval(0, 5.4);
+        let dir = std::env::temp_dir().join("galore_test_metrics");
+        let p = m.write_csv(dir.join("job.csv")).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("job,step,loss,lr,tokens"));
+        assert!(text.contains("7,0,5.5,0.01,64"));
+        assert!(text.contains("7,0,5.4"));
     }
 }

@@ -21,6 +21,7 @@
 
 pub mod checkpoint;
 pub mod fused;
+pub mod job;
 pub mod metrics;
 pub mod parallel;
 pub mod schedule;
@@ -36,5 +37,6 @@ pub use transport::{
     all_reduce_mean, all_reduce_sum, local_socket_ring, Ring, RingClosed, RingHandle, SocketRing,
     Transport, RING_ABORT_MSG,
 };
+pub use job::{Job, JobInfo, JobRunner, JobSpec, JobState, SyntheticRunner, WorkloadKind};
 pub use schedule::LrSchedule;
-pub use trainer::{build_optimizer, Trainer};
+pub use trainer::{build_optimizer, build_optimizer_with, Trainer};

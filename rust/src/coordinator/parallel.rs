@@ -61,7 +61,7 @@ use crate::coordinator::transport::{
 use crate::coordinator::Trainer;
 use crate::data::{DataLoader, SyntheticCorpus};
 use crate::optim::{GradReduceMode, Optimizer};
-use crate::runtime::{default_dir, Engine};
+use crate::runtime::Engine;
 use crate::tensor::Matrix;
 use anyhow::{anyhow, bail, Result};
 use std::os::unix::net::UnixStream;
@@ -448,7 +448,7 @@ fn dp_worker_loop<T: Transport + ?Sized>(
     tp: &mut T,
     resume: Option<&Path>,
 ) -> Result<WorkerOutcome> {
-    let engine = Engine::new(default_dir())?;
+    let engine = Engine::new(cfg.artifacts_dir())?;
     // Disjoint shard streams per worker: offset the corpus seed.
     let corpus =
         SyntheticCorpus::new(cfg.model.vocab, cfg.seed ^ 0xDA7A ^ (tp.rank() as u64) << 32);

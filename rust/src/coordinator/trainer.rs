@@ -3,7 +3,7 @@
 //! paper's full method roster.
 
 use super::checkpoint;
-use super::fused::build_artifact_backend;
+use super::fused::{build_artifact_backend, build_artifact_backend_with};
 use super::metrics::{thread_alloc_stats, Metrics};
 use super::schedule::LrSchedule;
 use crate::config::{BackendKind, MethodKind, RunConfig};
@@ -11,7 +11,7 @@ use crate::data::{Batch, DataLoader, SyntheticCorpus};
 use crate::lowrank::{Factorized, Lora, LoraConfig, ReLora};
 use crate::model::{init_params, ParamMeta, ParamStore};
 use crate::optim::{Adafactor, Adam, Adam8bit, GaLore, Optimizer};
-use crate::runtime::{default_dir, pool, Engine, Input, InputStage, Output};
+use crate::runtime::{pool, Engine, Input, InputStage, Output};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -27,6 +27,20 @@ use anyhow::{anyhow, bail, Context, Result};
 /// trainer's step/checkpoint paths, the DP worker loop — is
 /// backend-agnostic.
 pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Result<Box<dyn Optimizer>> {
+    build_optimizer_with(cfg, targets, None)
+}
+
+/// [`build_optimizer`] with an optional engine to share: when `engine` is
+/// `Some`, `BackendKind::Artifact` attaches a backend that shares the
+/// caller's compiled-executable cache (one PJRT client, one cache) instead
+/// of standing up its own — the serve scheduler uses this so K jobs with
+/// identical layer shapes compile each `galore_step_{m}x{n}_r{r}` kernel
+/// once.
+pub fn build_optimizer_with(
+    cfg: &RunConfig,
+    targets: &[usize],
+    engine: Option<&Engine>,
+) -> Result<Box<dyn Optimizer>> {
     // The artifact backend exists for exactly one method — GaLore-Adam,
     // what its kernels implement. Guarded here for *every* other method
     // (also enforced by `RunConfig::validate`; repeated because benches
@@ -50,7 +64,11 @@ pub fn build_optimizer(cfg: &RunConfig, targets: &[usize]) -> Result<Box<dyn Opt
                 .with_targets(t)
                 .with_seed(cfg.seed);
             if cfg.backend == BackendKind::Artifact {
-                g = g.with_backend(Box::new(build_artifact_backend(cfg)?));
+                let backend = match engine {
+                    Some(e) => build_artifact_backend_with(cfg, e.share())?,
+                    None => build_artifact_backend(cfg)?,
+                };
+                g = g.with_backend(Box::new(backend));
             }
             Box::new(g)
         }
@@ -144,6 +162,11 @@ pub struct Trainer {
     /// Persistent artifact-input staging (the `Vec<Input>` the train and
     /// eval paths used to rebuild every call). Working memory.
     input_stage: InputStage,
+    /// Filename prefix for periodic checkpoints (default `"step_"`).
+    /// Retention (`checkpoint::prune`) sweeps only files under this
+    /// prefix, so jobs sharing one `checkpoint_dir` set distinct prefixes
+    /// (`job{id}_step_`) and never delete each other's files.
+    pub checkpoint_prefix: String,
 }
 
 impl Trainer {
@@ -158,7 +181,9 @@ impl Trainer {
         let mut params = init_params(cfg.model, cfg.seed);
         params.set_precision(cfg.weight_precision);
         let targets = params.projection_targets();
-        let opt = build_optimizer(&cfg, &targets)?;
+        // Share this trainer's engine with the optimizer backend so a
+        // trainer and its artifact backend hold ONE compiled cache.
+        let opt = build_optimizer_with(&cfg, &targets, Some(&engine))?;
         let schedule = LrSchedule::cosine(cfg.lr, cfg.steps, cfg.warmup_frac, cfg.final_lr_frac);
         Ok(Trainer {
             cfg,
@@ -173,13 +198,15 @@ impl Trainer {
             grad_bufs: Vec::new(),
             mb_bufs: Vec::new(),
             input_stage: InputStage::new(),
+            checkpoint_prefix: "step_".into(),
         })
     }
 
-    /// Standard construction: artifacts from `GALORE_ARTIFACTS`/./artifacts,
-    /// synthetic corpus sized to the model's vocab.
+    /// Standard construction: artifacts from `cfg.artifact_dir` (falling
+    /// back to `GALORE_ARTIFACTS`/./artifacts), synthetic corpus sized to
+    /// the model's vocab.
     pub fn from_config(cfg: RunConfig) -> Result<Trainer> {
-        let engine = Engine::new(default_dir())?;
+        let engine = Engine::new(cfg.artifacts_dir())?;
         let corpus = SyntheticCorpus::new(cfg.model.vocab, cfg.seed ^ 0xDA7A);
         let loader = DataLoader::synthetic(corpus, cfg.batch, cfg.model.seq);
         Self::new(cfg, engine, loader)
@@ -449,8 +476,27 @@ impl Trainer {
     /// the eval curve's last point is comparable to the rest (the old
     /// loop evaluated 2 batches in-loop but 4 at the end).
     pub fn run(&mut self) -> Result<()> {
-        while self.step < self.cfg.steps {
+        loop {
+            self.run_steps(self.cfg.steps.saturating_sub(self.step).max(1))?;
+            if self.step >= self.cfg.steps {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Run at most `n` training steps of the configured schedule — the
+    /// slice entry point the serve scheduler round-robins jobs on. In-loop
+    /// eval and periodic checkpoints fire on exactly the same steps as an
+    /// uninterrupted [`Trainer::run`] (eval batches are seeded by index,
+    /// not drawn from the training stream, so slicing is bit-exact), and
+    /// the final eval is logged once when the last step completes —
+    /// regardless of which slice completes it. Returns the number of steps
+    /// actually run (0 once the run is finished).
+    pub fn run_steps(&mut self, n: usize) -> Result<usize> {
+        let mut ran = 0;
+        while self.step < self.cfg.steps && ran < n {
             self.train_step()?;
+            ran += 1;
             if self.cfg.eval_every > 0
                 && self.step % self.cfg.eval_every == 0
                 && self.step < self.cfg.steps
@@ -462,9 +508,18 @@ impl Trainer {
                 self.save_periodic_checkpoint()?;
             }
         }
-        let l = self.eval(self.cfg.eval_batches)?;
-        self.metrics.log_eval(self.step, l);
-        Ok(())
+        if self.step >= self.cfg.steps && !self.final_eval_logged() {
+            let l = self.eval(self.cfg.eval_batches)?;
+            self.metrics.log_eval(self.step, l);
+        }
+        Ok(ran)
+    }
+
+    /// Whether the end-of-run eval row is already in the metrics — keeps
+    /// `run_steps` idempotent after completion (a paused-at-the-end job
+    /// that is resumed must not log a second final eval).
+    fn final_eval_logged(&self) -> bool {
+        self.metrics.eval_records.last().map(|&(s, _)| s >= self.cfg.steps).unwrap_or(false)
     }
 
     /// Optimizer-state bytes currently held (checked against the
@@ -505,11 +560,16 @@ impl Trainer {
     }
 
     /// Periodic checkpoint into `cfg.checkpoint_dir` with retention
-    /// (`cfg.checkpoint_keep_last`, 0 = keep all).
+    /// (`cfg.checkpoint_keep_last`, 0 = keep all). Filenames — and the
+    /// retention sweep — are scoped to this trainer's `checkpoint_prefix`,
+    /// so concurrent jobs sharing a directory prune independently.
     pub fn save_periodic_checkpoint(&self) -> Result<()> {
         let dir = std::path::Path::new(&self.cfg.checkpoint_dir);
-        self.save_checkpoint(dir.join(checkpoint::periodic_name(self.step)))?;
-        checkpoint::prune(dir, "step_", self.cfg.checkpoint_keep_last)?;
+        self.save_checkpoint(dir.join(checkpoint::periodic_name_with(
+            &self.checkpoint_prefix,
+            self.step,
+        )))?;
+        checkpoint::prune(dir, &self.checkpoint_prefix, self.cfg.checkpoint_keep_last)?;
         Ok(())
     }
 

@@ -12,7 +12,7 @@ use crate::config::{MethodKind, RunConfig};
 use crate::coordinator::Trainer;
 use crate::data::{DataLoader, SyntheticCorpus};
 use crate::model::{ModelConfig, ParamStore};
-use crate::runtime::{default_dir, Engine};
+use crate::runtime::Engine;
 use anyhow::Result;
 
 /// A downstream task: name + its corpus parameters.
@@ -30,6 +30,39 @@ pub const TASKS: &[Task] = &[
     Task { name: "syn-mrpc", seed: 202, p_bigram: 0.70 },
     Task { name: "syn-rte", seed: 303, p_bigram: 0.80 },
 ];
+
+impl Task {
+    pub fn by_name(name: &str) -> Option<Task> {
+        TASKS.iter().copied().find(|t| t.name == name)
+    }
+
+    /// Render this task as a `galore serve` submit payload — the config
+    /// document `galore client submit --task NAME` sends, carrying the
+    /// same seed/corpus/LR/scale choices [`finetune`] applies, so the
+    /// GLUE-style roster can run as N concurrent service jobs
+    /// (EXPERIMENTS.md §Serve).
+    pub fn submit_payload(
+        &self,
+        model: &str,
+        method: MethodKind,
+        rank: usize,
+        steps: usize,
+    ) -> String {
+        let lr = match method {
+            MethodKind::GaLore | MethodKind::GaLore8bit | MethodKind::Lora => 0.005,
+            _ => 0.001,
+        };
+        format!(
+            "model = \"{model}\"\nmethod = \"{}\"\nsteps = {steps}\nlr = {lr}\nseed = {}\n\n\
+             [galore]\nrank = {rank}\nscale = 2.0\n\n[lowrank]\nrank = {rank}\n\n\
+             [job]\nname = \"{}\"\nworkload = \"finetune\"\np_bigram = {}\n",
+            method.label(),
+            self.seed,
+            self.name,
+            self.p_bigram
+        )
+    }
+}
 
 /// Pre-train a base model briefly and return its weights (the "pre-trained
 /// checkpoint" every fine-tune starts from).
@@ -65,7 +98,7 @@ pub fn finetune(
         _ => 0.001,
     };
     cfg.galore.scale = 2.0; // paper uses alpha in {2, 4} for fine-tuning
-    let engine = Engine::new(default_dir())?;
+    let engine = Engine::new(cfg.artifacts_dir())?;
     let corpus = SyntheticCorpus::with_params(model.vocab, task.seed, 4, task.p_bigram, 1.05);
     let data = corpus.shard(0, 20_000);
     let loader = DataLoader::fixed(data, cfg.batch, model.seq, task.seed);

@@ -41,6 +41,7 @@ pub mod quant;
 pub mod rng;
 pub mod runtime;
 pub mod ser;
+pub mod serve;
 pub mod tensor;
 pub mod testing;
 

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train    — run one training job (flags or --config file)
+//!   serve    — resident multi-job daemon on a Unix-domain socket
+//!   client   — talk to a running daemon (submit/status/pause/…)
 //!   memory   — print the Fig. 1-style memory breakdown for a model/method
 //!   info     — list model configs and available artifacts
 //!   dp-smoke — exercise the multi-process DP socket ring without a trainer
@@ -14,11 +16,13 @@
 //! Examples:
 //!   galore train --model micro --method galore --steps 200 --layerwise
 //!   galore train --config configs/pretrain_micro.toml
+//!   galore serve --max-jobs 3 --mem-budget-mb 2048
+//!   galore client submit --task syn-cola --method galore --steps 400
 //!   galore memory --model 7b --method galore8bit --rank 1024 --layerwise
 //!   galore info
 
 use anyhow::{anyhow, bail, Result};
-use galore::config::{BackendKind, Cli, DpTransport, MethodKind, RunConfig, TomlDoc};
+use galore::config::{BackendKind, Cli, DpTransport, MethodKind, RunConfig, ServeConfig, TomlDoc};
 use galore::coordinator::{train_data_parallel_resumable, Trainer};
 use galore::memory::{estimate, fmt_gib, Method, TrainOpts};
 use galore::model::{ModelConfig, WeightPrecision};
@@ -42,10 +46,15 @@ fn run() -> Result<()> {
     }
     match cli.positional()[0].as_str() {
         "train" => train(&cli),
+        "serve" => serve(&cli),
+        "client" => client(&cli),
         "memory" => memory(&cli),
-        "info" => info(),
+        "info" => info(&cli),
         "dp-smoke" => dp_smoke(&cli),
-        other => bail!("unknown subcommand '{other}' (try --help)"),
+        other => bail!(
+            "unknown subcommand '{other}' \
+             (train | serve | client | memory | info | dp-smoke; try --help)"
+        ),
     }
 }
 
@@ -66,9 +75,17 @@ USAGE:
                 [--backend rust|artifact] [--fused] [--csv PATH]
                 [--checkpoint PATH] [--checkpoint-every N]
                 [--checkpoint-dir DIR] [--keep-last N] [--resume PATH]
+                [--artifact-dir DIR]
+  galore serve  [--config FILE] [--socket PATH] [--max-jobs N]
+                [--mem-budget-mb N] [--slice-steps N] [--job-dir DIR]
+  galore client submit (--config FILE | --task NAME [--model NAME]
+                        [--method NAME] [--rank N] [--steps N])
+                [--socket PATH]
+  galore client (status|pause|resume|cancel) --id N [--socket PATH]
+  galore client (list|shutdown) [--socket PATH]
   galore memory --model NAME [--method NAME] [--rank N] [--layerwise]
                 [--token-batch N]
-  galore info
+  galore info   [--artifact-dir DIR]
   galore dp-smoke [--world N] [--steps N] [--die-rank R --die-step S]
 
 METHODS: full-rank adamw adam8bit adafactor galore galore8bit
@@ -110,7 +127,22 @@ Checkpoint/resume: --checkpoint-every N writes a full-state (v2) snapshot
 every N steps into --checkpoint-dir (retention --keep-last, 0 = keep all);
 --resume PATH restores one and continues bit-exactly (same config
 required); --checkpoint PATH writes a final full-state snapshot. See
-EXPERIMENTS.md §Checkpoint/resume."
+EXPERIMENTS.md §Checkpoint/resume.
+
+Serve: `galore serve` runs a resident daemon that schedules many jobs
+over one process — round-robin --slice-steps step slices across up to
+--max-jobs resident jobs, admission-controlled against --mem-budget-mb
+(a job that doesn't fit waits in the queue; it is never OOM-admitted),
+one shared artifact/engine cache across jobs with identical layer
+shapes. Jobs pause/resume through full-state checkpoints in --job-dir
+(bit-exact; a paused job costs disk, not RAM). `galore client` drives
+the daemon over its --socket: submit a config file (add a [job] section
+for name/workload) or a --task from the fine-tune roster, then
+status/pause/resume/cancel/list/shutdown. [serve] keys in a --config
+file set the same knobs. See EXPERIMENTS.md §Serve.
+
+Artifacts: --artifact-dir DIR (or GALORE_ARTIFACTS/GALORE_ARTIFACT_DIR)
+points the engine at an AOT artifact set other than ./artifacts."
     );
 }
 
@@ -209,6 +241,9 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     }
     if let Some(v) = cli.get("checkpoint-dir") {
         cfg.checkpoint_dir = v.to_string();
+    }
+    if let Some(v) = cli.get("artifact-dir") {
+        cfg.artifact_dir = v.to_string();
     }
     // Step backend: --backend NAME, with --fused kept as the historical
     // shorthand for --backend artifact. Contradictory spellings are an
@@ -355,6 +390,135 @@ fn train(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: run the resident multi-job daemon (see `galore::serve`).
+fn serve(cli: &Cli) -> Result<()> {
+    let mut cfg = if let Some(path) = cli.get("config") {
+        let doc = TomlDoc::load(path).map_err(|e| anyhow!(e))?;
+        ServeConfig::from_toml(&doc).map_err(|e| anyhow!(e))?
+    } else {
+        ServeConfig::default()
+    };
+    if let Some(v) = cli.get("socket") {
+        cfg.socket_path = v.to_string();
+    }
+    if let Some(v) = cli.get_parse::<usize>("max-jobs").map_err(|e| anyhow!("{e}"))? {
+        cfg.max_jobs = v;
+    }
+    if let Some(v) = cli.get_parse::<usize>("mem-budget-mb").map_err(|e| anyhow!("{e}"))? {
+        cfg.mem_budget_mb = v;
+    }
+    if let Some(v) = cli.get_parse::<usize>("slice-steps").map_err(|e| anyhow!("{e}"))? {
+        cfg.slice_steps = v;
+    }
+    if let Some(v) = cli.get("job-dir") {
+        cfg.job_dir = v.to_string();
+    }
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    println!(
+        "serve: socket={} max_jobs={} mem_budget={} slice_steps={} job_dir={}",
+        cfg.socket_path,
+        cfg.max_jobs,
+        if cfg.mem_budget_mb > 0 { fmt_gib(cfg.budget_bytes()) } else { "unlimited".into() },
+        cfg.slice_steps,
+        cfg.job_dir
+    );
+    galore::serve::serve(cfg)
+}
+
+/// `client`: one verb against a running daemon's socket.
+fn client(cli: &Cli) -> Result<()> {
+    use galore::serve::{request, Request, Response};
+    let default_socket = ServeConfig::default().socket_path;
+    let socket = cli.get("socket").unwrap_or(&default_socket);
+    let verb = cli
+        .positional()
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!(
+            "client needs a verb: submit | status | pause | resume | cancel | list | shutdown"
+        ))?;
+    let id = || -> Result<u64> {
+        cli.get_parse::<u64>("id")
+            .map_err(|e| anyhow!("{e}"))?
+            .ok_or_else(|| anyhow!("'{verb}' needs --id N"))
+    };
+    let req = match verb {
+        "submit" => {
+            let payload = if let Some(path) = cli.get("config") {
+                std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("cannot read submit config {path}: {e}"))?
+            } else if let Some(name) = cli.get("task") {
+                let task = galore::exp::finetune::Task::by_name(name).ok_or_else(|| {
+                    anyhow!(
+                        "unknown task '{name}' (roster: {})",
+                        galore::exp::finetune::TASKS
+                            .iter()
+                            .map(|t| t.name)
+                            .collect::<Vec<_>>()
+                            .join(" ")
+                    )
+                })?;
+                let method = MethodKind::parse(cli.get("method").unwrap_or("galore"))
+                    .ok_or_else(|| anyhow!("unknown method"))?;
+                let model = cli.get("model").unwrap_or("nano");
+                let rank =
+                    cli.get_parse::<usize>("rank").map_err(|e| anyhow!("{e}"))?.unwrap_or(4);
+                let steps =
+                    cli.get_parse::<usize>("steps").map_err(|e| anyhow!("{e}"))?.unwrap_or(100);
+                task.submit_payload(model, method, rank, steps)
+            } else {
+                bail!("submit needs --config FILE or --task NAME");
+            };
+            Request::Submit { payload }
+        }
+        "status" => Request::Status { id: id()? },
+        "pause" => Request::Pause { id: id()? },
+        "resume" => Request::Resume { id: id()? },
+        "cancel" => Request::Cancel { id: id()? },
+        "list" => Request::List,
+        "shutdown" => Request::Shutdown,
+        other => bail!(
+            "unknown client verb '{other}' \
+             (submit | status | pause | resume | cancel | list | shutdown)"
+        ),
+    };
+    match request(socket, &req)? {
+        Response::Err(e) => bail!("daemon: {e}"),
+        Response::Ok => println!("ok"),
+        Response::Submitted { id } => println!("submitted job {id}"),
+        Response::Job(info) => print_job_line(&info),
+        Response::List { budget_bytes, resident_bytes, jobs } => {
+            println!(
+                "jobs: {} | budget: {} | resident: {}",
+                jobs.len(),
+                if budget_bytes > 0 { fmt_gib(budget_bytes) } else { "unlimited".into() },
+                fmt_gib(resident_bytes)
+            );
+            for info in &jobs {
+                print_job_line(info);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn print_job_line(info: &galore::coordinator::JobInfo) {
+    let loss = info.tail_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into());
+    println!(
+        "job {:>3} {:<16} {:<8} step {:>6}/{} tail_loss {} tokens {} est {}{}{}",
+        info.id,
+        info.name,
+        info.state.label(),
+        info.step,
+        info.steps_total,
+        loss,
+        info.tokens,
+        fmt_gib(info.est_bytes),
+        if info.resident { " [resident]" } else { "" },
+        info.error.as_ref().map(|e| format!(" error: {e}")).unwrap_or_default()
+    );
+}
+
 /// `dp-smoke`: a trainer-free exercise of the multi-process socket ring.
 /// The host spawns `--world - 1` worker processes of this binary, runs
 /// `--steps` all-reduce rounds over a deterministic payload, and
@@ -435,7 +599,7 @@ fn memory(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-fn info() -> Result<()> {
+fn info(cli: &Cli) -> Result<()> {
     println!("model configs:");
     for c in ModelConfig::all() {
         println!(
@@ -450,7 +614,10 @@ fn info() -> Result<()> {
             c.n_params() as f64 / 1e6
         );
     }
-    match Manifest::load(default_dir()) {
+    // --artifact-dir beats the GALORE_ARTIFACTS/GALORE_ARTIFACT_DIR env
+    // override built into `default_dir`.
+    let dir = cli.get("artifact-dir").map(std::path::PathBuf::from).unwrap_or_else(default_dir);
+    match Manifest::load(dir) {
         Ok(m) => {
             println!("\nartifacts ({}):", m.artifacts.len());
             for a in &m.artifacts {

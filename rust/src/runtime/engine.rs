@@ -13,6 +13,7 @@
 use super::manifest::{ArtifactMeta, DType, Manifest};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// A host-side input for one artifact parameter.
 pub enum Input<'a> {
@@ -108,26 +109,68 @@ impl Output {
     }
 }
 
+/// An engine *handle*: a PJRT client plus a compiled-executable cache,
+/// both behind `Arc` so handles created with [`Engine::share`] see one
+/// shared cache. A multi-job `galore serve` daemon hands every job a
+/// shared handle — N jobs on the same layer shapes compile each
+/// `galore_step_{m}x{n}_r{r}` artifact once, not N times — while plain
+/// [`Engine::new`] still yields a private cache (each DP worker thread
+/// builds its own, exactly as before).
 pub struct Engine {
-    client: xla::PjRtClient,
+    client: Arc<xla::PjRtClient>,
     pub manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: Arc<Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>>,
     /// Cumulative host<->device marshalling + execute time, for the §Perf
-    /// coordinator-overhead accounting.
+    /// coordinator-overhead accounting. Per-handle: a shared engine still
+    /// attributes execute calls to the job that made them.
     pub exec_calls: u64,
 }
 
 impl Engine {
-    /// CPU PJRT client + manifest from `dir`.
+    /// CPU PJRT client + manifest from `dir`, with a fresh (private)
+    /// executable cache.
     pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
         let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, cache: HashMap::new(), exec_calls: 0 })
+        let client = Arc::new(xla::PjRtClient::cpu()?);
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Arc::new(Mutex::new(HashMap::new())),
+            exec_calls: 0,
+        })
     }
 
-    /// Load + compile an artifact (cached).
+    /// A new handle onto the *same* client and compiled-executable cache.
+    /// Anything either handle compiles is visible to the other; the
+    /// `exec_calls` counter starts at zero so per-job accounting stays
+    /// separate. (Deliberately not `Clone`: sharing an executable cache
+    /// is a semantic choice, not a copy.)
+    pub fn share(&self) -> Engine {
+        Engine {
+            client: Arc::clone(&self.client),
+            manifest: self.manifest.clone(),
+            cache: Arc::clone(&self.cache),
+            exec_calls: 0,
+        }
+    }
+
+    /// Whether two handles share one compiled-executable cache (true for
+    /// handles related through [`Engine::share`]).
+    pub fn shares_cache_with(&self, other: &Engine) -> bool {
+        Arc::ptr_eq(&self.cache, &other.cache)
+    }
+
+    fn lock_cache(&self) -> std::sync::MutexGuard<'_, HashMap<String, Arc<xla::PjRtLoadedExecutable>>> {
+        // A panic mid-compile poisons the mutex but not the map: entries
+        // are inserted only after a successful compile, so the data is
+        // always consistent and the lock stays usable.
+        self.cache.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Load + compile an artifact (cached; shared-cache handles compile
+    /// each artifact at most once between them).
     pub fn prepare(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
+        if self.lock_cache().contains_key(name) {
             return Ok(());
         }
         let meta = self
@@ -139,7 +182,9 @@ impl Engine {
             .with_context(|| format!("loading {:?}", meta.path))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-        self.cache.insert(name.to_string(), exe);
+        // Racing compiles of the same artifact on two handles both succeed;
+        // entry() keeps the first and drops the duplicate.
+        self.lock_cache().entry(name.to_string()).or_insert_with(|| Arc::new(exe));
         Ok(())
     }
 
@@ -180,7 +225,7 @@ impl Engine {
             };
             buffers.push(buf);
         }
-        let exe = self.cache.get(name).unwrap();
+        let exe = self.lock_cache().get(name).cloned().expect("prepared above");
         let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
         self.exec_calls += 1;
         let tuple = result[0][0].to_literal_sync()?;
@@ -199,9 +244,10 @@ impl Engine {
         Ok(outputs)
     }
 
-    /// Number of distinct compiled executables resident.
+    /// Number of distinct compiled executables resident (in the shared
+    /// cache, for handles related through [`Engine::share`]).
     pub fn compiled_count(&self) -> usize {
-        self.cache.len()
+        self.lock_cache().len()
     }
 }
 
@@ -228,6 +274,29 @@ mod tests {
         assert_eq!(inputs.len(), 1);
         drop(inputs);
         assert_eq!(stage.bufs.len(), 0);
+    }
+
+    #[test]
+    fn shared_handles_share_one_cache_private_engines_do_not() {
+        // Construct engines around a hand-built manifest (no PJRT needed
+        // to check cache identity — the stub client may be unavailable,
+        // so build the struct directly like `Engine::new` would).
+        let manifest =
+            Manifest::parse(r#"{"artifacts": []}"#, std::path::PathBuf::from("/tmp/x")).unwrap();
+        let mk = || Engine {
+            client: Arc::new(xla::PjRtClient {}),
+            manifest: manifest.clone(),
+            cache: Arc::new(Mutex::new(HashMap::new())),
+            exec_calls: 7,
+        };
+        let a = mk();
+        let b = a.share();
+        let c = mk();
+        assert!(a.shares_cache_with(&b));
+        assert!(b.shares_cache_with(&a));
+        assert!(!a.shares_cache_with(&c), "independent engines must have private caches");
+        assert_eq!(b.exec_calls, 0, "per-handle counter starts fresh on share()");
+        assert_eq!(a.compiled_count(), b.compiled_count());
     }
 
     #[test]

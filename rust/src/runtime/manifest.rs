@@ -139,9 +139,16 @@ impl Manifest {
     }
 }
 
-/// Default artifacts directory: $GALORE_ARTIFACTS or ./artifacts.
+/// Default artifacts directory: `$GALORE_ARTIFACTS` (historical spelling),
+/// else `$GALORE_ARTIFACT_DIR` (the spelling that matches the
+/// `--artifact-dir` CLI flag and `artifact_dir` config key), else
+/// `./artifacts`. An explicit `RunConfig::artifact_dir` overrides all of
+/// these — this is only the fallback for configs that leave it empty.
 pub fn default_dir() -> PathBuf {
-    std::env::var("GALORE_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    std::env::var("GALORE_ARTIFACTS")
+        .or_else(|_| std::env::var("GALORE_ARTIFACT_DIR"))
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| "artifacts".into())
 }
 
 #[cfg(test)]

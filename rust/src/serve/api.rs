@@ -1,0 +1,274 @@
+//! Wire protocol of the `galore serve` control socket.
+//!
+//! Requests and responses are single u32-length-prefixed frames (the same
+//! framing as the DP rendezvous, `coordinator::transport::{write_frame,
+//! read_frame}`), with `ser`-encoded bodies: a one-byte verb/variant tag
+//! followed by the variant's fields. A submit payload is a config
+//! document in the repo's TOML subset — the ordinary `RunConfig` keys
+//! plus a `[job]` section (`name`, `workload`, `p_bigram`); see
+//! `config::toml`.
+
+use crate::config::{RunConfig, TomlDoc};
+use crate::coordinator::{JobInfo, JobSpec, JobState, WorkloadKind};
+use crate::ser::{self, Reader};
+
+/// Client → daemon verbs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Submit a job; `payload` is a TOML-subset config document.
+    Submit { payload: String },
+    Status { id: u64 },
+    Pause { id: u64 },
+    Resume { id: u64 },
+    Cancel { id: u64 },
+    List,
+    /// Evict all resident jobs to their checkpoints and exit the daemon.
+    Shutdown,
+}
+
+/// Daemon → client replies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Err(String),
+    Submitted { id: u64 },
+    Job(JobInfo),
+    List { budget_bytes: u64, resident_bytes: u64, jobs: Vec<JobInfo> },
+    Ok,
+}
+
+const REQ_SUBMIT: u8 = 1;
+const REQ_STATUS: u8 = 2;
+const REQ_PAUSE: u8 = 3;
+const REQ_RESUME: u8 = 4;
+const REQ_CANCEL: u8 = 5;
+const REQ_LIST: u8 = 6;
+const REQ_SHUTDOWN: u8 = 7;
+
+const RESP_ERR: u8 = 1;
+const RESP_SUBMITTED: u8 = 2;
+const RESP_JOB: u8 = 3;
+const RESP_LIST: u8 = 4;
+const RESP_OK: u8 = 5;
+
+pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
+    match req {
+        Request::Submit { payload } => {
+            ser::put_u8(out, REQ_SUBMIT);
+            ser::put_str(out, payload);
+        }
+        Request::Status { id } => {
+            ser::put_u8(out, REQ_STATUS);
+            ser::put_u64(out, *id);
+        }
+        Request::Pause { id } => {
+            ser::put_u8(out, REQ_PAUSE);
+            ser::put_u64(out, *id);
+        }
+        Request::Resume { id } => {
+            ser::put_u8(out, REQ_RESUME);
+            ser::put_u64(out, *id);
+        }
+        Request::Cancel { id } => {
+            ser::put_u8(out, REQ_CANCEL);
+            ser::put_u64(out, *id);
+        }
+        Request::List => ser::put_u8(out, REQ_LIST),
+        Request::Shutdown => ser::put_u8(out, REQ_SHUTDOWN),
+    }
+}
+
+pub fn decode_request(bytes: &[u8]) -> Result<Request, String> {
+    let mut r = Reader::new(bytes);
+    let req = match r.u8()? {
+        REQ_SUBMIT => Request::Submit { payload: r.str()? },
+        REQ_STATUS => Request::Status { id: r.u64()? },
+        REQ_PAUSE => Request::Pause { id: r.u64()? },
+        REQ_RESUME => Request::Resume { id: r.u64()? },
+        REQ_CANCEL => Request::Cancel { id: r.u64()? },
+        REQ_LIST => Request::List,
+        REQ_SHUTDOWN => Request::Shutdown,
+        tag => return Err(format!("unknown request tag {tag}")),
+    };
+    r.expect_end()?;
+    Ok(req)
+}
+
+fn put_info(out: &mut Vec<u8>, info: &JobInfo) {
+    ser::put_u64(out, info.id);
+    ser::put_str(out, &info.name);
+    ser::put_str(out, info.state.label());
+    ser::put_usize(out, info.step);
+    ser::put_usize(out, info.steps_total);
+    match info.tail_loss {
+        Some(l) => {
+            ser::put_bool(out, true);
+            ser::put_f32(out, l);
+        }
+        None => ser::put_bool(out, false),
+    }
+    ser::put_u64(out, info.tokens);
+    ser::put_u64(out, info.est_bytes);
+    ser::put_bool(out, info.resident);
+    match &info.error {
+        Some(e) => {
+            ser::put_bool(out, true);
+            ser::put_str(out, e);
+        }
+        None => ser::put_bool(out, false),
+    }
+}
+
+fn read_info(r: &mut Reader<'_>) -> Result<JobInfo, String> {
+    Ok(JobInfo {
+        id: r.u64()?,
+        name: r.str()?,
+        state: JobState::parse(&r.str()?)?,
+        step: r.usize()?,
+        steps_total: r.usize()?,
+        tail_loss: if r.bool()? { Some(r.f32()?) } else { None },
+        tokens: r.u64()?,
+        est_bytes: r.u64()?,
+        resident: r.bool()?,
+        error: if r.bool()? { Some(r.str()?) } else { None },
+    })
+}
+
+pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
+    match resp {
+        Response::Err(e) => {
+            ser::put_u8(out, RESP_ERR);
+            ser::put_str(out, e);
+        }
+        Response::Submitted { id } => {
+            ser::put_u8(out, RESP_SUBMITTED);
+            ser::put_u64(out, *id);
+        }
+        Response::Job(info) => {
+            ser::put_u8(out, RESP_JOB);
+            put_info(out, info);
+        }
+        Response::List { budget_bytes, resident_bytes, jobs } => {
+            ser::put_u8(out, RESP_LIST);
+            ser::put_u64(out, *budget_bytes);
+            ser::put_u64(out, *resident_bytes);
+            ser::put_usize(out, jobs.len());
+            for info in jobs {
+                put_info(out, info);
+            }
+        }
+        Response::Ok => ser::put_u8(out, RESP_OK),
+    }
+}
+
+pub fn decode_response(bytes: &[u8]) -> Result<Response, String> {
+    let mut r = Reader::new(bytes);
+    let resp = match r.u8()? {
+        RESP_ERR => Response::Err(r.str()?),
+        RESP_SUBMITTED => Response::Submitted { id: r.u64()? },
+        RESP_JOB => Response::Job(read_info(&mut r)?),
+        RESP_LIST => {
+            let budget_bytes = r.u64()?;
+            let resident_bytes = r.u64()?;
+            let n = r.usize()?;
+            let mut jobs = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                jobs.push(read_info(&mut r)?);
+            }
+            Response::List { budget_bytes, resident_bytes, jobs }
+        }
+        RESP_OK => Response::Ok,
+        tag => return Err(format!("unknown response tag {tag}")),
+    };
+    r.expect_end()?;
+    Ok(resp)
+}
+
+/// Parse a submit payload into a [`JobSpec`]: the ordinary `RunConfig`
+/// document plus the `[job]` section. Defaults: workload `synthetic`,
+/// name `{model}-{method}`.
+pub fn parse_submit_payload(text: &str) -> Result<JobSpec, String> {
+    let doc = TomlDoc::parse(text)?;
+    let cfg = RunConfig::from_toml(&doc)?;
+    cfg.validate()?;
+    let workload = WorkloadKind::parse(
+        doc.get("job", "workload").unwrap_or("synthetic"),
+        doc.get_parse("job", "p_bigram"),
+    )?;
+    let name = doc
+        .get("job", "name")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{}-{}", cfg.model.name, cfg.method.label()));
+    Ok(JobSpec { name, workload, cfg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_roundtrip() {
+        for req in [
+            Request::Submit { payload: "model = \"nano\"".into() },
+            Request::Status { id: 3 },
+            Request::Pause { id: 1 },
+            Request::Resume { id: 2 },
+            Request::Cancel { id: 9 },
+            Request::List,
+            Request::Shutdown,
+        ] {
+            let mut buf = Vec::new();
+            encode_request(&req, &mut buf);
+            assert_eq!(decode_request(&buf).unwrap(), req);
+        }
+        assert!(decode_request(&[99]).is_err());
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let info = JobInfo {
+            id: 4,
+            name: "syn-cola".into(),
+            state: JobState::Paused,
+            step: 120,
+            steps_total: 400,
+            tail_loss: Some(2.25),
+            tokens: 61_440,
+            est_bytes: 123_456,
+            resident: false,
+            error: None,
+        };
+        for resp in [
+            Response::Err("boom".into()),
+            Response::Submitted { id: 7 },
+            Response::Job(info.clone()),
+            Response::List {
+                budget_bytes: 1 << 30,
+                resident_bytes: 1 << 20,
+                jobs: vec![info.clone(), JobInfo { tail_loss: None, error: Some("x".into()), ..info }],
+            },
+            Response::Ok,
+        ] {
+            let mut buf = Vec::new();
+            encode_response(&resp, &mut buf);
+            assert_eq!(decode_response(&buf).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn submit_payload_parses_job_section() {
+        let spec = parse_submit_payload(
+            "model = \"nano\"\nmethod = \"galore\"\nsteps = 12\n\n[job]\nname = \"demo\"\nworkload = \"finetune\"\np_bigram = 0.8\n",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.workload, WorkloadKind::Finetune { p_bigram: 0.8 });
+        assert_eq!(spec.cfg.steps, 12);
+
+        let spec = parse_submit_payload("model = \"nano\"\n").unwrap();
+        assert_eq!(spec.workload, WorkloadKind::Synthetic);
+        assert_eq!(spec.name, "nano-galore");
+
+        assert!(parse_submit_payload("model = \"nope\"").is_err());
+        assert!(parse_submit_payload("model = \"nano\"\n[job]\nworkload = \"x\"\n").is_err());
+    }
+}

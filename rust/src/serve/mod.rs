@@ -1,0 +1,112 @@
+//! `galore serve` — the resident multi-job training service.
+//!
+//! One daemon process owns a job table ([`coordinator::job`]), admits
+//! jobs against a memory budget, and round-robins step slices across the
+//! resident set ([`scheduler`]) while answering control requests on a
+//! Unix-domain socket ([`api`]): `submit` / `status` / `pause` /
+//! `resume` / `cancel` / `list` / `shutdown`. `galore client` speaks the
+//! same protocol for scripting.
+//!
+//! The daemon is deliberately single-threaded: job slices and socket
+//! requests interleave on one loop, so every verb observes a consistent
+//! job table and no locking is needed. A `pause` lands between slices —
+//! at most `slice_steps` steps of latency — and shutdown evicts every
+//! resident job to its suspend checkpoint first, so in-flight work
+//! survives a daemon restart.
+
+pub mod api;
+pub mod scheduler;
+
+pub use api::{parse_submit_payload, Request, Response};
+pub use scheduler::Scheduler;
+
+use crate::config::ServeConfig;
+use crate::coordinator::transport::{read_frame, write_frame};
+use anyhow::{anyhow, Context, Result};
+use std::io;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::time::Duration;
+
+/// Run the daemon until a `shutdown` request arrives. Binds
+/// `cfg.socket_path` (replacing a stale socket file from a previous
+/// run), then alternates between draining pending control connections
+/// and ticking the scheduler; sleeps briefly when both are idle.
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    let sock = Path::new(&cfg.socket_path).to_path_buf();
+    if sock.exists() {
+        std::fs::remove_file(&sock)
+            .with_context(|| format!("cannot replace stale socket {sock:?}"))?;
+    }
+    if let Some(dir) = sock.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let listener =
+        UnixListener::bind(&sock).with_context(|| format!("cannot bind {sock:?}"))?;
+    listener.set_nonblocking(true)?;
+    let mut sched = Scheduler::new(cfg).map_err(|e| anyhow!(e))?;
+    eprintln!("galore serve: listening on {sock:?}");
+    loop {
+        let mut accepted = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    accepted = true;
+                    match handle_conn(stream, &mut sched) {
+                        Ok(true) => {
+                            // Shutdown: `handle` already evicted all
+                            // resident jobs to their checkpoints.
+                            let _ = std::fs::remove_file(&sock);
+                            eprintln!("galore serve: shut down");
+                            return Ok(());
+                        }
+                        Ok(false) => {}
+                        Err(e) => eprintln!("galore serve: connection error: {e:#}"),
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e).context("accepting on the serve socket"),
+            }
+        }
+        let worked = sched.tick();
+        if !worked && !accepted {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+/// Serve one request/response exchange; returns whether it was
+/// `shutdown`.
+fn handle_conn(mut stream: UnixStream, sched: &mut Scheduler) -> Result<bool> {
+    stream.set_nonblocking(false)?;
+    // A stalled client must not wedge the daemon.
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let bytes = read_frame(&mut stream)?;
+    let req = api::decode_request(&bytes).map_err(|e| anyhow!("bad request: {e}"))?;
+    let shutdown = matches!(req, Request::Shutdown);
+    let resp = sched.handle(&req);
+    let mut out = Vec::new();
+    api::encode_response(&resp, &mut out);
+    write_frame(&mut stream, &out)?;
+    Ok(shutdown)
+}
+
+/// Client side: one request/response round-trip against a running
+/// daemon's socket.
+pub fn request(socket: impl AsRef<Path>, req: &Request) -> Result<Response> {
+    let socket = socket.as_ref();
+    let mut stream = UnixStream::connect(socket).with_context(|| {
+        format!("cannot reach the serve daemon at {socket:?} (is `galore serve` running?)")
+    })?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let mut out = Vec::new();
+    api::encode_request(req, &mut out);
+    write_frame(&mut stream, &out)?;
+    let bytes = read_frame(&mut stream)?;
+    api::decode_response(&bytes).map_err(|e| anyhow!("bad response: {e}"))
+}

@@ -1,0 +1,281 @@
+//! The serve scheduler: memory-budgeted admission + round-robin step
+//! slices over the job table.
+//!
+//! Admission control is strict-FIFO over the queue: a queued job is
+//! admitted when (a) fewer than `max_jobs` jobs are resident and (b) its
+//! `memory::breakdown` estimate fits in what remains of
+//! `mem_budget_mb`. A job whose estimate exceeds the *whole* budget can
+//! never run and fails immediately with the admission math in its error;
+//! a job that merely doesn't fit *right now* stays `Queued` until
+//! completions/pauses free capacity — the budget throttles, it never
+//! OOM-admits. FIFO means a large queued job also blocks later small
+//! ones (no starvation of big jobs by a stream of small ones).
+//!
+//! Execution is cooperative: each [`Scheduler::tick`] advances one
+//! resident job by `slice_steps` steps, cycling round-robin, so K
+//! concurrent jobs progress at the same step cadence a single run would.
+//! Jobs with identical artifact directories share one [`Engine`] handle
+//! (`Engine::share`), hence one compiled-executable cache — layer shapes
+//! shared across jobs compile once.
+
+use crate::config::ServeConfig;
+use crate::coordinator::{Job, JobInfo, JobSpec, JobState, WorkloadKind};
+use crate::memory::fmt_gib;
+use crate::runtime::Engine;
+use crate::serve::api::{parse_submit_payload, Request, Response};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+
+pub struct Scheduler {
+    pub cfg: ServeConfig,
+    jobs: Vec<Job>,
+    next_id: u64,
+    /// Round-robin cursor over job ids (not indices — stable across
+    /// submissions).
+    rr: usize,
+    /// Shared engine handles, one per artifact directory. Lazily built;
+    /// every job on the same directory gets a `share()` of the same
+    /// compiled cache.
+    engines: HashMap<PathBuf, Engine>,
+    /// Per-job count of step records already flushed to the JSONL log
+    /// (restored history is not re-flushed).
+    logged: HashMap<u64, usize>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: ServeConfig) -> Result<Scheduler, String> {
+        cfg.validate()?;
+        std::fs::create_dir_all(&cfg.job_dir)
+            .map_err(|e| format!("cannot create job dir {:?}: {e}", cfg.job_dir))?;
+        Ok(Scheduler {
+            cfg,
+            jobs: Vec::new(),
+            next_id: 1,
+            rr: 0,
+            engines: HashMap::new(),
+            logged: HashMap::new(),
+        })
+    }
+
+    /// Total estimated bytes of currently-resident jobs — the quantity
+    /// admission charges against the budget.
+    pub fn resident_bytes(&self) -> u64 {
+        self.jobs.iter().filter(|j| j.is_resident()).map(|j| j.estimated_bytes()).sum()
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.jobs.iter().filter(|j| j.is_resident()).count()
+    }
+
+    pub fn submit(&mut self, spec: JobSpec) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.push(Job::new(id, spec, std::path::Path::new(&self.cfg.job_dir)));
+        id
+    }
+
+    fn job_mut(&mut self, id: u64) -> Result<&mut Job, String> {
+        self.jobs.iter_mut().find(|j| j.id == id).ok_or_else(|| format!("no job with id {id}"))
+    }
+
+    pub fn status(&self, id: u64) -> Result<JobInfo, String> {
+        self.jobs
+            .iter()
+            .find(|j| j.id == id)
+            .map(Job::info)
+            .ok_or_else(|| format!("no job with id {id}"))
+    }
+
+    pub fn pause(&mut self, id: u64) -> Result<(), String> {
+        let job = self.job_mut(id)?;
+        match job.state {
+            // Not yet resident: parking a queued job is just marking it
+            // paused so admission skips it.
+            JobState::Queued => {
+                job.state = JobState::Paused;
+                Ok(())
+            }
+            _ => job.pause_evict().map_err(|e| format!("{e:#}")),
+        }
+    }
+
+    pub fn resume(&mut self, id: u64) -> Result<(), String> {
+        self.job_mut(id)?.resume_to_queue().map_err(|e| format!("{e:#}"))
+    }
+
+    pub fn cancel(&mut self, id: u64) -> Result<(), String> {
+        let job = self.job_mut(id)?;
+        job.cancel().map_err(|e| format!("{e:#}"))
+    }
+
+    pub fn list(&self) -> (u64, u64, Vec<JobInfo>) {
+        (self.cfg.budget_bytes(), self.resident_bytes(), self.jobs.iter().map(Job::info).collect())
+    }
+
+    /// Shared engine handle for `dir`, built on first use. `None` when
+    /// the engine cannot be constructed — the job's own admission then
+    /// reports the root cause.
+    fn shared_engine(&mut self, dir: PathBuf) -> Option<&Engine> {
+        if !self.engines.contains_key(&dir) {
+            match Engine::new(&dir) {
+                Ok(e) => {
+                    self.engines.insert(dir.clone(), e);
+                }
+                Err(_) => return None,
+            }
+        }
+        self.engines.get(&dir)
+    }
+
+    /// Strict-FIFO admission against `max_jobs` and the byte budget.
+    fn try_admit(&mut self) {
+        let budget = self.cfg.budget_bytes();
+        loop {
+            if self.resident_count() >= self.cfg.max_jobs {
+                return;
+            }
+            let resident = self.resident_bytes();
+            let Some(idx) = self.jobs.iter().position(|j| j.state == JobState::Queued) else {
+                return;
+            };
+            let est = self.jobs[idx].estimated_bytes();
+            if budget > 0 && est > budget {
+                let job = &mut self.jobs[idx];
+                job.state = JobState::Failed;
+                job.error = Some(format!(
+                    "estimated footprint {} exceeds the total memory budget {} — \
+                     this job can never be admitted (raise serve.mem_budget_mb or \
+                     shrink the job)",
+                    fmt_gib(est),
+                    fmt_gib(budget)
+                ));
+                continue;
+            }
+            if budget > 0 && resident + est > budget {
+                // Head-of-queue doesn't fit *yet*: wait for capacity.
+                // FIFO — later (smaller) jobs do not jump the queue.
+                return;
+            }
+            let needs_engine = !matches!(self.jobs[idx].spec.workload, WorkloadKind::Synthetic);
+            let engine = if needs_engine {
+                let dir = self.jobs[idx].spec.cfg.artifacts_dir();
+                self.shared_engine(dir).map(Engine::share)
+            } else {
+                None
+            };
+            let job = &mut self.jobs[idx];
+            let id = job.id;
+            if let Err(e) = job.admit(engine.as_ref()) {
+                job.error = Some(format!("{e:#}"));
+                job.state = JobState::Failed;
+                continue;
+            }
+            // Restored history was flushed by whoever ran it before the
+            // eviction; only new records go to the log.
+            let already = job.records().map_or(0, <[_]>::len);
+            self.logged.insert(id, already);
+        }
+    }
+
+    /// One cooperative scheduling turn: admit what fits, then advance the
+    /// next resident job by `slice_steps`. Returns `true` if any job ran
+    /// (the daemon sleeps when a tick does nothing).
+    pub fn tick(&mut self) -> bool {
+        self.try_admit();
+        let resident: Vec<usize> = (0..self.jobs.len())
+            .filter(|&i| self.jobs[i].is_resident() && !self.jobs[i].state.is_terminal())
+            .collect();
+        if resident.is_empty() {
+            return false;
+        }
+        let idx = resident[self.rr % resident.len()];
+        self.rr = self.rr.wrapping_add(1);
+        let ran = self.jobs[idx].run_slice(self.cfg.slice_steps);
+        if self.cfg.step_log {
+            self.flush_step_log(idx);
+        }
+        // A completion/failure may have freed budget for the queue head.
+        self.try_admit();
+        ran > 0
+    }
+
+    /// Append the job's newly-logged step records to the shared JSONL log
+    /// (one object per line, `job` field first — the per-job namespacing
+    /// the CSV sink gets from `Metrics::job_id`).
+    fn flush_step_log(&mut self, idx: usize) {
+        let job = &self.jobs[idx];
+        let id = job.id;
+        let name = job.spec.name.clone();
+        let Some(records) = job.records() else { return };
+        let from = *self.logged.get(&id).unwrap_or(&0);
+        if from >= records.len() {
+            return;
+        }
+        let path = std::path::Path::new(&self.cfg.job_dir).join("steps.jsonl");
+        let mut lines = String::new();
+        for r in &records[from..] {
+            lines.push_str(&format!(
+                "{{\"job\":{id},\"name\":\"{name}\",\"step\":{},\"loss\":{},\"lr\":{},\"tokens\":{}}}\n",
+                r.step, r.loss, r.lr, r.tokens
+            ));
+        }
+        let n = records.len();
+        self.logged.insert(id, n);
+        let res = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| f.write_all(lines.as_bytes()));
+        if let Err(e) = res {
+            eprintln!("galore serve: cannot append step log {path:?}: {e}");
+        }
+    }
+
+    /// Evict every resident job to its checkpoint (daemon shutdown: all
+    /// in-flight work survives to the next start).
+    pub fn evict_all(&mut self) {
+        for job in &mut self.jobs {
+            if job.is_resident() {
+                if let Err(e) = job.pause_evict() {
+                    eprintln!("galore serve: evicting job {} failed: {e:#}", job.id);
+                }
+            }
+        }
+    }
+
+    /// Central verb dispatch, shared by the socket daemon and in-process
+    /// tests.
+    pub fn handle(&mut self, req: &Request) -> Response {
+        match req {
+            Request::Submit { payload } => match parse_submit_payload(payload) {
+                Ok(spec) => Response::Submitted { id: self.submit(spec) },
+                Err(e) => Response::Err(e),
+            },
+            Request::Status { id } => match self.status(*id) {
+                Ok(info) => Response::Job(info),
+                Err(e) => Response::Err(e),
+            },
+            Request::Pause { id } => match self.pause(*id) {
+                Ok(()) => Response::Ok,
+                Err(e) => Response::Err(e),
+            },
+            Request::Resume { id } => match self.resume(*id) {
+                Ok(()) => Response::Ok,
+                Err(e) => Response::Err(e),
+            },
+            Request::Cancel { id } => match self.cancel(*id) {
+                Ok(()) => Response::Ok,
+                Err(e) => Response::Err(e),
+            },
+            Request::List => {
+                let (budget_bytes, resident_bytes, jobs) = self.list();
+                Response::List { budget_bytes, resident_bytes, jobs }
+            }
+            Request::Shutdown => {
+                self.evict_all();
+                Response::Ok
+            }
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! Properties of the `galore serve` multi-job service: round-robin
+//! fairness, memory-budgeted admission (a too-big-for-now job queues, it
+//! is never OOM-admitted), bit-exact pause/evict/resume through the
+//! control verbs, and a smoke test that drives the real daemon binary
+//! over its Unix socket.
+//!
+//! All in-process tests use the synthetic workload — the pure-Rust
+//! quadratic runner on the real optimizer stack — so they run on hosts
+//! with no compiled artifact set. The daemon test is bounded by a hard
+//! deadline: a wedged scheduler loop must fail the suite, not hang it.
+
+use galore::config::ServeConfig;
+use galore::coordinator::{JobInfo, JobState};
+use galore::serve::{request, Request, Response, Scheduler};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Fresh scheduler over a scratch directory; `budget_mb = 0` = unlimited.
+fn scratch_scheduler(tag: &str, max_jobs: usize, budget_mb: usize, slice: usize) -> Scheduler {
+    let dir = std::env::temp_dir().join(format!("galore_test_serve_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = ServeConfig {
+        socket_path: dir.join("sock").to_string_lossy().into_owned(),
+        max_jobs,
+        mem_budget_mb: budget_mb,
+        slice_steps: slice,
+        job_dir: dir.join("jobs").to_string_lossy().into_owned(),
+        step_log: true,
+    };
+    Scheduler::new(cfg).unwrap()
+}
+
+/// Synthetic nano job payload. `update_freq = 4` keeps the GaLore
+/// projector refresh inside even the shortest runs here.
+fn payload(name: &str, steps: usize, batch: usize, seed: u64) -> String {
+    format!(
+        "model = \"nano\"\nmethod = \"galore\"\nsteps = {steps}\nbatch = {batch}\nseed = {seed}\n\n\
+         [galore]\nrank = 4\nupdate_freq = 4\n\n[job]\nname = \"{name}\"\n"
+    )
+}
+
+fn submit(s: &mut Scheduler, payload: &str) -> u64 {
+    match s.handle(&Request::Submit { payload: payload.into() }) {
+        Response::Submitted { id } => id,
+        other => panic!("submit rejected: {other:?}"),
+    }
+}
+
+fn status(s: &mut Scheduler, id: u64) -> JobInfo {
+    match s.handle(&Request::Status { id }) {
+        Response::Job(info) => info,
+        other => panic!("status {id} failed: {other:?}"),
+    }
+}
+
+/// Tick until every listed job is `Done`, with an iteration bound so a
+/// stuck queue fails loudly instead of spinning forever.
+fn tick_until_all_done(s: &mut Scheduler, ids: &[u64], max_ticks: usize) {
+    for _ in 0..max_ticks {
+        if ids.iter().all(|&id| status(s, id).state == JobState::Done) {
+            return;
+        }
+        s.tick();
+    }
+    let states: Vec<_> = ids.iter().map(|&id| status(s, id)).collect();
+    panic!("jobs not done after {max_ticks} ticks: {states:?}");
+}
+
+#[test]
+fn round_robin_slices_are_fair_and_all_jobs_finish() {
+    let mut s = scratch_scheduler("rr", 4, 0, 4);
+    let ids: Vec<u64> = (0..3u64)
+        .map(|i| submit(&mut s, &payload(&format!("rr-{i}"), 12, 4, 100 + i)))
+        .collect();
+    assert_eq!(ids, [1, 2, 3]);
+
+    // One tick admits everything under max_jobs and runs exactly one
+    // slice; three ticks must advance each job by exactly one quantum.
+    s.tick();
+    assert_eq!(status(&mut s, 1).step, 4);
+    assert_eq!(status(&mut s, 2).step, 0, "round-robin runs one job per tick");
+    s.tick();
+    s.tick();
+    for &id in &ids {
+        let info = status(&mut s, id);
+        assert_eq!(info.step, 4, "job {id} should have had exactly one slice");
+        assert!(info.resident, "job {id} should be resident");
+    }
+
+    tick_until_all_done(&mut s, &ids, 50);
+    let (budget, resident, jobs) = match s.handle(&Request::List) {
+        Response::List { budget_bytes, resident_bytes, jobs } => {
+            (budget_bytes, resident_bytes, jobs)
+        }
+        other => panic!("list failed: {other:?}"),
+    };
+    assert_eq!(budget, 0);
+    assert_eq!(resident, 0, "completed jobs must not hold memory");
+    assert_eq!(jobs.len(), 3);
+    for info in &jobs {
+        assert_eq!(info.step, 12);
+        assert!(info.tail_loss.is_some());
+        assert!(!info.resident);
+    }
+
+    // The JSONL step log carries every step of every job — including each
+    // job's final slice, which lands after the runner is evicted.
+    let log = std::path::Path::new(&s.cfg.job_dir).join("steps.jsonl");
+    let text = std::fs::read_to_string(&log).expect("steps.jsonl written");
+    for &id in &ids {
+        let rows = text.lines().filter(|l| l.contains(&format!("\"job\":{id},"))).count();
+        assert_eq!(rows, 12, "job {id} must log one JSONL row per step:\n{text}");
+    }
+    assert!(text.contains("\"name\":\"rr-0\""));
+}
+
+#[test]
+fn memory_budget_queues_the_third_job_and_fails_impossible_ones() {
+    // `batch` drives the activation term of the admission estimate, so a
+    // large batch makes nano jobs expensive *on paper* while the synthetic
+    // runner's actual footprint stays tiny — admission math gets exercised
+    // without allocating gigabytes.
+    let mut s = scratch_scheduler("budget", 4, 0, 4);
+    let ids: Vec<u64> = (0..3u64)
+        .map(|i| submit(&mut s, &payload(&format!("big-{i}"), 8, 2048, 7)))
+        .collect();
+
+    let est = status(&mut s, 1).est_bytes;
+    assert!(
+        est >= 4u64 << 20,
+        "estimate ({est} B) too small to exercise MiB-granular budgets — \
+         raise the payload batch"
+    );
+    // Budget 2.5× the per-job estimate: two identical jobs fit, the third
+    // must wait for a completion.
+    let budget_mb = ((est * 5 / 2) >> 20) as usize;
+    s.cfg.mem_budget_mb = budget_mb;
+    let budget = s.cfg.budget_bytes();
+
+    s.tick();
+    assert!(status(&mut s, 1).resident);
+    assert!(status(&mut s, 2).resident);
+    let third = status(&mut s, 3);
+    assert_eq!(third.state, JobState::Queued, "third job must queue, not OOM-admit");
+    assert!(!third.resident);
+
+    // The budget is an invariant of every scheduler turn, not just the
+    // first: drive everything to completion while watching it.
+    for _ in 0..200 {
+        assert!(
+            s.resident_bytes() <= budget,
+            "resident estimates {} exceed the budget {}",
+            s.resident_bytes(),
+            budget
+        );
+        if ids.iter().all(|&id| status(&mut s, id).state == JobState::Done) {
+            break;
+        }
+        s.tick();
+    }
+    for &id in &ids {
+        assert_eq!(status(&mut s, id).state, JobState::Done, "job {id} starved");
+    }
+
+    // A job whose estimate exceeds the *whole* budget can never run: it
+    // must fail with the admission math, not sit in the queue forever.
+    let huge = submit(&mut s, &payload("impossible", 8, 8192, 7));
+    s.tick();
+    let info = status(&mut s, huge);
+    assert_eq!(info.state, JobState::Failed);
+    let err = info.error.expect("impossible job must carry the admission error");
+    assert!(
+        err.contains("exceeds the total memory budget"),
+        "error should show the admission math: {err}"
+    );
+}
+
+#[test]
+fn pause_evict_resume_through_verbs_is_bit_exact() {
+    // Reference: the same job, uninterrupted.
+    let mut r = scratch_scheduler("bitexact_ref", 2, 0, 4);
+    let rid = submit(&mut r, &payload("ref", 12, 4, 42));
+    tick_until_all_done(&mut r, &[rid], 50);
+    let reference = status(&mut r, rid);
+
+    // Interrupted: one slice, then pause (evicts to the v2 checkpoint and
+    // frees the runner), resume (re-queues; admission restores), finish.
+    let mut s = scratch_scheduler("bitexact_int", 2, 0, 4);
+    let id = submit(&mut s, &payload("ref", 12, 4, 42));
+    s.tick();
+    assert_eq!(status(&mut s, id).step, 4);
+    assert!(matches!(s.handle(&Request::Pause { id }), Response::Ok));
+    let paused = status(&mut s, id);
+    assert_eq!(paused.state, JobState::Paused);
+    assert!(!paused.resident, "a paused job must not hold training state");
+    let ckpt = PathBuf::from(&s.cfg.job_dir).join("job0001.ckpt");
+    assert!(ckpt.exists(), "pause must leave a suspend checkpoint on disk");
+    assert_eq!(s.resident_bytes(), 0);
+
+    // Pausing a paused job is a verb error, not a crash.
+    assert!(matches!(s.handle(&Request::Pause { id }), Response::Err(_)));
+
+    assert!(matches!(s.handle(&Request::Resume { id }), Response::Ok));
+    tick_until_all_done(&mut s, &[id], 50);
+    let resumed = status(&mut s, id);
+
+    assert_eq!(resumed.step, reference.step);
+    assert_eq!(resumed.tokens, reference.tokens);
+    assert_eq!(
+        resumed.tail_loss.unwrap().to_bits(),
+        reference.tail_loss.unwrap().to_bits(),
+        "pause/evict/resume must reproduce the uninterrupted loss curve bit-for-bit"
+    );
+
+    // Unknown ids answer with an error, never a panic.
+    assert!(matches!(s.handle(&Request::Status { id: 99 }), Response::Err(_)));
+}
+
+#[test]
+fn finetune_jobs_without_artifacts_fail_cleanly_and_do_not_wedge_the_queue() {
+    // Finetune/artifact workloads need a compiled artifact set. Where none
+    // exists, admission must turn each into a named failure — and keep
+    // serving the synthetic job behind them in the queue. (On a host with
+    // artifacts they simply run; both outcomes are legal here, wedging is
+    // not.)
+    let mut s = scratch_scheduler("noartifacts", 4, 0, 4);
+    let payload_ft = "model = \"nano\"\nmethod = \"galore\"\nsteps = 8\n\n\
+                      [galore]\nrank = 4\n\n[job]\nname = \"ft\"\nworkload = \"finetune\"\n";
+    let f1 = submit(&mut s, payload_ft);
+    let f2 = submit(&mut s, payload_ft);
+    let syn = submit(&mut s, &payload("after-ft", 8, 4, 9));
+
+    for _ in 0..50 {
+        if status(&mut s, syn).state == JobState::Done {
+            break;
+        }
+        s.tick();
+    }
+    assert_eq!(status(&mut s, syn).state, JobState::Done, "synthetic job starved");
+    for id in [f1, f2] {
+        let info = status(&mut s, id);
+        match info.state {
+            JobState::Done => {}
+            JobState::Failed => {
+                assert!(
+                    info.error.as_deref().is_some_and(|e| !e.is_empty()),
+                    "a failed admission must name its cause"
+                );
+            }
+            other => panic!("finetune job {id} wedged in state {other:?}"),
+        }
+    }
+}
+
+/// Kills the daemon child if the test panics before shutdown, so a failed
+/// assertion can never leak a resident `galore serve` into CI.
+struct KillOnDrop(std::process::Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn wait_until(deadline: Instant, what: &str, mut cond: impl FnMut() -> bool) {
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+#[test]
+fn daemon_smoke_two_jobs_over_the_socket_with_pause_resume() {
+    use std::io::Read as _;
+    use std::process::{Command, Stdio};
+
+    let dir = std::env::temp_dir().join("galore_test_serve_daemon");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("daemon.sock");
+    let job_dir = dir.join("jobs");
+
+    let child = Command::new(env!("CARGO_BIN_EXE_galore"))
+        .args([
+            "serve",
+            "--socket",
+            sock.to_str().unwrap(),
+            "--job-dir",
+            job_dir.to_str().unwrap(),
+            "--slice-steps",
+            "10",
+            "--max-jobs",
+            "2",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn galore serve");
+    let mut guard = KillOnDrop(child);
+    // Drain both pipes so a chatty daemon can never block on a full pipe
+    // buffer while we talk to it over the socket.
+    let mut out_pipe = guard.0.stdout.take().expect("stdout piped");
+    let mut err_pipe = guard.0.stderr.take().expect("stderr piped");
+    std::thread::spawn(move || {
+        let mut s = String::new();
+        let _ = out_pipe.read_to_string(&mut s);
+    });
+    let err_thread = std::thread::spawn(move || {
+        let mut s = String::new();
+        let _ = err_pipe.read_to_string(&mut s);
+        s
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(180);
+    wait_until(deadline, "the daemon socket to come up", || {
+        request(&sock, &Request::List).is_ok()
+    });
+
+    let submit_over_socket = |payload: &str| -> u64 {
+        match request(&sock, &Request::Submit { payload: payload.into() }).unwrap() {
+            Response::Submitted { id } => id,
+            other => panic!("daemon rejected submit: {other:?}"),
+        }
+    };
+    let status_over_socket = |id: u64| -> JobInfo {
+        match request(&sock, &Request::Status { id }).unwrap() {
+            Response::Job(info) => info,
+            other => panic!("daemon status failed: {other:?}"),
+        }
+    };
+
+    // Job 1 is long enough that the daemon cannot finish it before our
+    // pause lands (it would need ~200 scheduler turns); job 2 is quick and
+    // makes progress while 1 sits evicted.
+    let slow = submit_over_socket(&payload("slow", 2000, 4, 5));
+    let quick = submit_over_socket(&payload("quick", 40, 4, 6));
+    assert_eq!((slow, quick), (1, 2));
+
+    match request(&sock, &Request::Pause { id: slow }).unwrap() {
+        Response::Ok => {}
+        other => panic!("pause failed: {other:?}"),
+    }
+    let info = status_over_socket(slow);
+    assert_eq!(info.state, JobState::Paused);
+    assert!(!info.resident, "paused job must be evicted from the daemon's memory");
+
+    wait_until(deadline, "the quick job to finish while the slow one is paused", || {
+        status_over_socket(quick).state == JobState::Done
+    });
+    assert_eq!(status_over_socket(slow).state, JobState::Paused);
+
+    match request(&sock, &Request::Resume { id: slow }).unwrap() {
+        Response::Ok => {}
+        other => panic!("resume failed: {other:?}"),
+    }
+    wait_until(deadline, "the resumed job to finish", || {
+        status_over_socket(slow).state == JobState::Done
+    });
+    let done = status_over_socket(slow);
+    assert_eq!(done.step, 2000);
+    assert!(done.tail_loss.is_some());
+
+    // The CLI client speaks the same protocol: `list` against the live
+    // daemon must render both jobs as done.
+    let client = Command::new(env!("CARGO_BIN_EXE_galore"))
+        .args(["client", "list", "--socket", sock.to_str().unwrap()])
+        .output()
+        .expect("run galore client");
+    let list_out = String::from_utf8_lossy(&client.stdout).into_owned();
+    assert!(client.status.success(), "client list failed: {list_out}");
+    assert!(list_out.contains("jobs: 2"), "unexpected client output: {list_out}");
+    assert_eq!(list_out.matches(" done ").count(), 2, "both jobs done: {list_out}");
+
+    // Both jobs' steps made it into the shared JSONL log.
+    let log = std::fs::read_to_string(job_dir.join("steps.jsonl")).expect("step log");
+    assert!(log.contains("\"name\":\"slow\""));
+    assert_eq!(
+        log.lines().filter(|l| l.contains("\"job\":2,")).count(),
+        40,
+        "quick job must log all 40 steps"
+    );
+
+    match request(&sock, &Request::Shutdown).unwrap() {
+        Response::Ok => {}
+        other => panic!("shutdown failed: {other:?}"),
+    }
+    let exit = loop {
+        match guard.0.try_wait().expect("poll daemon") {
+            Some(st) => break st,
+            None => {
+                assert!(Instant::now() < deadline, "daemon did not exit after shutdown");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    let err = err_thread.join().unwrap_or_default();
+    assert!(exit.success(), "daemon exited non-zero.\nstderr:\n{err}");
+    assert!(!sock.exists(), "shutdown must remove the socket file");
+}
