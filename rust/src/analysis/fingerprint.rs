@@ -1,0 +1,346 @@
+//! Lint pass 3: fingerprint coverage of `RunConfig`.
+//!
+//! `RunConfig::fingerprint()` is the resume gate: a checkpoint resumed
+//! under a different fingerprint could silently diverge from the
+//! uninterrupted trajectory, so every config field must either feed the
+//! fingerprint or be *deliberately* exempted. This pass parses the
+//! `RunConfig` struct, the `fingerprint()` body, and the
+//! `FINGERPRINT_EXEMPT` const out of `config/run.rs` and enforces:
+//!
+//! - every `RunConfig` field is mentioned as `self.<field>` inside
+//!   `fingerprint()` or listed in `FINGERPRINT_EXEMPT`;
+//! - every `GaLoreConfig` field (from `optim/galore.rs`, reached via
+//!   `let g = &self.galore;`) is mentioned as `g.<field>` or listed as
+//!   `galore.<field>`;
+//! - every exemption carries a non-empty justification and names a
+//!   field that actually exists (no stale entries);
+//! - no field is both fingerprinted *and* exempted (a contradictory
+//!   entry would stop documenting reality).
+//!
+//! The net effect: adding a config knob without deciding its resume
+//! semantics is a lint failure, not a latent divergence bug.
+
+use super::scan::SourceFile;
+use super::Diagnostic;
+
+pub const RULE: &str = "fingerprint-covers-config";
+
+/// Path suffix of the file holding `RunConfig` + `fingerprint()`.
+pub const RUN_CONFIG_PATH: &str = "config/run.rs";
+/// Path suffix of the file holding `GaLoreConfig`.
+pub const GALORE_CONFIG_PATH: &str = "optim/galore.rs";
+
+pub fn check(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let Some(run) = files.iter().find(|f| f.path.ends_with(RUN_CONFIG_PATH)) else {
+        // Fixture trees without the anchor file skip the pass; `run_lint`
+        // separately asserts the anchor exists in the real tree.
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let fields = struct_fields(run, "RunConfig");
+    let body = fingerprint_body(run);
+    let exempt = exempt_entries(run);
+
+    if fields.is_empty() {
+        out.push(diag(run, 1, "could not parse `struct RunConfig` fields".into()));
+        return out;
+    }
+    let Some(body) = body else {
+        out.push(diag(run, 1, "could not find `fn fingerprint` in config/run.rs".into()));
+        return out;
+    };
+
+    for (name, line) in &fields {
+        let used = mentions(&body, &format!("self.{name}"));
+        let exempted = exempt.iter().any(|e| e.name == *name);
+        if !used && !exempted {
+            out.push(diag(
+                run,
+                *line,
+                format!(
+                    "RunConfig field `{name}` is neither in fingerprint() nor in \
+                     FINGERPRINT_EXEMPT — decide its resume semantics"
+                ),
+            ));
+        }
+        if used && exempted {
+            out.push(diag(
+                run,
+                *line,
+                format!("RunConfig field `{name}` is fingerprinted AND exempted — drop the stale exemption"),
+            ));
+        }
+    }
+
+    // GaLoreConfig fields flow in via `let g = &self.galore;`.
+    let galore_fields = files
+        .iter()
+        .find(|f| f.path.ends_with(GALORE_CONFIG_PATH))
+        .map(|f| struct_fields(f, "GaLoreConfig"))
+        .unwrap_or_default();
+    for (name, _line) in &galore_fields {
+        let used = mentions(&body, &format!("g.{name}"))
+            || mentions(&body, &format!("self.galore.{name}"));
+        let exempted = exempt.iter().any(|e| e.name == format!("galore.{name}"));
+        if !used && !exempted {
+            out.push(diag(
+                run,
+                1,
+                format!(
+                    "GaLoreConfig field `{name}` is neither in fingerprint() (as `g.{name}`) \
+                     nor exempted as `galore.{name}`"
+                ),
+            ));
+        }
+    }
+
+    for e in &exempt {
+        if e.reason.trim().is_empty() {
+            out.push(diag(
+                run,
+                e.line,
+                format!("FINGERPRINT_EXEMPT entry `{}` has an empty justification", e.name),
+            ));
+        }
+        let bare = e.name.strip_prefix("galore.").unwrap_or(&e.name);
+        let known = if e.name.starts_with("galore.") {
+            galore_fields.is_empty() || galore_fields.iter().any(|(n, _)| n == bare)
+        } else {
+            fields.iter().any(|(n, _)| n == bare)
+        };
+        if !known {
+            out.push(diag(
+                run,
+                e.line,
+                format!("FINGERPRINT_EXEMPT names unknown field `{}` — stale entry?", e.name),
+            ));
+        }
+    }
+    out
+}
+
+fn diag(f: &SourceFile, line: usize, message: String) -> Diagnostic {
+    Diagnostic { file: f.path.clone(), line, rule: RULE, message }
+}
+
+/// `token` present with a word boundary after it (`self.model` must not
+/// match inside `self.model_name`).
+fn mentions(body: &str, token: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = body[start..].find(token) {
+        let at = start + pos;
+        start = at + token.len();
+        let after_ok = body[at + token.len()..]
+            .chars()
+            .next()
+            .map(|c| !(c.is_alphanumeric() || c == '_'))
+            .unwrap_or(true);
+        if after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Field names (with 1-indexed declaration lines) of `struct <name>`,
+/// parsed from the masked text: lines at brace depth 1 of the struct
+/// body shaped like `[pub] ident:`.
+fn struct_fields(f: &SourceFile, name: &str) -> Vec<(String, usize)> {
+    let needle = format!("struct {name}");
+    let Some(start_idx) = f.masked.iter().position(|l| {
+        l.find(&needle).map(|p| {
+            let after = l[p + needle.len()..].chars().next();
+            matches!(after, None | Some(' ') | Some('{') | Some('<') | Some('('))
+        }) == Some(true)
+    }) else {
+        return Vec::new();
+    };
+    let mut fields = Vec::new();
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (idx, line) in f.masked.iter().enumerate().skip(start_idx) {
+        if opened && depth == 1 {
+            let t = line.trim();
+            let t = t.strip_prefix("pub ").unwrap_or(t);
+            let ident: String =
+                t.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+            if !ident.is_empty() && t[ident.len()..].starts_with(':') {
+                fields.push((ident, idx + 1));
+            }
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth == 0 {
+            break;
+        }
+    }
+    fields
+}
+
+/// The masked text of `fn fingerprint`'s span.
+fn fingerprint_body(f: &SourceFile) -> Option<String> {
+    let span = f.fns.iter().find(|s| s.name == "fingerprint")?;
+    Some(f.masked[span.start_line - 1..span.end_line].join("\n"))
+}
+
+struct Exempt {
+    name: String,
+    reason: String,
+    line: usize,
+}
+
+/// Entries of `FINGERPRINT_EXEMPT: &[(&str, &str)]`, read from the RAW
+/// lines (the masked text blanks string literals). String literals are
+/// collected in order across the const's lines and paired up.
+fn exempt_entries(f: &SourceFile) -> Vec<Exempt> {
+    let Some(start) = f.masked.iter().position(|l| l.contains("FINGERPRINT_EXEMPT")) else {
+        return Vec::new();
+    };
+    let mut strings: Vec<(String, usize)> = Vec::new();
+    for (idx, raw) in f.lines.iter().enumerate().skip(start) {
+        let mut rest = raw.as_str();
+        let mut consumed = 0usize;
+        while let Some(open) = rest.find('"') {
+            let Some(close_rel) = rest[open + 1..].find('"') else { break };
+            let lit = &rest[open + 1..open + 1 + close_rel];
+            strings.push((lit.to_string(), idx + 1));
+            consumed += open + close_rel + 2;
+            rest = &raw[consumed..];
+        }
+        // The masked line still shows structure; `];` outside a literal
+        // ends the const.
+        if f.masked[idx].contains("];") {
+            break;
+        }
+    }
+    strings
+        .chunks(2)
+        .filter_map(|pair| match pair {
+            [(name, line), (reason, _)] => {
+                Some(Exempt { name: name.clone(), reason: reason.clone(), line: *line })
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::SourceFile;
+
+    const COVERED: &str = r#"
+pub struct RunConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub threads: usize,
+}
+
+pub const FINGERPRINT_EXEMPT: &[(&str, &str)] = &[
+    ("threads", "bit-identical at any pool width"),
+];
+
+impl RunConfig {
+    pub fn fingerprint(&self) -> String {
+        format!("steps={} lr={}", self.steps, self.lr)
+    }
+}
+"#;
+
+    fn lint(src: &str) -> Vec<Diagnostic> {
+        check(&[SourceFile::parse("config/run.rs", src)])
+    }
+
+    #[test]
+    fn covered_config_is_clean() {
+        assert!(lint(COVERED).is_empty(), "{:?}", lint(COVERED));
+    }
+
+    #[test]
+    fn unfingerprinted_field_flagged() {
+        let src = COVERED.replace("pub lr: f32,", "pub lr: f32,\n    pub new_knob: bool,");
+        let d = lint(&src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("new_knob"));
+        assert_eq!(d[0].rule, RULE);
+    }
+
+    #[test]
+    fn exempting_the_new_field_clears_it() {
+        let src = COVERED
+            .replace("pub lr: f32,", "pub lr: f32,\n    pub new_knob: bool,")
+            .replace(
+                "(\"threads\",",
+                "(\"new_knob\", \"observation only\"),\n    (\"threads\",",
+            );
+        assert!(lint(&src).is_empty(), "{:?}", lint(&src));
+    }
+
+    #[test]
+    fn empty_justification_flagged() {
+        let src = COVERED.replace("\"bit-identical at any pool width\"", "\"  \"");
+        let d = lint(&src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("empty justification"));
+    }
+
+    #[test]
+    fn stale_exemption_flagged() {
+        let src = COVERED.replace("(\"threads\"", "(\"gone_field\"");
+        let d = lint(&src);
+        // gone_field is stale AND threads is now uncovered.
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().any(|x| x.message.contains("unknown field `gone_field`")));
+        assert!(d.iter().any(|x| x.message.contains("`threads`")));
+    }
+
+    #[test]
+    fn fingerprinted_and_exempted_is_contradictory() {
+        let src = COVERED.replace(
+            "self.steps, self.lr",
+            "self.steps, self.lr, self.threads",
+        );
+        let d = lint(&src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("AND exempted"));
+    }
+
+    #[test]
+    fn prefix_field_name_does_not_count_as_coverage() {
+        // `self.lr_max` in the body must not cover a field named `lr`.
+        let src = COVERED.replace("self.steps, self.lr", "self.steps, self.lr_max");
+        let d = lint(&src);
+        assert!(d.iter().any(|x| x.message.contains("`lr`")), "{d:?}");
+    }
+
+    #[test]
+    fn galore_fields_checked_via_g_alias() {
+        let galore = "pub struct GaLoreConfig {\n    pub rank: usize,\n    pub scale: f32,\n}\n";
+        let run = COVERED.replace(
+            "format!(\"steps={} lr={}\", self.steps, self.lr)",
+            "let g = &self.galore;\n        format!(\"steps={} lr={} rank={}\", self.steps, self.lr, g.rank)",
+        );
+        let files = [
+            SourceFile::parse("config/run.rs", &run),
+            SourceFile::parse("optim/galore.rs", galore),
+        ];
+        let d = check(&files);
+        // `scale` is neither `g.scale` in the body nor exempted.
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("`scale`"));
+    }
+
+    #[test]
+    fn missing_anchor_file_skips_pass() {
+        let files = [SourceFile::parse("other.rs", "fn x() {}")];
+        assert!(check(&files).is_empty());
+    }
+}

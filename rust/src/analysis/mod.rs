@@ -1,0 +1,174 @@
+//! `galore lint`: a zero-dependency invariant analyzer for this tree.
+//!
+//! The fast paths bought in earlier PRs rest on invariants that a
+//! general-purpose linter cannot know: raw-pointer task dispatch is
+//! sound only because per-parameter state is disjoint; resume is sound
+//! only because `fingerprint()` covers every trajectory-shaping knob;
+//! checkpoints round-trip only because every section tag has both a
+//! writer and a reader. Those contracts used to live in comments and
+//! reviewer memory. This module machine-checks them on every CI run.
+//!
+//! ## The passes
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | [`safety`] `unsafe-needs-safety-comment` | every `unsafe` block / `unsafe impl` / `unsafe fn` carries a `// SAFETY:` comment nearby |
+//! | [`panics`] `no-panic-on-hot-paths` | no `.unwrap()` / `.expect()` / `panic!` in non-test code under `coordinator/`, `serve/`, `optim/`, `runtime/` without a justified `// PANIC-OK:` allowlist comment |
+//! | [`fingerprint`] `fingerprint-covers-config` | every `RunConfig` / `GaLoreConfig` field feeds `fingerprint()` or sits in `FINGERPRINT_EXEMPT` with a justification |
+//! | [`sections`] `checkpoint-section-symmetry` | every checkpoint `SEC_*` tag written by a save path is read by a load/restore path, and vice versa (legacy tags: read-only) |
+//!
+//! ## Why a hand-rolled scanner
+//!
+//! The build is vendored-offline (no external crates), so [`scan`] is a
+//! small lexical front end: it masks comments and string/char literals,
+//! tracks `#[cfg(test)]` / `#[test]` regions, and records function
+//! spans. That is enough signal for line-oriented invariant checks
+//! without a real parser — each pass works on the masked text, so
+//! `unsafe` in a doc comment or `"panic!"` in a log string never
+//! false-positives.
+//!
+//! ## Running it
+//!
+//! ```text
+//! cargo run --release -- lint          # exits 0 clean, 1 with file:line diagnostics
+//! cargo run --release -- lint path/to/src
+//! ```
+//!
+//! The static passes are paired with a dynamic check: a
+//! `debug_assertions`-gated aliasing sanitizer in `runtime::pool` that
+//! records each submitted task's claimed `[ptr, ptr+len)` ranges and
+//! panics on overlap, turning the "disjoint per-param state" argument
+//! into an executed assertion under the debug test matrix.
+
+pub mod fingerprint;
+pub mod panics;
+pub mod safety;
+pub mod scan;
+pub mod sections;
+
+use scan::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// One lint finding, printable as `file:line [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Repo-relative path label (e.g. `coordinator/trainer.rs`).
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Run every pass over in-memory `(path-label, source)` pairs. The unit
+/// of testability: fixtures call this directly; [`run_lint`] feeds it
+/// the real tree.
+pub fn lint_sources(sources: &[(String, String)]) -> Vec<Diagnostic> {
+    let files: Vec<SourceFile> =
+        sources.iter().map(|(p, s)| SourceFile::parse(p, s)).collect();
+    let mut out = Vec::new();
+    out.extend(safety::check(&files));
+    out.extend(panics::check(&files));
+    out.extend(fingerprint::check(&files));
+    out.extend(sections::check(&files));
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+/// Files the passes anchor on; their absence in a real tree means the
+/// lint is looking at the wrong directory, which must be an error
+/// rather than a silently-green run.
+const ANCHOR_FILES: &[&str] =
+    &["config/run.rs", "optim/galore.rs", "coordinator/checkpoint.rs", "runtime/pool.rs"];
+
+/// Lint every `.rs` file under `root` (normally `rust/src`). Path
+/// labels in diagnostics are relative to `root`.
+pub fn run_lint(root: &Path) -> Result<Vec<Diagnostic>, String> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)
+        .map_err(|e| format!("walking {}: {e}", root.display()))?;
+    paths.sort();
+    let mut sources = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| format!("reading {}: {e}", p.display()))?;
+        let label = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        sources.push((label, text));
+    }
+    for anchor in ANCHOR_FILES {
+        if !sources.iter().any(|(p, _)| p.ends_with(anchor)) {
+            return Err(format!(
+                "lint root {} does not contain {anchor} — wrong directory?",
+                root.display()
+            ));
+        }
+    }
+    Ok(lint_sources(&sources))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagnostics_print_file_line_rule() {
+        let d = Diagnostic {
+            file: "optim/galore.rs".into(),
+            line: 42,
+            rule: "no-panic-on-hot-paths",
+            message: "boom".into(),
+        };
+        assert_eq!(d.to_string(), "optim/galore.rs:42 [no-panic-on-hot-paths] boom");
+    }
+
+    #[test]
+    fn lint_sources_runs_all_passes_and_sorts() {
+        let sources = vec![
+            (
+                "runtime/b.rs".to_string(),
+                "fn f() { y().unwrap(); }\nfn g() { let s = unsafe { raw(p) }; }\n".to_string(),
+            ),
+            ("coordinator/a.rs".to_string(), "fn f() { panic!(\"x\"); }\n".to_string()),
+        ];
+        let d = lint_sources(&sources);
+        assert_eq!(d.len(), 3, "{d:?}");
+        // Sorted by (file, line): coordinator first, then runtime 1, 2.
+        assert_eq!(d[0].file, "coordinator/a.rs");
+        assert_eq!(d[1].file, "runtime/b.rs");
+        assert_eq!((d[1].line, d[2].line), (1, 2));
+        assert!(d.iter().any(|x| x.rule == safety::RULE));
+        assert!(d.iter().any(|x| x.rule == panics::RULE));
+    }
+
+    #[test]
+    fn run_lint_rejects_wrong_root() {
+        let dir = std::env::temp_dir().join("galore-lint-wrong-root");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("lone.rs"), "fn x() {}\n").unwrap();
+        let err = run_lint(&dir).unwrap_err();
+        assert!(err.contains("wrong directory"), "{err}");
+    }
+}

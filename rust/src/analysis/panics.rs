@@ -1,0 +1,189 @@
+//! Lint pass 2: no `.unwrap()` / `.expect(` / `panic!(` in non-test
+//! code under the process-critical directories, outside an explicit
+//! per-site allowlist.
+//!
+//! The trainer is a resident process (`galore serve` runs many jobs in
+//! one daemon): a panic on a fallible path aborts every co-resident
+//! job, so mid-run code must propagate `Result` instead. The scope is
+//! the directories whose code runs while jobs are live —
+//! `coordinator/`, `serve/`, `optim/`, `runtime/`. Test modules are
+//! exempt (a test unwrap *is* the assertion).
+//!
+//! Allowlist mechanism: a site is permitted when the same line or the
+//! line above carries a `// PANIC-OK: <justification>` comment with a
+//! non-empty justification — the linter verifies the justification text
+//! is actually present, so an allowlisted site always explains itself
+//! at the point of use (e.g. "process startup, before any job exists",
+//! or "infallible by construction: index i < senders.len()").
+//!
+//! `self.expect(…)` is not flagged: that is a user-defined method (the
+//! JSON parser's token matcher), not `Option::expect`.
+
+use super::scan::SourceFile;
+use super::Diagnostic;
+
+pub const RULE: &str = "no-panic-on-hot-paths";
+
+/// Directories whose non-test code must not contain unlisted panic
+/// sites (prefixes of the repo-relative path labels).
+pub const SCOPED_DIRS: &[&str] = &["coordinator/", "serve/", "optim/", "runtime/"];
+
+const PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!("];
+
+pub fn check(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in files {
+        if !SCOPED_DIRS.iter().any(|d| f.path.starts_with(d) || f.path.contains(&format!("/{d}")))
+        {
+            continue;
+        }
+        for (idx, masked) in f.masked.iter().enumerate() {
+            let line_no = idx + 1;
+            if f.line_is_test(line_no) {
+                continue;
+            }
+            for pat in PATTERNS {
+                let mut start = 0;
+                while let Some(pos) = masked[start..].find(pat) {
+                    let at = start + pos;
+                    start = at + pat.len();
+                    if *pat == ".expect(" && is_self_call(masked, at) {
+                        continue;
+                    }
+                    if allowlisted(f, idx) {
+                        continue;
+                    }
+                    out.push(Diagnostic {
+                        file: f.path.clone(),
+                        line: line_no,
+                        rule: RULE,
+                        message: format!(
+                            "`{}` on a resident-process path — propagate a Result, or \
+                             justify with `// PANIC-OK: <reason>` on this line or the \
+                             line above",
+                            pat.trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `self.expect(` / `r.expect(`-style calls on a *parser* receiver are
+/// user methods, not `Option::expect`. Only the literal receiver `self`
+/// is exempted — everything else is assumed to be the std method.
+fn is_self_call(masked: &str, dot_pos: usize) -> bool {
+    masked[..dot_pos].trim_end().ends_with("self")
+}
+
+/// `// PANIC-OK: <reason>` on the site's line or anywhere in the
+/// contiguous comment-only block directly above it, with a non-empty
+/// reason after the colon (a justification may span several comment
+/// lines; the marker can sit on any of them).
+fn allowlisted(f: &SourceFile, idx: usize) -> bool {
+    let has_reason = |c: &str| {
+        c.find("PANIC-OK:")
+            .map(|p| !c[p + "PANIC-OK:".len()..].trim().is_empty())
+            .unwrap_or(false)
+    };
+    if f.comments.get(idx).map(|c| has_reason(c)).unwrap_or(false) {
+        return true;
+    }
+    // Walk up through comment-only lines (masked text blank, comment
+    // text present).
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let comment_only = f.masked[i].trim().is_empty() && !f.comments[i].trim().is_empty();
+        if !comment_only {
+            return false;
+        }
+        if has_reason(&f.comments[i]) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::SourceFile;
+
+    fn lint_one(path: &str, src: &str) -> Vec<Diagnostic> {
+        check(&[SourceFile::parse(path, src)])
+    }
+
+    #[test]
+    fn unwrap_in_scope_flagged() {
+        let d = lint_one("coordinator/x.rs", "fn f() { y().unwrap(); }\n");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 1);
+    }
+
+    #[test]
+    fn expect_and_panic_flagged() {
+        let d = lint_one("optim/x.rs", "fn f() {\n    y().expect(\"boom\");\n    panic!(\"no\");\n}\n");
+        assert_eq!(d.len(), 2);
+        assert_eq!((d[0].line, d[1].line), (2, 3));
+    }
+
+    #[test]
+    fn out_of_scope_dirs_ignored() {
+        assert!(lint_one("tensor/x.rs", "fn f() { y().unwrap(); }\n").is_empty());
+        assert!(lint_one("config/x.rs", "fn f() { panic!(); }\n").is_empty());
+    }
+
+    #[test]
+    fn test_code_ignored() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { y().unwrap(); }\n}\n";
+        assert!(lint_one("serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_ok_with_reason_allowed() {
+        let src = "fn f() {\n    // PANIC-OK: process startup, no jobs are resident yet\n    spawn().expect(\"spawning worker\");\n    y().unwrap() // PANIC-OK: index bounded by len above\n}\n";
+        assert!(lint_one("runtime/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multi_line_justification_allowed() {
+        let src = "fn f() {\n    // PANIC-OK: pool construction happens at startup,\n    // before any job state exists to lose.\n    spawn().expect(\"spawn\");\n}\n";
+        assert!(lint_one("runtime/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comment_block_interrupted_by_code_does_not_allowlist() {
+        let src = "fn f() {\n    // PANIC-OK: covers only the line below it\n    a().unwrap();\n    b().unwrap();\n}\n";
+        let d = lint_one("runtime/x.rs", src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn panic_ok_without_reason_still_flagged() {
+        let src = "fn f() {\n    // PANIC-OK:\n    y().unwrap();\n}\n";
+        let d = lint_one("runtime/x.rs", src);
+        assert_eq!(d.len(), 1, "an empty justification must not allowlist");
+    }
+
+    #[test]
+    fn unwrap_or_variants_not_flagged() {
+        let src = "fn f() { a.unwrap_or(0); b.unwrap_or_else(|| 1); c.unwrap_or_default(); }\n";
+        assert!(lint_one("optim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn self_expect_parser_method_not_flagged() {
+        let src = "fn parse(&mut self) {\n    self.expect(b'{');\n}\n";
+        assert!(lint_one("runtime/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn patterns_in_strings_and_comments_ignored() {
+        let src = "fn f() { log(\"never .unwrap() here\"); } // .expect( in prose\n";
+        assert!(lint_one("coordinator/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,189 @@
+//! Lint pass 1: every `unsafe` site carries a `// SAFETY:` comment.
+//!
+//! A *site* is an `unsafe` keyword that introduces an obligation: an
+//! `unsafe { … }` block, an `unsafe impl`, or an `unsafe fn` item
+//! declaration. `unsafe fn(...)` *types* (function pointers, like the
+//! worker-pool trampoline slot) impose the obligation on their callers,
+//! not their declaration, and are skipped. A site counts as documented
+//! when a comment containing `SAFETY` appears on the same line, within
+//! the [`WINDOW`] lines above it (attributes and sibling `unsafe impl`
+//! lines may sit between the comment and the keyword), or on the first
+//! line inside the block — the comment placements this codebase already
+//! uses.
+
+use super::scan::SourceFile;
+use super::Diagnostic;
+
+/// How far above an `unsafe` site a `SAFETY` comment may sit. Wide
+/// enough for a multi-line justification plus an attribute; narrow
+/// enough that a comment cannot plausibly document an unrelated site.
+const WINDOW: usize = 6;
+
+pub const RULE: &str = "unsafe-needs-safety-comment";
+
+pub fn check(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in files {
+        for line_no in unsafe_sites(f) {
+            if !documented(f, line_no) {
+                out.push(Diagnostic {
+                    file: f.path.clone(),
+                    line: line_no,
+                    rule: RULE,
+                    message: "`unsafe` without a `// SAFETY:` comment (same line, the \
+                              6 lines above, or the first line of the block)"
+                        .into(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// 1-indexed lines holding an obligation-introducing `unsafe`.
+fn unsafe_sites(f: &SourceFile) -> Vec<usize> {
+    let mut sites = Vec::new();
+    // Flatten the masked text so a site whose `{` falls on the next line
+    // is still classified correctly.
+    let flat: String = f.masked.join("\n");
+    let bytes: Vec<char> = flat.chars().collect();
+    let mut line = 1usize;
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if flat_word_at(&bytes, i, "unsafe") {
+            let site_line = line;
+            let mut j = i + "unsafe".len();
+            // Next non-whitespace token decides the kind.
+            while j < bytes.len() && bytes[j].is_whitespace() {
+                j += 1;
+            }
+            let rest: String = bytes[j..bytes.len().min(j + 16)].iter().collect();
+            if rest.starts_with('{') || rest.starts_with("impl") {
+                sites.push(site_line);
+            } else if rest.starts_with("fn") {
+                // `unsafe fn name(` is a declaration; `unsafe fn(` is a
+                // function-pointer type.
+                let mut k = j + 2;
+                while k < bytes.len() && bytes[k].is_whitespace() {
+                    k += 1;
+                }
+                if bytes.get(k).map(|c| c.is_alphabetic() || *c == '_').unwrap_or(false) {
+                    sites.push(site_line);
+                }
+            } else if rest.starts_with("extern") {
+                // `unsafe extern "C" fn …` declaration.
+                sites.push(site_line);
+            }
+            i += "unsafe".len();
+            continue;
+        }
+        i += 1;
+    }
+    sites
+}
+
+fn flat_word_at(b: &[char], i: usize, w: &str) -> bool {
+    let wc: Vec<char> = w.chars().collect();
+    if i + wc.len() > b.len() || b[i..i + wc.len()] != wc[..] {
+        return false;
+    }
+    let before_ok = i == 0 || !(b[i - 1].is_alphanumeric() || b[i - 1] == '_');
+    let after_ok = b
+        .get(i + wc.len())
+        .map(|c| !(c.is_alphanumeric() || *c == '_'))
+        .unwrap_or(true);
+    before_ok && after_ok
+}
+
+fn documented(f: &SourceFile, line_no: usize) -> bool {
+    if f.comments.is_empty() {
+        return false;
+    }
+    let idx = line_no - 1;
+    // Same line, the WINDOW lines above, or the first line of the block.
+    let lo = idx.saturating_sub(WINDOW);
+    for c in &f.comments[lo..=idx.min(f.comments.len() - 1)] {
+        if c.contains("SAFETY") {
+            return true;
+        }
+    }
+    if let Some(next) = f.comments.get(idx + 1) {
+        if next.contains("SAFETY") {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::SourceFile;
+
+    fn lint_one(src: &str) -> Vec<Diagnostic> {
+        check(&[SourceFile::parse("x.rs", src)])
+    }
+
+    #[test]
+    fn documented_block_passes() {
+        let src = "// SAFETY: disjoint rows\nlet s = unsafe { from_raw(p) };\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn undocumented_block_flagged() {
+        let src = "let s = unsafe { from_raw(p) };\n";
+        let d = lint_one(src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 1);
+        assert_eq!(d[0].rule, RULE);
+    }
+
+    #[test]
+    fn comment_inside_block_counts() {
+        let src = "let s = unsafe {\n    // SAFETY: caller holds the borrow\n    from_raw(p)\n};\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn shared_comment_covers_adjacent_impls() {
+        let src = "// SAFETY: plain address, tasks write disjoint ranges\nunsafe impl<T> Send for P<T> {}\nunsafe impl<T> Sync for P<T> {}\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn undocumented_unsafe_fn_flagged_but_fn_pointer_type_is_not() {
+        let src = "struct S { call: unsafe fn(*const (), usize) }\nunsafe fn call_never(_: *const ()) {}\n";
+        let d = lint_one(src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_in_string_or_comment_is_ignored() {
+        let src = "let s = \"unsafe { }\"; // unsafe in prose\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn far_away_comment_does_not_count() {
+        let mut src = String::from("// SAFETY: something else\n");
+        for _ in 0..8 {
+            src.push_str("let filler = 0;\n");
+        }
+        src.push_str("let s = unsafe { from_raw(p) };\n");
+        let d = lint_one(&src);
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn doc_comment_safety_counts() {
+        let src = "/// SAFETY: calls data as &F; only instantiated by run<F>.\nunsafe fn call_as<F>(data: *const ()) {}\n";
+        assert!(lint_one(src).is_empty());
+    }
+}

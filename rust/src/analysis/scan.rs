@@ -1,0 +1,451 @@
+//! Lightweight Rust source scanner for the `galore lint` passes.
+//!
+//! Not a parser: a line-oriented model of one `.rs` file built from a
+//! single character-level sweep that understands exactly as much Rust
+//! lexical structure as the lint rules need — comments (line, nested
+//! block, doc), string/char/byte literals (including raw strings with
+//! any `#` count), brace depth, `#[cfg(test)]`/`#[test]` regions, and
+//! `fn` item spans. Everything else stays text. The passes then search
+//! *masked* lines (comment and literal contents blanked to spaces, with
+//! layout preserved) so `"panic!("` inside a string or a doc comment can
+//! never produce a diagnostic, while the comment text itself is kept
+//! per line for the `SAFETY:` / `PANIC-OK:` checks.
+
+/// The span of one `fn` item (any nesting depth), used to classify a
+/// token occurrence by its innermost enclosing function.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    /// 1-indexed, inclusive.
+    pub start_line: usize,
+    /// 1-indexed, inclusive (line of the matching closing brace).
+    pub end_line: usize,
+}
+
+/// One scanned source file.
+pub struct SourceFile {
+    /// Repo-relative path label used in diagnostics (e.g.
+    /// `optim/galore.rs`).
+    pub path: String,
+    /// Raw lines, as written.
+    pub lines: Vec<String>,
+    /// Lines with comment and string/char-literal contents replaced by
+    /// spaces; same length and layout as `lines`, so column positions
+    /// still correspond.
+    pub masked: Vec<String>,
+    /// Comment text found on each line (concatenated if several), with
+    /// the `//` / `/*` markers stripped off the scan but the words kept.
+    pub comments: Vec<String>,
+    /// True for lines inside a `#[cfg(test)]` item or a `#[test]` fn.
+    pub is_test: Vec<bool>,
+    /// Every `fn` item span, in source order.
+    pub fns: Vec<FnSpan>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Lex {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let (masked_text, comment_text) = mask(text);
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let masked: Vec<String> = masked_text.lines().map(str::to_string).collect();
+        let comments: Vec<String> = comment_text.lines().map(str::to_string).collect();
+        let is_test = test_lines(&masked);
+        let fns = fn_spans(&masked);
+        SourceFile { path: path.to_string(), lines, masked, comments, is_test, fns }
+    }
+
+    /// Innermost `fn` whose span contains `line` (1-indexed).
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.start_line <= line && line <= f.end_line)
+            .min_by_key(|f| f.end_line - f.start_line)
+    }
+
+    /// Is the 1-indexed line inside test code?
+    pub fn line_is_test(&self, line: usize) -> bool {
+        self.is_test.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+/// Blank comment and literal contents out of `text`. Returns
+/// `(masked, comments)`, both with `text`'s exact line structure: in
+/// `masked` every comment/literal character becomes a space; in
+/// `comments` only comment characters survive (code becomes spaces), so
+/// per-line comment text can be recovered with `lines()`.
+fn mask(text: &str) -> (String, String) {
+    let b: Vec<char> = text.chars().collect();
+    let mut masked = String::with_capacity(text.len());
+    let mut comments = String::with_capacity(text.len());
+    let mut st = Lex::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            // Newlines survive in both views; a line comment ends here.
+            if st == Lex::LineComment {
+                st = Lex::Code;
+            }
+            masked.push('\n');
+            comments.push('\n');
+            i += 1;
+            continue;
+        }
+        match st {
+            Lex::Code => {
+                let next = b.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && next == '/' {
+                    st = Lex::LineComment;
+                    masked.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                } else if c == '/' && next == '*' {
+                    st = Lex::BlockComment(1);
+                    masked.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                } else if c == '"' {
+                    st = Lex::Str;
+                    masked.push(' ');
+                    comments.push(' ');
+                } else if c == 'r' && (next == '"' || next == '#') && is_raw_str_start(&b, i) {
+                    let hashes = count_hashes(&b, i + 1);
+                    st = Lex::RawStr(hashes);
+                    // Consume `r`, the hashes, and the opening quote.
+                    for _ in 0..(hashes as usize + 2) {
+                        masked.push(' ');
+                        comments.push(' ');
+                    }
+                    i += hashes as usize + 1;
+                } else if c == '\'' && is_char_literal(&b, i) {
+                    st = Lex::Char;
+                    masked.push(' ');
+                    comments.push(' ');
+                } else {
+                    masked.push(c);
+                    comments.push(' ');
+                }
+            }
+            Lex::LineComment => {
+                masked.push(' ');
+                comments.push(c);
+            }
+            Lex::BlockComment(d) => {
+                let next = b.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && next == '*' {
+                    st = Lex::BlockComment(d + 1);
+                    masked.push(' ');
+                    masked.push(' ');
+                    comments.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                } else if c == '*' && next == '/' {
+                    st = if d > 1 { Lex::BlockComment(d - 1) } else { Lex::Code };
+                    masked.push(' ');
+                    masked.push(' ');
+                    comments.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                } else {
+                    masked.push(' ');
+                    comments.push(c);
+                }
+            }
+            Lex::Str => {
+                if c == '\\' {
+                    // Skip the escaped character (handles \" and \\).
+                    masked.push(' ');
+                    comments.push(' ');
+                    if b.get(i + 1).map(|&n| n != '\n').unwrap_or(false) {
+                        masked.push(' ');
+                        comments.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    masked.push(' ');
+                    comments.push(' ');
+                    if c == '"' {
+                        st = Lex::Code;
+                    }
+                }
+            }
+            Lex::RawStr(h) => {
+                if c == '"' && count_hashes(&b, i + 1) >= h && has_hashes(&b, i + 1, h) {
+                    for _ in 0..(h as usize + 1) {
+                        masked.push(' ');
+                        comments.push(' ');
+                    }
+                    i += h as usize;
+                    st = Lex::Code;
+                } else {
+                    masked.push(' ');
+                    comments.push(' ');
+                }
+            }
+            Lex::Char => {
+                if c == '\\' {
+                    masked.push(' ');
+                    comments.push(' ');
+                    if b.get(i + 1).map(|&n| n != '\n').unwrap_or(false) {
+                        masked.push(' ');
+                        comments.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    masked.push(' ');
+                    comments.push(' ');
+                    if c == '\'' {
+                        st = Lex::Code;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    (masked, comments)
+}
+
+/// `r` at `i` starts a raw string iff `r`, optional `#`s, then `"` —
+/// and `r` is not the tail of an identifier (e.g. `var"..."` is not
+/// Rust, but `for r#"` must not trip on the identifier `for`).
+fn is_raw_str_start(b: &[char], i: usize) -> bool {
+    if i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_') {
+        return false;
+    }
+    let h = count_hashes(b, i + 1) as usize;
+    b.get(i + 1 + h) == Some(&'"')
+}
+
+fn count_hashes(b: &[char], mut i: usize) -> u32 {
+    let mut n = 0;
+    while b.get(i) == Some(&'#') {
+        n += 1;
+        i += 1;
+    }
+    n
+}
+
+fn has_hashes(b: &[char], i: usize, h: u32) -> bool {
+    (0..h as usize).all(|k| b.get(i + k) == Some(&'#'))
+}
+
+/// Distinguish a char literal from a lifetime: `'x'` / `'\n'` are
+/// literals; `'a` followed by anything but a closing quote is a
+/// lifetime (or a loop label).
+fn is_char_literal(b: &[char], i: usize) -> bool {
+    match b.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => b.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Mark lines covered by `#[cfg(test)]` items and `#[test]` fns: an
+/// attribute arms a pending flag; the next `{` opens a test region that
+/// ends at its matching `}` (regions nest — anything inside a test
+/// region is test). A `;` before any `{` disarms (attribute on a
+/// body-less item).
+fn test_lines(masked: &[String]) -> Vec<bool> {
+    let mut out = vec![false; masked.len()];
+    let mut pending = false;
+    // Stack of booleans: is the region opened by this brace a test one?
+    let mut stack: Vec<bool> = Vec::new();
+    for (ln, line) in masked.iter().enumerate() {
+        if line.contains("#[cfg(test)]") || line.contains("#[test]") {
+            pending = true;
+        }
+        let in_test_before = stack.iter().any(|&t| t);
+        if in_test_before || pending {
+            out[ln] = true;
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    let t = stack.iter().any(|&x| x) || pending;
+                    stack.push(t);
+                    pending = false;
+                }
+                '}' => {
+                    stack.pop();
+                }
+                ';' if stack.iter().all(|&t| !t) => {
+                    // Item without a body at non-test depth consumes the
+                    // pending attribute.
+                    pending = false;
+                }
+                _ => {}
+            }
+        }
+        if stack.iter().any(|&t| t) {
+            out[ln] = true;
+        }
+    }
+    out
+}
+
+/// Find `fn NAME … { … }` item spans by scanning masked text: the
+/// keyword `fn` followed by an identifier, then the first `{` at
+/// paren/bracket depth 0, then its matching `}`. Trait-method
+/// *declarations* (`fn f(&self) -> T;`) have no body and are skipped.
+fn fn_spans(masked: &[String]) -> Vec<FnSpan> {
+    // Flatten with line bookkeeping.
+    let mut chars: Vec<(char, usize)> = Vec::new();
+    for (ln, line) in masked.iter().enumerate() {
+        for c in line.chars() {
+            chars.push((c, ln + 1));
+        }
+        chars.push(('\n', ln + 1));
+    }
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i].0 == 'f'
+            && chars.get(i + 1).map(|&(c, _)| c) == Some('n')
+            && chars.get(i + 2).map(|&(c, _)| !c.is_alphanumeric() && c != '_').unwrap_or(true)
+            && (i == 0
+                || !(chars[i - 1].0.is_alphanumeric() || chars[i - 1].0 == '_'))
+        {
+            let start_line = chars[i].1;
+            // Skip whitespace, collect the identifier (absent for fn
+            // pointer types `fn(...)` — skip those).
+            let mut j = i + 2;
+            while j < chars.len() && chars[j].0.is_whitespace() {
+                j += 1;
+            }
+            let mut name = String::new();
+            while j < chars.len() && (chars[j].0.is_alphanumeric() || chars[j].0 == '_') {
+                name.push(chars[j].0);
+                j += 1;
+            }
+            if name.is_empty() {
+                i += 2;
+                continue;
+            }
+            // Find the body `{` at bracket depth 0, bailing at a `;`
+            // (body-less declaration).
+            let mut depth = 0i32;
+            let mut body = None;
+            while j < chars.len() {
+                match chars[j].0 {
+                    '(' | '[' => depth += 1,
+                    ')' | ']' => depth -= 1,
+                    '{' if depth == 0 => {
+                        body = Some(j);
+                        break;
+                    }
+                    ';' if depth == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(open) = body {
+                let mut bd = 0i32;
+                let mut k = open;
+                let mut end_line = chars[open].1;
+                while k < chars.len() {
+                    match chars[k].0 {
+                        '{' => bd += 1,
+                        '}' => {
+                            bd -= 1;
+                            if bd == 0 {
+                                end_line = chars[k].1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                spans.push(FnSpan { name, start_line, end_line });
+                // Continue scanning *inside* the body too (nested fns,
+                // and the next sibling after short bodies).
+                i += 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_and_comments() {
+        let src = "let x = \"panic!(\\\"no\\\")\"; // .unwrap() here\nlet y = 1; /* .expect( */\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.masked[0].contains("panic!"));
+        assert!(!f.masked[0].contains("unwrap"));
+        assert!(f.masked[0].contains("let x ="));
+        assert!(!f.masked[1].contains("expect"));
+        assert!(f.comments[0].contains(".unwrap() here"));
+        assert!(f.comments[1].contains(".expect("));
+    }
+
+    #[test]
+    fn masks_raw_strings_and_chars() {
+        let src = "let s = r#\"unsafe { \"quote\" }\"#;\nlet c = '\\'';\nlet l: &'static str = \"x\";\nfor<'a> fn(&'a u8);\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.masked[0].contains("unsafe"));
+        assert!(f.masked[2].contains("&'static str"), "lifetime must stay code: {}", f.masked[2]);
+        assert!(f.masked[3].contains("'a"), "{}", f.masked[3]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ let x = 1;\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.masked[0].contains("let x = 1;"));
+        assert!(!f.masked[0].contains("outer"));
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let src = "fn real() { work(); }\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n    #[test]\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.line_is_test(1));
+        assert!(f.line_is_test(2));
+        assert!(f.line_is_test(4));
+        assert!(f.line_is_test(6));
+        assert!(!f.line_is_test(8), "code after the test mod is not test");
+    }
+
+    #[test]
+    fn standalone_test_fn() {
+        let src = "#[test]\nfn t() {\n    x.unwrap();\n}\nfn real() { y(); }\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.line_is_test(3));
+        assert!(!f.line_is_test(5));
+    }
+
+    #[test]
+    fn fn_spans_and_enclosing() {
+        let src = "fn alpha() {\n    inner();\n}\nimpl Foo {\n    fn save_beta(&self) -> u8 {\n        1\n    }\n}\ntrait T { fn decl(&self); }\nlet f: fn(usize) = alpha;\n";
+        let f = SourceFile::parse("t.rs", src);
+        let names: Vec<&str> = f.fns.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "save_beta"], "{names:?}");
+        assert_eq!(f.enclosing_fn(2).unwrap().name, "alpha");
+        assert_eq!(f.enclosing_fn(6).unwrap().name, "save_beta");
+        assert!(f.enclosing_fn(9).is_none());
+    }
+
+    #[test]
+    fn comment_text_is_recoverable_per_line() {
+        let src = "unsafe { x }; // SAFETY: fine\n// PANIC-OK: startup only\nlet y = 2;\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.comments[0].contains("SAFETY: fine"));
+        assert!(f.comments[1].contains("PANIC-OK: startup only"));
+        assert_eq!(f.comments[2].trim(), "");
+    }
+}

@@ -1,0 +1,260 @@
+//! Lint pass 4: checkpoint-section symmetry.
+//!
+//! The v2 checkpoint format is a roster of tagged sections (`SEC_*` in
+//! `coordinator/checkpoint.rs`). A section written by a `save_*` path
+//! that no `load_*`/`restore_*` path reads is silently-dropped state on
+//! resume; a section read but never written is a resume that can never
+//! find its data. Both are asymmetries a reviewer has to *remember* to
+//! check — so this pass checks them instead:
+//!
+//! - per file: the set of tags used inside `save*` functions must equal
+//!   the set used inside `load*`/`restore*` functions;
+//! - globally: every declared tag must be read somewhere, and every
+//!   non-legacy tag written somewhere.
+//!
+//! *Legacy* tags (doc comment on the declaration contains "legacy") are
+//! the sanctioned exception: kept only so old files are rejected loudly,
+//! they must be read and never written.
+//!
+//! Test code is excluded — round-trip tests legitimately write and read
+//! tags in the same function.
+
+use super::scan::SourceFile;
+use super::Diagnostic;
+use std::collections::{BTreeMap, BTreeSet};
+
+pub const RULE: &str = "checkpoint-section-symmetry";
+
+/// Path suffix of the file declaring the `SEC_*` tags.
+pub const DECL_PATH: &str = "coordinator/checkpoint.rs";
+
+/// How far above a declaration its doc comment may start.
+const DOC_WINDOW: usize = 3;
+
+pub fn check(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let Some(decl_file) = files.iter().find(|f| f.path.ends_with(DECL_PATH)) else {
+        return Vec::new();
+    };
+    let decls = declared_tags(decl_file);
+    if decls.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+
+    // tag -> (files-that-write, files-that-read), non-test uses only.
+    let mut writers: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut readers: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    // file -> (tags written, tags read) for the per-file symmetry check.
+    let mut per_file: BTreeMap<String, (BTreeSet<String>, BTreeSet<String>)> = BTreeMap::new();
+
+    for f in files {
+        for (idx, masked) in f.masked.iter().enumerate() {
+            let line_no = idx + 1;
+            if f.line_is_test(line_no) || is_decl_line(masked) {
+                continue;
+            }
+            for tag in tags_on_line(masked) {
+                if !decls.contains_key(&tag) {
+                    continue;
+                }
+                let Some(fun) = f.enclosing_fn(line_no) else { continue };
+                let entry = per_file.entry(f.path.clone()).or_default();
+                if fun.name.contains("save") {
+                    writers.entry(tag.clone()).or_default().insert(f.path.clone());
+                    entry.0.insert(tag);
+                } else if fun.name.contains("load") || fun.name.contains("restore") {
+                    readers.entry(tag.clone()).or_default().insert(f.path.clone());
+                    entry.1.insert(tag);
+                }
+            }
+        }
+    }
+
+    for (path, (written, read)) in &per_file {
+        for tag in written.difference(read) {
+            out.push(Diagnostic {
+                file: path.clone(),
+                line: 1,
+                rule: RULE,
+                message: format!(
+                    "section `{tag}` is written by a save path in this file but read by \
+                     no load/restore path here — resumed runs would drop it"
+                ),
+            });
+        }
+        for tag in read.difference(written) {
+            if decls.get(tag).map(|d| d.legacy).unwrap_or(false) {
+                continue;
+            }
+            out.push(Diagnostic {
+                file: path.clone(),
+                line: 1,
+                rule: RULE,
+                message: format!(
+                    "section `{tag}` is read by a load/restore path in this file but \
+                     written by no save path here (mark the declaration's doc comment \
+                     `legacy` if read-only rejection is intended)"
+                ),
+            });
+        }
+    }
+
+    for (tag, decl) in &decls {
+        let is_read = readers.contains_key(tag);
+        let is_written = writers.contains_key(tag);
+        if decl.legacy {
+            if is_written {
+                out.push(Diagnostic {
+                    file: decl_file.path.clone(),
+                    line: decl.line,
+                    rule: RULE,
+                    message: format!("legacy section `{tag}` must never be written, but a save path writes it"),
+                });
+            }
+            if !is_read {
+                out.push(Diagnostic {
+                    file: decl_file.path.clone(),
+                    line: decl.line,
+                    rule: RULE,
+                    message: format!("legacy section `{tag}` is read nowhere — dead tag, delete it"),
+                });
+            }
+        } else if !is_read || !is_written {
+            out.push(Diagnostic {
+                file: decl_file.path.clone(),
+                line: decl.line,
+                rule: RULE,
+                message: format!(
+                    "section `{tag}` is {} — every live tag needs both a writer and a reader",
+                    match (is_written, is_read) {
+                        (false, false) => "never written or read",
+                        (false, true) => "read but never written",
+                        (true, false) => "written but never read",
+                        _ => unreachable!(),
+                    }
+                ),
+            });
+        }
+    }
+    out
+}
+
+struct Decl {
+    line: usize,
+    legacy: bool,
+}
+
+/// `const SEC_<X>` declarations with their legacy marking (doc comment
+/// on or within [`DOC_WINDOW`] lines above containing "legacy").
+fn declared_tags(f: &SourceFile) -> BTreeMap<String, Decl> {
+    let mut out = BTreeMap::new();
+    for (idx, masked) in f.masked.iter().enumerate() {
+        if !is_decl_line(masked) {
+            continue;
+        }
+        let Some(tag) = tags_on_line(masked).into_iter().next() else { continue };
+        let lo = idx.saturating_sub(DOC_WINDOW);
+        let legacy = f.comments[lo..=idx].iter().any(|c| c.to_ascii_lowercase().contains("legacy"));
+        out.insert(tag, Decl { line: idx + 1, legacy });
+    }
+    out
+}
+
+fn is_decl_line(masked: &str) -> bool {
+    let t = masked.trim_start();
+    t.strip_prefix("pub ").unwrap_or(t).starts_with("const SEC_")
+}
+
+/// All `SEC_<IDENT>` identifiers on a masked line.
+fn tags_on_line(masked: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = masked[start..].find("SEC_") {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !(masked.as_bytes()[at - 1].is_ascii_alphanumeric()
+                || masked.as_bytes()[at - 1] == b'_');
+        let ident: String = masked[at..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        start = at + ident.len().max(4);
+        if before_ok && ident.len() > "SEC_".len() {
+            out.push(ident);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::SourceFile;
+
+    const DECLS: &str = "\
+/// Optimizer state.\n\
+pub const SEC_OPT: &[u8; 4] = b\"OPTS\";\n\
+/// Legacy fused-path section — recognized only to reject; never written.\n\
+pub const SEC_OLD: &[u8; 4] = b\"FUSD\";\n";
+
+    fn lint(decl_extra: &str, user: &str) -> Vec<Diagnostic> {
+        let decls = format!("{DECLS}{decl_extra}");
+        check(&[
+            SourceFile::parse("coordinator/checkpoint.rs", &decls),
+            SourceFile::parse("coordinator/trainer.rs", user),
+        ])
+    }
+
+    const SYMMETRIC: &str = "\
+fn save_checkpoint() { write(SEC_OPT); }\n\
+fn restore_checkpoint() { read(SEC_OPT); if has(SEC_OLD) { reject(); } }\n";
+
+    #[test]
+    fn symmetric_tree_is_clean() {
+        let d = lint("", SYMMETRIC);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn written_but_never_read_flagged() {
+        let d = lint("", "fn save_checkpoint() { write(SEC_OPT); }\nfn restore_checkpoint() { if has(SEC_OLD) { reject(); } }\n");
+        assert!(!d.is_empty());
+        assert!(d.iter().any(|x| x.message.contains("`SEC_OPT`") && x.message.contains("read by")), "{d:?}");
+    }
+
+    #[test]
+    fn read_but_never_written_flagged() {
+        let d = lint("", "fn save_checkpoint() { nothing(); }\nfn restore_checkpoint() { read(SEC_OPT); if has(SEC_OLD) { reject(); } }\n");
+        assert!(d.iter().any(|x| x.message.contains("`SEC_OPT`")), "{d:?}");
+    }
+
+    #[test]
+    fn legacy_tag_may_be_read_only_but_never_written() {
+        // SYMMETRIC already proves read-only SEC_OLD passes; writing it fails.
+        let d = lint("", "fn save_checkpoint() { write(SEC_OPT); write(SEC_OLD); }\nfn restore_checkpoint() { read(SEC_OPT); read(SEC_OLD); }\n");
+        assert!(d.iter().any(|x| x.message.contains("legacy section `SEC_OLD`")), "{d:?}");
+    }
+
+    #[test]
+    fn dead_tag_flagged() {
+        let d = lint("pub const SEC_DEAD: &[u8; 4] = b\"DEAD\";\n", SYMMETRIC);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("`SEC_DEAD`"));
+        assert!(d[0].message.contains("never written or read"));
+    }
+
+    #[test]
+    fn test_code_uses_ignored() {
+        let user = format!(
+            "{SYMMETRIC}#[cfg(test)]\nmod tests {{\n    #[test]\n    fn t() {{ roundtrip(SEC_OPT, SEC_OLD); }}\n}}\n"
+        );
+        let d = lint("", &user);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn no_decl_file_skips_pass() {
+        let files = [SourceFile::parse("x.rs", "fn save_x() { write(SEC_OPT); }")];
+        assert!(check(&files).is_empty());
+    }
+}

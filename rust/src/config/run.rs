@@ -309,6 +309,24 @@ impl RunConfig {
         )
     }
 
+    /// Fields deliberately *excluded* from `fingerprint()`, each with the
+    /// argument for why a resume across a change of that knob cannot
+    /// diverge from the uninterrupted trajectory. `galore lint`
+    /// (`fingerprint-covers-config`) enforces that every `RunConfig` and
+    /// `GaLoreConfig` field is either fingerprinted or listed here, so a
+    /// new knob cannot ship without a resume-semantics decision.
+    pub const FINGERPRINT_EXEMPT: &'static [(&'static str, &'static str)] = &[
+        ("eval_every", "observation cadence; eval reads weights, never advances the run RNG"),
+        ("eval_batches", "observation depth; same reason as eval_every"),
+        ("dp_transport", "thread and process rings run the identical collective sequence (pinned by the DP equivalence tests)"),
+        ("dp_bucket_mb", "bucketing changes overlap, not arithmetic; all-reduce sums are order-fixed per bucket layout and pinned bit-identical"),
+        ("checkpoint_every", "durability cadence only; saving is a pure read of run state"),
+        ("checkpoint_keep_last", "retention policy for finished artifacts"),
+        ("checkpoint_dir", "where checkpoints land, not what is in them"),
+        ("threads", "the parallel step is bit-identical at any pool width"),
+        ("artifact_dir", "where kernel artifacts are loaded from; the artifact hash, not its path, shapes the math"),
+    ];
+
     /// Reject configs that would fault at step time instead of panicking
     /// deep inside the optimizer (e.g. `update_freq == 0` divides by zero
     /// in `GaLore::step`). Called by `from_toml`, the CLI launcher, and

@@ -34,22 +34,32 @@ fn record(bytes: usize) {
     let _ = THREAD_ALLOC_BYTES.try_with(|c| c.set(c.get() + bytes as u64));
 }
 
+// SAFETY: every method delegates verbatim to `System` after a tally, so
+// the wrapper inherits `System`'s GlobalAlloc contract unchanged; the
+// tally itself touches only thread-local counters and cannot allocate,
+// unwind, or observe the pointers it passes through.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: same `layout` forwarded to `System.alloc`.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         record(layout.size());
         System.alloc(layout)
     }
 
+    // SAFETY: same `layout` forwarded to `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         record(layout.size());
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: `ptr`/`layout` pair forwarded untouched — the caller's
+    // obligations become `System.realloc`'s preconditions directly.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         record(new_size);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: `ptr` was produced by one of the methods above (all of
+    // which return `System` pointers), so handing it back is valid.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

@@ -164,8 +164,8 @@ impl Ring {
                 world: n,
                 // worker i sends on channel i (to i+1), receives on channel
                 // (i-1+n)%n (from i-1).
-                to_next: senders[i].take().unwrap(),
-                from_prev: receivers[(i + n - 1) % n].take().unwrap(),
+                to_next: senders[i].take().unwrap(), // PANIC-OK: slot i is Some — filled above, taken only here
+                from_prev: receivers[(i + n - 1) % n].take().unwrap(), // PANIC-OK: i -> (i-1+n)%n is a bijection, each slot taken once
             })
             .collect()
     }
@@ -318,8 +318,8 @@ pub fn local_socket_ring(world: usize) -> std::io::Result<Vec<SocketRing>> {
         .map(|r| SocketRing {
             rank: r,
             world,
-            next: nexts[r].take().unwrap(),
-            prev: prevs[r].take().unwrap(),
+            next: nexts[r].take().unwrap(), // PANIC-OK: pair loop fills every slot, each taken once
+            prev: prevs[r].take().unwrap(), // PANIC-OK: k -> (k+1)%world is a bijection over 0..world
         })
         .collect())
 }

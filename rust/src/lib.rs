@@ -27,6 +27,7 @@
 // readability without changing codegen here.
 #![allow(clippy::needless_range_loop)]
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -7,6 +7,7 @@
 //!   memory   — print the Fig. 1-style memory breakdown for a model/method
 //!   info     — list model configs and available artifacts
 //!   dp-smoke — exercise the multi-process DP socket ring without a trainer
+//!   lint     — run the in-tree invariant analyzer over rust/src (CI gate)
 //!
 //! `train --dp-transport process` and `dp-smoke` respawn this binary for
 //! worker ranks; a spawned worker is recognized by the rendezvous
@@ -51,9 +52,10 @@ fn run() -> Result<()> {
         "memory" => memory(&cli),
         "info" => info(&cli),
         "dp-smoke" => dp_smoke(&cli),
+        "lint" => lint(&cli),
         other => bail!(
             "unknown subcommand '{other}' \
-             (train | serve | client | memory | info | dp-smoke; try --help)"
+             (train | serve | client | memory | info | dp-smoke | lint; try --help)"
         ),
     }
 }
@@ -87,6 +89,8 @@ USAGE:
                 [--token-batch N]
   galore info   [--artifact-dir DIR]
   galore dp-smoke [--world N] [--steps N] [--die-rank R --die-step S]
+  galore lint   [PATH]   (default: rust/src; exits 1 with file:line
+                diagnostics on any invariant violation)
 
 METHODS: full-rank adamw adam8bit adafactor galore galore8bit
          galore-adafactor lora relora low-rank
@@ -142,8 +146,38 @@ status/pause/resume/cancel/list/shutdown. [serve] keys in a --config
 file set the same knobs. See EXPERIMENTS.md §Serve.
 
 Artifacts: --artifact-dir DIR (or GALORE_ARTIFACTS/GALORE_ARTIFACT_DIR)
-points the engine at an AOT artifact set other than ./artifacts."
+points the engine at an AOT artifact set other than ./artifacts.
+
+Lint: `galore lint` runs the in-tree invariant analyzer (SAFETY comments
+on unsafe sites, no unlisted panics on resident-process paths,
+fingerprint coverage of every config field, checkpoint-section
+symmetry) over rust/src and exits nonzero with file:line diagnostics on
+any violation. CI runs it as a gate. See EXPERIMENTS.md
+section 'Static analysis'."
     );
+}
+
+/// `lint`: the in-tree invariant analyzer (see `galore::analysis`).
+fn lint(cli: &Cli) -> Result<()> {
+    let root = cli.positional().get(1).map(std::path::PathBuf::from).unwrap_or_else(|| {
+        // Default to the source tree whether invoked from the repo root
+        // or from rust/.
+        let repo_root = std::path::PathBuf::from("rust/src");
+        if repo_root.is_dir() {
+            repo_root
+        } else {
+            std::path::PathBuf::from("src")
+        }
+    });
+    let diags = galore::analysis::run_lint(&root).map_err(|e| anyhow!(e))?;
+    if diags.is_empty() {
+        println!("lint: clean ({})", root.display());
+        return Ok(());
+    }
+    for d in &diags {
+        eprintln!("{d}");
+    }
+    bail!("lint: {} violation(s) under {}", diags.len(), root.display());
 }
 
 fn build_run_config(cli: &Cli) -> Result<RunConfig> {

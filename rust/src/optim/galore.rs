@@ -635,6 +635,19 @@ impl ParTask {
     /// bit-identical to the sequential path. Only sound to call while the
     /// submitting `step_many` is parked on the pool barrier.
     fn run(&self) {
+        // Debug-build aliasing sanitizer: declare every state object this
+        // task writes (the Matrix/StepScratch headers and the step
+        // counter — stable addresses for the whole task, unlike the heap
+        // buffers, which resize at refreshes). Two tasks handed the same
+        // parameter state panic here instead of racing. Free in release.
+        pool::sanitizer::claim_mut(self.w, 1);
+        pool::sanitizer::claim_mut(self.m, 1);
+        pool::sanitizer::claim_mut(self.v, 1);
+        pool::sanitizer::claim_mut(self.upd, 1);
+        pool::sanitizer::claim_mut(self.t, 1);
+        if !self.scratch.is_null() {
+            pool::sanitizer::claim_mut(self.scratch, 1);
+        }
         // SAFETY: see the struct docs — exclusive, disjoint, live for the
         // duration of the barrier this runs under.
         unsafe {
@@ -933,7 +946,18 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
             // the moments explicitly only when the rank — and therefore
             // the compact shape — changed.
         }
-        let proj = self.projectors.get(&param).expect("projector exists after refresh");
+        let proj = match self.projectors.get(&param) {
+            Some(p) => p,
+            None => {
+                // Impossible by construction (the refresh above inserts
+                // it), but a resident process must degrade to a failed
+                // step — with the standard counter rollback — not abort.
+                if let Some(t) = self.steps.get_mut(&param) {
+                    *t -= 1;
+                }
+                return Err(format!("step: parameter {param} has no projector after refresh"));
+            }
+        };
         let lr_scale = lr * self.cfg.scale;
         let res = if compact_ready {
             // The gate's cosine projection IS this step's compact gradient:
@@ -1051,17 +1075,28 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                     t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&idx);
                 if !boundary {
                     let (rows, cols) = grad.shape();
-                    let (cm, cn) = self
-                        .projectors
-                        .get(&idx)
-                        .map(|p| p.compact_shape(rows, cols))
-                        .expect("steady target has a projector");
+                    // `boundary` checked `contains_key`, so the lookups
+                    // below cannot miss; if they ever do, fail the batch
+                    // through `first_err` like any inline step failure.
+                    let Some((cm, cn)) =
+                        self.projectors.get(&idx).map(|p| p.compact_shape(rows, cols))
+                    else {
+                        first_err =
+                            Some(format!("step_many: steady target {idx} lost its projector"));
+                        break;
+                    };
                     let queued = matches!(
                         self.inner.moments_mut(idx, cm, cn),
                         Some(mom) if mom.m.shape() == (cm, cn) && mom.v.shape() == (cm, cn)
                     );
                     if queued {
-                        *self.steps.get_mut(&idx).expect("steady target has a step count") += 1;
+                        let Some(t) = self.steps.get_mut(&idx) else {
+                            first_err = Some(format!(
+                                "step_many: steady target {idx} lost its step count"
+                            ));
+                            break;
+                        };
+                        *t += 1;
                         self.workspaces.entry(idx).or_insert_with(Workspace::new);
                         self.par_plan.push((idx, ParKind::Targeted));
                         continue;
@@ -1091,15 +1126,26 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
             let grad = &grads[idx];
             let (rows, cols) = grad.shape();
             if kind == ParKind::Targeted {
-                let proj = self.projectors.get(&idx).expect("queued target has a projector");
+                // Pass A created every entry captured here, so these
+                // lookups are infallible; propagate rather than abort if
+                // that invariant is ever broken.
+                let proj = self
+                    .projectors
+                    .get(&idx)
+                    .ok_or_else(|| format!("step_many: queued target {idx} has no projector"))?;
                 let (cm, cn) = proj.compact_shape(rows, cols);
                 let proj: *const Projector = proj;
                 let scratch: *mut StepScratch = {
-                    let ws = self.workspaces.get_mut(&idx).expect("queued target has a workspace");
+                    let ws = self
+                        .workspaces
+                        .get_mut(&idx)
+                        .ok_or_else(|| format!("step_many: queued target {idx} has no workspace"))?;
                     &mut ws.step
                 };
-                let mom =
-                    self.inner.moments_mut(idx, cm, cn).expect("queued target exposes moments");
+                let mom = self
+                    .inner
+                    .moments_mut(idx, cm, cn)
+                    .ok_or_else(|| format!("step_many: queued target {idx} exposes no moments"))?;
                 self.par_tasks.push(ParTask {
                     w: &mut weights[idx],
                     grad,
@@ -1116,7 +1162,7 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                 let mom = self
                     .inner
                     .moments_mut(idx, rows, cols)
-                    .expect("queued parameter exposes moments");
+                    .ok_or_else(|| format!("step_many: queued parameter {idx} exposes no moments"))?;
                 self.par_tasks.push(ParTask {
                     w: &mut weights[idx],
                     grad,
@@ -1235,7 +1281,21 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
         }
         *t += 1;
         let ws = self.workspaces.entry(param).or_insert_with(Workspace::new);
-        let proj = self.projectors.get(&param).expect("projector exists between refreshes");
+        let proj = match self.projectors.get(&param) {
+            Some(p) => p,
+            None => {
+                // `steps` has an off-boundary count for `param` (checked
+                // above), so the projector must exist — but if it ever
+                // does not, fail the step with the standard counter
+                // rollback instead of aborting the process.
+                if let Some(t) = self.steps.get_mut(&param) {
+                    *t -= 1;
+                }
+                return Err(format!(
+                    "step_compact: parameter {param} has no projector between refreshes"
+                ));
+            }
+        };
         let res = self.backend.step_compact_into(
             StepCtx {
                 param,
@@ -1324,10 +1384,13 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                             Some(mom) if mom.m.shape() == (cm, cn) && mom.v.shape() == (cm, cn)
                         );
                         if queued {
-                            *self
-                                .steps
-                                .get_mut(&param)
-                                .expect("steady target has a step count") += 1;
+                            let Some(t) = self.steps.get_mut(&param) else {
+                                first_err = Some(format!(
+                                    "step_planned: steady target {param} lost its step count"
+                                ));
+                                break;
+                            };
+                            *t += 1;
                             self.workspaces.entry(param).or_insert_with(Workspace::new);
                             self.par_plan.push((i, ParKind::PreProjected));
                             continue;
@@ -1351,20 +1414,30 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                             t % self.cfg.update_freq == 0 || !self.projectors.contains_key(&param);
                         if !boundary {
                             let (rows, cols) = grad.shape();
-                            let (cm, cn) = self
+                            // `boundary` checked `contains_key`; a miss
+                            // here fails the batch via `first_err`.
+                            let Some((cm, cn)) = self
                                 .projectors
                                 .get(&param)
                                 .map(|p| p.compact_shape(rows, cols))
-                                .expect("steady target has a projector");
+                            else {
+                                first_err = Some(format!(
+                                    "step_planned: steady target {param} lost its projector"
+                                ));
+                                break;
+                            };
                             let queued = matches!(
                                 self.inner.moments_mut(param, cm, cn),
                                 Some(mom) if mom.m.shape() == (cm, cn) && mom.v.shape() == (cm, cn)
                             );
                             if queued {
-                                *self
-                                    .steps
-                                    .get_mut(&param)
-                                    .expect("steady target has a step count") += 1;
+                                let Some(t) = self.steps.get_mut(&param) else {
+                                    first_err = Some(format!(
+                                        "step_planned: steady target {param} lost its step count"
+                                    ));
+                                    break;
+                                };
+                                *t += 1;
                                 self.workspaces.entry(param).or_insert_with(Workspace::new);
                                 self.par_plan.push((i, ParKind::Targeted));
                                 continue;
@@ -1388,28 +1461,29 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                 }
             }
         }
-        // Pass B: capture pointers. All map entries exist; nothing below
-        // inserts, so the addresses stay stable until the barrier.
+        // Pass B: capture pointers. All map entries exist (pass A created
+        // them, and nothing below inserts, so the addresses stay stable
+        // until the barrier); a miss is propagated, never an abort.
         self.par_tasks.clear();
         for &(i, kind) in &self.par_plan {
             let param = base + i;
             match kind {
                 ParKind::PreProjected => {
-                    let proj: *const Projector =
-                        self.projectors.get(&param).expect("queued target has a projector");
+                    let proj: *const Projector = self
+                        .projectors
+                        .get(&param)
+                        .ok_or_else(|| format!("step_planned: queued target {param} has no projector"))?;
                     let scratch: *mut StepScratch = {
-                        let ws = self
-                            .workspaces
-                            .get_mut(&param)
-                            .expect("queued target has a workspace");
+                        let ws = self.workspaces.get_mut(&param).ok_or_else(|| {
+                            format!("step_planned: queued target {param} has no workspace")
+                        })?;
                         &mut ws.step
                     };
                     let c = &compact[i];
                     let (cm, cn) = c.shape();
-                    let mom = self
-                        .inner
-                        .moments_mut(param, cm, cn)
-                        .expect("queued target exposes moments");
+                    let mom = self.inner.moments_mut(param, cm, cn).ok_or_else(|| {
+                        format!("step_planned: queued target {param} exposes no moments")
+                    })?;
                     self.par_tasks.push(ParTask {
                         w: &mut weights[i],
                         grad: c,
@@ -1426,21 +1500,21 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                 ParKind::Targeted => {
                     let grad = &grads[i];
                     let (rows, cols) = grad.shape();
-                    let proj =
-                        self.projectors.get(&param).expect("queued target has a projector");
+                    let proj = self
+                        .projectors
+                        .get(&param)
+                        .ok_or_else(|| format!("step_planned: queued target {param} has no projector"))?;
                     let (cm, cn) = proj.compact_shape(rows, cols);
                     let proj: *const Projector = proj;
                     let scratch: *mut StepScratch = {
-                        let ws = self
-                            .workspaces
-                            .get_mut(&param)
-                            .expect("queued target has a workspace");
+                        let ws = self.workspaces.get_mut(&param).ok_or_else(|| {
+                            format!("step_planned: queued target {param} has no workspace")
+                        })?;
                         &mut ws.step
                     };
-                    let mom = self
-                        .inner
-                        .moments_mut(param, cm, cn)
-                        .expect("queued target exposes moments");
+                    let mom = self.inner.moments_mut(param, cm, cn).ok_or_else(|| {
+                        format!("step_planned: queued target {param} exposes no moments")
+                    })?;
                     self.par_tasks.push(ParTask {
                         w: &mut weights[i],
                         grad,
@@ -1457,10 +1531,9 @@ impl<O: Optimizer> Optimizer for GaLore<O> {
                 ParKind::FullRank => {
                     let grad = &grads[i];
                     let (rows, cols) = grad.shape();
-                    let mom = self
-                        .inner
-                        .moments_mut(param, rows, cols)
-                        .expect("queued parameter exposes moments");
+                    let mom = self.inner.moments_mut(param, rows, cols).ok_or_else(|| {
+                        format!("step_planned: queued parameter {param} exposes no moments")
+                    })?;
                     self.par_tasks.push(ParTask {
                         w: &mut weights[i],
                         grad,

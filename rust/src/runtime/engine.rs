@@ -54,10 +54,9 @@ impl InputStage {
         // SAFETY: the Vec is empty, so no existing value is reinterpreted;
         // `Vec<Input<'static>>` and `Vec<Input<'a>>` have identical layout
         // (lifetimes are erased at runtime). Values pushed through the
-        // guard borrow data for `'a`, and the `&'a mut self` receiver
-        // keeps the stage inaccessible until the guard ends — whose
-        // `Drop` clears the stored borrows before they can dangle, even
-        // when the call between `begin` and the drop errors or unwinds.
+        // guard borrow data for `'a`; the `&'a mut self` receiver keeps
+        // the stage inaccessible until the guard's `Drop` clears the
+        // stored borrows — even when the engine call errors or unwinds.
         let bufs = unsafe {
             std::mem::transmute::<&mut Vec<Input<'static>>, &mut Vec<Input<'a>>>(&mut self.bufs)
         };
@@ -195,7 +194,7 @@ impl Engine {
     /// Execute an artifact with host inputs; returns its outputs in order.
     pub fn execute(&mut self, name: &str, inputs: &[Input]) -> Result<Vec<Output>> {
         self.prepare(name)?;
-        let meta = self.manifest.by_name(name).unwrap().clone();
+        let meta = self.meta(name)?.clone();
         if inputs.len() != meta.inputs.len() {
             bail!("{name}: got {} inputs, artifact takes {}", inputs.len(), meta.inputs.len());
         }
@@ -225,7 +224,11 @@ impl Engine {
             };
             buffers.push(buf);
         }
-        let exe = self.lock_cache().get(name).cloned().expect("prepared above");
+        let exe = self
+            .lock_cache()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("artifact '{name}' missing from executable cache after prepare"))?;
         let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
         self.exec_calls += 1;
         let tuple = result[0][0].to_literal_sync()?;

@@ -50,9 +50,159 @@
 //! sweep 1/2/N threads in one process). One job runs at a time —
 //! concurrent submitters queue on the job slot, which is exactly the
 //! serialization the scoped-thread version had.
+//!
+//! Debug builds additionally run the [`sanitizer`]: tasks declare the
+//! byte ranges they write (`sanitizer::claim_mut`) and the pool panics
+//! if two tasks of one job claim overlapping ranges — the "tasks write
+//! disjoint data" contract of `run` as an executed assertion instead of
+//! a comment. Release builds compile the claims to nothing.
 
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+/// Debug-build aliasing sanitizer for pool jobs.
+///
+/// `Pool::run`'s soundness rests on every task writing disjoint data —
+/// the contract behind [`SendPtr`] and the cross-layer parallel
+/// optimizer step's per-parameter raw pointers. This module turns that
+/// contract into an executed check: inside a task, call
+/// [`sanitizer::claim_mut`] for each region the task writes; the claim
+/// is recorded against the task's index and compared with every claim
+/// made by *other* tasks of the same job, and any overlap panics with
+/// both ranges named (the pool's normal panic relay carries it to the
+/// submitter). Bookkeeping rules:
+///
+/// * Claims are per job: the registry is cleared when a job starts.
+///   Parallel jobs are serialized by the single job slot, so one global
+///   registry suffices; top-level *inline* jobs (1 task or a 1-thread
+///   pool) use a thread-local registry so unrelated threads running
+///   inline jobs concurrently cannot cross-talk.
+/// * Only claims made directly inside a top-level task count. A nested
+///   inline `run` (say a threaded matmul issued from inside an optimizer
+///   task) operates on sub-ranges of state its enclosing task already
+///   claimed; recording those would self-collide, so claims at task
+///   depth > 1 are ignored.
+///
+/// In release builds `claim_mut` is an empty `#[inline(always)]` stub —
+/// the hot path pays nothing.
+#[cfg(debug_assertions)]
+pub mod sanitizer {
+    use std::cell::{Cell, RefCell};
+    use std::sync::Mutex;
+
+    #[derive(Clone, Copy)]
+    struct Claim {
+        task: usize,
+        start: usize,
+        end: usize,
+    }
+
+    /// Claims of the in-flight parallel job (one at a time process-wide:
+    /// the job slot serializes submitters).
+    static PARALLEL: Mutex<Vec<Claim>> = Mutex::new(Vec::new());
+
+    thread_local! {
+        /// Claims of this thread's current top-level inline job.
+        static INLINE: RefCell<Vec<Claim>> = const { RefCell::new(Vec::new()) };
+        /// 0 outside any task, 1 inside a top-level task, >1 inside a
+        /// task of a nested inline job.
+        static TASK_DEPTH: Cell<usize> = const { Cell::new(0) };
+        /// (task index, is-parallel-job) of the enclosing top-level task.
+        static CURRENT: Cell<(usize, bool)> = const { Cell::new((0, false)) };
+    }
+
+    /// Called by the submitter once the job slot is acquired (so no other
+    /// parallel job's claims can still be in flight).
+    pub(super) fn begin_parallel_job() {
+        PARALLEL.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clear();
+    }
+
+    /// Called before an inline job's task loop. Only a *top-level* inline
+    /// job (not a nested `run` inside a task) owns the thread-local
+    /// registry.
+    pub(super) fn begin_inline_job() {
+        if TASK_DEPTH.with(|d| d.get()) == 0 {
+            INLINE.with(|r| r.borrow_mut().clear());
+        }
+    }
+
+    /// RAII marker for one task invocation; claims are attributed to the
+    /// innermost *top-level* task. Dropped during unwinding too, so a
+    /// panicking task leaves the depth consistent.
+    pub(super) struct TaskScope;
+
+    impl TaskScope {
+        pub(super) fn enter(task: usize, parallel: bool) -> TaskScope {
+            let depth = TASK_DEPTH.with(|d| {
+                let v = d.get();
+                d.set(v + 1);
+                v
+            });
+            if depth == 0 {
+                CURRENT.with(|c| c.set((task, parallel)));
+            }
+            TaskScope
+        }
+    }
+
+    impl Drop for TaskScope {
+        fn drop(&mut self) {
+            TASK_DEPTH.with(|d| d.set(d.get() - 1));
+        }
+    }
+
+    /// Declare that the current task writes `len` elements starting at
+    /// `ptr`. Panics if the byte range overlaps a range claimed by a
+    /// different task of the same job. No-op outside a top-level task
+    /// (claims from nested inline jobs cover state the enclosing task
+    /// already claimed) and in release builds.
+    pub fn claim_mut<T>(ptr: *const T, len: usize) {
+        if len == 0 || TASK_DEPTH.with(|d| d.get()) != 1 {
+            return;
+        }
+        let (task, parallel) = CURRENT.with(|c| c.get());
+        let start = ptr as usize;
+        let end = start + len * std::mem::size_of::<T>();
+        let check_and_push = |claims: &mut Vec<Claim>| {
+            for c in claims.iter() {
+                if c.task != task && start < c.end && c.start < end {
+                    // PANIC-OK: the sanitizer's entire purpose — an
+                    // aliasing bug must stop the debug run at the claim,
+                    // not corrupt state silently. Debug builds only.
+                    panic!(
+                        "pool sanitizer: task {task} claims bytes {start:#x}..{end:#x} \
+                         overlapping task {}'s claim {:#x}..{:#x} — tasks of one job \
+                         must write disjoint state",
+                        c.task, c.start, c.end
+                    );
+                }
+            }
+            claims.push(Claim { task, start, end });
+        };
+        if parallel {
+            let mut g = PARALLEL.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            check_and_push(&mut g);
+        } else {
+            INLINE.with(|r| check_and_push(&mut r.borrow_mut()));
+        }
+    }
+}
+
+/// Release-build stub of the aliasing sanitizer: claims cost nothing.
+#[cfg(not(debug_assertions))]
+pub mod sanitizer {
+    pub(super) fn begin_parallel_job() {}
+    pub(super) fn begin_inline_job() {}
+    pub(super) struct TaskScope;
+    impl TaskScope {
+        pub(super) fn enter(_task: usize, _parallel: bool) -> TaskScope {
+            TaskScope
+        }
+    }
+    /// See the debug-build documentation; compiles to nothing here.
+    #[inline(always)]
+    pub fn claim_mut<T>(_ptr: *const T, _len: usize) {}
+}
 
 /// The single job slot plus pool lifecycle flags, all under one mutex.
 struct JobState {
@@ -110,6 +260,10 @@ unsafe fn call_as<F: Fn(usize) + Sync>(data: *const (), i: usize) {
     unsafe { (*(data as *const F))(i) }
 }
 
+/// SAFETY: never dereferences its argument — it exists so the idle job
+/// slot holds a valid `unsafe fn` pointer instead of a dangling one, and
+/// unconditionally aborts the task if reached (workers only load the
+/// slot for claims made while a job is active, so it never is).
 unsafe fn call_never(_: *const (), _: usize) {
     unreachable!("pool job invoked with no active closure")
 }
@@ -154,8 +308,10 @@ fn worker_loop(inner: Arc<Inner>) {
             // the submitter is still parked in `run` and `data` is live.
             // The catch_unwind keeps a panicking task from killing this
             // worker (and from unwinding past the borrowed closure).
-            let res =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe { call(data, i) }));
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _task = sanitizer::TaskScope::enter(i, true);
+                unsafe { call(data, i) }
+            }));
             st = lock_recover(&inner.state);
             if let Err(payload) = res {
                 record_panic(&mut st, payload);
@@ -199,6 +355,10 @@ impl Pool {
                 std::thread::Builder::new()
                     .name(format!("galore-pool-{i}"))
                     .spawn(move || worker_loop(inner))
+                    // PANIC-OK: pool construction happens at process/run
+                    // startup (or an explicit `configure`), before any
+                    // job state exists to lose; a host that cannot spawn
+                    // threads cannot train.
                     .expect("spawning pool worker")
             })
             .collect();
@@ -221,7 +381,9 @@ impl Pool {
     /// usable, exactly like a scoped-thread join.
     pub fn run<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
         if n_tasks <= 1 || self.threads <= 1 || IN_POOL.with(|g| g.get()) {
+            sanitizer::begin_inline_job();
             for i in 0..n_tasks {
+                let _task = sanitizer::TaskScope::enter(i, false);
                 f(i);
             }
             return;
@@ -234,6 +396,9 @@ impl Pool {
         while st.active {
             st = wait_recover(&inner.done_cv, st);
         }
+        // Slot acquired: the previous parallel job fully drained, so its
+        // sanitizer claims can be discarded.
+        sanitizer::begin_parallel_job();
         st.data = &f as *const F as *const ();
         st.call = call_as::<F>;
         st.n_tasks = n_tasks;
@@ -251,7 +416,10 @@ impl Pool {
                 let i = st.next;
                 st.next += 1;
                 drop(st);
-                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let _task = sanitizer::TaskScope::enter(i, true);
+                    f(i)
+                }));
                 st = lock_recover(&inner.state);
                 if let Err(payload) = res {
                     record_panic(&mut st, payload);
@@ -486,6 +654,124 @@ mod tests {
             total.fetch_add(i, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 45);
+    }
+
+    /// The debug aliasing sanitizer: overlapping claims from different
+    /// tasks of one job must panic, in both the parallel and the inline
+    /// dispatch paths; disjoint, nested, and cross-job claims must not.
+    #[cfg(debug_assertions)]
+    mod sanitizer_checks {
+        use super::super::{sanitizer, Pool, SendPtr};
+
+        fn catches_overlap(pool: &Pool, n_tasks: usize) -> bool {
+            let mut buf = vec![0f32; 64];
+            let base = SendPtr(buf.as_mut_ptr());
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(n_tasks, move |_| {
+                    // Every task claims the SAME range: a deliberate
+                    // violation of the disjointness contract.
+                    sanitizer::claim_mut(base.0, 64);
+                });
+            }));
+            match r {
+                Ok(()) => false,
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .unwrap_or_else(|| p.downcast_ref::<&str>().unwrap_or(&"").to_string());
+                    assert!(msg.contains("pool sanitizer"), "unexpected panic: {msg}");
+                    true
+                }
+            }
+        }
+
+        #[test]
+        fn overlapping_tasks_are_caught_parallel() {
+            let pool = Pool::new(4);
+            assert!(catches_overlap(&pool, 8));
+            // ...and the pool survives the sanitizer panic like any other.
+            let total = std::sync::atomic::AtomicUsize::new(0);
+            pool.run(4, |i| {
+                total.fetch_add(i, std::sync::atomic::Ordering::Relaxed);
+            });
+            assert_eq!(total.load(std::sync::atomic::Ordering::Relaxed), 6);
+        }
+
+        #[test]
+        fn overlapping_tasks_are_caught_inline() {
+            // threads = 1: every job runs inline on the submitter, where
+            // the thread-local registry does the checking.
+            let pool = Pool::new(1);
+            assert!(catches_overlap(&pool, 3));
+        }
+
+        #[test]
+        fn disjoint_claims_pass() {
+            for threads in [1usize, 2, 4] {
+                let pool = Pool::new(threads);
+                let mut buf = vec![0f32; 64];
+                let base = SendPtr(buf.as_mut_ptr());
+                pool.run(4, move |t| {
+                    sanitizer::claim_mut(unsafe { base.0.add(16 * t) }, 16);
+                    // SAFETY: 16-element chunks at disjoint offsets.
+                    let dst = unsafe { std::slice::from_raw_parts_mut(base.0.add(16 * t), 16) };
+                    dst.fill(t as f32);
+                });
+            }
+        }
+
+        #[test]
+        fn nested_inline_claims_are_ignored() {
+            // A task claims its whole range, then a nested run's tasks
+            // touch sub-ranges of it (the threaded-matmul-inside-
+            // optimizer-step shape). The nested claims must not
+            // self-collide with the enclosing task's claim.
+            let pool = Pool::new(2);
+            let mut buf = vec![0f32; 32];
+            let base = SendPtr(buf.as_mut_ptr());
+            pool.run(2, |t| {
+                // SAFETY: in-bounds offset — 16-element chunks of a
+                // 32-element buffer for t in {0, 1}.
+                sanitizer::claim_mut(unsafe { base.0.add(16 * t) }, 16);
+                pool.run(4, |c| {
+                    sanitizer::claim_mut(unsafe { base.0.add(16 * t + 4 * c) }, 4);
+                    // SAFETY: disjoint 4-element sub-chunks of this
+                    // task's 16-element region.
+                    let dst =
+                        unsafe { std::slice::from_raw_parts_mut(base.0.add(16 * t + 4 * c), 4) };
+                    dst.fill((t * 4 + c) as f32);
+                });
+            });
+        }
+
+        #[test]
+        fn claims_reset_between_jobs() {
+            // Task 0 of job A and task 1 of job B may touch the same
+            // range: the registry is per job, not per pool lifetime.
+            for threads in [1usize, 4] {
+                let pool = Pool::new(threads);
+                let mut buf = vec![0f32; 8];
+                let base = SendPtr(buf.as_mut_ptr());
+                pool.run(2, move |t| {
+                    if t == 0 {
+                        sanitizer::claim_mut(base.0, 8);
+                    }
+                });
+                pool.run(2, move |t| {
+                    if t == 1 {
+                        sanitizer::claim_mut(base.0, 8);
+                    }
+                });
+            }
+        }
+
+        #[test]
+        fn claims_outside_any_task_are_ignored() {
+            let x = 7u64;
+            sanitizer::claim_mut(&x, 1);
+            sanitizer::claim_mut(&x, 1);
+        }
     }
 
     #[test]

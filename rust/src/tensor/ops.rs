@@ -92,6 +92,7 @@ fn par_rows(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
         // SAFETY: row ranges are disjoint across tasks and `c` outlives
         // the pool's join barrier.
         let cchunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), (i1 - i0) * n) };
+        pool::sanitizer::claim_mut(cchunk.as_ptr(), cchunk.len());
         matmul_rows(a, b, cchunk, i0, i1, k, n);
     });
 }
@@ -128,6 +129,7 @@ pub fn matmul_at_b_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
             // SAFETY: disjoint row ranges; `c` outlives the join barrier.
             let cchunk =
                 unsafe { std::slice::from_raw_parts_mut(base.0.add(j0 * n), (j1 - j0) * n) };
+            pool::sanitizer::claim_mut(cchunk.as_ptr(), cchunk.len());
             at_b_rows(ad, bd, cchunk, j0, j1, k, n, m);
         });
     }
@@ -228,6 +230,7 @@ pub fn matmul_a_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
             // SAFETY: disjoint row ranges; `c` outlives the join barrier.
             let cchunk =
                 unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), (i1 - i0) * n) };
+            pool::sanitizer::claim_mut(cchunk.as_ptr(), cchunk.len());
             kernel(cchunk, i0, i1);
         });
     }

@@ -1,0 +1,120 @@
+//! Properties of the `galore lint` analyzer (EXPERIMENTS.md §Static
+//! analysis): each pass flags its fixture violation with a file:line
+//! diagnostic, the analyzer is clean on this repository's own source
+//! tree (the self-check CI gates on), and the debug-build pool sanitizer
+//! catches an intentionally overlapping batch through the public API.
+
+use galore::analysis::{fingerprint, lint_sources, panics, run_lint, safety, sections};
+
+fn lint_one(path: &str, src: &str) -> Vec<galore::analysis::Diagnostic> {
+    lint_sources(&[(path.to_string(), src.to_string())])
+}
+
+// -- the self-check: this tree lints clean ---------------------------------
+
+#[test]
+fn prop_lint_is_clean_on_this_tree() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let diags = run_lint(&root).expect("lint walks the source tree");
+    assert!(
+        diags.is_empty(),
+        "`galore lint` must be clean on its own tree:\n{}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+// -- per-pass fixture violations -------------------------------------------
+
+#[test]
+fn prop_undocumented_unsafe_is_flagged_with_location() {
+    let d = lint_one("tensor/fix.rs", "fn f(p: *mut f32) {\n    let s = unsafe { std::slice::from_raw_parts_mut(p, 4) };\n    s[0] = 1.0;\n}\n");
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!((d[0].rule, d[0].line), (safety::RULE, 2));
+    assert_eq!(d[0].to_string().split(' ').next(), Some("tensor/fix.rs:2"));
+}
+
+#[test]
+fn prop_hot_path_unwrap_is_flagged_and_panic_ok_allowlists() {
+    let bare = "fn f() {\n    let v = maybe().unwrap();\n    use_it(v);\n}\n";
+    let d = lint_one("coordinator/fix.rs", bare);
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!((d[0].rule, d[0].line), (panics::RULE, 2));
+
+    let justified = bare.replace(
+        "let v = maybe().unwrap();",
+        "// PANIC-OK: populated unconditionally two lines above\n    let v = maybe().unwrap();",
+    );
+    assert!(lint_one("coordinator/fix.rs", &justified).is_empty());
+    // The same code outside the scoped directories is not the lint's
+    // business.
+    assert!(lint_one("tensor/fix.rs", bare).is_empty());
+}
+
+#[test]
+fn prop_unfingerprinted_config_field_is_flagged() {
+    let src = "\
+pub struct RunConfig {
+    pub steps: usize,
+    pub new_knob: bool,
+}
+
+pub const FINGERPRINT_EXEMPT: &[(&str, &str)] = &[];
+
+impl RunConfig {
+    pub fn fingerprint(&self) -> String {
+        format!(\"steps={}\", self.steps)
+    }
+}
+";
+    let d = lint_one("config/run.rs", src);
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].rule, fingerprint::RULE);
+    assert!(d[0].message.contains("new_knob"));
+    assert_eq!(d[0].line, 3, "diagnostic anchors to the field's declaration line");
+}
+
+#[test]
+fn prop_asymmetric_checkpoint_section_is_flagged() {
+    let decls = "/// Optimizer state.\npub const SEC_OPT: &[u8; 4] = b\"OPTS\";\n";
+    let user = "fn save_checkpoint() { write(SEC_OPT); }\nfn restore_checkpoint() { nothing(); }\n";
+    let d = lint_sources(&[
+        ("coordinator/checkpoint.rs".to_string(), decls.to_string()),
+        ("coordinator/trainer.rs".to_string(), user.to_string()),
+    ]);
+    assert!(!d.is_empty());
+    assert!(d.iter().all(|x| x.rule == sections::RULE), "{d:?}");
+    assert!(d.iter().any(|x| x.message.contains("SEC_OPT")), "{d:?}");
+}
+
+// -- the dynamic half: debug-build aliasing sanitizer ----------------------
+
+/// An intentionally overlapping batch — every task claims the same
+/// range — must die with the sanitizer's message in debug builds, via
+/// the same public `pool` API the optimizer uses.
+#[cfg(debug_assertions)]
+#[test]
+fn prop_debug_sanitizer_catches_overlapping_batch() {
+    use galore::runtime::pool;
+
+    let pool = pool::Pool::new(2);
+    let mut buf = vec![0f32; 64];
+    let base = buf.as_mut_ptr() as usize;
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(4, |_t| {
+            pool::sanitizer::claim_mut(base as *const f32, 64);
+        });
+    }));
+    let payload = caught.expect_err("overlapping claims must panic in debug builds");
+    let msg = payload
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| payload.downcast_ref::<&str>().copied())
+        .unwrap_or("");
+    assert!(msg.contains("pool sanitizer"), "unexpected panic payload: {msg}");
+
+    // Disjoint claims on the same pool still pass: the registry reset
+    // its state, and the pool survived the contained panic.
+    pool.run(4, |t| {
+        pool::sanitizer::claim_mut((base + 16 * 4 * t) as *const f32, 16);
+    });
+}
