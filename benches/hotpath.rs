@@ -7,7 +7,7 @@ use galore::bench::{bench, report};
 use galore::coordinator::{thread_alloc_stats, Ring};
 use galore::linalg::{top_r_left_subspace, top_r_left_subspace_into, SvdWorkspace};
 use galore::model::{init_params, ModelConfig, WeightPrecision};
-use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer, Projector};
+use galore::optim::{Adam, AdamConfig, GaLore, GaLoreConfig, Optimizer, Projector, ProjectorQuant};
 use galore::quant::{dequantize, quantize, DynQuantBuf};
 use galore::rng::Rng;
 use galore::runtime::{default_dir, pool, Engine, Input};
@@ -239,6 +239,37 @@ fn main() -> anyhow::Result<()> {
         );
         report(&bench("bf16 commit (nano, round through store)", || {
             params.commit();
+        }));
+        params.seed_rounding(0);
+        params.set_precision(WeightPrecision::Int8);
+        println!(
+            "int8 weight store (nano): {} -> {} bytes",
+            f32_bytes,
+            params.weight_store_bytes()
+        );
+        report(&bench("int8 commit (nano, stochastic round through store)", || {
+            params.commit();
+        }));
+    }
+    {
+        // Int4 packed projectors: the quantize/dequantize pair rides every
+        // step (project down, project back), so the packed path must stay
+        // within noise of the f32 store's step cost.
+        let mut w4 = Matrix::randn(512, 1376, 0.02, &mut rng);
+        let grad4 = Matrix::randn(512, 1376, 0.02, &mut rng);
+        let mut gal4 = GaLore::new(
+            GaLoreConfig {
+                rank: 128,
+                update_freq: 10_000,
+                scale: 0.25,
+                projector_quant: ProjectorQuant::Int4,
+                ..Default::default()
+            },
+            Adam::new(AdamConfig::default()),
+        );
+        gal4.step(0, &mut w4, &grad4, 1e-4).unwrap(); // refresh outside timing
+        report(&bench("GaLore-Adam step 512x1376 r=128 (int4 projector)", || {
+            gal4.step(0, &mut w4, &grad4, 1e-4).unwrap();
         }));
     }
 

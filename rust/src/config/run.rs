@@ -445,7 +445,7 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("", "weight_precision") {
             cfg.weight_precision = WeightPrecision::parse(v)
-                .ok_or_else(|| format!("unknown weight_precision '{v}' (f32|bf16)"))?;
+                .ok_or_else(|| format!("unknown weight_precision '{v}' (f32|bf16|int8)"))?;
         }
         if let Some(v) = doc.get_parse("", "threads") {
             cfg.threads = v;
@@ -469,7 +469,7 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("galore", "projector_quant") {
             cfg.galore.projector_quant = ProjectorQuant::parse(v).ok_or_else(|| {
-                format!("unknown galore.projector_quant '{v}' (f32|block8|dyn8)")
+                format!("unknown galore.projector_quant '{v}' (f32|block8|dyn8|int4)")
             })?;
         }
         if let Some(v) = doc.get("galore", "rank_schedule") {
@@ -912,17 +912,37 @@ mod tests {
         assert_eq!(base.threads, 0);
         let bad = TomlDoc::parse("model = \"nano\"\nweight_precision = \"fp8\"\n").unwrap();
         assert!(RunConfig::from_toml(&bad).unwrap_err().contains("weight_precision"));
+        // The Q-GaLore low-precision pair parses from TOML.
+        let low = TomlDoc::parse(
+            "model = \"nano\"\nmethod = \"galore\"\nweight_precision = \"int8\"\n\
+             [galore]\nprojector_quant = \"int4\"\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&low).unwrap();
+        assert_eq!(cfg.weight_precision, WeightPrecision::Int8);
+        assert_eq!(cfg.galore.projector_quant, ProjectorQuant::Int4);
     }
 
     #[test]
     fn weight_precision_fingerprints_threads_do_not() {
-        // bf16 rounds the weights every step (trajectory-shaping); the
+        // bf16/int8 round the weights every step (trajectory-shaping); the
         // pool width is bit-exact by design and must NOT pin a resume.
         let base = RunConfig::new(ModelConfig::by_name("nano").unwrap(), MethodKind::GaLore);
         let fp = base.fingerprint();
         let mut bf16 = base.clone();
         bf16.weight_precision = WeightPrecision::Bf16;
         assert_ne!(fp, bf16.fingerprint());
+        let mut int8 = base.clone();
+        int8.weight_precision = WeightPrecision::Int8;
+        assert_ne!(fp, int8.fingerprint());
+        assert_ne!(bf16.fingerprint(), int8.fingerprint());
+        assert!(int8.fingerprint().contains("wprec=int8"));
+        // projector_quant = int4 is trajectory-shaping too (the basis the
+        // run projects against is the dequantized int4 store).
+        let mut int4 = base.clone();
+        int4.galore.projector_quant = ProjectorQuant::Int4;
+        assert_ne!(fp, int4.fingerprint());
+        assert!(int4.fingerprint().contains("quant=int4"));
         let mut threaded = base.clone();
         threaded.threads = 4;
         assert_eq!(fp, threaded.fingerprint());

@@ -50,6 +50,12 @@ pub const SEC_OPTIMIZER: &[u8; 4] = b"OPTS";
 pub const SEC_FUSED: &[u8; 4] = b"FUSD";
 pub const SEC_LOADER: &[u8; 4] = b"LOAD";
 pub const SEC_METRICS: &[u8; 4] = b"METR";
+/// Int8 master weight store (codes + block scales + the stochastic-
+/// rounding RNG stream); present iff the run has `weight_precision =
+/// int8`. The store cannot be re-derived from the f32 weights on load:
+/// absmax re-quantization is not bit-stable and the rounding is
+/// stochastic, so a resume that re-quantized would fork the trajectory.
+pub const SEC_WSTORE: &[u8; 4] = b"WSTR";
 
 /// Everything a v2 checkpoint carries beyond the weights.
 pub struct V2Data {

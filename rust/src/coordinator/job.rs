@@ -207,6 +207,7 @@ impl SyntheticRunner {
             );
         }
         let mut params = init_params(cfg.model, cfg.seed);
+        params.seed_rounding(cfg.seed);
         params.set_precision(cfg.weight_precision);
         let target = init_params(cfg.model, cfg.seed ^ 0x5EED_7A26);
         let targets = params.projection_targets();
@@ -417,13 +418,17 @@ impl Job {
     /// this job's resident training state (weights + optimizer states +
     /// gradients + activations). Adaptive-rank runs are budgeted at their
     /// configured maximum rank — admission must hold at the envelope, not
-    /// the decayed steady state.
+    /// the decayed steady state. The run's actual weight-store precision
+    /// and projector store feed the estimate, so `int8` / `int4` jobs are
+    /// admitted against their real (smaller) footprint.
     pub fn estimated_bytes(&self) -> u64 {
         let cfg = &self.spec.cfg;
         let opts = TrainOpts {
             layerwise_updates: cfg.layerwise,
             activation_checkpoint: false,
             token_batch: cfg.batch * cfg.model.seq,
+            weight_precision: Some(cfg.weight_precision),
+            projector_quant: Some(cfg.galore.projector_quant),
         };
         if cfg.method.is_galore() && cfg.galore.is_adaptive() {
             estimate_adaptive(cfg.model, opts, |_, _| cfg.galore.rank).total()

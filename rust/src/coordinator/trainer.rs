@@ -179,6 +179,7 @@ impl Trainer {
             pool::configure(cfg.threads);
         }
         let mut params = init_params(cfg.model, cfg.seed);
+        params.seed_rounding(cfg.seed);
         params.set_precision(cfg.weight_precision);
         let targets = params.projection_targets();
         // Share this trainer's engine with the optimizer backend so a
@@ -544,11 +545,21 @@ impl Trainer {
         self.loader.save_state(&mut loader_blob);
         let mut metrics_blob = Vec::new();
         self.metrics.save_state(&mut metrics_blob);
-        let sections: Vec<(&[u8; 4], &[u8])> = vec![
+        let mut sections: Vec<(&[u8; 4], &[u8])> = vec![
             (checkpoint::SEC_OPTIMIZER, opt_blob.as_slice()),
             (checkpoint::SEC_LOADER, loader_blob.as_slice()),
             (checkpoint::SEC_METRICS, metrics_blob.as_slice()),
         ];
+        // Int8 weight runs additionally snapshot the master store: codes,
+        // block scales, and the stochastic-rounding RNG. The saved f32
+        // params equal the dequantized store, but re-quantizing on load is
+        // neither bit-stable nor (with stochastic rounding) deterministic,
+        // so the store itself is part of the training state.
+        let mut wstore_blob = Vec::new();
+        if self.params.precision() == crate::model::WeightPrecision::Int8 {
+            self.params.save_store_state(&mut wstore_blob);
+            sections.push((checkpoint::SEC_WSTORE, wstore_blob.as_slice()));
+        }
         checkpoint::save_v2(
             path,
             &self.params,
@@ -592,6 +603,7 @@ impl Trainer {
                      train --checkpoint-every N` to get full-state (v2) checkpoints."
                 );
                 self.params = params;
+                self.params.seed_rounding(self.cfg.seed);
                 self.params.set_precision(self.cfg.weight_precision);
                 self.step = step as usize;
                 self.opt.reset_state();
@@ -641,9 +653,27 @@ impl Trainer {
                 // Re-establish the weight store at the configured
                 // precision. Exact for a checkpoint written by a bf16 run:
                 // its weights are bf16-valued f32s, so the rounding
-                // round-trips losslessly and resume stays bit-exact.
+                // round-trips losslessly and resume stays bit-exact. Int8
+                // runs instead install the snapshotted WSTR section —
+                // codes, scales, and the stochastic-rounding RNG — since
+                // re-quantizing here would fork the rounding stream.
                 self.params = d.params;
-                self.params.set_precision(self.cfg.weight_precision);
+                if self.cfg.weight_precision == crate::model::WeightPrecision::Int8 {
+                    let wstore_bytes = d.section(checkpoint::SEC_WSTORE).ok_or_else(|| {
+                        anyhow!(
+                            "checkpoint is missing its int8 weight-store section \
+                             (was it written by an int8-weights run?)"
+                        )
+                    })?;
+                    let mut r = crate::ser::Reader::new(wstore_bytes);
+                    self.params
+                        .load_store_state(&mut r)
+                        .map_err(|e| anyhow!("int8 weight store: {e}"))?;
+                    r.expect_end().map_err(|e| anyhow!("int8 weight store: {e}"))?;
+                } else {
+                    self.params.seed_rounding(self.cfg.seed);
+                    self.params.set_precision(self.cfg.weight_precision);
+                }
                 self.step = d.step as usize;
                 Ok(())
             }

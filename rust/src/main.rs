@@ -69,11 +69,11 @@ USAGE:
                 [--batch N] [--lr F] [--rank N] [--update-freq N] [--scale F]
                 [--rank-schedule fixed|decay|spectral] [--rank-floor N]
                 [--rank-decay F] [--rank-energy F] [--refresh-gate-cos F]
-                [--projector-quant f32|block8|dyn8]
+                [--projector-quant f32|block8|dyn8|int4]
                 [--seed N] [--eval-every N] [--eval-batches N]
                 [--dp-workers N] [--dp-compress] [--dp-transport thread|process]
                 [--dp-bucket-mb N] [--layerwise]
-                [--weight-precision f32|bf16] [--threads N]
+                [--weight-precision f32|bf16|int8] [--threads N]
                 [--backend rust|artifact] [--fused] [--csv PATH]
                 [--checkpoint PATH] [--checkpoint-every N]
                 [--checkpoint-dir DIR] [--keep-last N] [--resume PATH]
@@ -86,7 +86,8 @@ USAGE:
   galore client (status|pause|resume|cancel) --id N [--socket PATH]
   galore client (list|shutdown) [--socket PATH]
   galore memory --model NAME [--method NAME] [--rank N] [--layerwise]
-                [--token-batch N]
+                [--token-batch N] [--weight-precision f32|bf16|int8]
+                [--projector-quant f32|block8|dyn8|int4]
   galore info   [--artifact-dir DIR]
   galore dp-smoke [--world N] [--steps N] [--die-rank R --die-step S]
   galore lint   [PATH]   (default: rust/src; exits 1 with file:line
@@ -115,8 +116,12 @@ multi-process ring without a trainer. See EXPERIMENTS.md
 section 'DP communication'.
 
 Precision/threads: --weight-precision bf16 keeps the master weight store
-rounded to bfloat16 (f32 working tensors and accumulation, Q-GaLore-style
-— halves accelerator weight bytes; part of the resume fingerprint);
+rounded to bfloat16 (f32 working tensors and accumulation — halves
+accelerator weight bytes); --weight-precision int8 holds it block-
+quantized at ~1 byte/el with stochastic rounding on commit, and
+--projector-quant int4 packs the GaLore projection bases two elements
+per byte (the full Q-GaLore recipe; all knobs are part of the resume
+fingerprint, and int8 runs snapshot their rounding RNG in checkpoints);
 --threads N sizes the worker pool behind the threaded kernels and the
 cross-layer parallel optimizer step (default: GALORE_THREADS env var,
 else all cores, capped at 16; results are bit-identical at any width).
@@ -233,7 +238,7 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     }
     if let Some(v) = cli.get("projector-quant") {
         cfg.galore.projector_quant = ProjectorQuant::parse(v)
-            .ok_or_else(|| anyhow!("unknown --projector-quant '{v}' (f32|block8|dyn8)"))?;
+            .ok_or_else(|| anyhow!("unknown --projector-quant '{v}' (f32|block8|dyn8|int4)"))?;
     }
     if let Some(v) = cli.get_parse::<u64>("seed").map_err(|e| anyhow!("{e}"))? {
         cfg.seed = v;
@@ -262,7 +267,7 @@ fn build_run_config(cli: &Cli) -> Result<RunConfig> {
     }
     if let Some(v) = cli.get("weight-precision") {
         cfg.weight_precision = WeightPrecision::parse(v)
-            .ok_or_else(|| anyhow!("unknown --weight-precision '{v}' (f32|bf16)"))?;
+            .ok_or_else(|| anyhow!("unknown --weight-precision '{v}' (f32|bf16|int8)"))?;
     }
     if let Some(v) = cli.get_parse::<usize>("threads").map_err(|e| anyhow!("{e}"))? {
         cfg.threads = v;
@@ -610,6 +615,18 @@ fn memory(cli: &Cli) -> Result<()> {
     let kind = MethodKind::parse(method_str)
         .ok_or_else(|| anyhow!("unknown method '{method_str}' (see METHODS in --help)"))?;
     let method = Method::for_kind(kind, rank);
+    let wprec = match cli.get("weight-precision") {
+        Some(v) => Some(WeightPrecision::parse(v).ok_or_else(|| {
+            anyhow!("unknown --weight-precision '{v}' (f32|bf16|int8)")
+        })?),
+        None => None,
+    };
+    let pquant = match cli.get("projector-quant") {
+        Some(v) => Some(ProjectorQuant::parse(v).ok_or_else(|| {
+            anyhow!("unknown --projector-quant '{v}' (f32|block8|dyn8|int4)")
+        })?),
+        None => None,
+    };
     let opts = TrainOpts {
         layerwise_updates: cli.has("layerwise"),
         activation_checkpoint: false,
@@ -617,6 +634,8 @@ fn memory(cli: &Cli) -> Result<()> {
             .get_parse::<usize>("token-batch")
             .map_err(|e| anyhow!("{e}"))?
             .unwrap_or(256),
+        weight_precision: wprec,
+        projector_quant: pquant,
     };
     let b = estimate(model, method, opts);
     println!(
@@ -630,6 +649,23 @@ fn memory(cli: &Cli) -> Result<()> {
     println!("  weight gradients: {}", fmt_gib(b.gradients));
     println!("  activations:      {}", fmt_gib(b.activations));
     println!("  TOTAL:            {}", fmt_gib(b.total()));
+    // Master weight-store bytes at each supported precision (the new
+    // closed forms) — the bf16/int8 stores' savings used to be invisible
+    // here. The breakdown above prices weights per --weight-precision
+    // (default: the paper's BF16 accounting).
+    let store = |p| {
+        estimate(model, method, TrainOpts { weight_precision: Some(p), ..opts }).weights
+    };
+    println!(
+        "  weight store:     f32 {} | bf16 {} | int8 {}{}",
+        fmt_gib(store(WeightPrecision::F32)),
+        fmt_gib(store(WeightPrecision::Bf16)),
+        fmt_gib(store(WeightPrecision::Int8)),
+        match wprec {
+            Some(p) => format!("  (active: {})", p.label()),
+            None => String::new(),
+        }
+    );
     Ok(())
 }
 

@@ -10,7 +10,8 @@
 //!   * activations (calibrated estimate; see `activations_bytes`).
 
 use super::formulas;
-use crate::model::{schema, ModelConfig, ParamMeta};
+use crate::model::{schema, ModelConfig, ParamMeta, WeightPrecision};
+use crate::optim::ProjectorQuant;
 
 /// Training method, as named in the paper's figures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,11 +86,28 @@ pub struct TrainOpts {
     pub activation_checkpoint: bool,
     /// Tokens per step (batch × seq), the paper's "token batch size".
     pub token_batch: usize,
+    /// Master weight-store precision of the run being estimated. `None`
+    /// keeps the paper's BF16 accounting (every Fig. 1 / Table 2/6 number
+    /// assumes bf16 weights); `Some(p)` prices the weights at the actual
+    /// store via `formulas::weight_store_bytes` — what `galore serve`
+    /// admission uses, so an `int8` job budgets its real footprint.
+    pub weight_precision: Option<WeightPrecision>,
+    /// Projection-basis store of the run being estimated. `None` keeps
+    /// the paper's BF16 accounting; `Some(q)` prices GaLore projectors via
+    /// `formulas::projector_store_bytes` (block8/dyn8 ≈ 1 byte/el, int4 ≈
+    /// 0.56 bytes/el).
+    pub projector_quant: Option<ProjectorQuant>,
 }
 
 impl Default for TrainOpts {
     fn default() -> Self {
-        TrainOpts { layerwise_updates: false, activation_checkpoint: false, token_batch: 256 }
+        TrainOpts {
+            layerwise_updates: false,
+            activation_checkpoint: false,
+            token_batch: 256,
+            weight_precision: None,
+            projector_quant: None,
+        }
     }
 }
 
@@ -110,40 +128,61 @@ impl Breakdown {
 
 const BF16: u64 = 2;
 
-fn per_param(meta: &ParamMeta, method: Method) -> (u64, u64) {
+/// Weight bytes for `el` weight elements: the paper's BF16 accounting by
+/// default, the actual master-store closed form when the run's
+/// `weight_precision` is supplied.
+fn weight_bytes(el: u64, precision: Option<WeightPrecision>) -> u64 {
+    match precision {
+        None => el * BF16,
+        Some(p) => formulas::weight_store_bytes(el, p),
+    }
+}
+
+/// Projection-basis bytes for `el` projector elements, same convention.
+fn proj_bytes(el: u64, quant: Option<ProjectorQuant>) -> u64 {
+    match quant {
+        None => el * BF16,
+        Some(q) => formulas::projector_store_bytes(el, q),
+    }
+}
+
+fn per_param(meta: &ParamMeta, method: Method, opts: TrainOpts) -> (u64, u64) {
     // Returns (weight_bytes, optim_state_bytes) for one parameter.
     let (m, n) = (meta.rows as u64, meta.cols as u64);
     let dense = m * n;
     let target = meta.is_projection_target();
+    let wb = |el: u64| weight_bytes(el, opts.weight_precision);
+    let pb = |el: u64| proj_bytes(el, opts.projector_quant);
     match method {
-        Method::FullRank => (dense * BF16, 2 * dense * BF16),
-        Method::Adam8bit => (dense * BF16, 2 * dense), // 1 byte per state
+        Method::FullRank => (wb(dense), 2 * dense * BF16),
+        Method::Adam8bit => (wb(dense), 2 * dense), // 1 byte per state
         Method::GaLore { rank } if target => {
             let f = formulas::galore(m, n, rank as u64);
-            // Projector at weight precision + compact M/V at state precision.
+            // Projector at its store's precision + compact M/V at state
+            // precision.
             let (short, long) = if m <= n { (m, n) } else { (n, m) };
             let proj = short * rank as u64;
             debug_assert_eq!(f.optim_states, proj + 2 * rank as u64 * long);
-            (dense * BF16, proj * BF16 + 2 * rank as u64 * long * BF16)
+            (wb(dense), pb(proj) + 2 * rank as u64 * long * BF16)
         }
-        Method::GaLore { .. } => (dense * BF16, 2 * dense * BF16),
+        Method::GaLore { .. } => (wb(dense), 2 * dense * BF16),
         Method::GaLore8bit { rank } if target => {
             let (short, long) = if m <= n { (m, n) } else { (n, m) };
             let proj = short * rank as u64;
-            (dense * BF16, proj * BF16 + 2 * rank as u64 * long)
+            (wb(dense), pb(proj) + 2 * rank as u64 * long)
         }
-        Method::GaLore8bit { .. } => (dense * BF16, 2 * dense),
+        Method::GaLore8bit { .. } => (wb(dense), 2 * dense),
         Method::Lora { rank } | Method::ReLora { rank } if target => {
             let f = formulas::lora(m, n, rank as u64);
-            (f.weights * BF16, f.optim_states * BF16)
+            (wb(f.weights), f.optim_states * BF16)
         }
-        Method::Lora { .. } | Method::ReLora { .. } => (dense * BF16, 2 * dense * BF16),
+        Method::Lora { .. } | Method::ReLora { .. } => (wb(dense), 2 * dense * BF16),
         Method::LowRank { rank } if target => {
             let f = formulas::low_rank_factorized(m, n, rank as u64);
-            (f.weights * BF16, f.optim_states * BF16)
+            (wb(f.weights), f.optim_states * BF16)
         }
-        Method::LowRank { .. } => (dense * BF16, 2 * dense * BF16),
-        Method::Adafactor => (dense * BF16, (dense + m + n) * BF16),
+        Method::LowRank { .. } => (wb(dense), 2 * dense * BF16),
+        Method::Adafactor => (wb(dense), (dense + m + n) * BF16),
         Method::GaLoreAdafactor { rank } if target => {
             // Projector on the short side + Adafactor state at the compact
             // shape (r, long): first moment r·long plus factored r + long
@@ -151,9 +190,9 @@ fn per_param(meta: &ParamMeta, method: Method) -> (u64, u64) {
             let (short, long) = if m <= n { (m, n) } else { (n, m) };
             let r = rank as u64;
             let proj = short * r;
-            (dense * BF16, (proj + r * long + r + long) * BF16)
+            (wb(dense), pb(proj) + (r * long + r + long) * BF16)
         }
-        Method::GaLoreAdafactor { .. } => (dense * BF16, (dense + m + n) * BF16),
+        Method::GaLoreAdafactor { .. } => (wb(dense), (dense + m + n) * BF16),
     }
 }
 
@@ -185,7 +224,7 @@ fn estimate_by(
     let mut b = Breakdown::default();
     let mut largest_grad = 0u64;
     for (idx, meta) in metas.iter().enumerate() {
-        let (w, s) = per_param(meta, method_of(idx, meta));
+        let (w, s) = per_param(meta, method_of(idx, meta), opts);
         b.weights += w;
         b.optim_states += s;
         let g = (meta.rows * meta.cols) as u64 * BF16;
@@ -369,6 +408,43 @@ mod tests {
         assert!(ga.optim_states < g.optim_states, "{} vs {}", ga.optim_states, g.optim_states);
         assert!(g.optim_states < full.optim_states);
         assert_eq!(ga.weights, g.weights);
+    }
+
+    #[test]
+    fn low_precision_stores_shrink_weights_and_projectors() {
+        // Acceptance gate for `weight_precision = int8` +
+        // `projector_quant = int4`: strictly fewer weight AND projector
+        // (optimizer-state) bytes than the f32 stores, and the default
+        // (None) accounting is untouched — it must keep matching the
+        // paper-pinned BF16 numbers above.
+        let c = cfg("350m");
+        let r = c.default_rank();
+        let with = |wp, pq| {
+            estimate(
+                c,
+                Method::GaLore { rank: r },
+                TrainOpts { weight_precision: wp, projector_quant: pq, ..Default::default() },
+            )
+        };
+        let base = with(None, None);
+        let f32s = with(Some(WeightPrecision::F32), Some(ProjectorQuant::F32));
+        let low = with(Some(WeightPrecision::Int8), Some(ProjectorQuant::Int4));
+        assert!(low.weights < f32s.weights);
+        assert!(low.optim_states < f32s.optim_states);
+        assert!(low.weights < base.weights, "int8 beats even the bf16 accounting");
+        // f32 weights cost exactly double the bf16 accounting.
+        assert_eq!(f32s.weights, 2 * base.weights);
+        // int8 weights: ~1 byte/el + block scales, strictly between
+        // n and 1.1n bytes.
+        let n_el = c.n_params();
+        assert!(low.weights > n_el && low.weights < n_el + n_el / 10);
+        // Projector stores order as f32 > bf16(accounting) > block8 > int4.
+        let b8 = with(None, Some(ProjectorQuant::Block8));
+        let i4 = with(None, Some(ProjectorQuant::Int4));
+        let pf32 = with(None, Some(ProjectorQuant::F32));
+        assert!(pf32.optim_states > base.optim_states);
+        assert!(base.optim_states > b8.optim_states);
+        assert!(b8.optim_states > i4.optim_states);
     }
 
     #[test]

@@ -51,6 +51,36 @@ pub fn galore_adaptive_states(layers: &[(u64, u64, u64)]) -> u64 {
     layers.iter().map(|&(m, n, r)| galore(m, n, r).optim_states).sum()
 }
 
+/// Closed-form bytes of the weight *master store* for `numel` elements at
+/// a given `weight_precision` — the per-tensor ground truth
+/// `ParamStore::weight_store_bytes` reports (int8 carries one f32 scale
+/// per `quant::BLOCK`-element block, tensor-granular, so summing this per
+/// schema entry matches the measured store exactly).
+pub fn weight_store_bytes(numel: u64, precision: crate::model::WeightPrecision) -> u64 {
+    use crate::model::WeightPrecision;
+    match precision {
+        WeightPrecision::F32 => 4 * numel,
+        WeightPrecision::Bf16 => 2 * numel,
+        WeightPrecision::Int8 => numel + 4 * numel.div_ceil(crate::quant::BLOCK as u64),
+    }
+}
+
+/// Closed-form bytes of one projection basis of `len` elements under each
+/// `projector_quant` store — matches `Projector::nbytes` exactly (the
+/// 8-bit stores carry one f32 scale per 256-element block, int4 packs two
+/// elements per byte with one scale per `quant::INT4_BLOCK`).
+pub fn projector_store_bytes(len: u64, quant: crate::optim::ProjectorQuant) -> u64 {
+    use crate::optim::ProjectorQuant;
+    match quant {
+        ProjectorQuant::F32 => 4 * len,
+        ProjectorQuant::Block8 => len + 4 * len.div_ceil(crate::quant::BLOCK as u64),
+        ProjectorQuant::Dyn8 => len + 4 * len.div_ceil(crate::quant::DYN_BLOCK as u64),
+        ProjectorQuant::Int4 => {
+            len.div_ceil(2) + 4 * len.div_ceil(crate::quant::INT4_BLOCK as u64)
+        }
+    }
+}
+
 /// Feature matrix of Table 1 (printed by the table1 bench).
 pub const FEATURES: &[(&str, bool, bool, bool)] = &[
     // (method, multi-subspace, pre-training, fine-tuning)

@@ -5,13 +5,20 @@
 //! same order. 1-D tensors (norm gains) are stored as (1, n) matrices.
 
 use super::ModelConfig;
-use crate::quant::Bf16Buf;
+use crate::quant::{Bf16Buf, QuantizedBuf};
 use crate::rng::Rng;
+use crate::ser;
 use crate::tensor::Matrix;
+
+/// Salt folded into the run seed for the int8 stochastic-rounding stream,
+/// so rounding draws never alias the data-order or init streams.
+const ROUNDING_STREAM_TAG: u64 = 0x51C8_0B17;
 
 /// Master-store precision of the model weights (`weight_precision` run
 /// knob). `Bf16` keeps the persistent weight copy in bf16 (2 bytes/el —
-/// the paper's §5 storage format, Q-GaLore's recipe) while every
+/// the paper's §5 storage format); `Int8` holds it block-quantized at
+/// ~1 byte/el with **stochastic rounding** on commit (Q-GaLore's weight
+/// recipe — unbiased rounding is what keeps the loss curve). Every
 /// consumer — forward/backward artifacts, projector matmuls, optimizer
 /// updates — still reads the f32 working tensors; updates accumulate in
 /// f32 and are rounded through the store once per step
@@ -22,6 +29,7 @@ pub enum WeightPrecision {
     #[default]
     F32,
     Bf16,
+    Int8,
 }
 
 impl WeightPrecision {
@@ -29,6 +37,7 @@ impl WeightPrecision {
         match s.to_ascii_lowercase().as_str() {
             "f32" | "fp32" | "float32" => Some(WeightPrecision::F32),
             "bf16" | "bfloat16" => Some(WeightPrecision::Bf16),
+            "int8" | "i8" => Some(WeightPrecision::Int8),
             _ => None,
         }
     }
@@ -37,14 +46,19 @@ impl WeightPrecision {
         match self {
             WeightPrecision::F32 => "f32",
             WeightPrecision::Bf16 => "bf16",
+            WeightPrecision::Int8 => "int8",
         }
     }
 
     /// Bytes per element of the weight *master store* at this precision.
+    /// For `Int8` this is the code byte only; the per-block scales add
+    /// `4 * ceil(n/BLOCK)` on top — [`ParamStore::weight_store_bytes`]
+    /// and `memory::formulas::weight_store_bytes` carry the exact figure.
     pub fn bytes_per_el(&self) -> usize {
         match self {
             WeightPrecision::F32 => 4,
             WeightPrecision::Bf16 => 2,
+            WeightPrecision::Int8 => 1,
         }
     }
 }
@@ -110,13 +124,13 @@ pub fn schema(cfg: &ModelConfig) -> Vec<ParamMeta> {
 /// All model parameters, in schema order.
 ///
 /// `tensors` are the f32 *working* copies every consumer reads. Under
-/// `WeightPrecision::Bf16` the store additionally keeps the bf16 master
-/// copy per tensor, with the invariant that each working tensor equals
-/// the dequantized master store (established by [`ParamStore::set_precision`],
-/// re-established after every update by [`ParamStore::commit`]). Code that
-/// mutates `tensors` directly outside the trainer's update path (e.g.
-/// `perturb`, test fixtures) must call `commit` afterwards if it cares
-/// about the bf16 invariant.
+/// `WeightPrecision::Bf16` / `Int8` the store additionally keeps the
+/// low-precision master copy per tensor, with the invariant that each
+/// working tensor equals the dequantized master store (established by
+/// [`ParamStore::set_precision`], re-established after every update by
+/// [`ParamStore::commit`]). Code that mutates `tensors` directly outside
+/// the trainer's update path (e.g. `perturb`, test fixtures) must call
+/// `commit` afterwards if it cares about the invariant.
 pub struct ParamStore {
     pub cfg: &'static ModelConfig,
     pub metas: Vec<ParamMeta>,
@@ -124,6 +138,13 @@ pub struct ParamStore {
     precision: WeightPrecision,
     /// bf16 master copies (schema order); non-empty iff `precision == Bf16`.
     store: Vec<Bf16Buf>,
+    /// int8 master copies (schema order); non-empty iff `precision == Int8`.
+    store8: Vec<QuantizedBuf>,
+    /// Stochastic-rounding stream for int8 commits. Seeded from the run
+    /// seed ([`ParamStore::seed_rounding`]) and snapshotted in checkpoints
+    /// ([`ParamStore::save_store_state`]) so a resumed run draws the exact
+    /// rounding sequence the uninterrupted run would.
+    round_rng: Rng,
 }
 
 impl ParamStore {
@@ -133,7 +154,15 @@ impl ParamStore {
         metas: Vec<ParamMeta>,
         tensors: Vec<Matrix>,
     ) -> Self {
-        ParamStore { cfg, metas, tensors, precision: WeightPrecision::F32, store: Vec::new() }
+        ParamStore {
+            cfg,
+            metas,
+            tensors,
+            precision: WeightPrecision::F32,
+            store: Vec::new(),
+            store8: Vec::new(),
+            round_rng: Rng::new(ROUNDING_STREAM_TAG),
+        }
     }
 
     /// Zero-initialized store (callers usually want `init_params`).
@@ -143,18 +172,38 @@ impl ParamStore {
         ParamStore::from_tensors(cfg, metas, tensors)
     }
 
-    /// Switch the weight master store to `precision`. Entering `Bf16`
-    /// builds the master copies and rounds the working tensors through
-    /// them (the weights *become* bf16-valued — this is the lossy moment;
-    /// re-applying it to already-bf16-valued weights, e.g. after a
-    /// checkpoint restore of a bf16 run, is exact). `F32` drops the
-    /// master copies and keeps the working tensors as they are.
+    /// Seed the int8 stochastic-rounding stream from the run seed. Call
+    /// before [`ParamStore::set_precision`] so the lossy entry commit and
+    /// every later per-step commit draw from a deterministic, run-scoped
+    /// stream (checkpoint restore replaces it with the snapshotted state).
+    pub fn seed_rounding(&mut self, seed: u64) {
+        self.round_rng = Rng::new(seed).child(ROUNDING_STREAM_TAG);
+    }
+
+    /// Switch the weight master store to `precision`. Entering `Bf16` or
+    /// `Int8` builds the master copies and rounds the working tensors
+    /// through them (the weights *become* store-valued — this is the lossy
+    /// moment; re-applying `Bf16` to already-bf16-valued weights, e.g.
+    /// after a checkpoint restore of a bf16 run, is exact, while an `Int8`
+    /// restore installs the snapshotted store via
+    /// [`ParamStore::load_store_state`] instead of re-entering here).
+    /// `F32` drops the master copies and keeps the working tensors as
+    /// they are.
     pub fn set_precision(&mut self, precision: WeightPrecision) {
         self.precision = precision;
         match precision {
-            WeightPrecision::F32 => self.store.clear(),
+            WeightPrecision::F32 => {
+                self.store.clear();
+                self.store8.clear();
+            }
             WeightPrecision::Bf16 => {
+                self.store8.clear();
                 self.store.resize_with(self.tensors.len(), || Bf16Buf::zeros(0));
+                self.commit();
+            }
+            WeightPrecision::Int8 => {
+                self.store.clear();
+                self.store8.resize_with(self.tensors.len(), || QuantizedBuf::zeros(0));
                 self.commit();
             }
         }
@@ -166,24 +215,88 @@ impl ParamStore {
 
     /// Re-establish the master-store invariant after the working tensors
     /// changed (one optimizer step's worth of f32-accumulated updates):
-    /// round every working tensor through its bf16 master copy in place.
-    /// No-op at f32 precision; allocation-free once warm; deterministic
-    /// per element, so it composes with the bit-exactness guarantees of
-    /// the parallel step path.
+    /// round every working tensor through its master copy in place. No-op
+    /// at f32 precision; allocation-free once warm. The bf16 path is
+    /// deterministic per element; the int8 path rounds stochastically from
+    /// the store's own seeded stream, consuming exactly one draw per
+    /// element — deterministic given (seed, commit count), so it composes
+    /// with the bit-exactness guarantees of the parallel step path.
     pub fn commit(&mut self) {
-        if self.precision == WeightPrecision::Bf16 {
-            for (buf, t) in self.store.iter_mut().zip(self.tensors.iter_mut()) {
-                buf.store_round(&mut t.data);
+        match self.precision {
+            WeightPrecision::F32 => {}
+            WeightPrecision::Bf16 => {
+                for (buf, t) in self.store.iter_mut().zip(self.tensors.iter_mut()) {
+                    buf.store_round(&mut t.data);
+                }
+            }
+            WeightPrecision::Int8 => {
+                for (buf, t) in self.store8.iter_mut().zip(self.tensors.iter_mut()) {
+                    buf.store_round_stochastic(&mut t.data, &mut self.round_rng);
+                }
             }
         }
     }
 
+    /// Snapshot the int8 master store for checkpointing: the rounding
+    /// stream state plus every tensor's codes and scales. The codes are
+    /// serialized (not re-derived on load) because absmax re-quantization
+    /// of the dequantized weights is not guaranteed bit-stable — and the
+    /// rounding RNG makes re-entry non-deterministic anyway.
+    pub fn save_store_state(&self, out: &mut Vec<u8>) {
+        ser::put_rng(out, &self.round_rng);
+        ser::put_u32(out, self.store8.len() as u32);
+        for buf in &self.store8 {
+            ser::put_quant_buf(out, buf);
+        }
+    }
+
+    /// Install an int8 master store snapshotted by
+    /// [`ParamStore::save_store_state`]: restores the rounding stream,
+    /// the per-tensor codes/scales, and re-derives the working tensors
+    /// from the store (a bit-exact no-op on well-formed checkpoints,
+    /// where the saved f32 params already equal the dequantized store).
+    pub fn load_store_state(&mut self, r: &mut ser::Reader<'_>) -> Result<(), String> {
+        let round_rng = r.rng()?;
+        let n = r.u32()? as usize;
+        if n != self.tensors.len() {
+            return Err(format!(
+                "int8 weight store has {n} tensors, schema has {}",
+                self.tensors.len()
+            ));
+        }
+        let mut store8 = Vec::with_capacity(n);
+        for (i, t) in self.tensors.iter().enumerate() {
+            let buf = r.quant_buf()?;
+            if buf.len != t.data.len() {
+                return Err(format!(
+                    "int8 weight store tensor {i} ({}) has {} elements, want {}",
+                    self.metas[i].name,
+                    buf.len,
+                    t.data.len()
+                ));
+            }
+            store8.push(buf);
+        }
+        for (buf, t) in store8.iter().zip(self.tensors.iter_mut()) {
+            crate::quant::dequantize_into(buf, &mut t.data);
+        }
+        self.store.clear();
+        self.store8 = store8;
+        self.round_rng = round_rng;
+        self.precision = WeightPrecision::Int8;
+        Ok(())
+    }
+
     /// Bytes held by the weight *master store* at the active precision
-    /// (the Fig. 1 "weight memory" quantity: 2 bytes/el under bf16). The
-    /// f32 working tensors are working memory on this substrate — like
-    /// the projector dequant caches — and are accounted separately.
+    /// (the Fig. 1 "weight memory" quantity: 2 bytes/el under bf16, ~1
+    /// byte/el + block scales under int8). The f32 working tensors are
+    /// working memory on this substrate — like the projector dequant
+    /// caches — and are accounted separately.
     pub fn weight_store_bytes(&self) -> usize {
-        self.numel() * self.precision.bytes_per_el()
+        match self.precision {
+            WeightPrecision::Int8 => self.store8.iter().map(|b| b.nbytes()).sum(),
+            p => self.numel() * p.bytes_per_el(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -256,8 +369,12 @@ impl ParamStore {
             ));
         }
         t.data.copy_from_slice(data);
-        if self.precision == WeightPrecision::Bf16 {
-            self.store[idx].store_round(&mut t.data);
+        match self.precision {
+            WeightPrecision::F32 => {}
+            WeightPrecision::Bf16 => self.store[idx].store_round(&mut t.data),
+            WeightPrecision::Int8 => {
+                self.store8[idx].store_round_stochastic(&mut t.data, &mut self.round_rng)
+            }
         }
         Ok(())
     }
@@ -385,6 +502,83 @@ mod tests {
         store.set_precision(WeightPrecision::F32);
         store.write_weights(1, &raw).unwrap();
         assert_eq!(store.tensors[1].data, raw);
+    }
+
+    #[test]
+    fn int8_store_shrinks_bytes_and_pins_working_tensors() {
+        let cfg = &PROXY_CONFIGS[0];
+        let mut store = crate::model::init_params(cfg, 7);
+        store.seed_rounding(7);
+        store.set_precision(WeightPrecision::Int8);
+        // ~1 byte/el + 4 bytes per 256-el block (tensor-granular ceil).
+        let closed: usize = store
+            .metas
+            .iter()
+            .map(|m| m.numel() + 4 * m.numel().div_ceil(crate::quant::BLOCK))
+            .sum();
+        assert_eq!(store.weight_store_bytes(), closed);
+        assert!(store.weight_store_bytes() < store.numel() * 2);
+        // Master-store invariant: the working tensors equal the
+        // dequantized int8 store (read it back through the snapshot path).
+        let mut blob = Vec::new();
+        store.save_store_state(&mut blob);
+        let mut r = crate::ser::Reader::new(&blob);
+        let _rng = r.rng().unwrap();
+        let n = r.u32().unwrap() as usize;
+        assert_eq!(n, store.tensors.len());
+        for t in &store.tensors {
+            let buf = r.quant_buf().unwrap();
+            assert_eq!(crate::quant::dequantize(&buf), t.data);
+        }
+        r.expect_end().unwrap();
+        // The rounding stream is run-scoped and deterministic: an
+        // identically-seeded store quantizes to identical weights.
+        let mut twin = crate::model::init_params(cfg, 7);
+        twin.seed_rounding(7);
+        twin.set_precision(WeightPrecision::Int8);
+        for (a, b) in store.tensors.iter().zip(twin.tensors.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        // Back to f32: master copies dropped, accounting follows.
+        store.set_precision(WeightPrecision::F32);
+        assert_eq!(store.weight_store_bytes(), store.numel() * 4);
+    }
+
+    #[test]
+    fn int8_store_state_roundtrip_is_bit_exact_and_guarded() {
+        let cfg = &PROXY_CONFIGS[0];
+        let mut store = crate::model::init_params(cfg, 3);
+        store.seed_rounding(3);
+        store.set_precision(WeightPrecision::Int8);
+        let mut blob = Vec::new();
+        store.save_store_state(&mut blob);
+        let mut other = crate::model::init_params(cfg, 99);
+        let mut r = crate::ser::Reader::new(&blob);
+        other.load_store_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(other.precision(), WeightPrecision::Int8);
+        for (a, b) in store.tensors.iter().zip(other.tensors.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        // The restored rounding stream continues identically: the next
+        // commit after drifting both stores the same way is bit-equal.
+        for s in [&mut store, &mut other] {
+            for t in s.tensors.iter_mut() {
+                for v in t.data.iter_mut() {
+                    *v += 1e-3;
+                }
+            }
+            s.commit();
+        }
+        for (a, b) in store.tensors.iter().zip(other.tensors.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        // A snapshot from a different schema is rejected.
+        let small = &PROXY_CONFIGS[0];
+        let mut tiny = ParamStore::zeros(small);
+        tiny.tensors.pop();
+        tiny.metas.pop();
+        assert!(tiny.load_store_state(&mut crate::ser::Reader::new(&blob)).is_err());
     }
 
     #[test]

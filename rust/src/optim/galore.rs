@@ -53,9 +53,10 @@ use std::collections::{HashMap, HashSet};
 /// "low-memory projection matrices", generalized): full precision, the
 /// linear absmax int8 grid (`quant::block8`), or the dynamic-tree int8
 /// code (`quant::dynamic`) that spends bits logarithmically and keeps the
-/// small entries of a near-orthonormal basis at fine relative precision.
-/// All three cost the same per step: projections run against a dequantized
-/// cache rebuilt only at subspace refresh.
+/// small entries of a near-orthonormal basis at fine relative precision,
+/// or the packed int4 grid (`quant::int4`) Q-GaLore trains with.
+/// All variants cost the same per step: projections run against a
+/// dequantized cache rebuilt only at subspace refresh.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProjectorQuant {
     /// 4 bytes/element (the paper's setting).
@@ -64,6 +65,8 @@ pub enum ProjectorQuant {
     Block8,
     /// 1 byte/element, dynamic (logarithmic) code — Q-GaLore-style.
     Dyn8,
+    /// 0.5 byte/element packed nibbles — the Q-GaLore INT4 projector.
+    Int4,
 }
 
 impl ProjectorQuant {
@@ -72,6 +75,7 @@ impl ProjectorQuant {
             "f32" | "none" => ProjectorQuant::F32,
             "block8" | "q8" | "int8" => ProjectorQuant::Block8,
             "dyn8" | "dynamic8" => ProjectorQuant::Dyn8,
+            "int4" | "q4" => ProjectorQuant::Int4,
             _ => return None,
         })
     }
@@ -81,6 +85,7 @@ impl ProjectorQuant {
             ProjectorQuant::F32 => "f32",
             ProjectorQuant::Block8 => "block8",
             ProjectorQuant::Dyn8 => "dyn8",
+            ProjectorQuant::Int4 => "int4",
         }
     }
 }
@@ -108,6 +113,7 @@ enum BasisStore {
     F32(Matrix),
     Quant8 { buf: crate::quant::QuantizedBuf, cache: Matrix },
     Dyn8 { buf: DynQuantBuf, cache: Matrix },
+    Int4 { buf: crate::quant::Int4Buf, cache: Matrix },
 }
 
 /// The low-rank projector for one parameter.
@@ -159,6 +165,12 @@ impl Projector {
                 buf.dequantize_into(&mut cache.data);
                 BasisStore::Dyn8 { buf, cache }
             }
+            ProjectorQuant::Int4 => {
+                let buf = crate::quant::quantize4(&basis.data);
+                let mut cache = basis;
+                crate::quant::dequantize4_into(&buf, &mut cache.data);
+                BasisStore::Int4 { buf, cache }
+            }
         };
         Projector { side, store, rank: r }
     }
@@ -183,7 +195,9 @@ impl Projector {
         self.side = if m <= n { ProjSide::Left } else { ProjSide::Right };
         let target = match &mut self.store {
             BasisStore::F32(b) => b,
-            BasisStore::Quant8 { cache, .. } | BasisStore::Dyn8 { cache, .. } => cache,
+            BasisStore::Quant8 { cache, .. }
+            | BasisStore::Dyn8 { cache, .. }
+            | BasisStore::Int4 { cache, .. } => cache,
         };
         match self.side {
             ProjSide::Left => top_r_left_subspace_into(grad, r, rng, ws, target),
@@ -227,7 +241,9 @@ impl Projector {
         let r_new = schedule.next_rank(cur, min_dim, ws.sq_spectrum()).min(k).max(1);
         let target = match &mut self.store {
             BasisStore::F32(b) => b,
-            BasisStore::Quant8 { cache, .. } | BasisStore::Dyn8 { cache, .. } => cache,
+            BasisStore::Quant8 { cache, .. }
+            | BasisStore::Dyn8 { cache, .. }
+            | BasisStore::Int4 { cache, .. } => cache,
         };
         extract_left_subspace_into(r_new, ws, target);
         self.rank = r_new;
@@ -256,6 +272,13 @@ impl Projector {
                 buf.quantize_from(&cache.data);
                 buf.dequantize_into(&mut cache.data);
             }
+            BasisStore::Int4 { buf, cache } => {
+                if buf.len != cache.len() {
+                    buf.resize(cache.len());
+                }
+                crate::quant::quantize4_into(&cache.data, buf);
+                crate::quant::dequantize4_into(buf, &mut cache.data);
+            }
         }
     }
 
@@ -265,7 +288,9 @@ impl Projector {
     pub fn basis(&self) -> &Matrix {
         match &self.store {
             BasisStore::F32(b) => b,
-            BasisStore::Quant8 { cache, .. } | BasisStore::Dyn8 { cache, .. } => cache,
+            BasisStore::Quant8 { cache, .. }
+            | BasisStore::Dyn8 { cache, .. }
+            | BasisStore::Int4 { cache, .. } => cache,
         }
     }
 
@@ -279,6 +304,7 @@ impl Projector {
             BasisStore::F32(_) => ProjectorQuant::F32,
             BasisStore::Quant8 { .. } => ProjectorQuant::Block8,
             BasisStore::Dyn8 { .. } => ProjectorQuant::Dyn8,
+            BasisStore::Int4 { .. } => ProjectorQuant::Int4,
         }
     }
 
@@ -330,6 +356,7 @@ impl Projector {
             BasisStore::F32(b) => 4 * b.len(),
             BasisStore::Quant8 { buf, .. } => buf.nbytes(),
             BasisStore::Dyn8 { buf, .. } => buf.nbytes(),
+            BasisStore::Int4 { buf, .. } => buf.nbytes(),
         }
     }
 
@@ -359,6 +386,12 @@ impl Projector {
                 ser::put_u32(out, cache.rows as u32);
                 ser::put_u32(out, cache.cols as u32);
                 ser::put_dyn_quant_buf(out, buf);
+            }
+            BasisStore::Int4 { buf, cache } => {
+                ser::put_u8(out, 3);
+                ser::put_u32(out, cache.rows as u32);
+                ser::put_u32(out, cache.cols as u32);
+                ser::put_int4_buf(out, buf);
             }
         }
     }
@@ -399,6 +432,20 @@ impl Projector {
                 let mut cache = Matrix::zeros(rows, cols);
                 buf.dequantize_into(&mut cache.data);
                 BasisStore::Dyn8 { buf, cache }
+            }
+            3 => {
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                let buf = r.int4_buf()?;
+                if buf.len != rows * cols {
+                    return Err(format!(
+                        "int4 basis has {} elements for a {rows}x{cols} cache",
+                        buf.len
+                    ));
+                }
+                let mut cache = Matrix::zeros(rows, cols);
+                crate::quant::dequantize4_into(&buf, &mut cache.data);
+                BasisStore::Int4 { buf, cache }
             }
             other => return Err(format!("bad projector store tag {other}")),
         };

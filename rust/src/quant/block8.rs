@@ -1,5 +1,7 @@
 //! absmax block quantization onto the signed int8 grid [-127, 127].
 
+use crate::rng::Rng;
+
 /// Block size (elements per scale). Must match quant8.py::BLOCK.
 pub const BLOCK: usize = 256;
 
@@ -33,6 +35,39 @@ impl QuantizedBuf {
         self.q.resize(len, 0);
         self.scales.resize(len.div_ceil(BLOCK), 1.0);
         self.len = len;
+    }
+
+    /// Commit `xs` into the store with **stochastic rounding** and round
+    /// it through the int8 grid in one pass: afterwards
+    /// `xs[i] == q[i] * scale` — the master-store invariant of the int8
+    /// weight store (`weight_precision = int8`, Q-GaLore recipe).
+    ///
+    /// Each element rounds down with probability `1 - frac` and up with
+    /// probability `frac`, so the rounding is unbiased: `E[q*scale] = x`.
+    /// Exactly one uniform is drawn per element regardless of its value,
+    /// which keeps the RNG stream position a pure function of element
+    /// count — the property checkpoint resume relies on for bit-exact
+    /// replay. Resizes the store to `xs` on first use; allocation-free
+    /// once warm.
+    pub fn store_round_stochastic(&mut self, xs: &mut [f32], rng: &mut Rng) {
+        if self.len != xs.len() {
+            self.resize(xs.len());
+        }
+        for (bi, chunk) in xs.chunks_mut(BLOCK).enumerate() {
+            let absmax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+            self.scales[bi] = scale;
+            let inv = 1.0 / scale;
+            let qchunk = &mut self.q[bi * BLOCK..(bi * BLOCK + chunk.len())];
+            for (qv, v) in qchunk.iter_mut().zip(chunk.iter_mut()) {
+                let y = (*v * inv).clamp(-127.0, 127.0);
+                let floor = y.floor();
+                let u = rng.next_f32(); // always one draw per element
+                let q = (floor as i32 + (u < y - floor) as i32).clamp(-127, 127) as i8;
+                *qv = q;
+                *v = q as f32 * scale;
+            }
+        }
     }
 }
 

@@ -8,7 +8,9 @@
 mod bf16;
 mod block8;
 mod dynamic;
+mod int4;
 
 pub use bf16::{bf16_to_f32, f32_to_bf16, round_trip_slice, Bf16Buf};
 pub use block8::{dequantize, dequantize_into, quantize, quantize_into, QuantizedBuf, BLOCK};
 pub use dynamic::{DynQuantBuf, DynamicCode, DYN_BLOCK};
+pub use int4::{dequantize4, dequantize4_into, quantize4, quantize4_into, Int4Buf, INT4_BLOCK};

@@ -14,7 +14,7 @@
 //! panicking — a truncated or corrupted checkpoint must surface as a clean
 //! error, never a crash or (worse) silently misaligned state.
 
-use crate::quant::{DynQuantBuf, QuantizedBuf, BLOCK, DYN_BLOCK};
+use crate::quant::{DynQuantBuf, Int4Buf, QuantizedBuf, BLOCK, DYN_BLOCK, INT4_BLOCK};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
@@ -94,6 +94,14 @@ pub fn put_quant_buf(out: &mut Vec<u8>, b: &QuantizedBuf) {
 pub fn put_dyn_quant_buf(out: &mut Vec<u8>, b: &DynQuantBuf) {
     put_u64(out, b.len as u64);
     put_bool(out, b.signed);
+    out.extend_from_slice(&b.q);
+    put_f32s(out, &b.scales);
+}
+
+/// Int4 (packed-nibble absmax) quantized buffer: logical length, packed
+/// codes, per-block scales.
+pub fn put_int4_buf(out: &mut Vec<u8>, b: &Int4Buf) {
+    put_u64(out, b.len as u64);
     out.extend_from_slice(&b.q);
     put_f32s(out, &b.scales);
 }
@@ -252,6 +260,29 @@ impl<'a> Reader<'a> {
         Ok(DynQuantBuf { q, scales, len, signed })
     }
 
+    pub fn int4_buf(&mut self) -> Result<Int4Buf, String> {
+        let len = self.u64()? as usize;
+        let q = self.take(len.div_ceil(2))?.to_vec();
+        if len % 2 == 1 {
+            if let Some(&last) = q.last() {
+                if last >> 4 != 0 {
+                    return Err(format!(
+                        "int4 buffer of odd length {len} has a dirty tail nibble"
+                    ));
+                }
+            }
+        }
+        let scales = self.f32s()?;
+        if scales.len() != len.div_ceil(INT4_BLOCK) {
+            return Err(format!(
+                "int4 buffer has {} scales for {len} elements (want {})",
+                scales.len(),
+                len.div_ceil(INT4_BLOCK)
+            ));
+        }
+        Ok(Int4Buf { q, scales, len })
+    }
+
     pub fn rng(&mut self) -> Result<Rng, String> {
         let mut s = [0u64; 4];
         for w in s.iter_mut() {
@@ -319,12 +350,15 @@ mod tests {
         let qb = crate::quant::quantize(&xs);
         let mut db = DynQuantBuf::zeros(xs.len(), true);
         db.quantize_from(&xs);
+        let ib = crate::quant::quantize4(&xs);
         let mut out = Vec::new();
         put_quant_buf(&mut out, &qb);
         put_dyn_quant_buf(&mut out, &db);
+        put_int4_buf(&mut out, &ib);
         let mut r = Reader::new(&out);
         let qb2 = r.quant_buf().unwrap();
         let db2 = r.dyn_quant_buf().unwrap();
+        let ib2 = r.int4_buf().unwrap();
         r.expect_end().unwrap();
         assert_eq!(qb2.q, qb.q);
         assert_eq!(qb2.scales, qb.scales);
@@ -332,6 +366,24 @@ mod tests {
         assert_eq!(db2.q, db.q);
         assert_eq!(db2.scales, db.scales);
         assert_eq!(db2.signed, db.signed);
+        assert_eq!(ib2.q, ib.q);
+        assert_eq!(ib2.scales, ib.scales);
+        assert_eq!(ib2.len, ib.len);
+    }
+
+    #[test]
+    fn odd_int4_buffers_roundtrip_and_dirty_tails_are_rejected() {
+        let ib = crate::quant::quantize4(&[0.5f32, -0.25, 1.0]);
+        let mut out = Vec::new();
+        put_int4_buf(&mut out, &ib);
+        let got = Reader::new(&out).int4_buf().unwrap();
+        assert_eq!(got.q, ib.q);
+        assert_eq!(got.len, 3);
+        // Corrupt the tail nibble past the logical end: must be rejected,
+        // otherwise two logically-equal checkpoints differ byte-for-byte.
+        let mut bad = out.clone();
+        bad[8 + 1] |= 0xF0; // second packed byte holds element 2 low, tail high
+        assert!(Reader::new(&bad).int4_buf().is_err());
     }
 
     #[test]

@@ -173,6 +173,23 @@ pub struct ConvergenceReport {
 /// Train `opt` on the workload for `steps` and report first/final/eval
 /// losses. Deterministic given (workload, optimizer state).
 pub fn run_lsq(opt: &mut dyn Optimizer, wl: &LsqWorkload, steps: usize) -> ConvergenceReport {
+    run_lsq_with_store(opt, wl, steps, crate::model::WeightPrecision::F32)
+}
+
+/// Like [`run_lsq`], but round-trips the weight matrix through a
+/// `precision` master store after every optimizer step — the same
+/// commit `ParamStore` applies in training — so low-precision weight
+/// stores face the identical loss guardrail. `F32` is the identity
+/// (plain [`run_lsq`]); `Int8` draws its stochastic-rounding stream from
+/// a child of `wl.seed`, so two runs of the same workload still see
+/// bit-identical rounding.
+pub fn run_lsq_with_store(
+    opt: &mut dyn Optimizer,
+    wl: &LsqWorkload,
+    steps: usize,
+    precision: crate::model::WeightPrecision,
+) -> ConvergenceReport {
+    use crate::model::WeightPrecision;
     let mut rng = Rng::new(wl.seed);
     let w_star = Matrix::randn(wl.m, wl.n, 1.0, &mut rng);
     let basis = Matrix::randn(wl.k_star, wl.n, 1.0, &mut rng);
@@ -193,6 +210,9 @@ pub fn run_lsq(opt: &mut dyn Optimizer, wl: &LsqWorkload, steps: usize) -> Conve
     };
     let mut first = 0.0;
     let mut last = 0.0;
+    let mut bf16 = crate::quant::Bf16Buf::zeros(wl.m * wl.n);
+    let mut int8 = crate::quant::QuantizedBuf::zeros(wl.m * wl.n);
+    let mut round_rng = Rng::new(wl.seed).child(0x51C8_0B17);
     for t in 0..steps {
         let (loss, g) = loss_and_grad(&w, &mut rng.child(t as u64));
         if t == 0 {
@@ -200,6 +220,11 @@ pub fn run_lsq(opt: &mut dyn Optimizer, wl: &LsqWorkload, steps: usize) -> Conve
         }
         last = loss;
         opt.step(0, &mut w, &g, wl.lr).expect("lsq workload step failed");
+        match precision {
+            WeightPrecision::F32 => {}
+            WeightPrecision::Bf16 => bf16.store_round(&mut w.data),
+            WeightPrecision::Int8 => int8.store_round_stochastic(&mut w.data, &mut round_rng),
+        }
     }
     let n_eval = 4u64;
     let mut eval = 0.0f64;

@@ -173,6 +173,50 @@ fn quantized_galore_step_is_allocation_free_after_warmup() {
 }
 
 #[test]
+fn int4_galore_step_is_allocation_free_after_warmup() {
+    // The packed-nibble projector store (Q-GaLore completion): like the
+    // 8-bit stores, its dequant cache keeps unpacking off the per-step
+    // path — steps are pure matmuls into workspaces.
+    let cfg = GaLoreConfig {
+        rank: 8,
+        update_freq: 1000,
+        scale: 0.25,
+        projector_quant: ProjectorQuant::Int4,
+        ..Default::default()
+    };
+    let mut gal = GaLore::new(cfg, Adam::new(AdamConfig::default()));
+    let mut rng = Rng::new(11);
+    let mut w = Matrix::randn(48, 64, 1.0, &mut rng);
+    let gs = grads(48, 64, 6, 12);
+    let allocs = measure_step_allocs(&mut gal, &mut w, &gs, 3);
+    assert_eq!(allocs, 0, "int4 GaLore steady-state step allocated");
+}
+
+#[test]
+fn weight_store_commits_are_allocation_free_after_warmup() {
+    // `ParamStore::commit` runs once per training step; both low-precision
+    // master stores must stay off the allocator once their buffers exist
+    // (set_precision is the warmup — it builds the store and commits once).
+    use galore::model::{init_params, ModelConfig, WeightPrecision};
+    let cfg = ModelConfig::by_name("nano").unwrap();
+    for precision in [WeightPrecision::Bf16, WeightPrecision::Int8] {
+        let mut params = init_params(cfg, 11);
+        params.seed_rounding(11);
+        params.set_precision(precision);
+        params.commit();
+        let s0 = thread_alloc_stats();
+        params.commit();
+        let s1 = thread_alloc_stats();
+        assert_eq!(
+            s1.allocs - s0.allocs,
+            0,
+            "{} weight-store commit allocated",
+            precision.label()
+        );
+    }
+}
+
+#[test]
 fn adam_step_is_allocation_free_after_warmup() {
     let mut adam = Adam::new(AdamConfig::default());
     let mut rng = Rng::new(7);

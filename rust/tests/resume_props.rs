@@ -134,6 +134,10 @@ fn roster() -> Vec<(&'static str, MkOpt)> {
         let cfg = GaLoreConfig { projector_quant: ProjectorQuant::Block8, ..galore_cfg(4, 4) };
         Box::new(GaLore::new(cfg, Adam8bit::new()).with_targets([0usize, 1]).with_seed(5))
     });
+    add(&mut r, "galore-adam-int4", || {
+        let cfg = GaLoreConfig { projector_quant: ProjectorQuant::Int4, ..galore_cfg(4, 4) };
+        Box::new(GaLore::new(cfg, Adam::default_paper()).with_targets([0usize, 1]).with_seed(5))
+    });
     add(&mut r, "galore-adafactor", || {
         Box::new(
             GaLore::new(galore_cfg(4, 5), Adafactor::new())
@@ -151,6 +155,23 @@ fn roster() -> Vec<(&'static str, MkOpt)> {
             rank_floor: 2,
             rank_energy: 0.95,
             refresh_gate_cos: 0.7,
+            ..Default::default()
+        };
+        Box::new(
+            GaLore::new(cfg, Adam::default_paper()).with_targets([0usize, 1]).with_seed(13),
+        )
+    });
+    add(&mut r, "galore-adaptive-spectral-int4", || {
+        // Int4Buf::resize must compose with the rank schedule exactly like
+        // the 8-bit stores do.
+        let cfg = GaLoreConfig {
+            rank: 8,
+            update_freq: 3,
+            scale: 0.25,
+            projector_quant: ProjectorQuant::Int4,
+            rank_schedule: RankScheduleKind::Spectral,
+            rank_floor: 2,
+            rank_energy: 0.95,
             ..Default::default()
         };
         Box::new(
